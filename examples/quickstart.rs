@@ -1,0 +1,62 @@
+//! Quickstart: train DVFO's DQN offline, then serve a small stream and
+//! print the latency/energy/accuracy summary — the simulator-only path
+//! (no artifacts needed).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dvfo::configx::Config;
+use dvfo::coordinator::Coordinator;
+use dvfo::workload::{Arrivals, TaskGen};
+
+fn main() -> anyhow::Result<()> {
+    // 1. configure: Xavier NX edge, RTX-3080 cloud, EfficientNet-B0,
+    //    CIFAR-100, 5 Mbps WiFi, balanced η (energy vs latency)
+    let mut cfg = Config::default();
+    cfg.policy = "dvfo".into();
+    cfg.model = "efficientnet-b0".into();
+    cfg.bandwidth = "static:5".into();
+    cfg.eta = 0.5;
+    cfg.train_episodes = 30;
+    cfg.requests = 100;
+
+    // 2. build the coordinator and train the DQN offline (paper Alg. 1)
+    let mut coord = Coordinator::from_config(&cfg)?;
+    let mut gen = TaskGen::new(&cfg.model, coord.env.dataset, Arrivals::Sequential, 1)?;
+    println!("training {} episodes offline...", cfg.train_episodes);
+    let curve = coord.train(&mut gen, cfg.train_episodes, 24);
+    println!(
+        "reward: first {:+.3} -> last {:+.3}",
+        curve.first().unwrap(),
+        curve.last().unwrap()
+    );
+
+    // 3. deploy: greedy policy over a fresh task stream
+    let tasks = gen.take(cfg.requests);
+    let s = coord.serve(&tasks);
+    println!("\nserved {} requests:", s.count());
+    println!("  latency  mean {:.1} ms  p99 {:.1} ms", s.tti_ms.mean(), s.tti_ms.p99());
+    println!("  energy   mean {:.0} mJ", s.eti_mj.mean());
+    println!("  accuracy mean {:.2} %", s.accuracy_pct.mean());
+    println!("  offload  mean xi {:.2}, payload {:.1} KB", s.xi.mean(), s.payload_kb.mean());
+
+    // 4. compare against the static edge-only baseline
+    let mut cfg_e = cfg.clone();
+    cfg_e.policy = "edge_only".into();
+    let mut coord_e = Coordinator::from_config(&cfg_e)?;
+    let mut gen_e = TaskGen::new(&cfg_e.model, coord_e.env.dataset, Arrivals::Sequential, 1)?;
+    let se = coord_e.serve(&gen_e.take(cfg.requests));
+    println!("\nvs edge-only:");
+    println!(
+        "  latency {:.1} ms -> {:.1} ms ({:+.1}%)",
+        se.tti_ms.mean(),
+        s.tti_ms.mean(),
+        100.0 * (s.tti_ms.mean() / se.tti_ms.mean() - 1.0)
+    );
+    println!(
+        "  energy  {:.0} mJ -> {:.0} mJ ({:+.1}%)",
+        se.eti_mj.mean(),
+        s.eti_mj.mean(),
+        100.0 * (s.eti_mj.mean() / se.eti_mj.mean() - 1.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,203 @@
+"""AOT pipeline: train the L2 model, lower every entry point to HLO text.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 rust crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (all under ``artifacts/``):
+  extractor.hlo.txt      image → (features, M_c, M_s, importance)
+  local_head.hlo.txt     (features, mask) → local logits
+  offload_prep.hlo.txt   (features, inv_mask) → int8-roundtripped features
+  remote_head.hlo.txt    (features, mask) → remote logits
+  fusion.hlo.txt         (local, remote, λ) → fused logits
+  collaborative.hlo.txt  (image, mask, λ) → fused logits  (single-call e2e)
+  dqn_q.hlo.txt          (state, w1..b4) → Q-values (weights are inputs!)
+  testset.bin            256 images f32 + labels u32 (raw little-endian)
+  manifest.json          shapes, dtypes, measured accuracies, dims
+
+Run: ``cd python && python -m compile.aot --out-dir ../artifacts``
+Python never runs again after this — the rust binary is self-contained.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+TESTSET_N = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, uniformly).
+
+    `print_large_constants=True` is load-bearing: the default printer
+    ELIDES big dense constants as `constant({...})`, and the rust-side
+    text parser silently fills them with zeros — which wipes out every
+    trained weight baked into the artifact.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided constants"
+    return text
+
+
+def lower(fn, *args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--levels", type=int, default=10,
+                    help="frequency levels per unit in the DQN action head")
+    ap.add_argument("--xi-levels", type=int, default=11,
+                    help="offload-proportion levels in the action head")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+
+    # ---------------------------------------------------------- training --
+    key = jax.random.PRNGKey(args.seed)
+    params = M.train(key, steps=args.train_steps, verbose=args.verbose)
+    print(f"[aot] trained model in {time.time() - t0:.1f}s")
+
+    # held-out accuracy bookkeeping for the manifest
+    kt = jax.random.PRNGKey(args.seed + 1)
+    timgs, tlabels = M.make_dataset(kt, TESTSET_N)
+    _, _, _, imp = M.extractor_fwd(params, timgs, use_pallas=False)
+    mean_imp = np.asarray(imp.mean(axis=0))
+    acc = {"edge_only": M.evaluate_edge_only(params, timgs, tlabels)}
+    for k in (4, 8, 12):
+        mask = M.topk_mask(jnp.asarray(mean_imp), k)
+        acc[f"collab_k{k}"] = M.evaluate(params, timgs, tlabels, mask,
+                                         jnp.float32(0.5))
+    print(f"[aot] accuracies: {acc}")
+
+    # ------------------------------------------------------------ lowering --
+    c, hw = M.FEAT_C, M.FEAT_HW
+    img_s = spec((1,) + M.IMG_SHAPE)
+    feat_s = spec((1, c, hw, hw))
+    mask_s = spec((c,))
+    logit_s = spec((1, M.NUM_CLASSES))
+    lam_s = spec((1, 1))
+
+    artifacts: dict[str, dict] = {}
+
+    def emit(name: str, fn, *specs, outputs: list[str]):
+        text = lower(fn, *specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)}
+                       for s in specs],
+            "outputs": outputs,
+        }
+        print(f"[aot] {name}: {len(text)} chars")
+
+    emit("extractor",
+         lambda img: M.extractor_fwd(params, img, use_pallas=True),
+         img_s, outputs=["features", "mc", "ms", "importance"])
+
+    emit("local_head",
+         lambda feat, mask: M.local_head_fwd(params, feat, mask),
+         feat_s, mask_s, outputs=["local_logits"])
+
+    emit("offload_prep",
+         lambda feat, inv: M.offload_prep_fwd(feat, inv, use_pallas=True),
+         feat_s, mask_s, outputs=["dequantized_features"])
+
+    emit("remote_head",
+         lambda feat, mask: M.remote_head_fwd(params, feat, mask),
+         feat_s, mask_s, outputs=["remote_logits"])
+
+    emit("fusion",
+         lambda a, b, lam: M.fusion_fwd(a, b, lam, use_pallas=True),
+         logit_s, logit_s, lam_s, outputs=["fused_logits"])
+
+    emit("collaborative",
+         lambda img, mask, lam: M.collaborative_fwd(
+             params, img, mask, lam, use_pallas=True),
+         img_s, mask_s, lam_s, outputs=["fused_logits"])
+
+    # DQN Q-net: weights as runtime inputs (trained by the rust agent).
+    action_dim = 3 * args.levels + args.xi_levels
+    wshapes = M.dqn_weight_shapes(M.DQN_STATE_DIM, action_dim)
+    state_s = spec((1, M.DQN_STATE_DIM))
+    wspecs = [spec(s) for s in wshapes]
+    emit("dqn_q",
+         lambda s, *w: M.dqn_q_fwd(s, *w),
+         state_s, *wspecs, outputs=["q_values"])
+
+    # ---------------------------------------------------------- testset ----
+    test_path = os.path.join(args.out_dir, "testset.bin")
+    with open(test_path, "wb") as f:
+        f.write(np.asarray(timgs, np.float32).tobytes())
+        f.write(np.asarray(tlabels, np.uint32).tobytes())
+
+    # expected fused logits for the first test image (bit-exactness check
+    # for the rust runtime, mask = top-8 channels, λ = 0.5)
+    mask8 = M.topk_mask(jnp.asarray(mean_imp), 8)
+    probe_logits = M.collaborative_fwd(
+        params, timgs[:1], mask8, jnp.float32(0.5), use_pallas=False)
+
+    manifest = {
+        "version": 1,
+        "generated_unix": int(time.time()),
+        "model": {
+            "img_shape": list(M.IMG_SHAPE),
+            "feat_channels": c,
+            "feat_hw": hw,
+            "num_classes": M.NUM_CLASSES,
+        },
+        "dqn": {
+            "state_dim": M.DQN_STATE_DIM,
+            "hidden": list(M.DQN_HIDDEN),
+            "action_dim": action_dim,
+            "freq_levels": args.levels,
+            "xi_levels": args.xi_levels,
+            "weight_shapes": [list(s) for s in wshapes],
+        },
+        "testset": {
+            "file": "testset.bin",
+            "count": TESTSET_N,
+            "img_f32_count": TESTSET_N * int(np.prod(M.IMG_SHAPE)),
+        },
+        "accuracy": acc,
+        "mean_importance": [float(x) for x in mean_imp],
+        "probe": {
+            "mask_topk": 8,
+            "lambda": 0.5,
+            "expected_logits": [float(x) for x in np.asarray(probe_logits[0])],
+        },
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t0:.1f}s → {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an exact functional twin here; pytest
+asserts allclose between the two over a hypothesis-driven sweep of shapes.
+These references are also what the L2 model uses when ``use_pallas=False``
+(e.g. while debugging lowering issues).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _sigmoid(x: jnp.ndarray) -> jnp.ndarray:
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+# ---------------------------------------------------------------- SCAM ----
+def channel_pool(f: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Global average + max pooling over the spatial axes.
+
+    f: (C, H, W) -> (avg, max) each (C,)
+    """
+    return f.mean(axis=(1, 2)), f.max(axis=(1, 2))
+
+
+def channel_mlp(avg: jnp.ndarray, mx: jnp.ndarray,
+                w1: jnp.ndarray, b1: jnp.ndarray,
+                w2: jnp.ndarray, b2: jnp.ndarray) -> jnp.ndarray:
+    """Shared two-layer MLP of the channel attention (Eq. 16).
+
+    M_c = sigmoid(MLP(avg) + MLP(max)),  MLP(x) = relu(x@W1+b1)@W2+b2
+    avg/mx: (C,), w1: (C, R), w2: (R, C) -> (C,)
+    """
+    def mlp(x):
+        h = jnp.maximum(x @ w1 + b1, 0.0)
+        return h @ w2 + b2
+
+    return _sigmoid(mlp(avg) + mlp(mx))
+
+
+def spatial_attention(f: jnp.ndarray, conv_w: jnp.ndarray,
+                      conv_b: jnp.ndarray) -> jnp.ndarray:
+    """Spatial attention map (Eq. 17).
+
+    M_s = sigmoid(Conv3x3([avgpool_c(F); maxpool_c(F)]))
+    f: (C, H, W); conv_w: (2, 3, 3) (in-channel, kh, kw); conv_b: ()
+    returns (H, W).
+    """
+    avg = f.mean(axis=0)
+    mx = f.max(axis=0)
+    stacked = jnp.stack([avg, mx], axis=0)          # (2, H, W)
+    padded = jnp.pad(stacked, ((0, 0), (1, 1), (1, 1)))
+    h, w = f.shape[1], f.shape[2]
+    out = jnp.zeros((h, w), f.dtype)
+    for c in range(2):
+        for i in range(3):
+            for j in range(3):
+                out = out + conv_w[c, i, j] * padded[c, i:i + h, j:j + w]
+    return _sigmoid(out + conv_b)
+
+
+def scam_apply(f: jnp.ndarray, mc: jnp.ndarray, ms: jnp.ndarray) -> jnp.ndarray:
+    """Sequential channel-then-spatial application (Eq. 18).
+
+    F_in = M_c ⊗ F ;  F_out = M_s ⊗ F_in
+    """
+    f_in = f * mc[:, None, None]
+    return f_in * ms[None, :, :]
+
+
+def scam(f, w1, b1, w2, b2, conv_w, conv_b):
+    """Full SCAM forward: returns (F_out, M_c, M_s)."""
+    avg, mx = channel_pool(f)
+    mc = channel_mlp(avg, mx, w1, b1, w2, b2)
+    ms = spatial_attention(f, conv_w, conv_b)
+    return scam_apply(f, mc, ms), mc, ms
+
+
+def importance(f_out: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel importance distribution x ~ p(a): normalized attention
+    mass per channel (sums to 1)."""
+    mass = jnp.abs(f_out).sum(axis=(1, 2))
+    return mass / jnp.maximum(mass.sum(), 1e-12)
+
+
+# ----------------------------------------------------------- quantization --
+def absmax(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.max(jnp.abs(x))
+
+
+def quantize_int8(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric per-tensor int8 quantization: q = clip(round(x/s), ±127)."""
+    q = jnp.round(x / jnp.maximum(scale, 1e-12))
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def quant_roundtrip(x: jnp.ndarray) -> jnp.ndarray:
+    """quantize → dequantize, the int8 compression used for offloaded
+    secondary-importance feature maps (paper §5.2)."""
+    scale = absmax(x) / 127.0
+    return dequantize_int8(quantize_int8(x, scale), scale)
+
+
+# ----------------------------------------------------------------- fusion --
+def weighted_fusion(local_logits: jnp.ndarray, remote_logits: jnp.ndarray,
+                    lam: jnp.ndarray) -> jnp.ndarray:
+    """Point-to-point weighted summation fusion (paper §5.3):
+    out = λ·local + (1−λ)·remote."""
+    return lam * local_logits + (1.0 - lam) * remote_logits

@@ -1,0 +1,234 @@
+"""L1 Pallas kernels for the Spatial-Channel Attention Module (SCAM).
+
+Paper §5.2 (Eqs. 16-18). TPU-idiom adaptation of the CUDA original
+(DESIGN.md §Hardware-Adaptation):
+
+* channel attention — the (H, W) reduction is tiled over *channel* blocks
+  sized for VMEM with ``BlockSpec``; the shared MLP is expressed as two
+  small matmuls so it lands on the MXU.
+* spatial attention — the channel reduction accumulates across sequential
+  grid steps into a single (H, W) output block (TPU grid steps are
+  sequential, so read-modify-write on a revisited output block is legal);
+  the 3x3 convolution is expressed as nine shifted vector FMAs on the VPU
+  instead of the warp-tiled im2col a GPU kernel would use.
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU perf is estimated analytically in
+DESIGN.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU backend: must stay True (see module docstring).
+
+
+def _tile(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``target`` (≥ 1)."""
+    t = min(n, target)
+    while n % t:
+        t -= 1
+    return t
+
+
+# ------------------------------------------------------------------------
+# channel pooling: (C, H, W) -> avg (C,), max (C,)
+# ------------------------------------------------------------------------
+def _channel_pool_kernel(f_ref, avg_ref, max_ref):
+    blk = f_ref[...]                       # (Cb, H, W) in VMEM
+    avg_ref[...] = blk.mean(axis=(1, 2))
+    max_ref[...] = blk.max(axis=(1, 2))
+
+
+def channel_pool(f: jnp.ndarray, block_c: int = 8):
+    """Global average + max pool over spatial axes, tiled over channels."""
+    c, h, w = f.shape
+    cb = _tile(c, block_c)
+    grid = (c // cb,)
+    return pl.pallas_call(
+        _channel_pool_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((cb, h, w), lambda i: (i, 0, 0))],
+        out_specs=(
+            pl.BlockSpec((cb,), lambda i: (i,)),
+            pl.BlockSpec((cb,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((c,), f.dtype),
+            jax.ShapeDtypeStruct((c,), f.dtype),
+        ),
+        interpret=INTERPRET,
+    )(f)
+
+
+# ------------------------------------------------------------------------
+# channel MLP: M_c = sigmoid(MLP(avg) + MLP(max))  (Eq. 16)
+# ------------------------------------------------------------------------
+def _channel_mlp_kernel(avg_ref, max_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                        mc_ref):
+    w1 = w1_ref[...]
+    w2 = w2_ref[...]
+    b1 = b1_ref[...]
+    b2 = b2_ref[...]
+
+    def mlp(x):
+        # (1, C) @ (C, R) and (1, R) @ (R, C): MXU-shaped matmuls.
+        h = jnp.maximum(jnp.dot(x, w1, preferred_element_type=jnp.float32)
+                        + b1, 0.0)
+        return jnp.dot(h, w2, preferred_element_type=jnp.float32) + b2
+
+    s = mlp(avg_ref[...].reshape(1, -1)) + mlp(max_ref[...].reshape(1, -1))
+    mc_ref[...] = (1.0 / (1.0 + jnp.exp(-s))).reshape(-1)
+
+
+def channel_mlp(avg, mx, w1, b1, w2, b2):
+    """Shared-MLP channel attention. Single grid step: C and R are small
+    (≤ a few hundred), so both weight matrices fit VMEM comfortably."""
+    (c,) = avg.shape
+    return pl.pallas_call(
+        _channel_mlp_kernel,
+        out_shape=jax.ShapeDtypeStruct((c,), avg.dtype),
+        interpret=INTERPRET,
+    )(avg, mx, w1, b1, w2, b2)
+
+
+# ------------------------------------------------------------------------
+# spatial pooling: (C, H, W) -> stacked (2, H, W) [channel-avg; channel-max]
+# accumulated across channel-tile grid steps.
+# ------------------------------------------------------------------------
+def _spatial_pool_kernel(f_ref, sum_ref, max_ref, *, n_steps: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        max_ref[...] = jnp.full_like(max_ref, -jnp.inf)
+
+    blk = f_ref[...]                              # (Cb, H, W)
+    sum_ref[...] += blk.sum(axis=0)
+    max_ref[...] = jnp.maximum(max_ref[...], blk.max(axis=0))
+
+
+def spatial_pool(f: jnp.ndarray, block_c: int = 8):
+    """Channel-wise avg/max pooling, accumulating over channel tiles."""
+    c, h, w = f.shape
+    cb = _tile(c, block_c)
+    n = c // cb
+    s, m = pl.pallas_call(
+        functools.partial(_spatial_pool_kernel, n_steps=n),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((cb, h, w), lambda i: (i, 0, 0))],
+        out_specs=(
+            pl.BlockSpec((h, w), lambda i: (0, 0)),  # revisited block
+            pl.BlockSpec((h, w), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((h, w), f.dtype),
+            jax.ShapeDtypeStruct((h, w), f.dtype),
+        ),
+        interpret=INTERPRET,
+    )(f)
+    return s / jnp.asarray(c, f.dtype), m
+
+
+# ------------------------------------------------------------------------
+# 3x3 conv + sigmoid over the stacked pooled maps (Eq. 17)
+# ------------------------------------------------------------------------
+def _spatial_conv_kernel(stacked_ref, w_ref, b_ref, ms_ref):
+    x = stacked_ref[...]                          # (2, H, W)
+    w = w_ref[...]                                # (2, 3, 3)
+    b = b_ref[...]                                # (1, 1)
+    _, h, wid = x.shape
+    padded = jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+    acc = jnp.zeros((h, wid), x.dtype)
+    # nine shifted FMAs per input channel: pure VPU work, no gathers.
+    for ci in range(2):
+        for i in range(3):
+            for j in range(3):
+                acc = acc + w[ci, i, j] * padded[ci, i:i + h, j:j + wid]
+    acc = acc + b[0, 0]
+    ms_ref[...] = 1.0 / (1.0 + jnp.exp(-acc))
+
+
+def spatial_conv(stacked: jnp.ndarray, conv_w: jnp.ndarray,
+                 conv_b: jnp.ndarray):
+    """sigmoid(Conv3x3([avg; max])): full-block — (2, H, W) fits VMEM for
+    every feature-map size this model produces (≤ 2·64·64·4 B = 32 KiB)."""
+    _, h, w = stacked.shape
+    return pl.pallas_call(
+        _spatial_conv_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), stacked.dtype),
+        interpret=INTERPRET,
+    )(stacked, conv_w, conv_b.reshape(1, 1))
+
+
+def spatial_attention(f: jnp.ndarray, conv_w: jnp.ndarray,
+                      conv_b: jnp.ndarray, block_c: int = 8):
+    avg, mx = spatial_pool(f, block_c=block_c)
+    return spatial_conv(jnp.stack([avg, mx], axis=0), conv_w, conv_b)
+
+
+# ------------------------------------------------------------------------
+# apply: F_out = M_s ⊗ (M_c ⊗ F)   (Eq. 18)
+# ------------------------------------------------------------------------
+def _apply_kernel(f_ref, mc_ref, ms_ref, out_ref):
+    f = f_ref[...]                                # (Cb, H, W)
+    mc = mc_ref[...]                              # (Cb,)
+    ms = ms_ref[...]                              # (H, W)
+    out_ref[...] = f * mc[:, None, None] * ms[None, :, :]
+
+
+def scam_apply(f: jnp.ndarray, mc: jnp.ndarray, ms: jnp.ndarray,
+               block_c: int = 8):
+    c, h, w = f.shape
+    cb = _tile(c, block_c)
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=(c // cb,),
+        in_specs=[
+            pl.BlockSpec((cb, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((cb,), lambda i: (i,)),
+            pl.BlockSpec((h, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((cb, h, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h, w), f.dtype),
+        interpret=INTERPRET,
+    )(f, mc, ms)
+
+
+# ------------------------------------------------------------------------
+# full SCAM forward
+# ------------------------------------------------------------------------
+def scam(f, w1, b1, w2, b2, conv_w, conv_b, block_c: int = 8):
+    """Full SCAM (channel-first, per CBAM ablation cited in the paper).
+
+    Returns (F_out, M_c, M_s)."""
+    avg, mx = channel_pool(f, block_c=block_c)
+    mc = channel_mlp(avg, mx, w1, b1, w2, b2)
+    ms = spatial_attention(f, conv_w, conv_b, block_c=block_c)
+    return scam_apply(f, mc, ms, block_c=block_c), mc, ms
+
+
+def importance(f_out: jnp.ndarray, block_c: int = 8) -> jnp.ndarray:
+    """Per-channel importance x ~ p(a): |F_out| mass per channel,
+    normalized. The per-channel reduction is a Pallas kernel; the final
+    C-length normalization is a trivial jnp epilogue."""
+    c, h, w = f_out.shape
+    cb = _tile(c, block_c)
+
+    def _mass_kernel(f_ref, m_ref):
+        m_ref[...] = jnp.abs(f_ref[...]).sum(axis=(1, 2))
+
+    mass = pl.pallas_call(
+        _mass_kernel,
+        grid=(c // cb,),
+        in_specs=[pl.BlockSpec((cb, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((cb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c,), f_out.dtype),
+        interpret=INTERPRET,
+    )(f_out)
+    return mass / jnp.maximum(mass.sum(), 1e-12)

@@ -1,0 +1,332 @@
+"""L2: the DVFO collaborative-inference model in JAX (build-time only).
+
+This module defines, trains (on a synthetic structured dataset — the
+image's offline sandbox cannot download CIFAR-100/ImageNet, see DESIGN.md
+§Substitutions) and exposes for AOT lowering:
+
+* ``extractor``     — conv feature extractor + SCAM: image → feature maps,
+                      channel attention M_c, spatial attention M_s,
+                      per-channel importance distribution x ~ p(a).
+* ``local_head``    — edge-side DNN over the top-k primary-importance
+                      channels (selected by a channel mask supplied at
+                      runtime by the rust coordinator).
+* ``remote_head``   — cloud-side DNN over the remaining channels ("first
+                      convolutional layer removed" relative to the
+                      benchmark DNN, per paper §6.2.1 — it consumes
+                      feature maps, not images).
+* ``offload_prep``  — int8 quantize→dequantize of the masked offload
+                      features (what the cloud actually sees after the
+                      wire).
+* ``fusion``        — λ-weighted summation of the two logit vectors.
+* ``dqn_q``         — the DQN Q-network MLP (3 hidden layers, 128/64/32
+                      units, paper §6.1) with *weights as arguments* so
+                      the rust DQN agent can run policy inference through
+                      PJRT with the weights it trained.
+
+Training uses the pure-jnp references (kernels/ref.py); the lowered
+inference artifacts use the Pallas kernels (kernels/*.py). The two are
+allclose-verified against each other in python/tests, so there is no
+train/serve skew.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fusion as kfusion
+from .kernels import quantize as kquant
+from .kernels import ref
+from .kernels import scam as kscam
+
+# ---------------------------------------------------------------- config --
+IMG_SHAPE = (3, 32, 32)      # CHW input image
+FEAT_C = 16                  # feature-map channels after the stem
+FEAT_HW = 16                 # feature-map spatial size after stride-2 stem
+NUM_CLASSES = 8
+SCAM_REDUCTION = 4           # channel-MLP bottleneck ratio r
+
+DQN_STATE_DIM = 8            # see rust/src/policy (state featurization)
+DQN_HIDDEN = (128, 64, 32)   # paper §6.1
+
+
+@dataclasses.dataclass
+class Params:
+    """All trainable parameters of the collaborative model."""
+    stem_w: jnp.ndarray      # (FEAT_C, 3, 3, 3)    conv, stride 2
+    stem_b: jnp.ndarray      # (FEAT_C,)
+    scam_w1: jnp.ndarray     # (FEAT_C, FEAT_C // r)
+    scam_b1: jnp.ndarray
+    scam_w2: jnp.ndarray     # (FEAT_C // r, FEAT_C)
+    scam_b2: jnp.ndarray
+    scam_cw: jnp.ndarray     # (2, 3, 3)
+    scam_cb: jnp.ndarray     # ()
+    local_w: jnp.ndarray     # (FEAT_C*16, NUM_CLASSES)  dense over 4x4 pool
+    local_b: jnp.ndarray
+    rem_cw: jnp.ndarray      # (32, FEAT_C, 3, 3)        cloud conv
+    rem_cb: jnp.ndarray      # (32,)
+    rem_w: jnp.ndarray       # (32*16, NUM_CLASSES)
+    rem_b: jnp.ndarray
+
+    def tree(self) -> list[jnp.ndarray]:
+        return [getattr(self, f.name) for f in dataclasses.fields(self)]
+
+
+jax.tree_util.register_pytree_node(
+    Params,
+    lambda p: (p.tree(), None),
+    lambda _, leaves: Params(*leaves),
+)
+
+
+def init_params(key: jax.Array) -> Params:
+    ks = jax.random.split(key, 16)
+    r = FEAT_C // SCAM_REDUCTION
+
+    def glorot(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) / np.sqrt(fan_in)
+
+    return Params(
+        stem_w=glorot(ks[0], (FEAT_C, 3, 3, 3), 27),
+        stem_b=jnp.zeros((FEAT_C,)),
+        scam_w1=glorot(ks[1], (FEAT_C, r), FEAT_C),
+        scam_b1=jnp.zeros((r,)),
+        scam_w2=glorot(ks[2], (r, FEAT_C), r),
+        scam_b2=jnp.zeros((FEAT_C,)),
+        scam_cw=glorot(ks[3], (2, 3, 3), 18),
+        scam_cb=jnp.zeros(()),
+        local_w=glorot(ks[4], (FEAT_C * 16, NUM_CLASSES), FEAT_C * 16),
+        local_b=jnp.zeros((NUM_CLASSES,)),
+        rem_cw=glorot(ks[5], (32, FEAT_C, 3, 3), FEAT_C * 9),
+        rem_cb=jnp.zeros((32,)),
+        rem_w=glorot(ks[6], (32 * 16, NUM_CLASSES), 32 * 16),
+        rem_b=jnp.zeros((NUM_CLASSES,)),
+    )
+
+
+# ----------------------------------------------------------------- model --
+def _conv(x: jnp.ndarray, w: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """NCHW conv with SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def extractor_fwd(p: Params, img: jnp.ndarray, *, use_pallas: bool):
+    """image (N,3,32,32) → (features (N,C,h,w), mc (N,C), ms (N,h,w),
+    importance (N,C)). Batched; SCAM applied per-sample."""
+    feat = jax.nn.relu(_conv(img, p.stem_w, 2)
+                       + p.stem_b[None, :, None, None])
+
+    if use_pallas:
+        def one(f):
+            out, mc, ms = kscam.scam(f, p.scam_w1, p.scam_b1, p.scam_w2,
+                                     p.scam_b2, p.scam_cw, p.scam_cb)
+            return out, mc, ms, kscam.importance(out)
+        # batch is 1 at lowering time; avoid vmap over interpret-mode pallas
+        outs = [one(feat[i]) for i in range(feat.shape[0])]
+        stack = lambda i: jnp.stack([o[i] for o in outs])  # noqa: E731
+        return stack(0), stack(1), stack(2), stack(3)
+
+    def one_ref(f):
+        out, mc, ms = ref.scam(f, p.scam_w1, p.scam_b1, p.scam_w2,
+                               p.scam_b2, p.scam_cw, p.scam_cb)
+        return out, mc, ms, ref.importance(out)
+
+    return jax.vmap(one_ref)(feat)
+
+
+def _pool4(x: jnp.ndarray) -> jnp.ndarray:
+    """(N, C, 16, 16) → (N, C*16) via 4x4 average pooling + flatten —
+    keeps coarse spatial structure (a plain GAP collapses it and the
+    synthetic classes become indistinguishable)."""
+    n, c, h, w = x.shape
+    p = x.reshape(n, c, 4, h // 4, 4, w // 4).mean(axis=(3, 5))
+    return p.reshape(n, c * 16)
+
+
+def local_head_fwd(p: Params, feat: jnp.ndarray,
+                   mask: jnp.ndarray) -> jnp.ndarray:
+    """Edge head: channel-mask → 4x4 avg-pool → dense.
+
+    feat (N,C,h,w), mask (C,) with 1 = kept locally. Deliberately tiny —
+    the edge device keeps only the top-k primary-importance channels and a
+    shallow classifier (paper Fig. 4 'Local DNN')."""
+    fm = feat * mask[None, :, None, None]
+    return _pool4(fm) @ p.local_w + p.local_b
+
+
+def remote_head_fwd(p: Params, feat: jnp.ndarray,
+                    mask: jnp.ndarray) -> jnp.ndarray:
+    """Cloud head: conv → relu → GAP → dense over the offloaded channels.
+
+    Consumes feature maps (benchmark DNN minus its first conv, §6.2.1);
+    deeper than the local head because the cloud has abundant compute."""
+    fm = feat * mask[None, :, None, None]
+    h = jax.nn.relu(_conv(fm, p.rem_cw, 1) + p.rem_cb[None, :, None, None])
+    return _pool4(h) @ p.rem_w + p.rem_b
+
+
+def offload_prep_fwd(feat: jnp.ndarray, inv_mask: jnp.ndarray,
+                     *, use_pallas: bool) -> jnp.ndarray:
+    """What the cloud sees: masked secondary-importance features after the
+    int8 quantize→wire→dequantize round trip."""
+    fm = feat * inv_mask[None, :, None, None]
+    if use_pallas:
+        return jnp.stack([kquant.quant_roundtrip(fm[i])
+                          for i in range(fm.shape[0])])
+    return jax.vmap(ref.quant_roundtrip)(fm)
+
+
+def fusion_fwd(local_logits: jnp.ndarray, remote_logits: jnp.ndarray,
+               lam: jnp.ndarray, *, use_pallas: bool) -> jnp.ndarray:
+    if use_pallas:
+        return kfusion.weighted_fusion(local_logits, remote_logits, lam)
+    return ref.weighted_fusion(local_logits, remote_logits, lam)
+
+
+def collaborative_fwd(p: Params, img: jnp.ndarray, mask: jnp.ndarray,
+                      lam: jnp.ndarray, *, use_pallas: bool = False):
+    """Full edge-cloud pipeline for a given channel split. Returns fused
+    logits (N, NUM_CLASSES)."""
+    feat, _, _, _ = extractor_fwd(p, img, use_pallas=use_pallas)
+    loc = local_head_fwd(p, feat, mask)
+    dq = offload_prep_fwd(feat, 1.0 - mask, use_pallas=use_pallas)
+    rem = remote_head_fwd(p, dq, 1.0 - mask)
+    return fusion_fwd(loc, rem, lam, use_pallas=use_pallas)
+
+
+def topk_mask(importance: jnp.ndarray, k: int) -> jnp.ndarray:
+    """1.0 on the k most important channels (ties broken by index)."""
+    idx = jnp.argsort(-importance)
+    keep = idx[:k]
+    return jnp.zeros_like(importance).at[keep].set(1.0)
+
+
+# ------------------------------------------------------------ DQN Q-net ---
+def dqn_q_fwd(state: jnp.ndarray, w1, b1, w2, b2, w3, b3, w4, b4):
+    """Q-network forward: state (N,S) → Q-values (N,A).
+
+    Three hidden layers of 128/64/32 relu units (paper §6.1). Weights are
+    *arguments*, not constants: the rust agent trains them and feeds them
+    into this PJRT artifact for hot-path policy inference."""
+    h = jax.nn.relu(state @ w1 + b1)
+    h = jax.nn.relu(h @ w2 + b2)
+    h = jax.nn.relu(h @ w3 + b3)
+    return h @ w4 + b4
+
+
+def dqn_weight_shapes(state_dim: int, action_dim: int):
+    dims = (state_dim,) + DQN_HIDDEN + (action_dim,)
+    shapes = []
+    for i in range(len(dims) - 1):
+        shapes.append((dims[i], dims[i + 1]))
+        shapes.append((dims[i + 1],))
+    return shapes
+
+
+# ------------------------------------------------- synthetic dataset ------
+TEMPLATE_SEED = 42  # class identity is global, not per-dataset-draw
+
+
+def class_templates() -> jnp.ndarray:
+    """The fixed class templates (shared by train and test draws)."""
+    kt = jax.random.PRNGKey(TEMPLATE_SEED)
+    templates = jax.random.normal(kt, (NUM_CLASSES,) + IMG_SHAPE)
+    # low-pass the templates so classes differ in coarse structure
+    return jax.vmap(lambda t: jax.image.resize(
+        jax.image.resize(t, (3, 8, 8), "linear"), IMG_SHAPE, "linear"))(
+            templates)
+
+
+def make_dataset(key: jax.Array, n: int, noise: float = 1.5):
+    """Structured Gaussian-mixture images: each class has a fixed random
+    low-frequency template; samples are template + scaled noise. Hard
+    enough that the untrained model is at chance and a trained one is
+    well above it — mirroring the CIFAR-100 role in the paper's Table 4."""
+    _, kl, kn = jax.random.split(key, 3)
+    templates = class_templates()
+    labels = jax.random.randint(kl, (n,), 0, NUM_CLASSES)
+    imgs = templates[labels] + noise * jax.random.normal(
+        kn, (n,) + IMG_SHAPE)
+    return imgs.astype(jnp.float32), labels
+
+
+# ------------------------------------------------------------- training ---
+def _xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def loss_fn(p: Params, img, labels, mask, lam):
+    """Joint loss: fused prediction + auxiliary per-head terms so both
+    heads stay usable stand-alone (needed for Edge-only / Cloud-only
+    baselines)."""
+    feat, _, _, _ = extractor_fwd(p, img, use_pallas=False)
+    loc = local_head_fwd(p, feat, mask)
+    dq = offload_prep_fwd(feat, 1.0 - mask, use_pallas=False)
+    rem = remote_head_fwd(p, dq, 1.0 - mask)
+    fused = ref.weighted_fusion(loc, rem, lam)
+    full_loc = local_head_fwd(p, feat, jnp.ones_like(mask))
+    full_rem = remote_head_fwd(p, feat, jnp.ones_like(mask))
+    return (_xent(fused, labels) + 0.3 * _xent(full_loc, labels)
+            + 0.3 * _xent(full_rem, labels))
+
+
+def train(key: jax.Array, steps: int = 400, batch: int = 64,
+          lr: float = 3e-3, verbose: bool = False) -> Params:
+    """Adam training over random channel splits (feature-dropout style, so
+    any runtime top-k/ξ split the coordinator picks works)."""
+    kp, kd = jax.random.split(key)
+    p = init_params(kp)
+    imgs, labels = make_dataset(kd, 4096)
+
+    flat = p.tree()
+    m = [jnp.zeros_like(t) for t in flat]
+    v = [jnp.zeros_like(t) for t in flat]
+    names = [f.name for f in dataclasses.fields(Params)]
+
+    @jax.jit
+    def step(flat, m, v, i, img, lab, mask, lam):
+        p = Params(**dict(zip(names, flat)))
+        loss, grads = jax.value_and_grad(
+            lambda pp: loss_fn(pp, img, lab, mask, lam))(p)
+        g = grads.tree()
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        out_f, out_m, out_v = [], [], []
+        for t, gt, mt, vt in zip(flat, g, m, v):
+            mt = b1 * mt + (1 - b1) * gt
+            vt = b2 * vt + (1 - b2) * gt * gt
+            mh = mt / (1 - b1 ** i)
+            vh = vt / (1 - b2 ** i)
+            out_f.append(t - lr * mh / (jnp.sqrt(vh) + eps))
+            out_m.append(mt)
+            out_v.append(vt)
+        return out_f, out_m, out_v, loss
+
+    rng = np.random.default_rng(7)
+    for i in range(1, steps + 1):
+        sel = rng.integers(0, imgs.shape[0], batch)
+        k = int(rng.integers(FEAT_C // 4, 3 * FEAT_C // 4 + 1))
+        mask = np.zeros(FEAT_C, np.float32)
+        mask[rng.permutation(FEAT_C)[:k]] = 1.0
+        lam = jnp.float32(rng.uniform(0.3, 0.7))
+        flat, m, v, loss = step(flat, m, v, jnp.float32(i),
+                                imgs[sel], labels[sel],
+                                jnp.asarray(mask), lam)
+        if verbose and i % 100 == 0:
+            print(f"step {i:4d} loss {float(loss):.4f}")
+    return Params(**dict(zip(names, flat)))
+
+
+def evaluate(p: Params, imgs, labels, mask, lam) -> float:
+    logits = collaborative_fwd(p, imgs, mask, lam, use_pallas=False)
+    return float((logits.argmax(-1) == labels).mean())
+
+
+def evaluate_edge_only(p: Params, imgs, labels) -> float:
+    feat, _, _, _ = extractor_fwd(p, imgs, use_pallas=False)
+    logits = local_head_fwd(p, feat, jnp.ones((FEAT_C,)))
+    return float((logits.argmax(-1) == labels).mean())

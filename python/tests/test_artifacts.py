@@ -1,0 +1,81 @@
+"""Artifact-level contracts: manifest schema, HLO text loadability (parsed
+back through xla_client), testset binary layout. Skipped when artifacts
+have not been built yet (run `make artifacts` first)."""
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+EXPECTED = ["extractor", "local_head", "offload_prep", "remote_head",
+            "fusion", "collaborative", "dqn_q"]
+
+
+def test_manifest_lists_all_artifacts(manifest):
+    for name in EXPECTED:
+        assert name in manifest["artifacts"], name
+        path = os.path.join(ART, manifest["artifacts"][name]["file"])
+        assert os.path.getsize(path) > 100
+
+
+def test_hlo_text_parses(manifest):
+    """Each artifact must start with an HLO module header and mention an
+    ENTRY computation — the minimal structure the rust-side text parser
+    requires."""
+    for name in EXPECTED:
+        path = os.path.join(ART, manifest["artifacts"][name]["file"])
+        text = open(path).read()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_testset_binary_layout(manifest):
+    meta = manifest["testset"]
+    n = meta["count"]
+    img_f32 = meta["img_f32_count"]
+    path = os.path.join(ART, meta["file"])
+    size = os.path.getsize(path)
+    assert size == img_f32 * 4 + n * 4
+    with open(path, "rb") as f:
+        imgs = np.frombuffer(f.read(img_f32 * 4), np.float32)
+        labels = np.frombuffer(f.read(n * 4), np.uint32)
+    assert np.isfinite(imgs).all()
+    assert labels.max() < manifest["model"]["num_classes"]
+
+
+def test_manifest_accuracy_is_sane(manifest):
+    acc = manifest["accuracy"]
+    # trained model must be far above chance (1/8) on all operating points
+    for k, v in acc.items():
+        assert v > 0.5, (k, v)
+
+
+def test_probe_logits_present(manifest):
+    probe = manifest["probe"]
+    assert len(probe["expected_logits"]) == manifest["model"]["num_classes"]
+    assert all(np.isfinite(probe["expected_logits"]))
+
+
+def test_dqn_dims_consistent(manifest):
+    d = manifest["dqn"]
+    assert d["action_dim"] == 3 * d["freq_levels"] + d["xi_levels"]
+    shapes = [tuple(s) for s in d["weight_shapes"]]
+    dims = [d["state_dim"]] + d["hidden"] + [d["action_dim"]]
+    want = []
+    for i in range(len(dims) - 1):
+        want += [(dims[i], dims[i + 1]), (dims[i + 1],)]
+    assert shapes == want

@@ -1,0 +1,169 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (and block sizes, which exercise the BlockSpec
+tiling logic); assert_allclose against kernels/ref.py is THE correctness
+signal for the kernels that end up inside the AOT artifacts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fusion as kfusion
+from compile.kernels import quantize as kquant
+from compile.kernels import ref
+from compile.kernels import scam as kscam
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             jnp.float32) * scale
+
+
+def scam_weights(c: int, r: int, key: int = 3):
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    return (
+        jax.random.normal(ks[0], (c, r)) * 0.4,
+        jax.random.normal(ks[1], (r,)) * 0.1,
+        jax.random.normal(ks[2], (r, c)) * 0.4,
+        jax.random.normal(ks[3], (c,)) * 0.1,
+        jax.random.normal(ks[4], (2, 3, 3)) * 0.4,
+        jnp.float32(0.07),
+    )
+
+
+# ------------------------------------------------------------------ SCAM --
+@given(c=st.sampled_from([4, 8, 16, 32]),
+       h=st.sampled_from([4, 8, 16]),
+       blk=st.sampled_from([1, 2, 8, 16]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_channel_pool_matches_ref(c, h, blk, seed):
+    f = rand(seed, (c, h, h), 2.0)
+    avg_p, max_p = kscam.channel_pool(f, block_c=blk)
+    avg_r, max_r = ref.channel_pool(f)
+    np.testing.assert_allclose(avg_p, avg_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(max_p, max_r, rtol=1e-5, atol=1e-6)
+
+
+@given(c=st.sampled_from([4, 8, 16]), r=st.sampled_from([2, 4]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_channel_mlp_matches_ref(c, r, seed):
+    w1, b1, w2, b2, _, _ = scam_weights(c, r, key=seed % 97)
+    avg = rand(seed, (c,))
+    mx = rand(seed + 1, (c,))
+    got = kscam.channel_mlp(avg, mx, w1, b1, w2, b2)
+    want = ref.channel_mlp(avg, mx, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(c=st.sampled_from([4, 8, 16, 32]), h=st.sampled_from([4, 8, 16]),
+       blk=st.sampled_from([1, 4, 8]), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_spatial_attention_matches_ref(c, h, blk, seed):
+    f = rand(seed, (c, h, h), 2.0)
+    _, _, _, _, cw, cb = scam_weights(c, 4, key=seed % 89)
+    got = kscam.spatial_attention(f, cw, cb, block_c=blk)
+    want = ref.spatial_attention(f, cw, cb)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(c=st.sampled_from([4, 16]), h=st.sampled_from([8, 16]),
+       blk=st.sampled_from([2, 8]), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_full_scam_matches_ref(c, h, blk, seed):
+    f = rand(seed, (c, h, h), 1.5)
+    w1, b1, w2, b2, cw, cb = scam_weights(c, max(c // 4, 1), key=seed % 83)
+    out_p, mc_p, ms_p = kscam.scam(f, w1, b1, w2, b2, cw, cb, block_c=blk)
+    out_r, mc_r, ms_r = ref.scam(f, w1, b1, w2, b2, cw, cb)
+    np.testing.assert_allclose(mc_p, mc_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ms_p, ms_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out_p, out_r, rtol=1e-5, atol=1e-6)
+
+
+@given(c=st.sampled_from([4, 16]), h=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_importance_is_distribution(c, h, seed):
+    f = rand(seed, (c, h, h))
+    p = kscam.importance(f)
+    np.testing.assert_allclose(p, ref.importance(f), rtol=1e-5, atol=1e-7)
+    assert float(p.sum()) == pytest.approx(1.0, abs=1e-5)
+    assert float(p.min()) >= 0.0
+
+
+def test_scam_attention_maps_are_bounded():
+    """M_c and M_s are sigmoid outputs: strictly inside (0, 1)."""
+    f = rand(11, (16, 16, 16), 3.0)
+    w1, b1, w2, b2, cw, cb = scam_weights(16, 4)
+    _, mc, ms = kscam.scam(f, w1, b1, w2, b2, cw, cb)
+    assert float(mc.min()) > 0.0 and float(mc.max()) < 1.0
+    assert float(ms.min()) > 0.0 and float(ms.max()) < 1.0
+
+
+# ------------------------------------------------------------ quantization --
+@given(n=st.sampled_from([16, 100, 4096, 5000]), scale=st.sampled_from(
+    [1e-3, 1.0, 100.0]), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_absmax_matches_ref(n, scale, seed):
+    x = rand(seed, (n,), scale)
+    np.testing.assert_allclose(kquant.absmax(x), ref.absmax(x), rtol=1e-6)
+
+
+@given(shape=st.sampled_from([(64,), (7, 33), (4, 8, 8)]),
+       scale=st.sampled_from([1e-2, 1.0, 10.0]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_quant_roundtrip_matches_ref(shape, scale, seed):
+    x = rand(seed, shape, scale)
+    got = kquant.quant_roundtrip(x)
+    want = ref.quant_roundtrip(x)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_quant_error_bounded_by_half_step(seed):
+    """|x - dequant(quant(x))| <= scale/2 for in-range values."""
+    x = rand(seed, (256,), 2.0)
+    s = float(ref.absmax(x)) / 127.0
+    err = np.abs(np.asarray(kquant.quant_roundtrip(x)) - np.asarray(x))
+    assert err.max() <= s / 2 + 1e-6
+
+
+def test_quantize_emits_int8():
+    x = rand(5, (32,), 3.0)
+    q = kquant.quantize_int8(x, kquant.absmax(x) / 127.0)
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+
+
+def test_quantize_zero_tensor_is_safe():
+    x = jnp.zeros((64,), jnp.float32)
+    out = kquant.quant_roundtrip(x)
+    np.testing.assert_allclose(out, x, atol=0)
+
+
+# ---------------------------------------------------------------- fusion --
+@given(n=st.sampled_from([8, 100]), lam=st.sampled_from([0.0, 0.3, 0.5, 1.0]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_fusion_matches_ref(n, lam, seed):
+    a = rand(seed, (n,))
+    b = rand(seed + 1, (n,))
+    got = kfusion.weighted_fusion(a, b, jnp.float32(lam))
+    want = ref.weighted_fusion(a, b, jnp.float32(lam))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_fusion_extremes_select_single_source():
+    a = rand(1, (16,))
+    b = rand(2, (16,))
+    np.testing.assert_allclose(
+        kfusion.weighted_fusion(a, b, jnp.float32(1.0)), a, atol=1e-7)
+    np.testing.assert_allclose(
+        kfusion.weighted_fusion(a, b, jnp.float32(0.0)), b, atol=1e-7)

@@ -1,0 +1,112 @@
+"""L2 contracts: shapes, pallas-vs-ref parity of the full model, dataset
+statistics, DQN Q-net shape algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return M.make_dataset(jax.random.PRNGKey(1), 4)
+
+
+def test_extractor_shapes(params, batch):
+    imgs, _ = batch
+    feat, mc, ms, imp = M.extractor_fwd(params, imgs, use_pallas=False)
+    n = imgs.shape[0]
+    assert feat.shape == (n, M.FEAT_C, M.FEAT_HW, M.FEAT_HW)
+    assert mc.shape == (n, M.FEAT_C)
+    assert ms.shape == (n, M.FEAT_HW, M.FEAT_HW)
+    assert imp.shape == (n, M.FEAT_C)
+    np.testing.assert_allclose(np.asarray(imp.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_extractor_pallas_matches_ref(params, batch):
+    imgs, _ = batch
+    a = M.extractor_fwd(params, imgs[:1], use_pallas=True)
+    b = M.extractor_fwd(params, imgs[:1], use_pallas=False)
+    for got, want in zip(a, b):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_collaborative_pallas_matches_ref(params, batch):
+    imgs, _ = batch
+    mask = M.topk_mask(jnp.ones(M.FEAT_C) / M.FEAT_C, 8)
+    lam = jnp.float32(0.5)
+    got = M.collaborative_fwd(params, imgs[:1], mask, lam, use_pallas=True)
+    want = M.collaborative_fwd(params, imgs[:1], mask, lam, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_heads_shapes(params, batch):
+    imgs, _ = batch
+    feat, _, _, _ = M.extractor_fwd(params, imgs, use_pallas=False)
+    mask = jnp.ones(M.FEAT_C)
+    assert M.local_head_fwd(params, feat, mask).shape == (4, M.NUM_CLASSES)
+    assert M.remote_head_fwd(params, feat, mask).shape == (4, M.NUM_CLASSES)
+
+
+def test_masked_channels_do_not_leak(params, batch):
+    """A head must be invariant to features in channels its mask zeroes."""
+    imgs, _ = batch
+    feat, _, _, _ = M.extractor_fwd(params, imgs, use_pallas=False)
+    mask = M.topk_mask(jnp.arange(M.FEAT_C, dtype=jnp.float32), 8)
+    poisoned = feat + 1e3 * (1.0 - mask)[None, :, None, None]
+    a = M.local_head_fwd(params, feat, mask)
+    b = M.local_head_fwd(params, poisoned, mask)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_topk_mask_selects_k_largest():
+    imp = jnp.asarray([0.1, 0.5, 0.05, 0.2, 0.15])
+    m = M.topk_mask(imp, 2)
+    np.testing.assert_array_equal(np.asarray(m), [0, 1, 0, 1, 0])
+
+
+def test_dataset_is_reproducible_and_balancedish():
+    i1, l1 = M.make_dataset(jax.random.PRNGKey(9), 512)
+    i2, l2 = M.make_dataset(jax.random.PRNGKey(9), 512)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_allclose(np.asarray(i1), np.asarray(i2))
+    counts = np.bincount(np.asarray(l1), minlength=M.NUM_CLASSES)
+    assert counts.min() > 512 // M.NUM_CLASSES // 3
+
+
+def test_dataset_templates_shared_across_draws():
+    """Train/test draws must share class identity (regression test for the
+    template-per-key bug)."""
+    t1 = M.class_templates()
+    t2 = M.class_templates()
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2))
+
+
+def test_dqn_weight_shapes_chain():
+    shapes = M.dqn_weight_shapes(8, 41)
+    assert shapes == [(8, 128), (128,), (128, 64), (64,), (64, 32), (32,),
+                      (32, 41), (41,)]
+
+
+def test_dqn_q_fwd_shape():
+    shapes = M.dqn_weight_shapes(M.DQN_STATE_DIM, 41)
+    ws = [jnp.zeros(s) for s in shapes]
+    q = M.dqn_q_fwd(jnp.zeros((1, M.DQN_STATE_DIM)), *ws)
+    assert q.shape == (1, 41)
+
+
+def test_fusion_lambda_blends_logits(params, batch):
+    imgs, _ = batch
+    mask = M.topk_mask(jnp.arange(M.FEAT_C, dtype=jnp.float32), 8)
+    feat, _, _, _ = M.extractor_fwd(params, imgs[:1], use_pallas=False)
+    loc = M.local_head_fwd(params, feat, mask)
+    rem = M.remote_head_fwd(params, feat, 1.0 - mask)
+    mid = M.fusion_fwd(loc, rem, jnp.float32(0.5), use_pallas=False)
+    np.testing.assert_allclose(np.asarray(mid), np.asarray((loc + rem) / 2),
+                               rtol=1e-6)

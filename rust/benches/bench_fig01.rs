@@ -1,0 +1,7 @@
+//! Fig. 1 — CPU/GPU/MEM energy breakdown, 4 models on Xavier NX
+//!
+//! Regenerates the paper's rows/series on the simulator substrate
+//! (`DVFO_BENCH_FULL=1` for the full-size sweep). See DESIGN.md §4.
+fn main() {
+    dvfo::bench_harness::run_experiment_bench("fig01");
+}

@@ -1,0 +1,7 @@
+//! Fig. 8 — E2E latency+energy: DVFO vs DRLDO/AppealNet/Cloud/Edge
+//!
+//! Regenerates the paper's rows/series on the simulator substrate
+//! (`DVFO_BENCH_FULL=1` for the full-size sweep). See DESIGN.md §4.
+fn main() {
+    dvfo::bench_harness::run_experiment_bench("fig08");
+}

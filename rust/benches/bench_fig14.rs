@@ -1,0 +1,7 @@
+//! Fig. 14 — fusion methods: runtime overhead
+//!
+//! Regenerates the paper's rows/series on the simulator substrate
+//! (`DVFO_BENCH_FULL=1` for the full-size sweep). See DESIGN.md §4.
+fn main() {
+    dvfo::bench_harness::run_experiment_bench("fig14");
+}

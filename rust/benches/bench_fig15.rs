@@ -1,0 +1,7 @@
+//! Fig. 15 — DQN convergence with/without thinking-while-moving
+//!
+//! Regenerates the paper's rows/series on the simulator substrate
+//! (`DVFO_BENCH_FULL=1` for the full-size sweep). See DESIGN.md §4.
+fn main() {
+    dvfo::bench_harness::run_experiment_bench("fig15");
+}

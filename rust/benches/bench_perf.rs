@@ -1,0 +1,113 @@
+//! §Perf — hot-path microbenchmarks (EXPERIMENTS.md §Perf):
+//!   * DQN policy inference (the per-request decision, L3's hottest op)
+//!   * simulator step (env.execute)
+//!   * full coordinator step (observe → decide → execute)
+//!   * real-artifact pipeline request (PJRT path), cold vs warm
+
+use dvfo::bench_harness::bench;
+use dvfo::configx::Config;
+use dvfo::coordinator::pipeline::{Pipeline, PipelineRequest};
+use dvfo::coordinator::{Coordinator, Decision};
+use dvfo::dqn::{InferScratch, Mlp};
+use dvfo::util::Pcg32;
+use dvfo::workload::{Arrivals, TaskGen};
+use std::path::Path;
+
+fn main() {
+    // ---- L3: DQN policy inference (128/64/32 head, 41 actions)
+    let mut rng = Pcg32::seeded(1);
+    let mlp = Mlp::new(&[8, 128, 64, 32, 41], &mut rng);
+    let state: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+    let mut scratch = InferScratch::default();
+    let r = bench("dqn_infer (scratch, zero-skip)", 100, 5000, || {
+        std::hint::black_box(mlp.infer(&state, &mut scratch));
+    });
+    println!("{}", r.report());
+
+    // naive baseline: full batched forward with allocations
+    let x = dvfo::dqn::Tensor2::from_vec(1, 8, state.clone());
+    let r = bench("dqn_infer (naive alloc forward)", 100, 5000, || {
+        std::hint::black_box(mlp.forward(&x).output.data[0]);
+    });
+    println!("{}", r.report());
+
+    // ---- simulator: one env.execute
+    let cfg = Config::default();
+    let mut coord = Coordinator::from_config(&cfg).unwrap();
+    let mut gen =
+        TaskGen::new(&cfg.model, coord.env.dataset, Arrivals::Sequential, 2).unwrap();
+    let task = gen.next_task();
+    let d = Decision::edge_only_max(coord.env.levels());
+    let r = bench("env.execute (simulated task)", 50, 5000, || {
+        std::hint::black_box(coord.env.execute(&task, &d, 0.0));
+    });
+    println!("{}", r.report());
+
+    // ---- full coordinator step (deployed policy)
+    let r = bench("coordinator.step (greedy dvfo)", 50, 2000, || {
+        std::hint::black_box(coord.step(&task, false));
+    });
+    println!("{}", r.report());
+
+    // ---- one DQN learn() gradient step (batch 128)
+    {
+        use dvfo::dqn::{ActionSpace, DqnAgent, DqnConfig, Transition};
+        let mut agent = DqnAgent::new(
+            DqnConfig::default(),
+            ActionSpace::new(vec![10, 10, 10, 11]),
+            3,
+        );
+        let mut trng = Pcg32::seeded(9);
+        for _ in 0..512 {
+            agent.remember(Transition {
+                state: (0..8).map(|_| trng.next_f32()).collect(),
+                action: vec![1, 2, 3, 4],
+                reward: trng.next_f64(),
+                next_state: (0..8).map(|_| trng.next_f32()).collect(),
+                done: false,
+                gamma_pow: 1.0,
+            });
+        }
+        let r = bench("dqn.learn (PER batch 128)", 10, 300, || {
+            std::hint::black_box(agent.learn());
+        });
+        println!("{}", r.report());
+    }
+
+    // ---- real PJRT pipeline (skipped without artifacts)
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let pipeline = Pipeline::load(dir).unwrap();
+        let (imgs, labels) = pipeline.engine().manifest.load_testset(dir).unwrap();
+        let img_len: usize = pipeline.engine().manifest.img_shape.iter().product();
+        let req = |i: usize| PipelineRequest {
+            id: i as u64,
+            image: imgs[..img_len].to_vec(),
+            label: Some(labels[0]),
+            xi: 0.5,
+            lambda: 0.5,
+        };
+        // cold: includes per-serve cloud-engine spin-up
+        let t0 = std::time::Instant::now();
+        pipeline.serve(vec![req(0)]).unwrap();
+        println!(
+            "{:<40} cold first request: {:?}",
+            "pipeline.serve (PJRT)", t0.elapsed()
+        );
+        // warm: amortized over a batch
+        let t0 = std::time::Instant::now();
+        let n = 128;
+        pipeline
+            .serve((0..n).map(req).collect::<Vec<_>>())
+            .unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<40} warm batch: {:.3} ms/req ({:.0} req/s)",
+            "pipeline.serve (PJRT)",
+            1e3 * dt / n as f64,
+            n as f64 / dt
+        );
+    } else {
+        println!("pipeline benches skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,7 @@
+//! Table 6 — scalability on ImageNet-2012 (6 models x Nano/TX2)
+//!
+//! Regenerates the paper's rows/series on the simulator substrate
+//! (`DVFO_BENCH_FULL=1` for the full-size sweep). See DESIGN.md §4.
+fn main() {
+    dvfo::bench_harness::run_experiment_bench("tab06");
+}

@@ -1,0 +1,224 @@
+//! Analytic accuracy model for the eight paper DNNs.
+//!
+//! The real small model (artifacts/) has its accuracy *measured*; the big
+//! models cannot be trained here, so their accuracy under a given
+//! (split, compression, fusion) configuration comes from this mechanism
+//! model, calibrated against the paper's Table 4 / Tables 5-6 bands:
+//!
+//!   loss = fusion_term + quantization_term + imbalance_term
+//!          + misallocation_term (+ discriminator_term for AppealNet)
+//!
+//! * fusion_term — weighted summation preserves logit alignment (≈0.15
+//!   pt); FC/conv fusion layers break it (Table 4: 3.9-4.5 / 6.3-8.9 pt).
+//! * quantization_term — int8 noise on the *offloaded importance mass*.
+//! * imbalance_term — the λ bowl of Fig. 12: under-weighting local
+//!   primary features (λ small) or starving the remote path (λ large).
+//! * misallocation_term — offloading without importance guidance (DRLDO
+//!   offloads arbitrary data) hurts in proportion to mass misallocated.
+
+use crate::offload::{quant_rel_error, Compression};
+use crate::scam::SplitPlan;
+
+/// How the two partial results are merged (paper §5.3 / Table 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fusion {
+    /// point-to-point weighted summation (DVFO)
+    WeightedSum,
+    /// extra fully-connected fusion layer
+    FcLayer,
+    /// extra convolutional fusion layer
+    ConvLayer,
+    /// no fusion: one side produces the whole result (Edge-/Cloud-only,
+    /// AppealNet's binary offload)
+    Single,
+}
+
+impl Fusion {
+    fn base_loss_pts(&self) -> f64 {
+        match self {
+            Fusion::WeightedSum => 0.15,
+            Fusion::FcLayer => 3.6,
+            Fusion::ConvLayer => 6.1,
+            Fusion::Single => 0.0,
+        }
+    }
+}
+
+/// Accuracy-relevant configuration of one serving decision.
+#[derive(Clone, Debug)]
+pub struct AccuracyInputs {
+    /// base accuracy of the uncompressed single-device model (%)
+    pub base_acc: f64,
+    /// the channel split actually executed
+    pub local_mass: f64,
+    pub xi: f64,
+    /// was the split importance-guided (SCAM) or arbitrary?
+    pub importance_guided: bool,
+    pub compression: Compression,
+    pub fusion: Fusion,
+    /// summation weight λ (ignored for non-WeightedSum fusion)
+    pub lambda: f64,
+}
+
+impl AccuracyInputs {
+    pub fn from_plan(base_acc: f64, plan: &SplitPlan) -> Self {
+        Self {
+            base_acc,
+            local_mass: plan.local_mass,
+            xi: plan.xi,
+            importance_guided: true,
+            compression: Compression::Int8,
+            fusion: Fusion::WeightedSum,
+            lambda: 0.5,
+        }
+    }
+}
+
+/// Accuracy loss in percentage points (≥ 0).
+pub fn accuracy_loss_pts(inp: &AccuracyInputs) -> f64 {
+    let offload_mass = (1.0 - inp.local_mass).clamp(0.0, 1.0);
+
+    // Everything on one side, no compression, no fusion → no loss.
+    if inp.xi <= 0.0 && inp.fusion == Fusion::Single {
+        return 0.0;
+    }
+
+    let fusion = inp.fusion.base_loss_pts();
+
+    // int8 noise applied to whatever crossed the wire, weighted by how
+    // much of the decision-relevant mass it carries.
+    let quant = quant_rel_error(inp.compression) * 100.0 * (0.4 + 2.2 * offload_mass);
+
+    // λ bowl (Fig. 12): optimum shifts toward the side holding more mass.
+    let imbalance = if inp.fusion == Fusion::WeightedSum {
+        let lam_star = 0.35 + 0.3 * inp.local_mass;
+        let d = (inp.lambda - lam_star).abs();
+        // gentle inside ±0.2, steep outside (paper: λ≤0.2 or ≥0.8 is bad)
+        9.0 * (d - 0.15).max(0.0).powi(2) + 0.8 * d * d
+    } else {
+        0.0
+    };
+
+    // offloading *important* features blindly loses information that the
+    // shallow local head cannot recover.
+    let misalloc = if inp.importance_guided {
+        0.25 * offload_mass * inp.xi
+    } else {
+        // arbitrary split: expected offloaded mass ≈ ξ, and high-value
+        // channels leave with probability ξ
+        2.4 * inp.xi
+    };
+
+    (fusion + quant + imbalance + misalloc).max(0.0)
+}
+
+/// Final accuracy (%) for a decision.
+pub fn accuracy_pct(inp: &AccuracyInputs) -> f64 {
+    (inp.base_acc - accuracy_loss_pts(inp)).clamp(0.0, 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dvfo_like(local_mass: f64, xi: f64, lambda: f64) -> AccuracyInputs {
+        AccuracyInputs {
+            base_acc: 91.84,
+            local_mass,
+            xi,
+            importance_guided: true,
+            compression: Compression::Int8,
+            fusion: Fusion::WeightedSum,
+            lambda,
+        }
+    }
+
+    #[test]
+    fn dvfo_loss_under_one_point() {
+        // Table 4: DVFO loses 0.68 pt (CIFAR) with λ=0.5. An
+        // importance-guided split keeps ~85% of mass local at ξ=0.6.
+        let loss = accuracy_loss_pts(&dvfo_like(0.85, 0.6, 0.5));
+        assert!((0.1..1.0).contains(&loss), "loss {loss}");
+    }
+
+    #[test]
+    fn table4_fusion_ordering() {
+        // weighted sum ≪ FC < conv (Table 4: 0.68 / 4.45 / 8.91).
+        let ws = accuracy_loss_pts(&dvfo_like(0.85, 0.6, 0.5));
+        let fc = accuracy_loss_pts(&AccuracyInputs {
+            fusion: Fusion::FcLayer,
+            ..dvfo_like(0.85, 0.6, 0.5)
+        });
+        let conv = accuracy_loss_pts(&AccuracyInputs {
+            fusion: Fusion::ConvLayer,
+            ..dvfo_like(0.85, 0.6, 0.5)
+        });
+        assert!(ws < 1.0 && fc > 3.0 && conv > fc);
+        assert!(
+            fc / ws > 4.0 && conv / ws > 7.0,
+            "ratios {:.1} {:.1} vs paper 6.7x/12.3x",
+            fc / ws,
+            conv / ws
+        );
+    }
+
+    #[test]
+    fn lambda_bowl_matches_fig12() {
+        // extremes are bad, the 0.4-0.6 plateau is good
+        let mid = accuracy_loss_pts(&dvfo_like(0.8, 0.5, 0.5));
+        let low = accuracy_loss_pts(&dvfo_like(0.8, 0.5, 0.05));
+        let high = accuracy_loss_pts(&dvfo_like(0.8, 0.5, 0.98));
+        assert!(low > mid + 0.5, "low {low} mid {mid}");
+        assert!(high > mid + 0.2, "high {high} mid {mid}");
+    }
+
+    #[test]
+    fn unguided_split_is_worse() {
+        let guided = accuracy_loss_pts(&dvfo_like(0.6, 0.5, 0.5));
+        let blind = accuracy_loss_pts(&AccuracyInputs {
+            importance_guided: false,
+            ..dvfo_like(0.6, 0.5, 0.5)
+        });
+        assert!(blind > guided + 0.5, "blind {blind} guided {guided}");
+    }
+
+    #[test]
+    fn edge_only_lossless() {
+        let inp = AccuracyInputs {
+            base_acc: 91.84,
+            local_mass: 1.0,
+            xi: 0.0,
+            importance_guided: true,
+            compression: Compression::None,
+            fusion: Fusion::Single,
+            lambda: 0.5,
+        };
+        assert_eq!(accuracy_loss_pts(&inp), 0.0);
+        assert_eq!(accuracy_pct(&inp), 91.84);
+    }
+
+    #[test]
+    fn cloud_only_compressed_loses_points() {
+        // Fig. 9: binary offload of compressed whole features costs
+        // multiple points.
+        let inp = AccuracyInputs {
+            base_acc: 91.84,
+            local_mass: 0.0,
+            xi: 1.0,
+            importance_guided: false,
+            compression: Compression::Int8,
+            fusion: Fusion::Single,
+            lambda: 0.5,
+        };
+        let loss = accuracy_loss_pts(&inp);
+        assert!((2.0..6.0).contains(&loss), "loss {loss}");
+    }
+
+    #[test]
+    fn loss_monotone_in_offloaded_mass() {
+        let a = accuracy_loss_pts(&dvfo_like(0.9, 0.5, 0.5));
+        let b = accuracy_loss_pts(&dvfo_like(0.6, 0.5, 0.5));
+        let c = accuracy_loss_pts(&dvfo_like(0.3, 0.5, 0.5));
+        assert!(a < b && b < c, "{a} {b} {c}");
+    }
+}

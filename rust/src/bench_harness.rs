@@ -1,0 +1,90 @@
+//! Tiny benchmark harness for `benches/*.rs` (criterion is unavailable
+//! offline): warmup + timed iterations with mean/p50/p99 and throughput,
+//! plus the table-printing entry the per-figure benches use.
+
+use crate::telemetry::Table;
+use crate::util::Samples;
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} iters={:<5} mean={:>10.3?} p50={:>10.3?} p99={:>10.3?}",
+            self.name,
+            self.iters,
+            std::time::Duration::from_secs_f64(self.mean_s),
+            std::time::Duration::from_secs_f64(self.p50_s),
+            std::time::Duration::from_secs_f64(self.p99_s),
+        )
+    }
+}
+
+/// Time `f` for up to `iters` iterations (after `warmup` runs).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: s.mean(),
+        p50_s: s.p50(),
+        p99_s: s.p99(),
+    }
+}
+
+/// Standard main body for a per-figure bench target: run the experiment,
+/// print the paper-style table and the wall-clock, honoring
+/// `DVFO_BENCH_FULL=1` for the non-quick variant.
+pub fn run_experiment_bench(id: &str) {
+    let quick = std::env::var("DVFO_BENCH_FULL").map(|v| v != "1").unwrap_or(true);
+    let t0 = Instant::now();
+    match crate::experiments::run_by_name(id, quick) {
+        Ok(table) => {
+            println!("== {id} ({}) ==", if quick { "quick" } else { "full" });
+            println!("{}", table.render());
+            println!("[{id}] regenerated in {:?}", t0.elapsed());
+        }
+        Err(e) => {
+            eprintln!("[{id}] FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Render helper used by benches that also dump CSV artifacts.
+pub fn save_csv(table: &Table, path: &str) {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    let _ = std::fs::write(path, table.to_csv());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_s >= 0.0 && r.p99_s >= r.p50_s);
+        assert!(r.report().contains("noop-ish"));
+    }
+}

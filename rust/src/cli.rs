@@ -1,0 +1,250 @@
+//! Declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`, and
+//! positional arguments, with generated `--help` text.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Cmd {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl Cmd {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            ..Default::default()
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{val}\n      {}{def}\n", o.name, o.help));
+        }
+        s
+    }
+}
+
+/// Parsed arguments for one command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+    /// Free-form `key=value` overrides collected from `--set k=v`.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(String::as_str)
+    }
+}
+
+/// Parse `argv` (without the program name) against a command spec.
+/// Returns Err with the usage text when `--help` is requested.
+pub fn parse(cmd: &Cmd, argv: &[String]) -> Result<Args> {
+    let mut args = Args::default();
+    for o in &cmd.opts {
+        if let (true, Some(d)) = (o.takes_value, o.default) {
+            args.values.insert(o.name.to_string(), d.to_string());
+        }
+    }
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        if a == "--help" || a == "-h" {
+            bail!("{}", cmd.usage());
+        }
+        if let Some(rest) = a.strip_prefix("--") {
+            let (name, inline) = match rest.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (rest, None),
+            };
+            if name == "set" {
+                let v = match inline {
+                    Some(v) => v,
+                    None => it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--set needs k=v"))?
+                        .clone(),
+                };
+                let (k, val) = v
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("--set wants k=v, got `{v}`"))?;
+                args.overrides.push((k.to_string(), val.to_string()));
+                continue;
+            }
+            let spec = cmd
+                .opts
+                .iter()
+                .find(|o| o.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", cmd.usage()))?;
+            if spec.takes_value {
+                let v = match inline {
+                    Some(v) => v,
+                    None => it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        .clone(),
+                };
+                args.values.insert(name.to_string(), v);
+            } else {
+                if inline.is_some() {
+                    bail!("--{name} does not take a value");
+                }
+                args.flags.push(name.to_string());
+            }
+        } else {
+            args.positionals.push(a.clone());
+        }
+    }
+    if args.positionals.len() > cmd.positionals.len() {
+        bail!(
+            "too many positional arguments\n\n{}",
+            cmd.usage()
+        );
+    }
+    Ok(args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Cmd {
+        Cmd::new("serve", "run the coordinator")
+            .opt("config", "config file", None)
+            .opt("requests", "request count", Some("100"))
+            .flag("verbose", "chatty output")
+            .positional("trace", "workload trace")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(
+            &cmd(),
+            &sv(&["--config=run.json", "--verbose", "t.json", "--requests", "7"]),
+        )
+        .unwrap();
+        assert_eq!(a.get("config"), Some("run.json"));
+        assert_eq!(a.get("requests"), Some("7"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(0), Some("t.json"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&cmd(), &sv(&[])).unwrap();
+        assert_eq!(a.get("requests"), Some("100"));
+        assert_eq!(a.get("config"), None);
+        assert_eq!(a.parse_or("requests", 0usize).unwrap(), 100);
+    }
+
+    #[test]
+    fn collects_set_overrides() {
+        let a = parse(&cmd(), &sv(&["--set", "eta=0.3", "--set=lambda=0.6"])).unwrap();
+        assert_eq!(
+            a.overrides,
+            vec![
+                ("eta".to_string(), "0.3".to_string()),
+                ("lambda".to_string(), "0.6".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_unknown_and_help() {
+        assert!(parse(&cmd(), &sv(&["--nope"])).is_err());
+        let err = parse(&cmd(), &sv(&["--help"])).unwrap_err().to_string();
+        assert!(err.contains("USAGE"));
+        assert!(err.contains("--requests"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&cmd(), &sv(&["--config"])).is_err());
+        assert!(parse(&cmd(), &sv(&["--verbose=1"])).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Configuration system: JSON-backed typed configs with defaults,
+//! file/str loading, override strings (`key=value` dotted paths), and
+//! validation. Stands in for serde+figment in the offline crate set.
+pub mod json;
+
+pub use json::Json;
+
+use anyhow::{bail, Context, Result};
+
+/// Top-level run configuration for the DVFO coordinator and experiments.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Edge device name (must exist in the device zoo; Table 3).
+    pub device: String,
+    /// Cloud device name.
+    pub cloud: String,
+    /// DNN model name (perfmodel zoo) driven through the simulator.
+    pub model: String,
+    /// Dataset name ("cifar100" | "imagenet") — picks input sizes.
+    pub dataset: String,
+    /// Energy/latency trade-off weight η ∈ [0,1] (Eq. 4).
+    pub eta: f64,
+    /// Fusion summation weight λ ∈ (0,1) (paper §5.3).
+    pub lambda: f64,
+    /// Network bandwidth model: "static:<mbps>" | "markov:<lo>,<hi>" |
+    /// "trace:<path>".
+    pub bandwidth: String,
+    /// Frequency levels per unit in the action ladder.
+    pub freq_levels: usize,
+    /// Offload-proportion levels (ξ grid).
+    pub xi_levels: usize,
+    /// Serving policy: dvfo|drldo|appealnet|cloud_only|edge_only|oracle.
+    pub policy: String,
+    /// Requests to serve / simulate.
+    pub requests: usize,
+    /// DQN training episodes before deployment (offline phase).
+    pub train_episodes: usize,
+    /// Use thinking-while-moving concurrent policy inference.
+    pub concurrent: bool,
+    /// RNG seed for the whole run.
+    pub seed: u64,
+    /// Artifacts directory (PJRT-loadable HLO text).
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            device: "xavier-nx".into(),
+            cloud: "rtx3080".into(),
+            model: "efficientnet-b0".into(),
+            dataset: "cifar100".into(),
+            eta: 0.5,
+            lambda: 0.5,
+            bandwidth: "static:5".into(),
+            freq_levels: 10,
+            xi_levels: 11,
+            policy: "dvfo".into(),
+            requests: 200,
+            train_episodes: 60,
+            concurrent: true,
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = Config::default();
+        let obj = j.as_obj().context("config must be a json object")?;
+        for (k, v) in obj {
+            c.apply(k, v)
+                .with_context(|| format!("config field `{k}`"))?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Apply one `key=value` override (all values accepted as strings).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let j = match key {
+            "eta" | "lambda" => Json::Num(value.parse::<f64>()?),
+            "freq_levels" | "xi_levels" | "requests" | "train_episodes"
+            | "seed" => Json::Num(value.parse::<f64>()?),
+            "concurrent" => Json::Bool(value.parse::<bool>()?),
+            _ => Json::Str(value.to_string()),
+        };
+        self.apply(key, &j)?;
+        self.validate()
+    }
+
+    fn apply(&mut self, key: &str, v: &Json) -> Result<()> {
+        macro_rules! str_field {
+            ($f:ident) => {{
+                self.$f = v
+                    .as_str()
+                    .context("expected string")?
+                    .to_string();
+            }};
+        }
+        match key {
+            "device" => str_field!(device),
+            "cloud" => str_field!(cloud),
+            "model" => str_field!(model),
+            "dataset" => str_field!(dataset),
+            "bandwidth" => str_field!(bandwidth),
+            "policy" => str_field!(policy),
+            "artifacts_dir" => str_field!(artifacts_dir),
+            "eta" => self.eta = v.as_f64().context("expected number")?,
+            "lambda" => self.lambda = v.as_f64().context("expected number")?,
+            "freq_levels" => {
+                self.freq_levels = v.as_usize().context("expected int")?
+            }
+            "xi_levels" => self.xi_levels = v.as_usize().context("expected int")?,
+            "requests" => self.requests = v.as_usize().context("expected int")?,
+            "train_episodes" => {
+                self.train_episodes = v.as_usize().context("expected int")?
+            }
+            "concurrent" => self.concurrent = v.as_bool().context("expected bool")?,
+            "seed" => self.seed = v.as_f64().context("expected number")? as u64,
+            other => bail!("unknown config key `{other}`"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.eta) {
+            bail!("eta must be in [0,1], got {}", self.eta);
+        }
+        if !(0.0..=1.0).contains(&self.lambda) {
+            bail!("lambda must be in [0,1], got {}", self.lambda);
+        }
+        if self.freq_levels < 2 {
+            bail!("freq_levels must be >= 2");
+        }
+        if self.xi_levels < 2 {
+            bail!("xi_levels must be >= 2");
+        }
+        let policies = [
+            "dvfo",
+            "drldo",
+            "appealnet",
+            "cloud_only",
+            "edge_only",
+            "oracle",
+        ];
+        if !policies.contains(&self.policy.as_str()) {
+            bail!("unknown policy `{}` (want one of {policies:?})", self.policy);
+        }
+        crate::net::Bandwidth::parse(&self.bandwidth, self.seed)
+            .context("bandwidth spec")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let j = Json::parse(
+            r#"{"device": "jetson-nano", "eta": 0.3, "requests": 10,
+                "concurrent": false}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.device, "jetson-nano");
+        assert_eq!(c.eta, 0.3);
+        assert_eq!(c.requests, 10);
+        assert!(!c.concurrent);
+        // untouched fields keep defaults
+        assert_eq!(c.lambda, 0.5);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut c = Config::default();
+        assert!(c.set("eta", "1.5").is_err());
+        assert!(c.set("policy", "nonexistent").is_err());
+        assert!(c.set("bandwidth", "bogus:x").is_err());
+        assert!(Config::from_json(&Json::parse(r#"{"nope": 1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn set_parses_types() {
+        let mut c = Config::default();
+        c.set("eta", "0.7").unwrap();
+        c.set("requests", "42").unwrap();
+        c.set("concurrent", "false").unwrap();
+        assert_eq!(c.eta, 0.7);
+        assert_eq!(c.requests, 42);
+        assert!(!c.concurrent);
+    }
+}

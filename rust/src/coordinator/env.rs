@@ -1,0 +1,405 @@
+//! The edge-cloud execution environment: applies a serving decision to a
+//! task and produces the full latency/energy/accuracy/cost report —
+//! Eqs. (3)-(13) of the paper over the device/net/perfmodel substrates.
+
+use crate::accuracy::{accuracy_loss_pts, AccuracyInputs, Fusion};
+use crate::device::{idle_power_w, DeviceSpec, EnergyMeter, FrequencyController, FreqVector};
+use crate::net::Link;
+use crate::offload::{payload_bytes, Compression};
+use crate::perfmodel::{cloud_compute, compress_time_s, edge_compute, Dataset, ModelProfile};
+use crate::workload::Task;
+
+/// Fraction of the DNN body that always runs on the edge (the feature
+/// extractor ahead of the split point — paper Fig. 4 ①).
+pub const EXTRACTOR_FRAC: f64 = 0.18;
+
+/// A concrete serving decision for one task.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    pub cpu_lvl: usize,
+    pub gpu_lvl: usize,
+    pub mem_lvl: usize,
+    /// offload proportion ξ ∈ [0,1]
+    pub xi: f64,
+    pub compression: Compression,
+    pub fusion: Fusion,
+    /// split guided by SCAM importance (vs arbitrary)
+    pub importance_guided: bool,
+    /// DVFO drops frequencies during the offload/compression and
+    /// cloud-wait phases (paper Fig. 10: phases ② and ③ run at very low
+    /// frequency); baselines without per-phase DVFS keep one setting.
+    pub phase_scaling: bool,
+}
+
+impl Decision {
+    pub fn edge_only_max(levels: usize) -> Self {
+        Self {
+            cpu_lvl: levels - 1,
+            gpu_lvl: levels - 1,
+            mem_lvl: levels - 1,
+            xi: 0.0,
+            compression: Compression::None,
+            fusion: Fusion::Single,
+            importance_guided: true,
+            phase_scaling: false,
+        }
+    }
+}
+
+/// Full per-task outcome (Eq. 9 latency breakdown + Eq. 10 energy split).
+#[derive(Clone, Debug, Default)]
+pub struct TaskReport {
+    pub tti_local_s: f64,
+    pub tti_comp_s: f64,
+    pub tti_off_s: f64,
+    pub tti_cloud_s: f64,
+    /// policy-inference latency on the critical path (0 when concurrent)
+    pub tti_decision_s: f64,
+    pub tti_total_s: f64,
+    pub eti_compute_j: f64,
+    pub eti_offload_j: f64,
+    pub eti_total_j: f64,
+    /// per-unit dynamic energy [cpu, gpu, mem] of the edge compute phases
+    pub eti_per_unit_j: [f64; 3],
+    pub cost: f64,
+    pub accuracy_pct: f64,
+    pub accuracy_loss_pts: f64,
+    pub payload_bytes: f64,
+    pub freqs: [f64; 3],
+    /// per-phase frequency vectors [cpu,gpu,mem] MHz for ① edge compute,
+    /// ② compression+offload, ③ cloud wait (Fig. 10)
+    pub phase_freqs: [[f64; 3]; 3],
+    pub xi: f64,
+    pub local_mass: f64,
+    pub bandwidth_mbps: f64,
+}
+
+/// The simulated serving environment for one (device, cloud, model,
+/// dataset) configuration. Clone-able so the Oracle policy can evaluate
+/// candidate decisions without disturbing the live state.
+#[derive(Clone)]
+pub struct EdgeCloudEnv {
+    pub edge: FrequencyController,
+    pub cloud: DeviceSpec,
+    pub link: Link,
+    pub profile: ModelProfile,
+    pub dataset: Dataset,
+    /// cost weight η (Eq. 4)
+    pub eta: f64,
+    /// fusion weight λ (paper §5.3)
+    pub lambda: f64,
+}
+
+impl EdgeCloudEnv {
+    pub fn new(
+        edge: DeviceSpec,
+        cloud: DeviceSpec,
+        link: Link,
+        profile: ModelProfile,
+        dataset: Dataset,
+        eta: f64,
+        lambda: f64,
+    ) -> Self {
+        Self {
+            edge: FrequencyController::new(edge),
+            cloud,
+            link,
+            profile,
+            dataset,
+            eta,
+            lambda,
+        }
+    }
+
+    pub fn levels(&self) -> usize {
+        self.edge.spec().cpu.levels
+    }
+
+    /// Execute one task under `decision`; `decision_overhead_s` is the
+    /// policy-inference latency that lands on the critical path (the
+    /// thinking-while-moving mechanism drives it to ~0; blocking policies
+    /// pay it in full — §5.1).
+    pub fn execute(
+        &mut self,
+        task: &Task,
+        decision: &Decision,
+        decision_overhead_s: f64,
+    ) -> TaskReport {
+        let mut rep = TaskReport {
+            xi: decision.xi,
+            bandwidth_mbps: self.link.mbps(),
+            ..Default::default()
+        };
+
+        // -- DVFS actuation (transition latency counts on the path)
+        let trans_s = self
+            .edge
+            .set_levels(decision.cpu_lvl, decision.gpu_lvl, decision.mem_lvl)
+            .expect("ladder levels are always in range");
+        let f = self.edge.current();
+        rep.freqs = [f.cpu_mhz, f.gpu_mhz, f.mem_mhz];
+
+        // per-phase frequency plan (Fig. 10): DVFO throttles phases ②/③
+        let spec0 = self.edge.spec();
+        let fmin = FreqVector {
+            cpu_mhz: spec0.cpu.min_mhz,
+            gpu_mhz: spec0.gpu.min_mhz,
+            mem_mhz: spec0.mem.min_mhz,
+        };
+        let f2 = if decision.phase_scaling {
+            FreqVector {
+                cpu_mhz: fmin.cpu_mhz + 0.25 * (f.cpu_mhz - fmin.cpu_mhz),
+                gpu_mhz: fmin.gpu_mhz + 0.10 * (f.gpu_mhz - fmin.gpu_mhz),
+                mem_mhz: fmin.mem_mhz + 0.40 * (f.mem_mhz - fmin.mem_mhz),
+            }
+        } else {
+            f
+        };
+        let f3 = if decision.phase_scaling { fmin } else { f };
+        rep.phase_freqs = [
+            [f.cpu_mhz, f.gpu_mhz, f.mem_mhz],
+            [f2.cpu_mhz, f2.gpu_mhz, f2.mem_mhz],
+            [f3.cpu_mhz, f3.gpu_mhz, f3.mem_mhz],
+        ];
+
+        // -- channel split
+        let plan = task.importance.split(decision.xi);
+        rep.local_mass = if decision.importance_guided {
+            plan.local_mass
+        } else {
+            // arbitrary split keeps mass ≈ (1-ξ) in expectation
+            1.0 - decision.xi
+        };
+
+        let spec = self.edge.spec().clone();
+        let mut meter = EnergyMeter::new();
+
+        // -- phase ①: edge compute (extractor + local head)
+        let local_frac = EXTRACTOR_FRAC + (1.0 - decision.xi) * (1.0 - EXTRACTOR_FRAC);
+        let local = edge_compute(&self.profile, self.dataset, &spec, &f, local_frac);
+        rep.tti_local_s = local.total_s;
+        meter.accumulate(&spec, &f, &local.util, local.total_s);
+
+        // -- phase ②: compression + offload
+        if decision.xi > 0.0 {
+            rep.payload_bytes =
+                payload_bytes(&self.profile, self.dataset, decision.xi, decision.compression);
+            if decision.compression.has_compress_phase() {
+                rep.tti_comp_s = compress_time_s(rep.payload_bytes * 4.0, &spec, &f2);
+                // quantization is a memory-bound pass at phase-② freqs
+                meter.accumulate(&spec, &f2, &[0.35, 0.05, 0.85], rep.tti_comp_s);
+            }
+            rep.tti_off_s = self.link.tx_time_s(rep.payload_bytes);
+            rep.eti_offload_j = self.link.tx_energy_j(rep.payload_bytes, spec.radio_w)
+                + idle_power_w(&spec) * rep.tti_off_s;
+
+            // -- phase ③: cloud compute (+ fusion, negligible — §5.3)
+            let cloud_frac = decision.xi * (1.0 - EXTRACTOR_FRAC) * 1.05;
+            let cloud = cloud_compute(&self.profile, self.dataset, &self.cloud, cloud_frac);
+            rep.tti_cloud_s = cloud.total_s;
+            // edge idles while the cloud computes (paper §4.2 assumption)
+            rep.eti_offload_j += idle_power_w(&spec) * rep.tti_cloud_s;
+        }
+
+        rep.tti_decision_s = decision_overhead_s;
+        rep.tti_total_s = rep.tti_local_s
+            + rep.tti_comp_s
+            + rep.tti_off_s
+            + rep.tti_cloud_s
+            + rep.tti_decision_s
+            + trans_s;
+
+        rep.eti_compute_j = meter.total_j();
+        rep.eti_per_unit_j = meter.per_unit_j();
+        rep.eti_total_j = rep.eti_compute_j + rep.eti_offload_j;
+
+        // -- accuracy model
+        let acc_in = AccuracyInputs {
+            base_acc: self.profile.base_acc(self.dataset),
+            local_mass: rep.local_mass,
+            xi: decision.xi,
+            importance_guided: decision.importance_guided,
+            compression: decision.compression,
+            fusion: decision.fusion,
+            lambda: self.lambda,
+        };
+        rep.accuracy_loss_pts = accuracy_loss_pts(&acc_in);
+        rep.accuracy_pct = (acc_in.base_acc - rep.accuracy_loss_pts).max(0.0);
+
+        // -- cost metric Eq. (4)
+        rep.cost = self.eta * rep.eti_total_j
+            + (1.0 - self.eta) * spec.max_power_w * rep.tti_total_s;
+
+        // advance the world clock
+        self.link.advance(rep.tti_total_s);
+        rep
+    }
+
+    /// The frequency vector at a set of ladder levels (helper for
+    /// benches/oracles).
+    pub fn freqs_at(&self, cpu: usize, gpu: usize, mem: usize) -> FreqVector {
+        let s = self.edge.spec();
+        FreqVector {
+            cpu_mhz: s.cpu.freq_at(cpu),
+            gpu_mhz: s.gpu.freq_at(gpu),
+            mem_mhz: s.mem.freq_at(mem),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::spec::find_device;
+    use crate::net::Bandwidth;
+    use crate::perfmodel::find_model;
+    use crate::workload::{Arrivals, TaskGen};
+
+    fn env(eta: f64) -> EdgeCloudEnv {
+        EdgeCloudEnv::new(
+            find_device("xavier-nx").unwrap(),
+            find_device("rtx3080").unwrap(),
+            Link::new(Bandwidth::Static { mbps: 5.0 }),
+            find_model("efficientnet-b0").unwrap(),
+            Dataset::Cifar100,
+            eta,
+            0.5,
+        )
+    }
+
+    fn task(seed: u64) -> Task {
+        TaskGen::new(
+            "efficientnet-b0",
+            Dataset::Cifar100,
+            Arrivals::Sequential,
+            seed,
+        )
+        .unwrap()
+        .next_task()
+    }
+
+    fn dvfo_decision(xi: f64, lvl: usize) -> Decision {
+        Decision {
+            cpu_lvl: lvl,
+            gpu_lvl: lvl,
+            mem_lvl: lvl,
+            xi,
+            compression: Compression::Int8,
+            fusion: if xi > 0.0 { Fusion::WeightedSum } else { Fusion::Single },
+            importance_guided: true,
+            phase_scaling: true,
+        }
+    }
+
+    #[test]
+    fn report_is_internally_consistent() {
+        let mut e = env(0.5);
+        let r = e.execute(&task(1), &dvfo_decision(0.5, 9), 0.0);
+        let sum = r.tti_local_s + r.tti_comp_s + r.tti_off_s + r.tti_cloud_s;
+        assert!((r.tti_total_s - sum).abs() < 1e-3, "{r:?}");
+        assert!((r.eti_total_j - r.eti_compute_j - r.eti_offload_j).abs() < 1e-12);
+        assert!(r.cost > 0.0 && r.accuracy_pct > 80.0);
+        assert!(r.payload_bytes > 0.0);
+    }
+
+    #[test]
+    fn edge_only_has_no_network_phases() {
+        let mut e = env(0.5);
+        let r = e.execute(&task(2), &dvfo_decision(0.0, 9), 0.0);
+        assert_eq!(r.tti_off_s, 0.0);
+        assert_eq!(r.tti_cloud_s, 0.0);
+        assert_eq!(r.payload_bytes, 0.0);
+        assert_eq!(r.eti_offload_j, 0.0);
+    }
+
+    #[test]
+    fn offloading_reduces_edge_latency_at_good_bandwidth() {
+        // collaborative inference beats edge-only when the link is decent
+        // (paper Fig. 8; the win grows with bandwidth, Fig. 11).
+        let mut e = env(0.5);
+        e.link = Link::new(Bandwidth::Static { mbps: 8.0 });
+        let edge_only = e.execute(&task(3), &dvfo_decision(0.0, 9), 0.0);
+        let mut e2 = env(0.5);
+        e2.link = Link::new(Bandwidth::Static { mbps: 8.0 });
+        let collab = e2.execute(&task(3), &dvfo_decision(1.0, 9), 0.0);
+        assert!(
+            collab.tti_total_s < edge_only.tti_total_s,
+            "collab {} vs edge {}",
+            collab.tti_total_s,
+            edge_only.tti_total_s
+        );
+    }
+
+    #[test]
+    fn mid_frequency_saves_energy_costs_latency() {
+        // the paper's core DVFS observation: max frequency wastes energy
+        // (V² superlinearity) while backing off moderately barely hurts
+        // latency — but *too low* frequency also wastes energy because
+        // static power integrates over the stretched runtime. The
+        // optimum is interior, which is exactly what the DQN searches.
+        let mut hi = env(0.5);
+        let r_hi = hi.execute(&task(4), &dvfo_decision(0.0, 9), 0.0);
+        let mut mid = env(0.5);
+        let r_mid = mid.execute(&task(4), &dvfo_decision(0.0, 6), 0.0);
+        assert!(r_mid.tti_total_s > r_hi.tti_total_s);
+        assert!(r_mid.eti_total_j < r_hi.eti_total_j, "mid {} hi {}",
+                r_mid.eti_total_j, r_hi.eti_total_j);
+        // and the floor is NOT optimal: energy turns back up
+        let mut lo = env(0.5);
+        let r_lo = lo.execute(&task(4), &dvfo_decision(0.0, 0), 0.0);
+        assert!(r_lo.eti_total_j > r_mid.eti_total_j, "lo {} mid {}",
+                r_lo.eti_total_j, r_mid.eti_total_j);
+    }
+
+    #[test]
+    fn eta_moves_cost_weighting() {
+        // η=0: cost is pure latency-power product; η=1: pure energy.
+        let mut e0 = env(0.0);
+        let mut e1 = env(1.0);
+        let t = task(5);
+        let d = dvfo_decision(0.4, 8);
+        let r0 = e0.execute(&t, &d, 0.0);
+        let r1 = e1.execute(&t, &d, 0.0);
+        let spec = find_device("xavier-nx").unwrap();
+        assert!((r0.cost - spec.max_power_w * r0.tti_total_s).abs() < 1e-9);
+        assert!((r1.cost - r1.eti_total_j).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decision_overhead_lands_on_critical_path() {
+        let mut a = env(0.5);
+        let mut b = env(0.5);
+        let t = task(6);
+        let d = dvfo_decision(0.5, 9);
+        let ra = a.execute(&t, &d, 0.0);
+        let rb = b.execute(&t, &d, 0.010);
+        assert!((rb.tti_total_s - ra.tti_total_s - 0.010).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uncompressed_offload_pays_more_transmission() {
+        let mut a = env(0.5);
+        let mut b = env(0.5);
+        let t = task(7);
+        let mut d_raw = dvfo_decision(0.6, 9);
+        d_raw.compression = Compression::None;
+        let r_int8 = a.execute(&t, &dvfo_decision(0.6, 9), 0.0);
+        let r_raw = b.execute(&t, &d_raw, 0.0);
+        assert!(r_raw.tti_off_s > 2.8 * r_int8.tti_off_s);
+        // but int8 pays a (small) compression phase
+        assert!(r_int8.tti_comp_s > 0.0 && r_raw.tti_comp_s == 0.0);
+    }
+
+    #[test]
+    fn guided_split_retains_more_mass() {
+        let mut a = env(0.5);
+        let mut b = env(0.5);
+        let t = task(8);
+        let mut blind = dvfo_decision(0.6, 9);
+        blind.importance_guided = false;
+        let rg = a.execute(&t, &dvfo_decision(0.6, 9), 0.0);
+        let rb = b.execute(&t, &blind, 0.0);
+        assert!(rg.local_mass > rb.local_mass);
+        assert!(rg.accuracy_pct > rb.accuracy_pct);
+    }
+}

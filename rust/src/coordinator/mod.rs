@@ -1,0 +1,353 @@
+//! The DVFO coordinator: builds the environment + policy from a Config,
+//! trains the DRL policy offline (paper: "the training process is
+//! offline"), and serves task streams, producing the telemetry every
+//! experiment consumes.
+
+pub mod env;
+pub mod pipeline;
+
+pub use env::{Decision, EdgeCloudEnv, TaskReport, EXTRACTOR_FRAC};
+
+use crate::configx::Config;
+use crate::device::spec::find_device;
+use crate::net::{Bandwidth, Link};
+use crate::perfmodel::{find_model, Dataset};
+use crate::policy::{
+    AppealNetPolicy, CloudOnlyPolicy, DrldoPolicy, DvfoPolicy, EdgeOnlyPolicy, Feedback,
+    Obs, OraclePolicy, Policy,
+};
+use crate::util::Samples;
+use crate::workload::{Arrivals, Task, TaskGen};
+use anyhow::Result;
+
+/// Build the simulated environment from a config.
+pub fn build_env(cfg: &Config) -> Result<EdgeCloudEnv> {
+    let edge = find_device(&cfg.device)?.with_levels(cfg.freq_levels);
+    let cloud = find_device(&cfg.cloud)?;
+    let link = Link::new(Bandwidth::parse(&cfg.bandwidth, cfg.seed)?);
+    let profile = find_model(&cfg.model)?;
+    let dataset = Dataset::parse(&cfg.dataset)?;
+    Ok(EdgeCloudEnv::new(
+        edge, cloud, link, profile, dataset, cfg.eta, cfg.lambda,
+    ))
+}
+
+/// Build a policy by name. The oracle gets a frozen clone of the
+/// environment to grid-search against.
+pub fn build_policy(cfg: &Config, env: &EdgeCloudEnv) -> Result<Box<dyn Policy>> {
+    let l = cfg.freq_levels;
+    Ok(match cfg.policy.as_str() {
+        "dvfo" => Box::new(DvfoPolicy::new(l, cfg.xi_levels, cfg.concurrent, cfg.seed)),
+        "drldo" => Box::new(DrldoPolicy::new(l, cfg.xi_levels, cfg.seed)),
+        "appealnet" => Box::new(AppealNetPolicy::new(l, cfg.seed)),
+        "cloud_only" => Box::new(CloudOnlyPolicy::new(l)),
+        "edge_only" => Box::new(EdgeOnlyPolicy::new(l)),
+        "oracle" => {
+            let probe_env = env.clone();
+            let mut gen = TaskGen::new(
+                &cfg.model,
+                env.dataset,
+                Arrivals::Sequential,
+                cfg.seed ^ 0x0CC1,
+            )?;
+            let probe_task = gen.next_task();
+            Box::new(OraclePolicy {
+                levels: l,
+                xi_levels: cfg.xi_levels,
+                stride: 1,
+                latency_s: 0.05,
+                eval: Box::new(move |d: &Decision| {
+                    probe_env.clone().execute(&probe_task, d, 0.0).cost
+                }),
+            })
+        }
+        other => anyhow::bail!("unknown policy `{other}`"),
+    })
+}
+
+/// The serving system: one environment, one policy, shared telemetry.
+pub struct Coordinator {
+    pub env: EdgeCloudEnv,
+    pub policy: Box<dyn Policy>,
+    /// cost of the edge-only max-frequency decision — the reward scale
+    /// (rewards are r = −C/C_ref so DQN targets are O(1))
+    pub ref_cost: f64,
+    prev_xi: f64,
+}
+
+/// Aggregated outcome of one serving run.
+#[derive(Default)]
+pub struct ServeSummary {
+    pub tti_ms: Samples,
+    pub eti_mj: Samples,
+    pub accuracy_pct: Samples,
+    pub cost: Samples,
+    pub tti_local_ms: Samples,
+    pub tti_comp_ms: Samples,
+    pub tti_off_ms: Samples,
+    pub tti_cloud_ms: Samples,
+    pub tti_decision_ms: Samples,
+    pub xi: Samples,
+    pub payload_kb: Samples,
+    pub per_unit_j: [f64; 3],
+    pub reports: Vec<TaskReport>,
+}
+
+impl ServeSummary {
+    fn push(&mut self, r: &TaskReport) {
+        self.tti_ms.push(r.tti_total_s * 1e3);
+        self.eti_mj.push(r.eti_total_j * 1e3);
+        self.accuracy_pct.push(r.accuracy_pct);
+        self.cost.push(r.cost);
+        self.tti_local_ms.push(r.tti_local_s * 1e3);
+        self.tti_comp_ms.push(r.tti_comp_s * 1e3);
+        self.tti_off_ms.push(r.tti_off_s * 1e3);
+        self.tti_cloud_ms.push(r.tti_cloud_s * 1e3);
+        self.tti_decision_ms.push(r.tti_decision_s * 1e3);
+        self.xi.push(r.xi);
+        self.payload_kb.push(r.payload_bytes / 1024.0);
+        for i in 0..3 {
+            self.per_unit_j[i] += r.eti_per_unit_j[i];
+        }
+        self.reports.push(r.clone());
+    }
+
+    pub fn count(&self) -> usize {
+        self.reports.len()
+    }
+}
+
+impl Coordinator {
+    pub fn new(env: EdgeCloudEnv, policy: Box<dyn Policy>) -> Self {
+        let mut probe = env.clone();
+        let mut gen = TaskGen::new(
+            probe.profile.name,
+            probe.dataset,
+            Arrivals::Sequential,
+            0xEF_C0DE,
+        )
+        .expect("profile exists");
+        let t = gen.next_task();
+        let ref_cost = probe
+            .execute(&t, &Decision::edge_only_max(env.levels()), 0.0)
+            .cost
+            .max(1e-9);
+        Self {
+            env,
+            policy,
+            ref_cost,
+            prev_xi: 0.0,
+        }
+    }
+
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let env = build_env(cfg)?;
+        let policy = build_policy(cfg, &env)?;
+        Ok(Self::new(env, policy))
+    }
+
+    /// Observation for the next task.
+    pub fn observe(&self, task: &Task) -> Obs {
+        let intensity = self.env.profile.intensity(self.env.dataset);
+        Obs {
+            lambda: self.env.lambda,
+            eta: self.env.eta,
+            bandwidth_mbps: self.env.link.observed_mbps(),
+            top_quarter_mass: task.importance.top_quarter_mass(),
+            skewness: task.importance.skewness(),
+            entropy_norm: task.importance.entropy_norm(),
+            intensity_norm: ((intensity.ln() / 6.0).clamp(0.0, 1.0)),
+            prev_xi: self.prev_xi,
+        }
+    }
+
+    /// Serve one task end-to-end (decide → execute → feedback).
+    pub fn step(&mut self, task: &Task, learn: bool) -> TaskReport {
+        let obs = self.observe(task);
+        let decision = self.policy.decide(&obs);
+        // thinking-while-moving: policy inference overlaps the ongoing
+        // execution, so only a small residual lands on the critical path
+        let lat = self.policy.decision_latency_s();
+        let overhead = if self.policy.concurrent() { lat * 0.1 } else { lat };
+        let report = self.env.execute(task, &decision, overhead);
+        self.prev_xi = decision.xi;
+        if learn {
+            let next_obs = self.observe(task);
+            let gamma_pow = if self.policy.concurrent() {
+                (lat / report.tti_total_s.max(1e-6)).clamp(0.05, 1.0)
+            } else {
+                1.0
+            };
+            self.policy.feedback(
+                &obs,
+                &decision,
+                &next_obs,
+                Feedback {
+                    reward: -report.cost / self.ref_cost,
+                    gamma_pow,
+                    done: false,
+                },
+            );
+        }
+        report
+    }
+
+    /// Offline training phase (paper Algorithm 1). Returns the mean
+    /// reward per episode (the Fig. 15 learning curve).
+    pub fn train(&mut self, gen: &mut TaskGen, episodes: usize, tasks_per_ep: usize) -> Vec<f64> {
+        self.policy.set_training(true);
+        let mut curve = Vec::with_capacity(episodes);
+        for _ in 0..episodes {
+            let mut sum = 0.0;
+            for _ in 0..tasks_per_ep {
+                let t = gen.next_task();
+                let r = self.step(&t, true);
+                sum += -r.cost / self.ref_cost;
+            }
+            curve.push(sum / tasks_per_ep as f64);
+        }
+        self.policy.set_training(false);
+        curve
+    }
+
+    /// Deployment: serve a task list (no learning, greedy policy).
+    pub fn serve(&mut self, tasks: &[Task]) -> ServeSummary {
+        self.policy.set_training(false);
+        let mut summary = ServeSummary::default();
+        for t in tasks {
+            let r = self.step(t, false);
+            summary.push(&r);
+        }
+        summary
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(policy: &str) -> Config {
+        let mut c = Config::default();
+        c.policy = policy.into();
+        c.requests = 30;
+        c.train_episodes = 8;
+        c.seed = 7;
+        c
+    }
+
+    fn run(policy: &str, train_eps: usize) -> ServeSummary {
+        let c = cfg(policy);
+        let mut coord = Coordinator::from_config(&c).unwrap();
+        let mut gen = TaskGen::new(&c.model, coord.env.dataset, Arrivals::Sequential, 3).unwrap();
+        if train_eps > 0 {
+            coord.train(&mut gen, train_eps, 16);
+        }
+        let tasks = gen.take(c.requests);
+        coord.serve(&tasks)
+    }
+
+    #[test]
+    fn all_policies_serve_without_panic() {
+        for p in ["dvfo", "drldo", "appealnet", "cloud_only", "edge_only"] {
+            let s = run(p, if p.starts_with('d') { 2 } else { 0 });
+            assert_eq!(s.count(), 30, "{p}");
+            assert!(s.tti_ms.mean() > 0.0, "{p}");
+            assert!(s.eti_mj.mean() > 0.0, "{p}");
+            assert!(s.accuracy_pct.mean() > 70.0, "{p}");
+        }
+    }
+
+    #[test]
+    fn edge_only_never_offloads_cloud_only_always() {
+        let e = run("edge_only", 0);
+        assert!(e.xi.values().iter().all(|&x| x == 0.0));
+        assert!(e.payload_kb.values().iter().all(|&x| x == 0.0));
+        let c = run("cloud_only", 0);
+        assert!(c.xi.values().iter().all(|&x| x == 1.0));
+        assert!(c.payload_kb.values().iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn trained_dvfo_beats_untrained_on_cost() {
+        let untrained = run("dvfo", 0);
+        let trained = run("dvfo", 25);
+        assert!(
+            trained.cost.mean() < untrained.cost.mean() * 1.02,
+            "trained {} vs untrained {}",
+            trained.cost.mean(),
+            untrained.cost.mean()
+        );
+    }
+
+    #[test]
+    fn trained_dvfo_beats_edge_only_cost() {
+        // the paper's headline: DVFO cuts cost (energy+latency blend)
+        // vs static max-frequency edge inference.
+        let dvfo = run("dvfo", 30);
+        let edge = run("edge_only", 0);
+        assert!(
+            dvfo.cost.mean() < edge.cost.mean(),
+            "dvfo {} vs edge {}",
+            dvfo.cost.mean(),
+            edge.cost.mean()
+        );
+    }
+
+    #[test]
+    fn reward_reference_is_positive_finite() {
+        let c = cfg("dvfo");
+        let coord = Coordinator::from_config(&c).unwrap();
+        assert!(coord.ref_cost > 0.0 && coord.ref_cost.is_finite());
+    }
+
+    #[test]
+    fn dvfo_decision_latency_overlapped() {
+        // with concurrent=true the decision overhead on the path is 10%
+        // of the policy latency
+        let c = cfg("dvfo");
+        let mut coord = Coordinator::from_config(&c).unwrap();
+        let mut gen = TaskGen::new(&c.model, coord.env.dataset, Arrivals::Sequential, 5).unwrap();
+        let t = gen.next_task();
+        let r = coord.step(&t, false);
+        assert!(r.tti_decision_s < coord.policy.decision_latency_s());
+    }
+
+    #[test]
+    fn oracle_builds_and_beats_edge_only() {
+        let mut c = cfg("oracle");
+        c.freq_levels = 4; // keep the grid tiny
+        c.xi_levels = 4;
+        let mut coord = Coordinator::from_config(&c).unwrap();
+        // isolate decision *quality*: don't charge the (deliberately
+        // huge) exhaustive-search latency to the critical path here
+        if let Some(_) = Some(()) {
+            // rebuild the oracle with zero charged latency
+            let probe_env = coord.env.clone();
+            let mut pgen =
+                TaskGen::new(&c.model, coord.env.dataset, Arrivals::Sequential, 5).unwrap();
+            let probe_task = pgen.next_task();
+            coord.policy = Box::new(crate::policy::OraclePolicy {
+                levels: c.freq_levels,
+                xi_levels: c.xi_levels,
+                stride: 1,
+                latency_s: 0.0,
+                eval: Box::new(move |d| probe_env.clone().execute(&probe_task, d, 0.0).cost),
+            });
+        }
+        let mut gen = TaskGen::new(&c.model, coord.env.dataset, Arrivals::Sequential, 5).unwrap();
+        let tasks = gen.take(3);
+        let s = coord.serve(&tasks);
+
+        let mut ce = cfg("edge_only");
+        ce.freq_levels = 4;
+        let mut coord_e = Coordinator::from_config(&ce).unwrap();
+        let mut gen_e =
+            TaskGen::new(&ce.model, coord_e.env.dataset, Arrivals::Sequential, 5).unwrap();
+        let tasks_e = gen_e.take(3);
+        let se = coord_e.serve(&tasks_e);
+        // the oracle probes a fixed reference task; on the served stream it
+        // must still be within a small factor of (and usually below) the
+        // static max-frequency baseline
+        assert!(s.cost.mean() <= se.cost.mean() * 1.08);
+    }
+}

@@ -1,0 +1,252 @@
+//! The real-artifact serving pipeline: leader (edge) and cloud worker
+//! threads executing the AOT PJRT artifacts, connected by channels that
+//! model the offload wire. This is the path the end-to-end example runs —
+//! real numerics, real wall-clock, Python nowhere in sight.
+//!
+//! Each worker owns its *own* PJRT client and compiled artifacts (the xla
+//! handles are not Send — and the edge and cloud are separate machines in
+//! the real deployment, so separate clients is the honest topology).
+//!
+//! Edge thread:  extractor → SCAM importance → split → local_head ─┐
+//!                                 │ quantized payload              ├→ fusion
+//! Cloud thread:                   └→ offload_prep → remote_head ───┘
+
+use crate::runtime::Engine;
+use crate::scam::ImportanceDist;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One request to the real pipeline.
+#[derive(Clone, Debug)]
+pub struct PipelineRequest {
+    pub id: u64,
+    /// flattened image (manifest img_shape)
+    pub image: Vec<f32>,
+    pub label: Option<u32>,
+    /// offload proportion ξ
+    pub xi: f64,
+    pub lambda: f32,
+}
+
+/// Outcome of one real request.
+#[derive(Clone, Debug)]
+pub struct PipelineResponse {
+    pub id: u64,
+    pub fused_logits: Vec<f32>,
+    pub predicted: usize,
+    pub correct: Option<bool>,
+    pub importance: Vec<f64>,
+    pub local_channels: usize,
+    /// wall-clock per phase (seconds)
+    pub t_extract_s: f64,
+    pub t_local_s: f64,
+    pub t_offload_prep_s: f64,
+    pub t_remote_s: f64,
+    pub t_fusion_s: f64,
+    pub t_total_s: f64,
+    /// offloaded payload size in bytes (int8 wire format)
+    pub payload_bytes: usize,
+}
+
+/// What travels edge → cloud: channel mask + feature maps. The artifacts
+/// quantize inside `offload_prep`, so the accounted payload is the int8
+/// wire size even though the in-process channel carries f32.
+struct OffloadMsg {
+    id: u64,
+    features: Vec<f32>,
+    inv_mask: Vec<f32>,
+}
+
+struct RemoteResult {
+    id: u64,
+    remote_logits: Vec<f32>,
+    t_offload_prep_s: f64,
+    t_remote_s: f64,
+}
+
+const EDGE_ARTIFACTS: &[&str] = &["extractor", "local_head", "fusion", "dqn_q"];
+const CLOUD_ARTIFACTS: &[&str] = &["offload_prep", "remote_head"];
+
+/// The two-worker pipeline. The cloud worker (own PJRT client, own
+/// compiled artifacts) is spawned ONCE at load and reused across serve()
+/// calls — re-compiling it per batch cost ~140 ms of cold latency
+/// (EXPERIMENTS.md §Perf).
+pub struct Pipeline {
+    edge: Engine,
+    to_cloud: mpsc::Sender<OffloadMsg>,
+    from_cloud: mpsc::Receiver<RemoteResult>,
+    _cloud: std::thread::JoinHandle<Result<()>>,
+}
+
+impl Pipeline {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let dir: PathBuf = artifacts_dir.to_path_buf();
+        let (to_cloud, cloud_rx) = mpsc::channel::<OffloadMsg>();
+        let (to_edge, from_cloud) = mpsc::channel::<RemoteResult>();
+        // ---- persistent cloud worker thread (own PJRT client)
+        let cloud = std::thread::Builder::new()
+            .name("cloud-worker".into())
+            .spawn(move || -> Result<()> {
+                let engine = Engine::load_filtered(&dir, Some(CLOUD_ARTIFACTS))
+                    .context("loading cloud artifacts")?;
+                for msg in cloud_rx {
+                    let t0 = Instant::now();
+                    let dq = engine
+                        .execute_f32("offload_prep", &[&msg.features, &msg.inv_mask])?
+                        .remove(0);
+                    let t1 = Instant::now();
+                    let remote_logits = engine
+                        .execute_f32("remote_head", &[&dq, &msg.inv_mask])?
+                        .remove(0);
+                    let t2 = Instant::now();
+                    to_edge
+                        .send(RemoteResult {
+                            id: msg.id,
+                            remote_logits,
+                            t_offload_prep_s: (t1 - t0).as_secs_f64(),
+                            t_remote_s: (t2 - t1).as_secs_f64(),
+                        })
+                        .ok();
+                }
+                Ok(())
+            })
+            .context("spawning cloud worker")?;
+        Ok(Self {
+            edge: Engine::load_filtered(artifacts_dir, Some(EDGE_ARTIFACTS))
+                .context("loading edge artifacts")?,
+            to_cloud,
+            from_cloud,
+            _cloud: cloud,
+        })
+    }
+
+    /// The edge-side engine (for probes and the DQN artifact).
+    pub fn engine(&self) -> &Engine {
+        &self.edge
+    }
+
+    /// Warm the PJRT executables on both sides (first execution per
+    /// executable pays one-time initialization).
+    pub fn warmup(&self) -> Result<()> {
+        let m = &self.edge.manifest;
+        let img = vec![0.1f32; m.img_shape.iter().product()];
+        let reqs = vec![PipelineRequest {
+            id: u64::MAX,
+            image: img,
+            label: None,
+            xi: 0.5,
+            lambda: 0.5,
+        }];
+        self.serve(reqs)?;
+        Ok(())
+    }
+
+    /// Serve a batch of requests through the edge+cloud worker pair.
+    pub fn serve(&self, requests: Vec<PipelineRequest>) -> Result<Vec<PipelineResponse>> {
+        let to_cloud = &self.to_cloud;
+        let edge_rx = &self.from_cloud;
+
+        // ---- edge (leader) loop
+        let m = &self.edge.manifest;
+        let channels = m.feat_channels;
+        let mut responses = Vec::with_capacity(requests.len());
+        for req in requests {
+            let t_start = Instant::now();
+            // ① extractor + SCAM
+            let outs = self.edge.execute_f32("extractor", &[&req.image])?;
+            let t_extract = Instant::now();
+            let features = outs[0].clone();
+            let importance: Vec<f64> = outs[3].iter().map(|&x| x as f64).collect();
+            let dist = ImportanceDist::from_weights(&importance);
+            let plan = dist.split(req.xi);
+            let mask = plan.local_mask(channels);
+            let inv_mask: Vec<f32> = mask.iter().map(|&x| 1.0 - x).collect();
+
+            // ship the secondary-importance features to the cloud worker
+            // (concurrent with the local head — execution-level overlap)
+            let offload_values = (features.len() / channels) * plan.offload.len();
+            let payload_bytes = if plan.offload.is_empty() {
+                0
+            } else {
+                offload_values + 64 // int8 values + scale/shape header
+            };
+            if !plan.offload.is_empty() {
+                to_cloud
+                    .send(OffloadMsg {
+                        id: req.id,
+                        features: features.clone(),
+                        inv_mask: inv_mask.clone(),
+                    })
+                    .ok();
+            }
+
+            // ② local head on primary-importance channels
+            let local_logits = self
+                .edge
+                .execute_f32("local_head", &[&features, &mask])?
+                .remove(0);
+            let t_local = Instant::now();
+
+            // ③ fuse with the remote result (or go local-only)
+            let (remote_logits, t_prep, t_remote) = if plan.offload.is_empty() {
+                (vec![0.0; local_logits.len()], 0.0, 0.0)
+            } else {
+                let r = edge_rx.recv().context("cloud worker hung up")?;
+                debug_assert_eq!(r.id, req.id);
+                (r.remote_logits, r.t_offload_prep_s, r.t_remote_s)
+            };
+            let lam = if plan.offload.is_empty() { 1.0 } else { req.lambda };
+            let lam_arr = [lam];
+            let fused = self
+                .edge
+                .execute_f32("fusion", &[&local_logits, &remote_logits, &lam_arr])?
+                .remove(0);
+            let t_end = Instant::now();
+
+            let predicted = fused
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            responses.push(PipelineResponse {
+                id: req.id,
+                predicted,
+                correct: req.label.map(|l| l as usize == predicted),
+                importance,
+                local_channels: plan.local.len(),
+                t_extract_s: (t_extract - t_start).as_secs_f64(),
+                t_local_s: (t_local - t_extract).as_secs_f64(),
+                t_offload_prep_s: t_prep,
+                t_remote_s: t_remote,
+                t_fusion_s: ((t_end - t_local).as_secs_f64() - t_prep - t_remote).max(0.0),
+                t_total_s: (t_end - t_start).as_secs_f64(),
+                payload_bytes,
+                fused_logits: fused,
+            });
+        }
+        Ok(responses)
+    }
+}
+
+// Integration tests for the real pipeline live in
+// rust/tests/runtime_parity.rs (they need built artifacts).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_construction() {
+        let r = PipelineRequest {
+            id: 1,
+            image: vec![0.0; 3 * 32 * 32],
+            label: Some(3),
+            xi: 0.5,
+            lambda: 0.5,
+        };
+        assert_eq!(r.image.len(), 3072);
+    }
+}

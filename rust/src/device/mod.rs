@@ -1,0 +1,337 @@
+//! Edge/cloud device DVFS simulator.
+//!
+//! Substitutes the paper's physical Jetson boards (Table 3) + `nvpmodel`:
+//! per-device frequency ladders for CPU/GPU/memory, a voltage-frequency
+//! curve, the dynamic power model p = p_static + Σ_u k_u · V_u² · f_u
+//! (paper §4.2: p ∝ V²·f), and an energy integrator. The DVFO frequency
+//! controller actuates this instead of sysfs.
+
+pub mod spec;
+
+pub use spec::{device_zoo, DeviceSpec, Unit, UNITS};
+
+use crate::util::clampf;
+use anyhow::{bail, Result};
+
+/// A frequency setting for the three DVFS-controlled units, in MHz.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FreqVector {
+    pub cpu_mhz: f64,
+    pub gpu_mhz: f64,
+    pub mem_mhz: f64,
+}
+
+impl FreqVector {
+    pub fn get(&self, u: Unit) -> f64 {
+        match u {
+            Unit::Cpu => self.cpu_mhz,
+            Unit::Gpu => self.gpu_mhz,
+            Unit::Mem => self.mem_mhz,
+        }
+    }
+
+    pub fn set(&mut self, u: Unit, v: f64) {
+        match u {
+            Unit::Cpu => self.cpu_mhz = v,
+            Unit::Gpu => self.gpu_mhz = v,
+            Unit::Mem => self.mem_mhz = v,
+        }
+    }
+}
+
+/// The discrete frequency ladder for one unit: `levels` points evenly
+/// spaced in [min, max] (the paper samples levels "evenly between the
+/// minimum frequency that satisfies system operation and the maximum").
+#[derive(Clone, Debug)]
+pub struct Ladder {
+    pub min_mhz: f64,
+    pub max_mhz: f64,
+    pub levels: usize,
+}
+
+impl Ladder {
+    pub fn new(min_mhz: f64, max_mhz: f64, levels: usize) -> Self {
+        assert!(levels >= 2 && max_mhz > min_mhz);
+        Self {
+            min_mhz,
+            max_mhz,
+            levels,
+        }
+    }
+
+    pub fn freq_at(&self, level: usize) -> f64 {
+        let l = level.min(self.levels - 1);
+        self.min_mhz
+            + (self.max_mhz - self.min_mhz) * l as f64 / (self.levels - 1) as f64
+    }
+
+    /// Nearest ladder level for a frequency.
+    pub fn level_of(&self, mhz: f64) -> usize {
+        let t = (mhz - self.min_mhz) / (self.max_mhz - self.min_mhz);
+        (clampf(t, 0.0, 1.0) * (self.levels - 1) as f64).round() as usize
+    }
+}
+
+/// Voltage model: V(f) rises roughly linearly with frequency in the DVFS
+/// operating region; normalized so V(f_max) = 1. Dynamic power then goes
+/// ~ f·V² ~ f·(a+b·f)² — the superlinear growth that makes max-frequency
+/// operation energy-inefficient (paper Fig. 2 observation 1).
+pub fn voltage(f_mhz: f64, f_max_mhz: f64) -> f64 {
+    let x = clampf(f_mhz / f_max_mhz, 0.0, 1.2);
+    0.55 + 0.45 * x
+}
+
+/// Instantaneous power (W) of a device at a frequency vector under a given
+/// utilization per unit (0..1).
+pub fn power_w(spec: &DeviceSpec, f: &FreqVector, util: &[f64; 3]) -> f64 {
+    let mut p = spec.static_w;
+    for (i, &u) in UNITS.iter().enumerate() {
+        let ladder = spec.ladder(u);
+        let v = voltage(f.get(u), ladder.max_mhz);
+        let dyn_max = spec.dyn_max_w(u);
+        // p_dyn = k·V²·f scaled so that (V=1, f=f_max, util=1) → dyn_max
+        p += dyn_max * util[i] * v * v * (f.get(u) / ladder.max_mhz);
+    }
+    p.min(spec.max_power_w)
+}
+
+/// Idle power: static only (paper assumes devices idle between tasks).
+pub fn idle_power_w(spec: &DeviceSpec) -> f64 {
+    spec.static_w
+}
+
+/// Energy integrator over execution phases.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyMeter {
+    total_j: f64,
+    per_unit_j: [f64; 3],
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate a phase of `dt` seconds at frequency `f` and utilization
+    /// `util`; returns the phase energy (J).
+    pub fn accumulate(
+        &mut self,
+        spec: &DeviceSpec,
+        f: &FreqVector,
+        util: &[f64; 3],
+        dt_s: f64,
+    ) -> f64 {
+        let p = power_w(spec, f, util);
+        let e = p * dt_s;
+        self.total_j += e;
+        for (i, &u) in UNITS.iter().enumerate() {
+            let ladder = spec.ladder(u);
+            let v = voltage(f.get(u), ladder.max_mhz);
+            self.per_unit_j[i] +=
+                spec.dyn_max_w(u) * util[i] * v * v * (f.get(u) / ladder.max_mhz) * dt_s;
+        }
+        e
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.total_j
+    }
+
+    /// Per-unit dynamic energy split (CPU, GPU, MEM) — drives Fig. 1.
+    pub fn per_unit_j(&self) -> [f64; 3] {
+        self.per_unit_j
+    }
+}
+
+/// The DVFS actuator: tracks the current frequency vector, models the
+/// (small) transition latency of a frequency switch, and clamps every
+/// request into the ladder.
+#[derive(Clone, Debug)]
+pub struct FrequencyController {
+    spec: DeviceSpec,
+    current: FreqVector,
+    /// seconds per DVFS transition (datasheet-scale ~100 µs)
+    pub transition_s: f64,
+    transitions: u64,
+}
+
+impl FrequencyController {
+    pub fn new(spec: DeviceSpec) -> Self {
+        let current = FreqVector {
+            cpu_mhz: spec.cpu.max_mhz,
+            gpu_mhz: spec.gpu.max_mhz,
+            mem_mhz: spec.mem.max_mhz,
+        };
+        Self {
+            spec,
+            current,
+            transition_s: 1e-4,
+            transitions: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    pub fn current(&self) -> FreqVector {
+        self.current
+    }
+
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+
+    /// Apply a frequency vector; returns the transition latency incurred
+    /// (0 when nothing changes).
+    pub fn set(&mut self, target: FreqVector) -> Result<f64> {
+        let mut t = target;
+        for &u in &UNITS {
+            let l = self.spec.ladder(u);
+            let v = t.get(u);
+            if !(l.min_mhz..=l.max_mhz).contains(&v) {
+                if v < l.min_mhz * 0.99 || v > l.max_mhz * 1.01 {
+                    bail!(
+                        "{:?} frequency {v} MHz outside [{}, {}]",
+                        u,
+                        l.min_mhz,
+                        l.max_mhz
+                    );
+                }
+                t.set(u, clampf(v, l.min_mhz, l.max_mhz));
+            }
+        }
+        if t != self.current {
+            self.current = t;
+            self.transitions += 1;
+            Ok(self.transition_s)
+        } else {
+            Ok(0.0)
+        }
+    }
+
+    /// Apply ladder levels (the DQN action encoding).
+    pub fn set_levels(&mut self, cpu: usize, gpu: usize, mem: usize) -> Result<f64> {
+        let t = FreqVector {
+            cpu_mhz: self.spec.cpu.freq_at(cpu),
+            gpu_mhz: self.spec.gpu.freq_at(gpu),
+            mem_mhz: self.spec.mem.freq_at(mem),
+        };
+        self.set(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nx() -> DeviceSpec {
+        device_zoo().into_iter().find(|d| d.name == "xavier-nx").unwrap()
+    }
+
+    #[test]
+    fn ladder_endpoints_and_roundtrip() {
+        let l = Ladder::new(200.0, 1200.0, 11);
+        assert_eq!(l.freq_at(0), 200.0);
+        assert_eq!(l.freq_at(10), 1200.0);
+        for lev in 0..11 {
+            assert_eq!(l.level_of(l.freq_at(lev)), lev);
+        }
+    }
+
+    #[test]
+    fn voltage_monotone() {
+        let vs: Vec<f64> = (1..=10).map(|i| voltage(i as f64 * 100.0, 1000.0)).collect();
+        assert!(vs.windows(2).all(|w| w[0] < w[1]));
+        assert!((voltage(1000.0, 1000.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_superlinear_in_frequency() {
+        let d = nx();
+        let util = [1.0, 1.0, 1.0];
+        let f_half = FreqVector {
+            cpu_mhz: d.cpu.max_mhz / 2.0,
+            gpu_mhz: d.gpu.max_mhz / 2.0,
+            mem_mhz: d.mem.max_mhz / 2.0,
+        };
+        let f_full = FreqVector {
+            cpu_mhz: d.cpu.max_mhz,
+            gpu_mhz: d.gpu.max_mhz,
+            mem_mhz: d.mem.max_mhz,
+        };
+        let p_half = power_w(&d, &f_half, &util) - d.static_w;
+        let p_full = power_w(&d, &f_full, &util) - d.static_w;
+        // dynamic power more than doubles when frequency doubles (V² term)
+        assert!(p_full > 2.0 * p_half, "p_full={p_full} p_half={p_half}");
+    }
+
+    #[test]
+    fn power_capped_at_max() {
+        let d = nx();
+        let f = FreqVector {
+            cpu_mhz: d.cpu.max_mhz,
+            gpu_mhz: d.gpu.max_mhz,
+            mem_mhz: d.mem.max_mhz,
+        };
+        assert!(power_w(&d, &f, &[1.0, 1.0, 1.0]) <= d.max_power_w + 1e-9);
+    }
+
+    #[test]
+    fn gpu_dominates_energy_under_gpu_load() {
+        // Fig. 1: GPU energy is 3.1-3.5x CPU energy for DNN inference —
+        // with the utilization vector the roofline model actually emits.
+        let d = nx();
+        let f = FreqVector {
+            cpu_mhz: d.cpu.max_mhz,
+            gpu_mhz: d.gpu.max_mhz,
+            mem_mhz: d.mem.max_mhz,
+        };
+        let profile = crate::perfmodel::find_model("resnet-18").unwrap();
+        let phase = crate::perfmodel::edge_compute(
+            &profile,
+            crate::perfmodel::Dataset::Cifar100,
+            &d,
+            &f,
+            1.0,
+        );
+        let mut m = EnergyMeter::new();
+        m.accumulate(&d, &f, &phase.util, phase.total_s);
+        let [cpu, gpu, _mem] = m.per_unit_j();
+        let ratio = gpu / cpu;
+        assert!(
+            (2.5..=4.5).contains(&ratio),
+            "gpu/cpu energy ratio {ratio} outside Fig.1 band (util {:?})",
+            phase.util
+        );
+    }
+
+    #[test]
+    fn controller_counts_transitions_and_clamps() {
+        let mut c = FrequencyController::new(nx());
+        let t0 = c.set_levels(0, 0, 0).unwrap();
+        assert!(t0 > 0.0);
+        let t1 = c.set_levels(0, 0, 0).unwrap();
+        assert_eq!(t1, 0.0);
+        assert_eq!(c.transitions(), 1);
+        assert!(c
+            .set(FreqVector {
+                cpu_mhz: 50.0,
+                gpu_mhz: 100.0,
+                mem_mhz: 100.0
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn meter_integrates_linearly_in_time() {
+        let d = nx();
+        let f = FrequencyController::new(d.clone()).current();
+        let mut a = EnergyMeter::new();
+        let mut b = EnergyMeter::new();
+        a.accumulate(&d, &f, &[0.5, 0.5, 0.5], 2.0);
+        b.accumulate(&d, &f, &[0.5, 0.5, 0.5], 1.0);
+        b.accumulate(&d, &f, &[0.5, 0.5, 0.5], 1.0);
+        assert!((a.total_j() - b.total_j()).abs() < 1e-9);
+    }
+}

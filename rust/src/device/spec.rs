@@ -1,0 +1,204 @@
+//! Device specifications — Table 3 of the paper, plus derived power-model
+//! constants.
+
+use super::Ladder;
+
+/// DVFS-controlled compute unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unit {
+    Cpu,
+    Gpu,
+    Mem,
+}
+
+pub const UNITS: [Unit; 3] = [Unit::Cpu, Unit::Gpu, Unit::Mem];
+
+/// One device of Table 3: frequency ladders, power envelope, and peak
+/// compute/bandwidth numbers used by the roofline latency model.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub cpu: Ladder,
+    pub gpu: Ladder,
+    pub mem: Ladder,
+    /// Board power ceiling (W) — "MaxPower" in the cost metric Eq. (4).
+    pub max_power_w: f64,
+    /// Static/leakage + board baseline power (W).
+    pub static_w: f64,
+    /// Max dynamic power per unit at f_max, V_max, util=1 (W).
+    pub cpu_dyn_w: f64,
+    pub gpu_dyn_w: f64,
+    pub mem_dyn_w: f64,
+    /// Peak GPU throughput at f_max (GFLOP/s, fp32 — what un-tensorized
+    /// mobile inference stacks actually sustain against).
+    pub gpu_peak_gflops: f64,
+    /// Peak CPU throughput at f_max (GFLOP/s).
+    pub cpu_peak_gflops: f64,
+    /// Peak DRAM bandwidth at mem f_max (GB/s).
+    pub mem_peak_gbps: f64,
+    /// Radio/NIC transmit power (W) for offload energy Eq. (12); 0 for
+    /// cloud machines.
+    pub radio_w: f64,
+    /// Kernel-dispatch discount: 1.0 for eager-mode edge stacks; server
+    /// runtimes (TensorRT/CUDA-graph style) amortize launches, so the
+    /// cloud box dispatches far cheaper per kernel.
+    pub dispatch_discount: f64,
+}
+
+impl DeviceSpec {
+    pub fn ladder(&self, u: Unit) -> &Ladder {
+        match u {
+            Unit::Cpu => &self.cpu,
+            Unit::Gpu => &self.gpu,
+            Unit::Mem => &self.mem,
+        }
+    }
+
+    pub fn dyn_max_w(&self, u: Unit) -> f64 {
+        match u {
+            Unit::Cpu => self.cpu_dyn_w,
+            Unit::Gpu => self.gpu_dyn_w,
+            Unit::Mem => self.mem_dyn_w,
+        }
+    }
+
+    /// Re-quantize the ladders to `levels` points per unit (the paper's
+    /// §5.1 uses 100; the default action space uses 10 like Table 3's
+    /// grid — see DESIGN.md §7).
+    pub fn with_levels(mut self, levels: usize) -> Self {
+        for l in [&mut self.cpu, &mut self.gpu, &mut self.mem] {
+            l.levels = levels;
+        }
+        self
+    }
+}
+
+/// Table 3 devices. Frequency maxima are the paper's numbers; minima are
+/// the lowest operating points of the boards' nvpmodel profiles; peak
+/// GFLOPs/bandwidth from vendor datasheets (used only as roofline scale
+/// factors, so relative magnitudes are what matters).
+pub fn device_zoo() -> Vec<DeviceSpec> {
+    vec![
+        DeviceSpec {
+            name: "jetson-nano",
+            cpu: Ladder::new(102.0, 1479.0, 10),
+            gpu: Ladder::new(76.8, 921.6, 10),
+            mem: Ladder::new(204.0, 1600.0, 10),
+            max_power_w: 10.0,
+            static_w: 1.25,
+            cpu_dyn_w: 2.4,
+            gpu_dyn_w: 4.4,
+            mem_dyn_w: 1.5,
+            gpu_peak_gflops: 236.0,
+            cpu_peak_gflops: 12.0,
+            mem_peak_gbps: 25.6,
+            radio_w: 1.1,
+            dispatch_discount: 1.0,
+        },
+        DeviceSpec {
+            name: "jetson-tx2",
+            cpu: Ladder::new(345.6, 2000.0, 10),
+            gpu: Ladder::new(114.75, 1300.0, 10),
+            mem: Ladder::new(408.0, 1866.0, 10),
+            max_power_w: 15.0,
+            static_w: 2.2,
+            cpu_dyn_w: 3.4,
+            gpu_dyn_w: 6.3,
+            mem_dyn_w: 2.0,
+            gpu_peak_gflops: 665.0,
+            cpu_peak_gflops: 20.0,
+            mem_peak_gbps: 59.7,
+            radio_w: 1.3,
+            dispatch_discount: 1.0,
+        },
+        DeviceSpec {
+            name: "xavier-nx",
+            cpu: Ladder::new(115.2, 1900.0, 10),
+            gpu: Ladder::new(114.75, 1100.0, 10),
+            mem: Ladder::new(204.0, 1866.0, 10),
+            max_power_w: 20.0,
+            static_w: 2.8,
+            cpu_dyn_w: 4.5,
+            gpu_dyn_w: 9.2,
+            mem_dyn_w: 2.7,
+            gpu_peak_gflops: 1690.0,
+            cpu_peak_gflops: 45.0,
+            mem_peak_gbps: 59.7,
+            radio_w: 1.3,
+            dispatch_discount: 1.0,
+        },
+        DeviceSpec {
+            // cloud comparator — Table 3 bottom row
+            name: "rtx3080",
+            cpu: Ladder::new(1200.0, 2900.0, 10),
+            gpu: Ladder::new(210.0, 1440.0, 10),
+            mem: Ladder::new(810.0, 2933.0, 10),
+            max_power_w: 320.0,
+            static_w: 55.0,
+            cpu_dyn_w: 65.0,
+            gpu_dyn_w: 180.0,
+            mem_dyn_w: 20.0,
+            gpu_peak_gflops: 29_750.0,
+            cpu_peak_gflops: 600.0,
+            mem_peak_gbps: 760.0,
+            radio_w: 0.0,
+            dispatch_discount: 0.15,
+        },
+    ]
+}
+
+/// Look a device up by name.
+pub fn find_device(name: &str) -> anyhow::Result<DeviceSpec> {
+    device_zoo()
+        .into_iter()
+        .find(|d| d.name == name)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown device `{name}` (known: {:?})",
+                device_zoo().iter().map(|d| d.name).collect::<Vec<_>>()
+            )
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_matches_table3_maxima() {
+        let nx = find_device("xavier-nx").unwrap();
+        assert_eq!(nx.cpu.max_mhz, 1900.0);
+        assert_eq!(nx.gpu.max_mhz, 1100.0);
+        assert_eq!(nx.mem.max_mhz, 1866.0);
+        assert_eq!(nx.max_power_w, 20.0);
+        let nano = find_device("jetson-nano").unwrap();
+        assert_eq!(nano.cpu.max_mhz, 1479.0);
+        assert_eq!(nano.max_power_w, 10.0);
+        let tx2 = find_device("jetson-tx2").unwrap();
+        assert_eq!(tx2.gpu.max_mhz, 1300.0);
+        let cloud = find_device("rtx3080").unwrap();
+        assert_eq!(cloud.max_power_w, 320.0);
+    }
+
+    #[test]
+    fn unknown_device_is_error() {
+        assert!(find_device("tpu-v5").is_err());
+    }
+
+    #[test]
+    fn with_levels_requantizes() {
+        let d = find_device("xavier-nx").unwrap().with_levels(100);
+        assert_eq!(d.cpu.levels, 100);
+        assert_eq!(d.gpu.levels, 100);
+        // endpoints preserved (up to float rounding)
+        assert!((d.cpu.freq_at(99) - 1900.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cloud_outclasses_edge() {
+        let nx = find_device("xavier-nx").unwrap();
+        let cloud = find_device("rtx3080").unwrap();
+        assert!(cloud.gpu_peak_gflops > 5.0 * nx.gpu_peak_gflops);
+        assert!(cloud.mem_peak_gbps > 5.0 * nx.mem_peak_gbps);
+    }
+}

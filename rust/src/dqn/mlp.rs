@@ -1,0 +1,409 @@
+//! The Q-network MLP: 3 hidden relu layers (128/64/32, paper §6.1) with
+//! manual forward/backward and Adam. Architecture mirrors
+//! `python/compile/model.py::dqn_q_fwd` exactly — the runtime test
+//! `tests/runtime_parity.rs` asserts the rust forward and the PJRT
+//! artifact agree bit-tightly on the same weights.
+
+use super::tensor::Tensor2;
+use crate::configx::json::{self, Json};
+use crate::util::Pcg32;
+use anyhow::{Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    /// weight matrices (in, out) and biases per layer
+    pub ws: Vec<Tensor2>,
+    pub bs: Vec<Vec<f32>>,
+}
+
+/// Per-layer cache of one forward pass (inputs and post-relu activations).
+pub struct ForwardCache {
+    /// layer inputs: x0 (the state), a1, a2, a3
+    pub inputs: Vec<Tensor2>,
+    /// final linear output (Q-values)
+    pub output: Tensor2,
+}
+
+impl Mlp {
+    /// dims: [in, h1, h2, h3, out]
+    pub fn new(dims: &[usize], rng: &mut Pcg32) -> Self {
+        let ws = dims
+            .windows(2)
+            .map(|w| Tensor2::he_init(w[0], w[1], rng))
+            .collect();
+        let bs = dims[1..].iter().map(|&d| vec![0.0; d]).collect();
+        Self { ws, bs }
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d: Vec<usize> = self.ws.iter().map(|w| w.rows).collect();
+        d.push(self.ws.last().unwrap().cols);
+        d
+    }
+
+    /// Forward with activations cached for backprop.
+    pub fn forward(&self, x: &Tensor2) -> ForwardCache {
+        let mut inputs = vec![x.clone()];
+        let mut h = x.clone();
+        let n = self.ws.len();
+        for (i, (w, b)) in self.ws.iter().zip(self.bs.iter()).enumerate() {
+            let mut z = h.matmul(w);
+            z.add_row_bias(b);
+            if i + 1 < n {
+                z.relu_inplace();
+                inputs.push(z.clone());
+            } else {
+                return ForwardCache { inputs, output: z };
+            }
+            h = z;
+        }
+        unreachable!("mlp must have at least one layer");
+    }
+
+    /// Inference-only forward (no caches; ping-pong scratch buffers keep
+    /// the per-decision hot path allocation-free).
+    pub fn infer(&self, x: &[f32], scratch: &mut InferScratch) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.ws[0].rows);
+        scratch.ensure(self);
+        let n = self.ws.len();
+        scratch.a.clear();
+        scratch.a.extend_from_slice(x);
+        for i in 0..n {
+            let w = &self.ws[i];
+            scratch.b.clear();
+            scratch.b.extend_from_slice(&self.bs[i]);
+            for (p, &a) in scratch.a.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &w.data[p * w.cols..(p + 1) * w.cols];
+                for (o, &bv) in scratch.b.iter_mut().zip(brow.iter()) {
+                    *o += a * bv;
+                }
+            }
+            if i + 1 < n {
+                for v in scratch.b.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            std::mem::swap(&mut scratch.a, &mut scratch.b);
+        }
+        scratch.a.clone()
+    }
+
+    /// Backprop from dL/d(output); returns gradients aligned with (ws, bs).
+    pub fn backward(
+        &self,
+        cache: &ForwardCache,
+        dout: &Tensor2,
+    ) -> (Vec<Tensor2>, Vec<Vec<f32>>) {
+        let n = self.ws.len();
+        let mut dws = vec![Tensor2::zeros(0, 0); n];
+        let mut dbs = vec![Vec::new(); n];
+        let mut grad = dout.clone();
+        for i in (0..n).rev() {
+            let input = &cache.inputs[i];
+            dws[i] = input.matmul_tn(&grad);
+            dbs[i] = grad.col_sums();
+            if i > 0 {
+                let mut dx = grad.matmul_nt(&self.ws[i]);
+                dx.relu_backward_inplace(&cache.inputs[i]);
+                grad = dx;
+            }
+        }
+        (dws, dbs)
+    }
+
+    /// Hard copy (target-network sync).
+    pub fn copy_from(&mut self, other: &Mlp) {
+        self.ws = other.ws.clone();
+        self.bs = other.bs.clone();
+    }
+
+    /// Flattened weights in the artifact's argument order
+    /// (w1, b1, w2, b2, ...) — fed to the PJRT dqn_q artifact.
+    pub fn flat_args(&self) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.ws.len() * 2);
+        for (w, b) in self.ws.iter().zip(self.bs.iter()) {
+            out.push(w.data.clone());
+            out.push(b.clone());
+        }
+        out
+    }
+
+    // ------------------------------------------------------- checkpoints --
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .ws
+            .iter()
+            .zip(self.bs.iter())
+            .map(|(w, b)| {
+                json::obj(vec![
+                    ("rows", json::num(w.rows as f64)),
+                    ("cols", json::num(w.cols as f64)),
+                    (
+                        "w",
+                        Json::Arr(w.data.iter().map(|&x| Json::Num(x as f64)).collect()),
+                    ),
+                    (
+                        "b",
+                        Json::Arr(b.iter().map(|&x| Json::Num(x as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        json::obj(vec![("layers", Json::Arr(layers))])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Mlp> {
+        let layers = j.req("layers")?.as_arr().context("layers must be array")?;
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        for l in layers {
+            let rows = l.req("rows")?.as_usize().context("rows")?;
+            let cols = l.req("cols")?.as_usize().context("cols")?;
+            let w: Vec<f32> = l
+                .req("w")?
+                .f64_list()
+                .context("w")?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect();
+            let b: Vec<f32> = l
+                .req("b")?
+                .f64_list()
+                .context("b")?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect();
+            anyhow::ensure!(w.len() == rows * cols && b.len() == cols, "shape");
+            ws.push(Tensor2::from_vec(rows, cols, w));
+            bs.push(b);
+        }
+        anyhow::ensure!(!ws.is_empty(), "empty checkpoint");
+        Ok(Mlp { ws, bs })
+    }
+}
+
+/// Reusable activation buffers for `Mlp::infer` — keeps the per-decision
+/// hot path allocation-free.
+#[derive(Default)]
+pub struct InferScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl InferScratch {
+    fn ensure(&mut self, mlp: &Mlp) {
+        let cap = mlp
+            .dims()
+            .into_iter()
+            .max()
+            .unwrap_or(0);
+        if self.a.capacity() < cap {
+            self.a.reserve(cap - self.a.capacity());
+            self.b.reserve(cap.saturating_sub(self.b.capacity()));
+        }
+    }
+}
+
+/// Adam optimizer over an Mlp's parameters.
+pub struct Adam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: i32,
+    mw: Vec<Tensor2>,
+    vw: Vec<Tensor2>,
+    mb: Vec<Vec<f32>>,
+    vb: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(mlp: &Mlp, lr: f32) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            mw: mlp.ws.iter().map(|w| Tensor2::zeros(w.rows, w.cols)).collect(),
+            vw: mlp.ws.iter().map(|w| Tensor2::zeros(w.rows, w.cols)).collect(),
+            mb: mlp.bs.iter().map(|b| vec![0.0; b.len()]).collect(),
+            vb: mlp.bs.iter().map(|b| vec![0.0; b.len()]).collect(),
+        }
+    }
+
+    pub fn step(&mut self, mlp: &mut Mlp, dws: &[Tensor2], dbs: &[Vec<f32>]) {
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for i in 0..mlp.ws.len() {
+            for j in 0..mlp.ws[i].data.len() {
+                let g = dws[i].data[j];
+                let m = &mut self.mw[i].data[j];
+                let v = &mut self.vw[i].data[j];
+                *m = self.beta1 * *m + (1.0 - self.beta1) * g;
+                *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
+                mlp.ws[i].data[j] -=
+                    self.lr * (*m / bc1) / ((*v / bc2).sqrt() + self.eps);
+            }
+            for j in 0..mlp.bs[i].len() {
+                let g = dbs[i][j];
+                let m = &mut self.mb[i][j];
+                let v = &mut self.vb[i][j];
+                *m = self.beta1 * *m + (1.0 - self.beta1) * g;
+                *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
+                mlp.bs[i][j] -= self.lr * (*m / bc1) / ((*v / bc2).sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+/// Huber (smooth-L1) loss gradient for TD errors: clips the gradient at
+/// ±1 as in the DQN paper.
+pub fn huber_grad(pred: f32, target: f32) -> f32 {
+    let d = pred - target;
+    d.clamp(-1.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(rng: &mut Pcg32) -> Mlp {
+        Mlp::new(&[3, 8, 6, 4, 2], rng)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Pcg32::seeded(0);
+        let mlp = tiny(&mut rng);
+        let x = Tensor2::from_vec(2, 3, vec![0.1; 6]);
+        let c = mlp.forward(&x);
+        assert_eq!(c.output.shape(), (2, 2));
+        assert_eq!(c.inputs.len(), 4); // x + 3 hidden activations
+    }
+
+    #[test]
+    fn infer_matches_forward() {
+        let mut rng = Pcg32::seeded(1);
+        let mlp = tiny(&mut rng);
+        let xs = vec![0.3f32, -0.7, 1.1];
+        let x = Tensor2::from_vec(1, 3, xs.clone());
+        let c = mlp.forward(&x);
+        let mut scratch = InferScratch::default();
+        let got = mlp.infer(&xs, &mut scratch);
+        for (a, b) in got.iter().zip(c.output.data.iter()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // second call reuses buffers and still agrees
+        let got2 = mlp.infer(&xs, &mut scratch);
+        assert_eq!(got, got2);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Pcg32::seeded(2);
+        let mut mlp = Mlp::new(&[2, 5, 4, 3, 1], &mut rng);
+        let x = Tensor2::from_vec(1, 2, vec![0.4, -0.9]);
+        // loss = 0.5 * out^2 → dL/dout = out
+        let cache = mlp.forward(&x);
+        let dout = cache.output.clone();
+        let (dws, dbs) = mlp.backward(&cache, &dout);
+
+        let eps = 1e-3f32;
+        // probe a handful of weights in every layer
+        for layer in 0..mlp.ws.len() {
+            for &idx in &[0usize, 1, mlp.ws[layer].data.len() - 1] {
+                let orig = mlp.ws[layer].data[idx];
+                mlp.ws[layer].data[idx] = orig + eps;
+                let lp = 0.5 * mlp.forward(&x).output.data[0].powi(2);
+                mlp.ws[layer].data[idx] = orig - eps;
+                let lm = 0.5 * mlp.forward(&x).output.data[0].powi(2);
+                mlp.ws[layer].data[idx] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = dws[layer].data[idx];
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "layer {layer} idx {idx}: fd={fd} analytic={an}"
+                );
+            }
+            let orig = mlp.bs[layer][0];
+            mlp.bs[layer][0] = orig + eps;
+            let lp = 0.5 * mlp.forward(&x).output.data[0].powi(2);
+            mlp.bs[layer][0] = orig - eps;
+            let lm = 0.5 * mlp.forward(&x).output.data[0].powi(2);
+            mlp.bs[layer][0] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dbs[layer][0]).abs() < 2e-2 * (1.0 + fd.abs()));
+        }
+    }
+
+    #[test]
+    fn adam_reduces_regression_loss() {
+        let mut rng = Pcg32::seeded(3);
+        let mut mlp = Mlp::new(&[4, 16, 12, 8, 1], &mut rng);
+        let mut adam = Adam::new(&mlp, 3e-3);
+        // target function: y = sum(x)
+        let data: Vec<(Vec<f32>, f32)> = (0..64)
+            .map(|_| {
+                let x: Vec<f32> = (0..4).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+                let y = x.iter().sum::<f32>();
+                (x, y)
+            })
+            .collect();
+        let loss = |mlp: &Mlp| -> f32 {
+            data.iter()
+                .map(|(x, y)| {
+                    let t = Tensor2::from_vec(1, 4, x.clone());
+                    (mlp.forward(&t).output.data[0] - y).powi(2)
+                })
+                .sum::<f32>()
+                / data.len() as f32
+        };
+        let l0 = loss(&mlp);
+        for _ in 0..300 {
+            let mut dout_all = Vec::new();
+            // full-batch gradient
+            let xs = Tensor2::from_vec(
+                data.len(),
+                4,
+                data.iter().flat_map(|(x, _)| x.clone()).collect(),
+            );
+            let cache = mlp.forward(&xs);
+            for (i, (_, y)) in data.iter().enumerate() {
+                dout_all.push(2.0 * (cache.output.data[i] - y) / data.len() as f32);
+            }
+            let dout = Tensor2::from_vec(data.len(), 1, dout_all);
+            let (dws, dbs) = mlp.backward(&cache, &dout);
+            adam.step(&mut mlp, &dws, &dbs);
+        }
+        let l1 = loss(&mlp);
+        assert!(l1 < l0 * 0.05, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut rng = Pcg32::seeded(4);
+        let mlp = tiny(&mut rng);
+        let j = mlp.to_json();
+        let back = Mlp::from_json(&j).unwrap();
+        assert_eq!(mlp.dims(), back.dims());
+        for (a, b) in mlp.ws.iter().zip(back.ws.iter()) {
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn huber_clips() {
+        assert_eq!(huber_grad(5.0, 0.0), 1.0);
+        assert_eq!(huber_grad(-5.0, 0.0), -1.0);
+        assert!((huber_grad(0.3, 0.0) - 0.3).abs() < 1e-7);
+    }
+}

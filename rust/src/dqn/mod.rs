@@ -1,0 +1,14 @@
+//! From-scratch DQN stack (paper §5.1): tensor ops, MLP with Adam,
+//! prioritized replay, and the agent with the thinking-while-moving
+//! concurrent backup (Eq. 15). PyTorch substitute per DESIGN.md
+//! §Substitutions — training is offline in the paper too, so the rust
+//! trainer runs inside the simulator before deployment.
+pub mod agent;
+pub mod mlp;
+pub mod replay;
+pub mod tensor;
+
+pub use agent::{ActionSpace, DqnAgent, DqnConfig};
+pub use mlp::{Adam, InferScratch, Mlp};
+pub use replay::{ReplayBuffer, SumTree, Transition};
+pub use tensor::Tensor2;

@@ -1,0 +1,285 @@
+//! Prioritized experience replay (paper §6.1 trains DQN "with the
+//! prioritized experience replay"): a sum-tree over TD-error priorities
+//! with proportional sampling and importance-sampling weights.
+
+use crate::util::Pcg32;
+
+/// Binary-indexed sum tree over leaf priorities.
+#[derive(Clone, Debug)]
+pub struct SumTree {
+    cap: usize,
+    tree: Vec<f64>,
+}
+
+impl SumTree {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            cap,
+            tree: vec![0.0; 2 * cap],
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.tree[1]
+    }
+
+    pub fn set(&mut self, idx: usize, p: f64) {
+        assert!(idx < self.cap);
+        let mut i = idx + self.cap;
+        let delta = p - self.tree[i];
+        while i >= 1 {
+            self.tree[i] += delta;
+            i /= 2;
+        }
+    }
+
+    pub fn get(&self, idx: usize) -> f64 {
+        self.tree[idx + self.cap]
+    }
+
+    /// Find the leaf whose prefix-sum interval contains `target` ∈
+    /// [0, total).
+    pub fn find(&self, target: f64) -> usize {
+        let mut t = target.clamp(0.0, self.total().max(0.0));
+        let mut i = 1usize;
+        while i < self.cap {
+            let left = 2 * i;
+            if t < self.tree[left] {
+                i = left;
+            } else {
+                t -= self.tree[left];
+                i = left + 1;
+            }
+        }
+        (i - self.cap).min(self.cap - 1)
+    }
+}
+
+/// One stored transition. `action` is the per-factor index vector (one
+/// index per action group, see agent.rs), `gamma_pow` is the fractional
+/// discount exponent t_AS/H of the thinking-while-moving backup (1.0 in
+/// the blocking formulation).
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub action: Vec<usize>,
+    pub reward: f64,
+    pub next_state: Vec<f32>,
+    pub done: bool,
+    pub gamma_pow: f64,
+}
+
+/// Ring-structured PER buffer.
+pub struct ReplayBuffer {
+    cap: usize,
+    data: Vec<Transition>,
+    next: usize,
+    tree: SumTree,
+    max_priority: f64,
+    alpha: f64,
+    pub beta: f64,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap,
+            data: Vec::with_capacity(cap.min(4096)),
+            next: 0,
+            tree: SumTree::new(cap),
+            max_priority: 1.0,
+            alpha: 0.6,
+            beta: 0.4,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Insert with max priority (new transitions get sampled soon).
+    pub fn push(&mut self, t: Transition) {
+        let p = self.max_priority.powf(self.alpha);
+        if self.data.len() < self.cap {
+            self.data.push(t);
+            self.tree.set(self.data.len() - 1, p);
+        } else {
+            self.data[self.next] = t;
+            self.tree.set(self.next, p);
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Sample a batch: returns (indices, importance weights).
+    pub fn sample(
+        &self,
+        batch: usize,
+        rng: &mut Pcg32,
+    ) -> (Vec<usize>, Vec<f64>) {
+        assert!(!self.is_empty());
+        let total = self.tree.total();
+        let n = self.data.len();
+        let mut idxs = Vec::with_capacity(batch);
+        let mut weights = Vec::with_capacity(batch);
+        let seg = total / batch as f64;
+        let mut max_w = 0.0f64;
+        for b in 0..batch {
+            let target = seg * b as f64 + rng.next_f64() * seg;
+            let idx = self.tree.find(target).min(n - 1);
+            let p = (self.tree.get(idx) / total).max(1e-12);
+            let w = (n as f64 * p).powf(-self.beta);
+            max_w = max_w.max(w);
+            idxs.push(idx);
+            weights.push(w);
+        }
+        for w in &mut weights {
+            *w /= max_w;
+        }
+        (idxs, weights)
+    }
+
+    pub fn get(&self, idx: usize) -> &Transition {
+        &self.data[idx]
+    }
+
+    /// Update priorities after a learning step.
+    pub fn update_priorities(&mut self, idxs: &[usize], td_errors: &[f64]) {
+        for (&i, &td) in idxs.iter().zip(td_errors.iter()) {
+            let p = td.abs() + 1e-3;
+            self.max_priority = self.max_priority.max(p);
+            self.tree.set(i, p.powf(self.alpha));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_mini as pt;
+
+    fn t(reward: f64) -> Transition {
+        Transition {
+            state: vec![0.0; 4],
+            action: vec![0],
+            reward,
+            next_state: vec![0.0; 4],
+            done: false,
+            gamma_pow: 1.0,
+        }
+    }
+
+    #[test]
+    fn sumtree_total_tracks_sets() {
+        let mut st = SumTree::new(8);
+        st.set(0, 1.0);
+        st.set(3, 2.0);
+        st.set(7, 0.5);
+        assert!((st.total() - 3.5).abs() < 1e-12);
+        st.set(3, 0.0);
+        assert!((st.total() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sumtree_find_respects_intervals() {
+        let mut st = SumTree::new(4);
+        st.set(0, 1.0);
+        st.set(1, 2.0);
+        st.set(2, 3.0);
+        st.set(3, 4.0);
+        assert_eq!(st.find(0.5), 0);
+        assert_eq!(st.find(1.5), 1);
+        assert_eq!(st.find(3.5), 2);
+        assert_eq!(st.find(9.9), 3);
+    }
+
+    #[test]
+    fn sumtree_find_property() {
+        // prefix-sum inversion: find(x) == the index whose cumulative
+        // interval contains x, for random priority vectors.
+        pt::check(
+            "sumtree find",
+            11,
+            200,
+            pt::vec_of(pt::f64_in(0.0, 5.0), 1, 32),
+            |ps| {
+                let mut st = SumTree::new(ps.len().next_power_of_two());
+                for (i, &p) in ps.iter().enumerate() {
+                    st.set(i, p);
+                }
+                let total: f64 = ps.iter().sum();
+                if total <= 0.0 {
+                    return Ok(());
+                }
+                let mut rng = Pcg32::seeded(99);
+                for _ in 0..16 {
+                    let x = rng.next_f64() * total * 0.999;
+                    let idx = st.find(x);
+                    let mut acc = 0.0;
+                    let mut want = ps.len() - 1;
+                    for (i, &p) in ps.iter().enumerate() {
+                        if x < acc + p {
+                            want = i;
+                            break;
+                        }
+                        acc += p;
+                    }
+                    if idx != want {
+                        return Err(format!("find({x})={idx}, want {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn buffer_wraps_at_capacity() {
+        let mut rb = ReplayBuffer::new(4);
+        for i in 0..10 {
+            rb.push(t(i as f64));
+        }
+        assert_eq!(rb.len(), 4);
+        let rewards: Vec<f64> = (0..4).map(|i| rb.get(i).reward).collect();
+        // slots hold the last 4 pushes (6..10) in ring order
+        let mut sorted = rewards.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(sorted, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn high_priority_sampled_more() {
+        let mut rb = ReplayBuffer::new(16);
+        for i in 0..16 {
+            rb.push(t(i as f64));
+        }
+        // all start at max priority; depress all but index 5
+        let idxs: Vec<usize> = (0..16).collect();
+        let mut tds = vec![0.001; 16];
+        tds[5] = 10.0;
+        rb.update_priorities(&idxs, &tds);
+        let mut rng = Pcg32::seeded(7);
+        let mut hits = 0;
+        for _ in 0..200 {
+            let (is, _) = rb.sample(4, &mut rng);
+            hits += is.iter().filter(|&&i| i == 5).count();
+        }
+        assert!(hits > 300, "index 5 sampled {hits}/800 times");
+    }
+
+    #[test]
+    fn importance_weights_normalized() {
+        let mut rb = ReplayBuffer::new(32);
+        for i in 0..32 {
+            rb.push(t(i as f64));
+        }
+        let mut rng = Pcg32::seeded(3);
+        let (_, ws) = rb.sample(8, &mut rng);
+        assert!(ws.iter().all(|&w| w > 0.0 && w <= 1.0 + 1e-12));
+        assert!(ws.iter().any(|&w| (w - 1.0).abs() < 1e-9));
+    }
+}

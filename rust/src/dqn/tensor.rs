@@ -1,0 +1,254 @@
+//! Minimal dense 2-D tensor for the from-scratch DQN (row-major f32).
+//!
+//! The hot path is `matmul` / `matmul_tn` / `matmul_nt` — written with a
+//! k-inner accumulation order that the compiler auto-vectorizes; see
+//! EXPERIMENTS.md §Perf for the measured numbers.
+
+use crate::util::Pcg32;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Self { rows, cols, data }
+    }
+
+    /// He-initialized weights (relu-friendly).
+    pub fn he_init(rows: usize, cols: usize, rng: &mut Pcg32) -> Self {
+        let std = (2.0 / rows as f64).sqrt();
+        let data = (0..rows * cols)
+            .map(|_| (rng.normal() * std) as f32)
+            .collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// out = self (m,k) @ other (k,n); accumulates into a caller-provided
+    /// buffer to keep the agent's act() allocation-free.
+    pub fn matmul_into(&self, other: &Tensor2, out: &mut Tensor2) {
+        assert_eq!(self.cols, other.rows);
+        assert_eq!((out.rows, out.cols), (self.rows, other.cols));
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        out.data.fill(0.0);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (p, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue; // relu activations are ~50% zero
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+    }
+
+    pub fn matmul(&self, other: &Tensor2) -> Tensor2 {
+        let mut out = Tensor2::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// self^T (k,m)^T=(m,k) … out = self^T @ other: (cols_a, cols_b).
+    pub fn matmul_tn(&self, other: &Tensor2) -> Tensor2 {
+        assert_eq!(self.rows, other.rows);
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Tensor2::zeros(m, n);
+        for p in 0..k {
+            let arow = &self.data[p * m..(p + 1) * m];
+            let brow = &other.data[p * n..(p + 1) * n];
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// out = self @ other^T: (rows_a, rows_b).
+    pub fn matmul_nt(&self, other: &Tensor2) -> Tensor2 {
+        assert_eq!(self.cols, other.cols);
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Tensor2::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&a, &b) in arow.iter().zip(brow.iter()) {
+                    acc += a * b;
+                }
+                *out.at_mut(i, j) = acc;
+            }
+        }
+        out
+    }
+
+    pub fn add_row_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            for (x, &b) in row.iter_mut().zip(bias.iter()) {
+                *x += b;
+            }
+        }
+    }
+
+    pub fn relu_inplace(&mut self) {
+        for x in &mut self.data {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+    }
+
+    /// Gradient mask: zero where the forward activation was <= 0.
+    pub fn relu_backward_inplace(&mut self, forward: &Tensor2) {
+        assert_eq!(self.shape(), forward.shape());
+        for (g, &f) in self.data.iter_mut().zip(forward.data.iter()) {
+            if f <= 0.0 {
+                *g = 0.0;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// column-wise sum (for bias gradients): (1, cols).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (o, &x) in out.iter_mut().zip(self.row(r)) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    pub fn argmax_row(&self, r: usize) -> usize {
+        let row = self.row(r);
+        let mut best = 0;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(rows: usize, cols: usize, xs: &[f32]) -> Tensor2 {
+        Tensor2::from_vec(rows, cols, xs.to_vec())
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = t(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = t(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_tn_equals_explicit_transpose() {
+        let a = t(3, 2, &[1., 2., 3., 4., 5., 6.]); // (3,2)
+        let b = t(3, 2, &[1., 0., 0., 1., 1., 1.]); // (3,2)
+        // a^T @ b = (2,2)
+        let c = a.matmul_tn(&b);
+        assert_eq!(c.data, vec![1. + 0. + 5., 0. + 3. + 5., 2. + 0. + 6., 0. + 4. + 6.]);
+    }
+
+    #[test]
+    fn matmul_nt_equals_manual() {
+        let a = t(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = t(2, 3, &[1., 1., 1., 2., 0., 1.]);
+        let c = a.matmul_nt(&b); // (2,2)
+        assert_eq!(c.data, vec![6., 5., 15., 14.]);
+    }
+
+    #[test]
+    fn relu_and_backward() {
+        let mut x = t(1, 4, &[-1., 0., 2., -3.]);
+        let fwd = {
+            let mut f = x.clone();
+            f.relu_inplace();
+            f
+        };
+        assert_eq!(fwd.data, vec![0., 0., 2., 0.]);
+        x = t(1, 4, &[10., 10., 10., 10.]);
+        x.relu_backward_inplace(&fwd);
+        assert_eq!(x.data, vec![0., 0., 10., 0.]);
+    }
+
+    #[test]
+    fn bias_and_colsums() {
+        let mut x = t(2, 2, &[1., 2., 3., 4.]);
+        x.add_row_bias(&[10., 20.]);
+        assert_eq!(x.data, vec![11., 22., 13., 24.]);
+        assert_eq!(x.col_sums(), vec![24., 46.]);
+    }
+
+    #[test]
+    fn argmax() {
+        let x = t(2, 3, &[1., 5., 2., 9., 0., 3.]);
+        assert_eq!(x.argmax_row(0), 1);
+        assert_eq!(x.argmax_row(1), 0);
+    }
+
+    #[test]
+    fn he_init_statistics() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Tensor2::he_init(256, 128, &mut rng);
+        let mean: f32 = w.data.iter().sum::<f32>() / w.data.len() as f32;
+        let var: f32 =
+            w.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / w.data.len() as f32;
+        assert!(mean.abs() < 0.01);
+        assert!((var - 2.0 / 256.0).abs() < 0.002, "var={var}");
+    }
+}

@@ -1,0 +1,27 @@
+//! DVFO: learning-based DVFS for energy-efficient edge-cloud collaborative
+//! inference — full-system reproduction (see DESIGN.md).
+//!
+//! Layering (Python never on the request path):
+//! * L1/L2 live in `python/compile` and are AOT-lowered to `artifacts/`.
+//! * L3 (this crate) is the coordinator: DVFS control, DRL policy,
+//!   offloading, edge/cloud workers, and the PJRT runtime that executes
+//!   the AOT artifacts.
+
+pub mod accuracy;
+pub mod bench_harness;
+pub mod cli;
+pub mod coordinator;
+pub mod configx;
+pub mod device;
+pub mod net;
+pub mod offload;
+pub mod perfmodel;
+pub mod policy;
+pub mod proptest_mini;
+pub mod dqn;
+pub mod experiments;
+pub mod runtime;
+pub mod scam;
+pub mod telemetry;
+pub mod util;
+pub mod workload;

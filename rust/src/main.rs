@@ -1,0 +1,245 @@
+//! `dvfo` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   serve        train (if learning policy) + serve a simulated stream
+//!   pipeline     run the REAL artifact pipeline on the bundled test set
+//!   experiment   regenerate a paper table/figure (or `all`)
+//!   train        offline DQN training only, with the learning curve
+//!   devices      list the device zoo (Table 3)
+//!   models       list the model zoo
+
+use dvfo::cli::{parse, Cmd};
+use dvfo::configx::Config;
+use dvfo::coordinator::pipeline::{Pipeline, PipelineRequest};
+use dvfo::coordinator::Coordinator;
+use dvfo::telemetry::Table;
+use dvfo::workload::{Arrivals, TaskGen};
+use std::path::Path;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "dvfo — learning-based DVFS for energy-efficient edge-cloud collaborative inference
+
+USAGE: dvfo <subcommand> [options]
+
+SUBCOMMANDS:
+  serve        simulate serving a request stream with a policy
+  pipeline     run the real AOT-artifact pipeline (edge+cloud workers)
+  experiment   regenerate a paper table/figure: fig01..fig16, tab04..tab06,
+               ablation, or `all`
+  train        offline DQN training, prints the learning curve
+  devices      list the edge/cloud device zoo (paper Table 3)
+  models       list the DNN model zoo
+
+Run `dvfo <subcommand> --help` for options."
+        .to_string()
+}
+
+fn config_from(args: &dvfo::cli::Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    for (k, v) in &args.overrides {
+        cfg.set(k, v)?;
+    }
+    Ok(cfg)
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(sub) = argv.first().cloned() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+
+    match sub.as_str() {
+        "serve" => {
+            let cmd = Cmd::new("dvfo serve", "simulate serving a request stream")
+                .opt("config", "JSON config file", None)
+                .opt("requests", "number of requests", Some("200"))
+                .flag("verbose", "per-request reports");
+            let a = parse(&cmd, rest)?;
+            let mut cfg = config_from(&a)?;
+            cfg.requests = a.parse_or("requests", cfg.requests)?;
+            let mut coord = Coordinator::from_config(&cfg)?;
+            let mut gen = TaskGen::new(
+                &cfg.model,
+                coord.env.dataset,
+                Arrivals::Sequential,
+                cfg.seed ^ 0x5E,
+            )?;
+            if matches!(cfg.policy.as_str(), "dvfo" | "drldo") {
+                eprintln!("[train] {} episodes offline...", cfg.train_episodes);
+                coord.train(&mut gen, cfg.train_episodes, 24);
+            }
+            let tasks = gen.take(cfg.requests);
+            let s = coord.serve(&tasks);
+            if a.flag("verbose") {
+                for r in &s.reports {
+                    println!(
+                        "xi={:.2} tti={:.1}ms eti={:.0}mJ acc={:.2}% f=({:.0},{:.0},{:.0})",
+                        r.xi,
+                        r.tti_total_s * 1e3,
+                        r.eti_total_j * 1e3,
+                        r.accuracy_pct,
+                        r.freqs[0],
+                        r.freqs[1],
+                        r.freqs[2]
+                    );
+                }
+            }
+            let mut t = Table::new(vec!["metric", "mean", "p50", "p99"]);
+            for (name, s) in [
+                ("tti ms", &s.tti_ms),
+                ("eti mJ", &s.eti_mj),
+                ("accuracy %", &s.accuracy_pct),
+                ("xi", &s.xi),
+                ("payload KB", &s.payload_kb),
+            ] {
+                t.row(vec![
+                    name.to_string(),
+                    format!("{:.2}", s.mean()),
+                    format!("{:.2}", s.p50()),
+                    format!("{:.2}", s.p99()),
+                ]);
+            }
+            println!(
+                "policy={} model={} dataset={} device={} bw={}",
+                cfg.policy, cfg.model, cfg.dataset, cfg.device, cfg.bandwidth
+            );
+            println!("{}", t.render());
+        }
+        "pipeline" => {
+            let cmd = Cmd::new("dvfo pipeline", "run the real AOT-artifact pipeline")
+                .opt("artifacts", "artifacts directory", Some("artifacts"))
+                .opt("requests", "number of requests", Some("64"))
+                .opt("xi", "offload proportion", Some("0.5"))
+                .opt("lambda", "fusion weight", Some("0.5"));
+            let a = parse(&cmd, rest)?;
+            let dir = Path::new(a.get_or("artifacts", "artifacts"));
+            let n: usize = a.parse_or("requests", 64)?;
+            let xi: f64 = a.parse_or("xi", 0.5)?;
+            let lambda: f32 = a.parse_or("lambda", 0.5)?;
+            let pipeline = Pipeline::load(dir)?;
+            let (imgs, labels) = pipeline.engine().manifest.load_testset(dir)?;
+            let img_len: usize = pipeline.engine().manifest.img_shape.iter().product();
+            let n = n.min(labels.len());
+            let reqs: Vec<PipelineRequest> = (0..n)
+                .map(|i| PipelineRequest {
+                    id: i as u64,
+                    image: imgs[i * img_len..(i + 1) * img_len].to_vec(),
+                    label: Some(labels[i]),
+                    xi,
+                    lambda,
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let rs = pipeline.serve(reqs)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let correct = rs.iter().filter(|r| r.correct == Some(true)).count();
+            let mean =
+                |f: fn(&dvfo::coordinator::pipeline::PipelineResponse) -> f64| -> f64 {
+                    rs.iter().map(f).sum::<f64>() / rs.len() as f64
+                };
+            println!("requests      : {n}");
+            println!(
+                "accuracy      : {:.2}% ({correct}/{n})",
+                100.0 * correct as f64 / n as f64
+            );
+            println!("throughput    : {:.1} req/s", n as f64 / wall);
+            println!("mean extract  : {:.3} ms", 1e3 * mean(|r| r.t_extract_s));
+            println!("mean local    : {:.3} ms", 1e3 * mean(|r| r.t_local_s));
+            println!("mean remote   : {:.3} ms", 1e3 * mean(|r| r.t_remote_s));
+            println!("mean fusion   : {:.3} ms", 1e3 * mean(|r| r.t_fusion_s));
+            println!("mean total    : {:.3} ms", 1e3 * mean(|r| r.t_total_s));
+            println!("mean payload  : {:.0} B", mean(|r| r.payload_bytes as f64));
+        }
+        "experiment" => {
+            let cmd = Cmd::new("dvfo experiment", "regenerate a paper table/figure")
+                .positional("id", "fig01..fig16 | tab04..tab06 | ablation | all")
+                .flag("full", "full-size sweep (slower)")
+                .opt("csv", "also write CSV to this directory", None);
+            let a = parse(&cmd, rest)?;
+            let id = a.positional(0).unwrap_or("all").to_string();
+            let quick = !a.flag("full");
+            let ids: Vec<&str> = if id == "all" {
+                dvfo::experiments::ALL.to_vec()
+            } else {
+                vec![id.as_str()]
+            };
+            for id in ids {
+                let t0 = std::time::Instant::now();
+                let table = dvfo::experiments::run_by_name(id, quick)?;
+                println!("== {id} ==");
+                println!("{}", table.render());
+                if let Some(dir) = a.get("csv") {
+                    dvfo::bench_harness::save_csv(&table, &format!("{dir}/{id}.csv"));
+                }
+                eprintln!("[{id}] {:?}", t0.elapsed());
+            }
+        }
+        "train" => {
+            let cmd = Cmd::new("dvfo train", "offline DQN training with learning curve")
+                .opt("config", "JSON config file", None)
+                .opt("episodes", "training episodes", Some("40"));
+            let a = parse(&cmd, rest)?;
+            let mut cfg = config_from(&a)?;
+            cfg.train_episodes = a.parse_or("episodes", cfg.train_episodes)?;
+            let mut coord = Coordinator::from_config(&cfg)?;
+            let mut gen = TaskGen::new(
+                &cfg.model,
+                coord.env.dataset,
+                Arrivals::Sequential,
+                cfg.seed ^ 0x7,
+            )?;
+            let curve = coord.train(&mut gen, cfg.train_episodes, 24);
+            for (i, r) in curve.iter().enumerate() {
+                println!("episode {i:3}  mean reward {r:+.4}");
+            }
+        }
+        "devices" => {
+            let mut t = Table::new(vec![
+                "device", "cpu max MHz", "gpu max MHz", "mem max MHz", "max W",
+            ]);
+            for d in dvfo::device::device_zoo() {
+                t.row(vec![
+                    d.name.to_string(),
+                    format!("{:.0}", d.cpu.max_mhz),
+                    format!("{:.0}", d.gpu.max_mhz),
+                    format!("{:.0}", d.mem.max_mhz),
+                    format!("{:.0}", d.max_power_w),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        "models" => {
+            let mut t = Table::new(vec![
+                "model", "GFLOPs (cifar)", "intensity F/B", "acc cifar %", "acc imagenet %",
+            ]);
+            for m in dvfo::perfmodel::model_zoo() {
+                t.row(vec![
+                    m.name.to_string(),
+                    format!("{:.2}", m.flops_g(dvfo::perfmodel::Dataset::Cifar100)),
+                    format!("{:.0}", m.intensity(dvfo::perfmodel::Dataset::Cifar100)),
+                    format!("{:.1}", m.base_acc_cifar),
+                    format!("{:.1}", m.base_acc_imagenet),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        "--help" | "-h" | "help" => println!("{}", usage()),
+        other => {
+            eprintln!("unknown subcommand `{other}`\n\n{}", usage());
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,278 @@
+//! Edge↔cloud network simulator.
+//!
+//! Substitutes the paper's `trickle`-shaped WiFi link: static bandwidth,
+//! Markov-modulated stochastic bandwidth (bursty WiFi), and trace-driven
+//! playback. Transmission latency is Eq. (8) `m/B`; offload energy is
+//! Eq. (12) `m·p_radio/B`.
+
+use crate::util::{clampf, Pcg32, RingBuf};
+use anyhow::{bail, Context, Result};
+
+/// Bandwidth process observed by the coordinator (Mbps).
+#[derive(Clone, Debug)]
+pub enum Bandwidth {
+    /// Constant link rate.
+    Static { mbps: f64 },
+    /// Markov-modulated: mean-reverting random walk between lo and hi,
+    /// resampled every `step_s` of simulated time.
+    Markov {
+        lo: f64,
+        hi: f64,
+        current: f64,
+        step_s: f64,
+        elapsed: f64,
+        rng: Pcg32,
+    },
+    /// Trace playback (cyclic), one sample per `step_s`.
+    Trace {
+        samples: Vec<f64>,
+        step_s: f64,
+        elapsed: f64,
+    },
+}
+
+impl Bandwidth {
+    /// Parse a spec string: `static:<mbps>` | `markov:<lo>,<hi>` |
+    /// `trace:<path>` (one Mbps value per line).
+    pub fn parse(spec: &str, seed: u64) -> Result<Bandwidth> {
+        let (kind, rest) = spec
+            .split_once(':')
+            .context("bandwidth spec wants `kind:args`")?;
+        match kind {
+            "static" => {
+                let mbps: f64 = rest.parse().context("static:<mbps>")?;
+                if mbps <= 0.0 {
+                    bail!("bandwidth must be positive");
+                }
+                Ok(Bandwidth::Static { mbps })
+            }
+            "markov" => {
+                let (lo, hi) = rest
+                    .split_once(',')
+                    .context("markov:<lo>,<hi>")?;
+                let lo: f64 = lo.parse()?;
+                let hi: f64 = hi.parse()?;
+                if !(lo > 0.0 && hi > lo) {
+                    bail!("markov wants 0 < lo < hi");
+                }
+                Ok(Bandwidth::Markov {
+                    lo,
+                    hi,
+                    current: (lo + hi) / 2.0,
+                    step_s: 0.25,
+                    elapsed: 0.0,
+                    rng: Pcg32::seeded(seed ^ 0xBA2D),
+                })
+            }
+            "trace" => {
+                let text = std::fs::read_to_string(rest)
+                    .with_context(|| format!("reading trace {rest}"))?;
+                let samples: Vec<f64> = text
+                    .lines()
+                    .filter(|l| !l.trim().is_empty())
+                    .map(|l| l.trim().parse::<f64>())
+                    .collect::<Result<_, _>>()
+                    .context("trace lines must be Mbps floats")?;
+                if samples.is_empty() {
+                    bail!("empty bandwidth trace");
+                }
+                Ok(Bandwidth::Trace {
+                    samples,
+                    step_s: 0.25,
+                    elapsed: 0.0,
+                })
+            }
+            other => bail!("unknown bandwidth kind `{other}`"),
+        }
+    }
+
+    /// Current rate in Mbps.
+    pub fn mbps(&self) -> f64 {
+        match self {
+            Bandwidth::Static { mbps } => *mbps,
+            Bandwidth::Markov { current, .. } => *current,
+            Bandwidth::Trace {
+                samples,
+                step_s,
+                elapsed,
+            } => {
+                let idx = (elapsed / step_s) as usize % samples.len();
+                samples[idx]
+            }
+        }
+    }
+
+    /// Advance simulated time.
+    pub fn advance(&mut self, dt_s: f64) {
+        match self {
+            Bandwidth::Static { .. } => {}
+            Bandwidth::Markov {
+                lo,
+                hi,
+                current,
+                step_s,
+                elapsed,
+                rng,
+            } => {
+                *elapsed += dt_s;
+                let steps = (*elapsed / *step_s) as usize;
+                *elapsed -= steps as f64 * *step_s;
+                let mid = (*lo + *hi) / 2.0;
+                let span = *hi - *lo;
+                for _ in 0..steps.min(64) {
+                    // mean-reverting with gaussian perturbation
+                    let pull = 0.25 * (mid - *current);
+                    let noise = 0.18 * span * rng.normal();
+                    *current = clampf(*current + pull + noise, *lo, *hi);
+                }
+            }
+            Bandwidth::Trace { elapsed, .. } => {
+                *elapsed += dt_s;
+            }
+        }
+    }
+}
+
+/// A point-to-point link with the bandwidth process and a base RTT.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub bandwidth: Bandwidth,
+    /// one-way propagation + protocol latency (s)
+    pub base_latency_s: f64,
+    history: RingBuf<f64>,
+}
+
+impl Link {
+    pub fn new(bandwidth: Bandwidth) -> Self {
+        Self {
+            bandwidth,
+            base_latency_s: 0.002,
+            history: RingBuf::new(256),
+        }
+    }
+
+    pub fn mbps(&self) -> f64 {
+        self.bandwidth.mbps()
+    }
+
+    /// Transmission time for a payload (Eq. 8) + base latency.
+    pub fn tx_time_s(&self, payload_bytes: f64) -> f64 {
+        if payload_bytes <= 0.0 {
+            return 0.0;
+        }
+        let bits = payload_bytes * 8.0;
+        self.base_latency_s + bits / (self.mbps() * 1e6)
+    }
+
+    /// Radio energy to push the payload (Eq. 12): tx_time × p_radio.
+    pub fn tx_energy_j(&self, payload_bytes: f64, radio_w: f64) -> f64 {
+        self.tx_time_s(payload_bytes) * radio_w
+    }
+
+    /// Advance time and record a bandwidth observation.
+    pub fn advance(&mut self, dt_s: f64) {
+        self.bandwidth.advance(dt_s);
+        self.history.push(self.bandwidth.mbps());
+    }
+
+    /// Smoothed bandwidth estimate the DRL state observes (the agent sees
+    /// measurements, not the hidden true process).
+    pub fn observed_mbps(&self) -> f64 {
+        if self.history.is_empty() {
+            return self.mbps();
+        }
+        let (n, sum) = self
+            .history
+            .iter()
+            .fold((0usize, 0.0), |(n, s), &x| (n + 1, s + x));
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_variants() {
+        assert!(matches!(
+            Bandwidth::parse("static:5", 0).unwrap(),
+            Bandwidth::Static { mbps } if mbps == 5.0
+        ));
+        assert!(matches!(
+            Bandwidth::parse("markov:2,8", 0).unwrap(),
+            Bandwidth::Markov { .. }
+        ));
+        assert!(Bandwidth::parse("static:-1", 0).is_err());
+        assert!(Bandwidth::parse("markov:8,2", 0).is_err());
+        assert!(Bandwidth::parse("nope:1", 0).is_err());
+        assert!(Bandwidth::parse("static", 0).is_err());
+    }
+
+    #[test]
+    fn tx_time_matches_eq8() {
+        let link = Link::new(Bandwidth::Static { mbps: 8.0 });
+        // 1 MB at 8 Mbps = 1 s + base latency
+        let t = link.tx_time_s(1_000_000.0);
+        assert!((t - (1.0 + link.base_latency_s)).abs() < 1e-9);
+        assert_eq!(link.tx_time_s(0.0), 0.0);
+    }
+
+    #[test]
+    fn tx_energy_matches_eq12() {
+        let link = Link::new(Bandwidth::Static { mbps: 4.0 });
+        let e = link.tx_energy_j(500_000.0, 1.3);
+        let t = link.tx_time_s(500_000.0);
+        assert!((e - t * 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn markov_stays_in_bounds_and_moves() {
+        let mut bw = Bandwidth::parse("markov:2,8", 7).unwrap();
+        let mut seen = Vec::new();
+        for _ in 0..200 {
+            bw.advance(0.25);
+            let x = bw.mbps();
+            assert!((2.0..=8.0).contains(&x));
+            seen.push(x);
+        }
+        let distinct = seen
+            .windows(2)
+            .filter(|w| (w[0] - w[1]).abs() > 1e-9)
+            .count();
+        assert!(distinct > 50, "bandwidth should fluctuate, got {distinct}");
+    }
+
+    #[test]
+    fn markov_is_seed_deterministic() {
+        let mut a = Bandwidth::parse("markov:2,8", 42).unwrap();
+        let mut b = Bandwidth::parse("markov:2,8", 42).unwrap();
+        for _ in 0..50 {
+            a.advance(0.3);
+            b.advance(0.3);
+            assert_eq!(a.mbps(), b.mbps());
+        }
+    }
+
+    #[test]
+    fn observed_is_smoothed() {
+        let mut link = Link::new(Bandwidth::parse("markov:2,8", 3).unwrap());
+        for _ in 0..100 {
+            link.advance(0.25);
+        }
+        let obs = link.observed_mbps();
+        assert!((2.0..=8.0).contains(&obs));
+    }
+
+    #[test]
+    fn trace_cycles() {
+        let dir = std::env::temp_dir().join("dvfo_trace_test.txt");
+        std::fs::write(&dir, "1.0\n2.0\n3.0\n").unwrap();
+        let mut bw = Bandwidth::parse(&format!("trace:{}", dir.display()), 0).unwrap();
+        assert_eq!(bw.mbps(), 1.0);
+        bw.advance(0.25);
+        assert_eq!(bw.mbps(), 2.0);
+        bw.advance(0.5);
+        assert_eq!(bw.mbps(), 1.0); // wrapped
+    }
+}

@@ -1,0 +1,98 @@
+//! Feature-map offloading: payload sizing, compression (int8
+//! quantization, paper §5.2 after SPINN), and the per-policy offload
+//! configurations the baselines use.
+
+use crate::perfmodel::{Dataset, ModelProfile};
+
+/// Compression applied to the offloaded payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compression {
+    /// raw f32 feature maps (DRLDO offloads uncompressed data)
+    None,
+    /// symmetric int8 quantization (DVFO, AppealNet, Cloud-only)
+    Int8,
+}
+
+impl Compression {
+    pub fn bytes_per_value(&self) -> f64 {
+        match self {
+            Compression::None => 4.0,
+            Compression::Int8 => 1.0,
+        }
+    }
+
+    /// Whether a compression pass runs on the edge (costs time, Eq. 7).
+    pub fn has_compress_phase(&self) -> bool {
+        matches!(self, Compression::Int8)
+    }
+}
+
+/// Wire header: scale factor + shape metadata + framing.
+pub const WIRE_HEADER_BYTES: f64 = 64.0;
+
+/// Size of the offloaded payload for proportion ξ of the feature maps of
+/// `profile` on `ds` (Eq. 8's m_cloud).
+pub fn payload_bytes(
+    profile: &ModelProfile,
+    ds: Dataset,
+    xi: f64,
+    comp: Compression,
+) -> f64 {
+    let xi = xi.clamp(0.0, 1.0);
+    if xi <= 0.0 {
+        return 0.0;
+    }
+    let values = profile.act_bytes(ds) / 4.0; // act_bytes is f32-sized
+    values * xi * comp.bytes_per_value() + WIRE_HEADER_BYTES
+}
+
+/// Relative RMS error introduced by quantizing to int8 (used by the
+/// accuracy model; the measured artifact path quantizes for real).
+pub fn quant_rel_error(comp: Compression) -> f64 {
+    match comp {
+        Compression::None => 0.0,
+        // symmetric int8: quantization SNR ≈ 6.02*8 dB → rel err ~0.2-0.4%
+        Compression::Int8 => 0.003,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::find_model;
+
+    #[test]
+    fn int8_is_quarter_size() {
+        let m = find_model("efficientnet-b0").unwrap();
+        let raw = payload_bytes(&m, Dataset::Cifar100, 1.0, Compression::None);
+        let q = payload_bytes(&m, Dataset::Cifar100, 1.0, Compression::Int8);
+        let ratio = (q - WIRE_HEADER_BYTES) / (raw - WIRE_HEADER_BYTES);
+        assert!((ratio - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn payload_scales_with_xi() {
+        let m = find_model("resnet-18").unwrap();
+        let half = payload_bytes(&m, Dataset::Cifar100, 0.5, Compression::Int8);
+        let full = payload_bytes(&m, Dataset::Cifar100, 1.0, Compression::Int8);
+        assert!(half < full && half > 0.4 * full);
+        assert_eq!(payload_bytes(&m, Dataset::Cifar100, 0.0, Compression::Int8), 0.0);
+    }
+
+    #[test]
+    fn imagenet_payloads_larger() {
+        let m = find_model("vit-b16").unwrap();
+        assert!(
+            payload_bytes(&m, Dataset::Imagenet, 0.5, Compression::Int8)
+                > payload_bytes(&m, Dataset::Cifar100, 0.5, Compression::Int8)
+        );
+    }
+
+    #[test]
+    fn compression_flags() {
+        assert!(Compression::Int8.has_compress_phase());
+        assert!(!Compression::None.has_compress_phase());
+        assert_eq!(quant_rel_error(Compression::None), 0.0);
+        assert!(quant_rel_error(Compression::Int8) > 0.0);
+    }
+}

@@ -1,0 +1,503 @@
+//! Serving policies: DVFO (the paper's system) and the four comparison
+//! schemes of §6.2.3, behind one trait.
+
+use crate::accuracy::Fusion;
+use crate::coordinator::env::Decision;
+use crate::dqn::{ActionSpace, DqnAgent, DqnConfig, Transition};
+use crate::offload::Compression;
+use crate::util::Pcg32;
+
+/// What a policy observes before deciding (paper §5.1 state space
+/// S = {λ, η, x~p(a), B}, with the importance distribution summarized to
+/// fixed-width features, plus the previous action for the concurrent
+/// formulation).
+#[derive(Clone, Debug)]
+pub struct Obs {
+    pub lambda: f64,
+    pub eta: f64,
+    pub bandwidth_mbps: f64,
+    pub top_quarter_mass: f64,
+    pub skewness: f64,
+    pub entropy_norm: f64,
+    /// operational intensity of the model, log-normalized
+    pub intensity_norm: f64,
+    pub prev_xi: f64,
+}
+
+impl Obs {
+    /// Fixed 8-dim featurization — must match python `DQN_STATE_DIM`.
+    pub fn features(&self) -> Vec<f32> {
+        vec![
+            self.lambda as f32,
+            self.eta as f32,
+            (self.bandwidth_mbps / 10.0).min(2.0) as f32,
+            self.top_quarter_mass as f32,
+            (self.skewness / 4.0).clamp(-1.0, 1.0) as f32,
+            self.entropy_norm as f32,
+            self.intensity_norm as f32,
+            self.prev_xi as f32,
+        ]
+    }
+}
+
+/// Outcome summary handed back to learning policies.
+#[derive(Clone, Copy, Debug)]
+pub struct Feedback {
+    /// reward r = −C (Eq. 14), pre-scaled by the caller
+    pub reward: f64,
+    /// fractional-discount exponent t_AS/H (Eq. 15); 1.0 when blocking
+    pub gamma_pow: f64,
+    pub done: bool,
+}
+
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    fn decide(&mut self, obs: &Obs) -> Decision;
+
+    /// Learning hook (no-op for fixed policies).
+    fn feedback(&mut self, _obs: &Obs, _decision: &Decision, _next_obs: &Obs, _fb: Feedback) {}
+
+    /// Policy-inference latency (lands on the critical path only for
+    /// blocking policies — thinking-while-moving overlaps it, §5.1).
+    fn decision_latency_s(&self) -> f64 {
+        2e-5
+    }
+
+    fn concurrent(&self) -> bool {
+        false
+    }
+
+    /// Switch exploration on/off (training vs deployment).
+    fn set_training(&mut self, _on: bool) {}
+}
+
+/// Quantize ξ from a ladder level.
+fn xi_of_level(lvl: usize, xi_levels: usize) -> f64 {
+    lvl as f64 / (xi_levels - 1) as f64
+}
+
+// ======================================================================
+// DVFO — DQN over (f_C, f_G, f_M, ξ), SCAM-guided int8 offload, weighted
+// summation fusion, thinking-while-moving policy inference.
+// ======================================================================
+pub struct DvfoPolicy {
+    pub agent: DqnAgent,
+    xi_levels: usize,
+    training: bool,
+    concurrent: bool,
+    /// measured DQN inference latency (updated by the coordinator)
+    pub latency_s: f64,
+}
+
+impl DvfoPolicy {
+    pub fn new(freq_levels: usize, xi_levels: usize, concurrent: bool, seed: u64) -> Self {
+        let space = ActionSpace::new(vec![freq_levels, freq_levels, freq_levels, xi_levels]);
+        let agent = DqnAgent::new(DqnConfig::default(), space, seed);
+        Self {
+            agent,
+            xi_levels,
+            training: true,
+            concurrent,
+            latency_s: 2e-5,
+        }
+    }
+
+    fn to_decision(&self, a: &[usize]) -> Decision {
+        Decision {
+            cpu_lvl: a[0],
+            gpu_lvl: a[1],
+            mem_lvl: a[2],
+            xi: xi_of_level(a[3], self.xi_levels),
+            compression: Compression::Int8,
+            fusion: if a[3] == 0 { Fusion::Single } else { Fusion::WeightedSum },
+            importance_guided: true,
+            phase_scaling: true,
+        }
+    }
+
+    fn to_action(&self, d: &Decision) -> Vec<usize> {
+        let xi_lvl = (d.xi * (self.xi_levels - 1) as f64).round() as usize;
+        vec![d.cpu_lvl, d.gpu_lvl, d.mem_lvl, xi_lvl]
+    }
+}
+
+impl Policy for DvfoPolicy {
+    fn name(&self) -> &'static str {
+        "dvfo"
+    }
+
+    fn decide(&mut self, obs: &Obs) -> Decision {
+        let s = obs.features();
+        let a = if self.training {
+            self.agent.act(&s)
+        } else {
+            self.agent.greedy(&s)
+        };
+        self.to_decision(&a)
+    }
+
+    fn feedback(&mut self, obs: &Obs, decision: &Decision, next_obs: &Obs, fb: Feedback) {
+        self.agent.remember(Transition {
+            state: obs.features(),
+            action: self.to_action(decision),
+            reward: fb.reward,
+            next_state: next_obs.features(),
+            done: fb.done,
+            gamma_pow: fb.gamma_pow,
+        });
+        if self.training {
+            self.agent.learn();
+        }
+    }
+
+    fn decision_latency_s(&self) -> f64 {
+        self.latency_s
+    }
+
+    fn concurrent(&self) -> bool {
+        self.concurrent
+    }
+
+    fn set_training(&mut self, on: bool) {
+        self.training = on;
+    }
+}
+
+// ======================================================================
+// DRLDO (baseline, §6.2.3): DQN over CPU frequency + offload proportion
+// only; GPU/memory stay at max; offloads *uncompressed* data with no
+// importance guidance; conventional blocking policy inference.
+// ======================================================================
+pub struct DrldoPolicy {
+    pub agent: DqnAgent,
+    freq_levels: usize,
+    xi_levels: usize,
+    training: bool,
+}
+
+impl DrldoPolicy {
+    pub fn new(freq_levels: usize, xi_levels: usize, seed: u64) -> Self {
+        let space = ActionSpace::new(vec![freq_levels, xi_levels]);
+        let agent = DqnAgent::new(DqnConfig::default(), space, seed);
+        Self {
+            agent,
+            freq_levels,
+            xi_levels,
+            training: true,
+        }
+    }
+}
+
+impl Policy for DrldoPolicy {
+    fn name(&self) -> &'static str {
+        "drldo"
+    }
+
+    fn decide(&mut self, obs: &Obs) -> Decision {
+        let s = obs.features();
+        let a = if self.training {
+            self.agent.act(&s)
+        } else {
+            self.agent.greedy(&s)
+        };
+        Decision {
+            cpu_lvl: a[0],
+            gpu_lvl: self.freq_levels - 1,
+            mem_lvl: self.freq_levels - 1,
+            xi: xi_of_level(a[1], self.xi_levels),
+            compression: Compression::None,
+            fusion: if a[1] == 0 { Fusion::Single } else { Fusion::WeightedSum },
+            importance_guided: false,
+            phase_scaling: false,
+        }
+    }
+
+    fn feedback(&mut self, obs: &Obs, decision: &Decision, next_obs: &Obs, fb: Feedback) {
+        let xi_lvl = (decision.xi * (self.xi_levels - 1) as f64).round() as usize;
+        self.agent.remember(Transition {
+            state: obs.features(),
+            action: vec![decision.cpu_lvl, xi_lvl],
+            reward: fb.reward,
+            next_state: next_obs.features(),
+            done: fb.done,
+            // DRLDO uses the standard blocking DQN formulation
+            gamma_pow: 1.0,
+        });
+        if self.training {
+            self.agent.learn();
+        }
+    }
+
+    /// Conventional RL inference is slower than TwM (paper §6.4 notes
+    /// DVFO's concurrent offloading beats DRLDO's).
+    fn decision_latency_s(&self) -> f64 {
+        8e-4
+    }
+
+    fn set_training(&mut self, on: bool) {
+        self.training = on;
+    }
+}
+
+// ======================================================================
+// AppealNet (baseline): binary offload via a hard-case discriminator; no
+// DVFS (max frequency); whole input compressed when offloaded.
+// ======================================================================
+pub struct AppealNetPolicy {
+    levels: usize,
+    rng: Pcg32,
+}
+
+impl AppealNetPolicy {
+    pub fn new(levels: usize, seed: u64) -> Self {
+        Self {
+            levels,
+            rng: Pcg32::seeded(seed ^ 0xA99E),
+        }
+    }
+}
+
+impl Policy for AppealNetPolicy {
+    fn name(&self) -> &'static str {
+        "appealnet"
+    }
+
+    fn decide(&mut self, obs: &Obs) -> Decision {
+        // hard-case discriminator: diffuse importance (high entropy) means
+        // the lightweight edge model will struggle → offload everything.
+        let hardness = obs.entropy_norm + 0.08 * self.rng.normal();
+        let offload = hardness > 0.52;
+        Decision {
+            cpu_lvl: self.levels - 1,
+            gpu_lvl: self.levels - 1,
+            mem_lvl: self.levels - 1,
+            xi: if offload { 1.0 } else { 0.0 },
+            compression: Compression::Int8,
+            fusion: Fusion::Single,
+            importance_guided: false,
+            phase_scaling: false,
+        }
+    }
+
+    /// The discriminator forward pass adds fixed overhead (paper §6.4:
+    /// "the hard-case discriminator of AppealNet adds additional
+    /// overhead").
+    fn decision_latency_s(&self) -> f64 {
+        1.6e-3
+    }
+}
+
+// ======================================================================
+// Cloud-only / Edge-only (baselines)
+// ======================================================================
+pub struct CloudOnlyPolicy {
+    levels: usize,
+}
+
+impl CloudOnlyPolicy {
+    pub fn new(levels: usize) -> Self {
+        Self { levels }
+    }
+}
+
+impl Policy for CloudOnlyPolicy {
+    fn name(&self) -> &'static str {
+        "cloud_only"
+    }
+
+    fn decide(&mut self, _obs: &Obs) -> Decision {
+        Decision {
+            // minimal edge frequencies: the device only captures/sends
+            cpu_lvl: (self.levels - 1) / 3,
+            gpu_lvl: 0,
+            mem_lvl: (self.levels - 1) / 3,
+            xi: 1.0,
+            compression: Compression::Int8,
+            fusion: Fusion::Single,
+            importance_guided: false,
+            phase_scaling: false,
+        }
+    }
+}
+
+pub struct EdgeOnlyPolicy {
+    levels: usize,
+}
+
+impl EdgeOnlyPolicy {
+    pub fn new(levels: usize) -> Self {
+        Self { levels }
+    }
+}
+
+impl Policy for EdgeOnlyPolicy {
+    fn name(&self) -> &'static str {
+        "edge_only"
+    }
+
+    fn decide(&mut self, _obs: &Obs) -> Decision {
+        Decision::edge_only_max(self.levels)
+    }
+}
+
+// ======================================================================
+// Oracle: exhaustive grid search over a coarsened action grid using a
+// clone of the environment — the upper bound DVFO is measured against in
+// the ablation benches.
+// ======================================================================
+pub struct OraclePolicy {
+    pub levels: usize,
+    pub xi_levels: usize,
+    /// grid stride (1 = exhaustive; 3 = every third level)
+    pub stride: usize,
+    /// charged decision latency (exhaustive search is slow by design —
+    /// ablations can zero it to isolate decision quality)
+    pub latency_s: f64,
+    pub eval: Box<dyn FnMut(&Decision) -> f64 + Send>,
+}
+
+impl Policy for OraclePolicy {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn decide(&mut self, _obs: &Obs) -> Decision {
+        let mut best: Option<(f64, Decision)> = None;
+        let lv: Vec<usize> = (0..self.levels).step_by(self.stride.max(1)).collect();
+        let xv: Vec<usize> = (0..self.xi_levels).step_by(self.stride.max(1)).collect();
+        for &c in &lv {
+            for &g in &lv {
+                for &m in &lv {
+                    for &x in &xv {
+                        let xi = xi_of_level(x, self.xi_levels);
+                        let d = Decision {
+                            cpu_lvl: c,
+                            gpu_lvl: g,
+                            mem_lvl: m,
+                            xi,
+                            compression: Compression::Int8,
+                            fusion: if x == 0 { Fusion::Single } else { Fusion::WeightedSum },
+                            importance_guided: true,
+                            phase_scaling: true,
+                        };
+                        let cost = (self.eval)(&d);
+                        if best.as_ref().map(|(b, _)| cost < *b).unwrap_or(true) {
+                            best = Some((cost, d));
+                        }
+                    }
+                }
+            }
+        }
+        best.unwrap().1
+    }
+
+    /// Exhaustive search is far too slow for deployment — the latency is
+    /// charged accordingly in ablations.
+    fn decision_latency_s(&self) -> f64 {
+        self.latency_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs() -> Obs {
+        Obs {
+            lambda: 0.5,
+            eta: 0.5,
+            bandwidth_mbps: 5.0,
+            top_quarter_mass: 0.6,
+            skewness: 2.0,
+            entropy_norm: 0.7,
+            intensity_norm: 0.4,
+            prev_xi: 0.5,
+        }
+    }
+
+    #[test]
+    fn features_are_8dim_and_bounded() {
+        let f = obs().features();
+        assert_eq!(f.len(), 8);
+        assert!(f.iter().all(|x| x.is_finite() && x.abs() <= 2.0));
+    }
+
+    #[test]
+    fn dvfo_decisions_in_range() {
+        let mut p = DvfoPolicy::new(10, 11, true, 1);
+        for _ in 0..50 {
+            let d = p.decide(&obs());
+            assert!(d.cpu_lvl < 10 && d.gpu_lvl < 10 && d.mem_lvl < 10);
+            assert!((0.0..=1.0).contains(&d.xi));
+            assert!(d.importance_guided);
+            assert_eq!(d.compression, Compression::Int8);
+        }
+    }
+
+    #[test]
+    fn dvfo_greedy_is_deterministic_when_deployed() {
+        let mut p = DvfoPolicy::new(10, 11, true, 2);
+        p.set_training(false);
+        let d1 = p.decide(&obs());
+        let d2 = p.decide(&obs());
+        assert_eq!(format!("{d1:?}"), format!("{d2:?}"));
+    }
+
+    #[test]
+    fn drldo_fixes_gpu_mem_and_skips_compression() {
+        let mut p = DrldoPolicy::new(10, 11, 3);
+        for _ in 0..20 {
+            let d = p.decide(&obs());
+            assert_eq!(d.gpu_lvl, 9);
+            assert_eq!(d.mem_lvl, 9);
+            assert_eq!(d.compression, Compression::None);
+            assert!(!d.importance_guided);
+        }
+    }
+
+    #[test]
+    fn appealnet_is_binary() {
+        let mut p = AppealNetPolicy::new(10, 4);
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..200 {
+            let mut o = obs();
+            o.entropy_norm = (i % 100) as f64 / 100.0;
+            let d = p.decide(&o);
+            assert!(d.xi == 0.0 || d.xi == 1.0);
+            seen.insert((d.xi * 10.0) as u8);
+        }
+        assert_eq!(seen.len(), 2, "discriminator must use both branches");
+    }
+
+    #[test]
+    fn fixed_policies() {
+        let mut c = CloudOnlyPolicy::new(10);
+        assert_eq!(c.decide(&obs()).xi, 1.0);
+        let mut e = EdgeOnlyPolicy::new(10);
+        let d = e.decide(&obs());
+        assert_eq!(d.xi, 0.0);
+        assert_eq!(d.cpu_lvl, 9);
+    }
+
+    #[test]
+    fn oracle_minimizes_its_objective() {
+        // cost = distance from a known optimum → oracle must find it.
+        let target = (3usize, 5usize, 7usize);
+        let mut p = OraclePolicy {
+            levels: 10,
+            xi_levels: 11,
+            stride: 1,
+            latency_s: 0.05,
+            eval: Box::new(move |d: &Decision| {
+                (d.cpu_lvl as f64 - target.0 as f64).powi(2)
+                    + (d.gpu_lvl as f64 - target.1 as f64).powi(2)
+                    + (d.mem_lvl as f64 - target.2 as f64).powi(2)
+                    + (d.xi - 0.3).powi(2)
+            }),
+        };
+        let d = p.decide(&obs());
+        assert_eq!((d.cpu_lvl, d.gpu_lvl, d.mem_lvl), target);
+        assert!((d.xi - 0.3).abs() < 0.051);
+    }
+}

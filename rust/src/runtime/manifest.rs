@@ -1,0 +1,228 @@
+//! `artifacts/manifest.json` schema — written by python/compile/aot.py,
+//! parsed here with the in-repo JSON parser.
+
+use crate::configx::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DqnMeta {
+    pub state_dim: usize,
+    pub hidden: Vec<usize>,
+    pub action_dim: usize,
+    pub freq_levels: usize,
+    pub xi_levels: usize,
+    pub weight_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ProbeMeta {
+    pub mask_topk: usize,
+    pub lambda: f64,
+    pub expected_logits: Vec<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub img_shape: Vec<usize>,
+    pub feat_channels: usize,
+    pub feat_hw: usize,
+    pub num_classes: usize,
+    pub dqn: DqnMeta,
+    pub testset_file: String,
+    pub testset_count: usize,
+    pub accuracy: BTreeMap<String, f64>,
+    pub mean_importance: Vec<f64>,
+    pub probe: ProbeMeta,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let model = j.req("model")?;
+        let dqn = j.req("dqn")?;
+        let testset = j.req("testset")?;
+        let probe = j.req("probe")?;
+
+        let usize_list = |v: &Json| -> Result<Vec<usize>> {
+            Ok(v.f64_list()
+                .context("expected number list")?
+                .into_iter()
+                .map(|x| x as usize)
+                .collect())
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj().context("artifacts")? {
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(|i| {
+                    Ok(InputSpec {
+                        shape: usize_list(i.req("shape")?)?,
+                        dtype: i
+                            .req("dtype")?
+                            .as_str()
+                            .context("dtype")?
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .filter_map(|o| o.as_str().map(String::from))
+                .collect();
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: a.req("file")?.as_str().context("file")?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut accuracy = BTreeMap::new();
+        for (k, v) in j.req("accuracy")?.as_obj().context("accuracy")? {
+            accuracy.insert(k.clone(), v.as_f64().context("accuracy value")?);
+        }
+
+        Ok(Manifest {
+            img_shape: usize_list(model.req("img_shape")?)?,
+            feat_channels: model.req("feat_channels")?.as_usize().context("feat_channels")?,
+            feat_hw: model.req("feat_hw")?.as_usize().context("feat_hw")?,
+            num_classes: model.req("num_classes")?.as_usize().context("num_classes")?,
+            dqn: DqnMeta {
+                state_dim: dqn.req("state_dim")?.as_usize().context("state_dim")?,
+                hidden: usize_list(dqn.req("hidden")?)?,
+                action_dim: dqn.req("action_dim")?.as_usize().context("action_dim")?,
+                freq_levels: dqn.req("freq_levels")?.as_usize().context("freq_levels")?,
+                xi_levels: dqn.req("xi_levels")?.as_usize().context("xi_levels")?,
+                weight_shapes: dqn
+                    .req("weight_shapes")?
+                    .as_arr()
+                    .context("weight_shapes")?
+                    .iter()
+                    .map(|s| usize_list(s))
+                    .collect::<Result<Vec<_>>>()?,
+            },
+            testset_file: testset.req("file")?.as_str().context("file")?.to_string(),
+            testset_count: testset.req("count")?.as_usize().context("count")?,
+            accuracy,
+            mean_importance: j
+                .req("mean_importance")?
+                .f64_list()
+                .context("mean_importance")?,
+            probe: ProbeMeta {
+                mask_topk: probe.req("mask_topk")?.as_usize().context("mask_topk")?,
+                lambda: probe.req("lambda")?.as_f64().context("lambda")?,
+                expected_logits: probe
+                    .req("expected_logits")?
+                    .f64_list()
+                    .context("expected_logits")?,
+            },
+            artifacts,
+        })
+    }
+
+    /// Load the raw testset: (images flat f32, labels).
+    pub fn load_testset(&self, dir: &Path) -> Result<(Vec<f32>, Vec<u32>)> {
+        let bytes = std::fs::read(dir.join(&self.testset_file))?;
+        let img_elems: usize =
+            self.testset_count * self.img_shape.iter().product::<usize>();
+        anyhow::ensure!(
+            bytes.len() == img_elems * 4 + self.testset_count * 4,
+            "testset size mismatch"
+        );
+        let mut imgs = Vec::with_capacity(img_elems);
+        for c in bytes[..img_elems * 4].chunks_exact(4) {
+            imgs.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        let mut labels = Vec::with_capacity(self.testset_count);
+        for c in bytes[img_elems * 4..].chunks_exact(4) {
+            labels.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok((imgs, labels))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"img_shape": [3, 32, 32], "feat_channels": 16,
+                "feat_hw": 16, "num_classes": 8},
+      "dqn": {"state_dim": 8, "hidden": [128, 64, 32], "action_dim": 41,
+              "freq_levels": 10, "xi_levels": 11,
+              "weight_shapes": [[8, 128], [128]]},
+      "testset": {"file": "testset.bin", "count": 4, "img_f32_count": 12288},
+      "accuracy": {"edge_only": 0.95},
+      "mean_importance": [0.5, 0.5],
+      "probe": {"mask_topk": 8, "lambda": 0.5, "expected_logits": [1.0, -1.0]},
+      "artifacts": {
+        "fusion": {"file": "fusion.hlo.txt",
+                   "inputs": [{"shape": [1, 8], "dtype": "float32"}],
+                   "outputs": ["fused_logits"]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        assert_eq!(m.feat_channels, 16);
+        assert_eq!(m.dqn.action_dim, 41);
+        assert_eq!(m.artifacts["fusion"].inputs[0].shape, vec![1, 8]);
+        assert_eq!(m.probe.expected_logits, vec![1.0, -1.0]);
+        assert_eq!(m.accuracy["edge_only"], 0.95);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let j = Json::parse(r#"{"model": {}}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir.join("manifest.json")).unwrap();
+            assert!(m.artifacts.contains_key("extractor"));
+            assert!(m.artifacts.contains_key("dqn_q"));
+            let (imgs, labels) = m.load_testset(&dir).unwrap();
+            assert_eq!(labels.len(), m.testset_count);
+            assert_eq!(
+                imgs.len(),
+                m.testset_count * m.img_shape.iter().product::<usize>()
+            );
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! rust request path (Python is build-time only).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Every artifact is lowered with
+//! `return_tuple=True`, so outputs are always unwrapped as a tuple.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest};
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact plus its manifest metadata.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The engine owns the PJRT client and all compiled executables.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    artifacts: BTreeMap<String, Artifact>,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+impl Engine {
+    /// Load the manifest and compile every artifact on the CPU PJRT
+    /// client. Compilation happens once at startup; execution is the
+    /// only per-request work.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        Self::load_filtered(dir, None)
+    }
+
+    /// Load only the named artifacts (each worker process/thread owns its
+    /// own PJRT client — the xla handles are not Send, and the edge and
+    /// cloud workers are separate machines in the real deployment anyway).
+    pub fn load_filtered(dir: &Path, only: Option<&[&str]>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in &manifest.artifacts {
+            if let Some(filter) = only {
+                if !filter.contains(&name.as_str()) {
+                    continue;
+                }
+            }
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact `{name}`"))?;
+            artifacts.insert(
+                name.clone(),
+                Artifact {
+                    meta: meta.clone(),
+                    exe,
+                },
+            );
+        }
+        Ok(Engine {
+            client,
+            artifacts,
+            manifest,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(String::as_str).collect()
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened
+    /// tuple outputs.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact `{name}`"))?;
+        anyhow::ensure!(
+            inputs.len() == art.meta.inputs.len(),
+            "artifact `{name}` wants {} inputs, got {}",
+            art.meta.inputs.len(),
+            inputs.len()
+        );
+        let result = art
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing `{name}`"))?[0][0]
+            .to_literal_sync()?;
+        result
+            .to_tuple()
+            .with_context(|| format!("unwrapping `{name}` output tuple"))
+    }
+
+    /// Convenience: f32 slices in, f32 vectors out (shapes from the
+    /// manifest for inputs; outputs flattened).
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact `{name}`"))?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (slice, spec) in inputs.iter().zip(art.meta.inputs.iter()) {
+            lits.push(literal_f32(slice, &spec.shape)?);
+        }
+        let outs = self.execute(name, &lits)?;
+        outs.into_iter().map(read_f32).collect()
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(
+        n == data.len(),
+        "shape {shape:?} wants {n} elements, got {}",
+        data.len()
+    );
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Read any f32 literal back into a flat Vec.
+pub fn read_f32(lit: xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need built artifacts live in
+    // rust/tests/runtime_parity.rs (integration) — they skip gracefully
+    // when `make artifacts` has not run. Unit-testable pieces:
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        let back = read_f32(lit).unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+}

@@ -1,0 +1,238 @@
+//! Importance distributions from the spatial-channel attention module.
+//!
+//! On the real-artifact path the distribution comes out of the
+//! `extractor` artifact (L1 Pallas SCAM). For the eight big paper models
+//! (which we cannot run), per-task distributions are *synthesized* with
+//! the Zipf-like skew profile of Fig. 7: a few channels dominate, with
+//! per-task noise. Skewness is the model-level knob
+//! (`ModelProfile::importance_skew`).
+
+use crate::util::{entropy, skewness, Pcg32};
+
+/// A normalized per-channel importance distribution x ~ p(a) (paper Eq. 18
+/// epilogue).
+#[derive(Clone, Debug)]
+pub struct ImportanceDist {
+    probs: Vec<f64>,
+}
+
+impl ImportanceDist {
+    /// Normalize arbitrary non-negative weights.
+    pub fn from_weights(ws: &[f64]) -> Self {
+        let sum: f64 = ws.iter().map(|x| x.max(0.0)).sum();
+        let probs = if sum <= 0.0 {
+            vec![1.0 / ws.len().max(1) as f64; ws.len().max(1)]
+        } else {
+            ws.iter().map(|x| x.max(0.0) / sum).collect()
+        };
+        Self { probs }
+    }
+
+    /// Zipf-like synthetic distribution: p_i ∝ 1/(i+1)^skew over a random
+    /// channel permutation, with multiplicative noise. `skew` ≥ 0; higher
+    /// means more concentrated (Fig. 7 shows top-3 of 16+ holding ~60%).
+    pub fn synthetic(channels: usize, skew: f64, rng: &mut Pcg32) -> Self {
+        assert!(channels > 0);
+        let mut ws: Vec<f64> = (0..channels)
+            .map(|i| {
+                let base = 1.0 / ((i + 1) as f64).powf(skew);
+                base * (0.7 + 0.6 * rng.next_f64())
+            })
+            .collect();
+        rng.shuffle(&mut ws);
+        Self::from_weights(&ws)
+    }
+
+    pub fn len(&self) -> usize {
+        self.probs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.probs.is_empty()
+    }
+
+    pub fn probs(&self) -> &[f64] {
+        &self.probs
+    }
+
+    /// Channel indices sorted by descending importance.
+    pub fn ranked(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.probs.len()).collect();
+        idx.sort_by(|&a, &b| self.probs[b].partial_cmp(&self.probs[a]).unwrap());
+        idx
+    }
+
+    /// Total importance mass of the top-k channels.
+    pub fn topk_mass(&self, k: usize) -> f64 {
+        self.ranked()
+            .into_iter()
+            .take(k)
+            .map(|i| self.probs[i])
+            .sum()
+    }
+
+    /// Mass of the top quarter of channels — a fixed-width state feature.
+    pub fn top_quarter_mass(&self) -> f64 {
+        self.topk_mass((self.len() / 4).max(1))
+    }
+
+    pub fn skewness(&self) -> f64 {
+        skewness(&self.probs)
+    }
+
+    /// Entropy normalized to [0,1] by ln(C) (1 = uniform).
+    pub fn entropy_norm(&self) -> f64 {
+        if self.probs.len() <= 1 {
+            return 0.0;
+        }
+        entropy(&self.probs) / (self.probs.len() as f64).ln()
+    }
+
+    /// Split for offload proportion ξ: keep the ⌈(1-ξ)·C⌉ most important
+    /// channels locally, offload the rest (the paper's example: ξ=0.7 →
+    /// 30% executed locally). Returns (local, offload) channel sets and
+    /// the local importance mass.
+    pub fn split(&self, xi: f64) -> SplitPlan {
+        let c = self.probs.len();
+        let xi = xi.clamp(0.0, 1.0);
+        let local_count = ((1.0 - xi) * c as f64).round() as usize;
+        let ranked = self.ranked();
+        let local: Vec<usize> = ranked[..local_count.min(c)].to_vec();
+        let offload: Vec<usize> = ranked[local_count.min(c)..].to_vec();
+        let local_mass: f64 = local.iter().map(|&i| self.probs[i]).sum();
+        SplitPlan {
+            local,
+            offload,
+            local_mass,
+            xi,
+        }
+    }
+}
+
+/// The channel partition the offloader executes.
+#[derive(Clone, Debug)]
+pub struct SplitPlan {
+    pub local: Vec<usize>,
+    pub offload: Vec<usize>,
+    /// importance mass retained on the edge
+    pub local_mass: f64,
+    pub xi: f64,
+}
+
+impl SplitPlan {
+    pub fn offload_mass(&self) -> f64 {
+        (1.0 - self.local_mass).max(0.0)
+    }
+
+    /// Channel mask (1.0 = local) for the artifact heads.
+    pub fn local_mask(&self, channels: usize) -> Vec<f32> {
+        let mut m = vec![0.0f32; channels];
+        for &i in &self.local {
+            if i < channels {
+                m[i] = 1.0;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_mini as pt;
+
+    #[test]
+    fn synthetic_is_normalized_and_skewed() {
+        let mut rng = Pcg32::seeded(1);
+        let d = ImportanceDist::synthetic(16, 2.2, &mut rng);
+        assert_eq!(d.len(), 16);
+        let sum: f64 = d.probs().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(d.skewness() > 1.0, "skew {}", d.skewness());
+        // Fig. 7: top few channels dominate
+        assert!(d.topk_mass(3) > 0.4, "top3 {}", d.topk_mass(3));
+    }
+
+    #[test]
+    fn higher_skew_concentrates_mass() {
+        let mut r1 = Pcg32::seeded(2);
+        let mut r2 = Pcg32::seeded(2);
+        let lo = ImportanceDist::synthetic(32, 0.8, &mut r1);
+        let hi = ImportanceDist::synthetic(32, 3.0, &mut r2);
+        assert!(hi.topk_mass(4) > lo.topk_mass(4));
+        assert!(hi.entropy_norm() < lo.entropy_norm());
+    }
+
+    #[test]
+    fn split_respects_xi_and_importance() {
+        let d = ImportanceDist::from_weights(&[0.4, 0.3, 0.2, 0.05, 0.03, 0.02, 0.0, 0.0]);
+        let plan = d.split(0.5);
+        assert_eq!(plan.local.len(), 4);
+        assert_eq!(plan.offload.len(), 4);
+        // top channels stay local
+        assert!(plan.local.contains(&0) && plan.local.contains(&1));
+        assert!(plan.local_mass > 0.9);
+        let mask = plan.local_mask(8);
+        assert_eq!(mask.iter().filter(|&&x| x == 1.0).count(), 4);
+    }
+
+    #[test]
+    fn split_extremes() {
+        let d = ImportanceDist::from_weights(&[0.5, 0.5]);
+        assert_eq!(d.split(0.0).local.len(), 2);
+        assert_eq!(d.split(1.0).local.len(), 0);
+        assert!((d.split(1.0).offload_mass() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_partition_property() {
+        // local ∪ offload is a partition of channels, local_mass matches,
+        // for random distributions and ξ.
+        pt::check(
+            "split partition",
+            7,
+            300,
+            pt::prob_vec(1, 64),
+            |ps| {
+                let d = ImportanceDist::from_weights(ps);
+                let mut rng = Pcg32::seeded(ps.len() as u64);
+                let xi = rng.next_f64();
+                let plan = d.split(xi);
+                let mut all: Vec<usize> =
+                    plan.local.iter().chain(plan.offload.iter()).copied().collect();
+                all.sort_unstable();
+                if all != (0..ps.len()).collect::<Vec<_>>() {
+                    return Err("not a partition".into());
+                }
+                let mass: f64 = plan.local.iter().map(|&i| d.probs()[i]).sum();
+                if (mass - plan.local_mass).abs() > 1e-9 {
+                    return Err("mass mismatch".into());
+                }
+                // every local channel outranks every offloaded one
+                let min_local = plan
+                    .local
+                    .iter()
+                    .map(|&i| d.probs()[i])
+                    .fold(f64::INFINITY, f64::min);
+                let max_off = plan
+                    .offload
+                    .iter()
+                    .map(|&i| d.probs()[i])
+                    .fold(f64::NEG_INFINITY, f64::max);
+                if !plan.local.is_empty()
+                    && !plan.offload.is_empty()
+                    && min_local < max_off - 1e-12
+                {
+                    return Err("importance ordering violated".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn degenerate_weights_fall_back_to_uniform() {
+        let d = ImportanceDist::from_weights(&[0.0, 0.0, 0.0]);
+        assert!((d.probs()[0] - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

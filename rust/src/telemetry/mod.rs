@@ -1,0 +1,256 @@
+//! Telemetry: counters, histograms, per-phase timelines, and text-table
+//! rendering for experiment reports (the benches print paper-style rows).
+
+use crate::util::{Running, Samples};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Lock-free counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Registry of named metrics shared across coordinator threads.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    samples: Mutex<BTreeMap<String, Samples>>,
+    running: Mutex<BTreeMap<String, Running>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn count(&self, name: &str, n: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += n;
+    }
+
+    pub fn observe(&self, name: &str, x: f64) {
+        self.samples
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push(x);
+        self.running
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(Running::new)
+            .push(x);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn mean(&self, name: &str) -> f64 {
+        self.running
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|r| r.mean())
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn sum(&self, name: &str) -> f64 {
+        self.running
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|r| r.sum())
+            .unwrap_or(0.0)
+    }
+
+    pub fn percentile(&self, name: &str, p: f64) -> f64 {
+        self.samples
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|s| s.percentile(p))
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn observation_count(&self, name: &str) -> usize {
+        self.samples
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|s| s.len())
+            .unwrap_or(0)
+    }
+
+    /// Render all metrics as an aligned text report.
+    pub fn report(&self) -> String {
+        let mut t = Table::new(vec!["metric", "count/mean", "p50", "p99"]);
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            t.row(vec![k.clone(), v.to_string(), String::new(), String::new()]);
+        }
+        let samples = self.samples.lock().unwrap();
+        for (k, r) in self.running.lock().unwrap().iter() {
+            let s = &samples[k];
+            t.row(vec![
+                k.clone(),
+                format!("{:.4}", r.mean()),
+                format!("{:.4}", s.p50()),
+                format!("{:.4}", s.p99()),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Simple aligned text table (markdown-ish) for experiment outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Self {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let mut r: Vec<String> = cells.into_iter().map(Into::into).collect();
+        r.resize(self.headers.len(), String::new());
+        self.rows.push(r);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let pad = w - c.chars().count();
+                line.push(' ');
+                line.push_str(c);
+                line.push_str(&" ".repeat(pad + 1));
+                line.push('|');
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering for machine consumption.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(esc)
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.count("req", 3);
+        m.count("req", 2);
+        assert_eq!(m.counter("req"), 5);
+        assert_eq!(m.counter("absent"), 0);
+    }
+
+    #[test]
+    fn observations_summarize() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("lat", i as f64);
+        }
+        assert!((m.mean("lat") - 50.5).abs() < 1e-9);
+        assert!((m.percentile("lat", 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(m.observation_count("lat"), 100);
+        assert!((m.sum("lat") - 5050.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["a", "bb"]);
+        t.row(vec!["xxx", "1"]);
+        t.row(vec!["y"]);
+        let s = t.render();
+        let lines: Vec<_> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(s.contains("xxx"));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(vec!["k", "v"]);
+        t.row(vec!["a,b", "say \"hi\""]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn atomic_counter() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+}

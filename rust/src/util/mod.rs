@@ -1,0 +1,137 @@
+//! Small shared utilities: deterministic PRNGs, online statistics, a ring
+//! buffer, and formatting helpers. These stand in for `rand`/`statrs`
+//! which are unavailable in the offline crate set (DESIGN.md §Substitutions).
+pub mod rng;
+pub mod stats;
+
+pub use rng::{Pcg32, SplitMix64};
+pub use stats::{entropy, skewness, Ewma, Running, Samples};
+
+/// Fixed-capacity ring buffer (used for bandwidth traces and telemetry
+/// windows).
+#[derive(Clone, Debug)]
+pub struct RingBuf<T> {
+    buf: Vec<T>,
+    head: usize,
+    len: usize,
+    cap: usize,
+}
+
+impl<T: Clone> RingBuf<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            buf: Vec::with_capacity(cap),
+            head: 0,
+            len: 0,
+            cap,
+        }
+    }
+
+    pub fn push(&mut self, x: T) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+            self.len = self.buf.len();
+        } else {
+            self.buf[self.head] = x;
+            self.head = (self.head + 1) % self.cap;
+            self.len = self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Oldest-to-newest iteration.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        let (a, b) = self.buf.split_at(self.head.min(self.buf.len()));
+        b.iter().chain(a.iter())
+    }
+
+    pub fn latest(&self) -> Option<&T> {
+        if self.len == 0 {
+            return None;
+        }
+        let idx = if self.buf.len() < self.cap {
+            self.buf.len() - 1
+        } else {
+            (self.head + self.cap - 1) % self.cap
+        };
+        self.buf.get(idx)
+    }
+}
+
+/// Human-readable engineering formatting: `fmt_si(1_500_000.0, "B") = "1.50 MB"`.
+pub fn fmt_si(x: f64, unit: &str) -> String {
+    let (v, p) = if x.abs() >= 1e9 {
+        (x / 1e9, "G")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, "M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, "k")
+    } else if x.abs() >= 1.0 || x == 0.0 {
+        (x, "")
+    } else if x.abs() >= 1e-3 {
+        (x * 1e3, "m")
+    } else {
+        (x * 1e6, "µ")
+    };
+    format!("{v:.2} {p}{unit}")
+}
+
+/// Clamp helper for f64 (std's clamp panics on NaN bounds edge cases in
+/// hot loops where we want a plain min/max chain).
+#[inline]
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ringbuf_wraps() {
+        let mut rb = RingBuf::new(3);
+        for i in 0..5 {
+            rb.push(i);
+        }
+        assert_eq!(rb.len(), 3);
+        let xs: Vec<_> = rb.iter().copied().collect();
+        assert_eq!(xs, vec![2, 3, 4]);
+        assert_eq!(*rb.latest().unwrap(), 4);
+    }
+
+    #[test]
+    fn ringbuf_partial() {
+        let mut rb = RingBuf::new(8);
+        rb.push(1);
+        rb.push(2);
+        assert_eq!(rb.len(), 2);
+        assert_eq!(rb.iter().copied().collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(*rb.latest().unwrap(), 2);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(fmt_si(1_500_000.0, "B"), "1.50 MB");
+        assert_eq!(fmt_si(0.0123, "s"), "12.30 ms");
+        assert_eq!(fmt_si(42.0, "J"), "42.00 J");
+    }
+
+    #[test]
+    fn clamp_works() {
+        assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+}

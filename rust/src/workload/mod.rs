@@ -1,0 +1,179 @@
+//! Workload generation: inference tasks with Poisson/burst arrivals,
+//! per-task SCAM importance draws, and dataset mixing.
+
+use crate::perfmodel::{find_model, Dataset, ModelProfile};
+use crate::scam::ImportanceDist;
+use crate::util::Pcg32;
+use anyhow::Result;
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub dataset: Dataset,
+    /// per-task importance distribution (the SCAM output for this input)
+    pub importance: ImportanceDist,
+    /// index into the synthetic test set (real-artifact path only)
+    pub sample_idx: usize,
+}
+
+/// Arrival process shapes.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// Poisson with given rate (req/s)
+    Poisson { rate: f64 },
+    /// back-to-back (closed loop — the paper's per-task evaluation)
+    Sequential,
+    /// Poisson baseline with periodic bursts
+    Bursty { rate: f64, burst_every_s: f64, burst_len: usize },
+}
+
+/// Generates the task stream for one model/dataset configuration.
+pub struct TaskGen {
+    profile: ModelProfile,
+    dataset: Dataset,
+    arrivals: Arrivals,
+    channels: usize,
+    rng: Pcg32,
+    next_id: u64,
+    clock_s: f64,
+    burst_left: usize,
+    testset_count: usize,
+}
+
+impl TaskGen {
+    pub fn new(
+        model: &str,
+        dataset: Dataset,
+        arrivals: Arrivals,
+        seed: u64,
+    ) -> Result<Self> {
+        Ok(Self {
+            profile: find_model(model)?,
+            dataset,
+            arrivals,
+            channels: 16,
+            rng: Pcg32::seeded(seed ^ 0x7A5C),
+            next_id: 0,
+            clock_s: 0.0,
+            burst_left: 0,
+            testset_count: 256,
+        })
+    }
+
+    pub fn profile(&self) -> &ModelProfile {
+        &self.profile
+    }
+
+    pub fn dataset(&self) -> Dataset {
+        self.dataset
+    }
+
+    /// Draw the next task (advances the arrival clock).
+    pub fn next_task(&mut self) -> Task {
+        let dt = match self.arrivals {
+            Arrivals::Sequential => 0.0,
+            Arrivals::Poisson { rate } => self.rng.exponential(rate),
+            Arrivals::Bursty {
+                rate,
+                burst_every_s,
+                burst_len,
+            } => {
+                if self.burst_left > 0 {
+                    self.burst_left -= 1;
+                    0.0005
+                } else if self.clock_s > 0.0
+                    && (self.clock_s / burst_every_s).fract() < 0.02
+                {
+                    self.burst_left = burst_len;
+                    0.0005
+                } else {
+                    self.rng.exponential(rate)
+                }
+            }
+        };
+        self.clock_s += dt;
+        let id = self.next_id;
+        self.next_id += 1;
+        // per-task importance: model-level skew + small per-input jitter
+        let skew =
+            self.profile.importance_skew * (0.85 + 0.3 * self.rng.next_f64());
+        Task {
+            id,
+            arrival_s: self.clock_s,
+            dataset: self.dataset,
+            importance: ImportanceDist::synthetic(self.channels, skew, &mut self.rng),
+            sample_idx: (self.rng.below(self.testset_count as u32)) as usize,
+        }
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Task> {
+        (0..n).map(|_| self.next_task()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_tasks_have_zero_gaps() {
+        let mut g =
+            TaskGen::new("resnet-18", Dataset::Cifar100, Arrivals::Sequential, 1)
+                .unwrap();
+        let ts = g.take(5);
+        assert!(ts.iter().all(|t| t.arrival_s == 0.0));
+        assert_eq!(ts.last().unwrap().id, 4);
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let mut g = TaskGen::new(
+            "resnet-18",
+            Dataset::Cifar100,
+            Arrivals::Poisson { rate: 50.0 },
+            2,
+        )
+        .unwrap();
+        let ts = g.take(2000);
+        let span = ts.last().unwrap().arrival_s;
+        let rate = 2000.0 / span;
+        assert!((40.0..60.0).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn tasks_are_deterministic_per_seed() {
+        let mk = || {
+            TaskGen::new("vit-b16", Dataset::Imagenet, Arrivals::Sequential, 9)
+                .unwrap()
+                .take(3)
+        };
+        let a = mk();
+        let b = mk();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.sample_idx, y.sample_idx);
+            assert_eq!(x.importance.probs(), y.importance.probs());
+        }
+    }
+
+    #[test]
+    fn importance_skew_tracks_model() {
+        let take_skew = |name: &str| {
+            let mut g =
+                TaskGen::new(name, Dataset::Cifar100, Arrivals::Sequential, 3)
+                    .unwrap();
+            let ts = g.take(64);
+            ts.iter().map(|t| t.importance.skewness()).sum::<f64>() / 64.0
+        };
+        // vit-b16 has the most concentrated importance in the zoo
+        assert!(take_skew("vit-b16") > take_skew("deepspeech"));
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        assert!(
+            TaskGen::new("nope", Dataset::Cifar100, Arrivals::Sequential, 0).is_err()
+        );
+    }
+}

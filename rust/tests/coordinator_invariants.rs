@@ -1,0 +1,213 @@
+//! Property-based integration tests over coordinator invariants
+//! (routing, batching, state), per the repo test plan: proptest_mini
+//! drives randomized configurations through the full simulated stack.
+
+use dvfo::configx::Config;
+use dvfo::coordinator::{Coordinator, Decision};
+use dvfo::offload::Compression;
+use dvfo::proptest_mini as pt;
+use dvfo::util::Pcg32;
+use dvfo::workload::{Arrivals, TaskGen};
+
+fn rand_cfg(rng: &mut Pcg32) -> Config {
+    let mut cfg = Config::default();
+    let devices = ["jetson-nano", "jetson-tx2", "xavier-nx"];
+    let models = [
+        "resnet-18",
+        "mobilenet-v2",
+        "efficientnet-b0",
+        "vit-b16",
+        "deepspeech",
+    ];
+    let policies = ["dvfo", "drldo", "appealnet", "cloud_only", "edge_only"];
+    cfg.device = devices[rng.below(3) as usize].into();
+    cfg.model = models[rng.below(5) as usize].into();
+    cfg.dataset = if rng.chance(0.5) { "cifar100" } else { "imagenet" }.into();
+    cfg.policy = policies[rng.below(5) as usize].into();
+    cfg.eta = rng.next_f64();
+    cfg.lambda = rng.next_f64();
+    cfg.bandwidth = format!("static:{:.1}", 0.5 + 8.0 * rng.next_f64());
+    cfg.seed = rng.next_u64();
+    cfg
+}
+
+#[test]
+fn every_report_is_physically_consistent() {
+    // For random (device, model, dataset, policy, η, λ, bandwidth):
+    //   * all latency phases ≥ 0 and sum to the total (± decision+DVFS)
+    //   * energy split sums; cost = η·ETI + (1-η)·Pmax·TTI
+    //   * ξ ∈ [0,1]; payload > 0 iff ξ > 0; accuracy ∈ (0, 100]
+    pt::check(
+        "task report physics",
+        0xD1F0,
+        40,
+        |r: &mut Pcg32| rand_cfg(r),
+        |cfg| {
+            let mut coord = Coordinator::from_config(cfg).map_err(|e| e.to_string())?;
+            let mut gen = TaskGen::new(
+                &cfg.model,
+                coord.env.dataset,
+                Arrivals::Sequential,
+                cfg.seed,
+            )
+            .map_err(|e| e.to_string())?;
+            for t in gen.take(5) {
+                let r = coord.step(&t, false);
+                let phases =
+                    r.tti_local_s + r.tti_comp_s + r.tti_off_s + r.tti_cloud_s + r.tti_decision_s;
+                if !(r.tti_total_s >= phases - 1e-9
+                    && r.tti_total_s <= phases + 1e-3)
+                {
+                    return Err(format!("phase sum {phases} vs total {}", r.tti_total_s));
+                }
+                if (r.eti_total_j - r.eti_compute_j - r.eti_offload_j).abs() > 1e-9 {
+                    return Err("energy split mismatch".into());
+                }
+                let spec = coord.env.edge.spec();
+                let want_cost = coord.env.eta * r.eti_total_j
+                    + (1.0 - coord.env.eta) * spec.max_power_w * r.tti_total_s;
+                if (r.cost - want_cost).abs() > 1e-9 {
+                    return Err(format!("cost {} vs eq4 {}", r.cost, want_cost));
+                }
+                if !(0.0..=1.0).contains(&r.xi) {
+                    return Err(format!("xi {}", r.xi));
+                }
+                if (r.xi > 0.0) != (r.payload_bytes > 0.0) {
+                    return Err("payload iff offload violated".into());
+                }
+                if !(r.accuracy_pct > 0.0 && r.accuracy_pct <= 100.0) {
+                    return Err(format!("accuracy {}", r.accuracy_pct));
+                }
+                for p in 0..3 {
+                    for u in 0..3 {
+                        if r.phase_freqs[p][u] <= 0.0 {
+                            return Err("non-positive phase frequency".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn frequencies_always_within_device_ladder() {
+    pt::check(
+        "freq bounds",
+        0xF4E0,
+        30,
+        |r: &mut Pcg32| rand_cfg(r),
+        |cfg| {
+            let mut coord = Coordinator::from_config(cfg).map_err(|e| e.to_string())?;
+            let mut gen = TaskGen::new(
+                &cfg.model,
+                coord.env.dataset,
+                Arrivals::Sequential,
+                cfg.seed ^ 1,
+            )
+            .map_err(|e| e.to_string())?;
+            for t in gen.take(4) {
+                let r = coord.step(&t, false);
+                let spec = coord.env.edge.spec();
+                let ladders = [&spec.cpu, &spec.gpu, &spec.mem];
+                for (f, l) in r.freqs.iter().zip(ladders.iter()) {
+                    if *f < l.min_mhz - 1e-6 || *f > l.max_mhz + 1e-6 {
+                        return Err(format!("freq {f} outside [{}, {}]", l.min_mhz, l.max_mhz));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn serve_is_deterministic_for_fixed_seed_policy() {
+    // fixed policies must be bit-deterministic across runs
+    let run = || {
+        let mut cfg = Config::default();
+        cfg.policy = "edge_only".into();
+        cfg.seed = 99;
+        let mut coord = Coordinator::from_config(&cfg).unwrap();
+        let mut gen =
+            TaskGen::new(&cfg.model, coord.env.dataset, Arrivals::Sequential, 99).unwrap();
+        let tasks = gen.take(20);
+        let s = coord.serve(&tasks);
+        (s.tti_ms.mean(), s.eti_mj.mean(), s.cost.mean())
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn learning_policies_never_emit_out_of_range_actions() {
+    pt::check(
+        "action ranges",
+        0xACE5,
+        20,
+        |r: &mut Pcg32| {
+            let mut c = rand_cfg(r);
+            c.policy = if r.chance(0.5) { "dvfo" } else { "drldo" }.into();
+            c
+        },
+        |cfg| {
+            let mut coord = Coordinator::from_config(cfg).map_err(|e| e.to_string())?;
+            let mut gen = TaskGen::new(
+                &cfg.model,
+                coord.env.dataset,
+                Arrivals::Sequential,
+                cfg.seed ^ 2,
+            )
+            .map_err(|e| e.to_string())?;
+            // includes the exploring (training) path
+            coord.train(&mut gen, 2, 8);
+            for t in gen.take(4) {
+                let r = coord.step(&t, false);
+                if !(0.0..=1.0).contains(&r.xi) {
+                    return Err(format!("xi {}", r.xi));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn env_clone_isolated_from_original() {
+    // the Oracle policy depends on clones not mutating the live env
+    let cfg = Config::default();
+    let mut coord = Coordinator::from_config(&cfg).unwrap();
+    let mut gen =
+        TaskGen::new(&cfg.model, coord.env.dataset, Arrivals::Sequential, 5).unwrap();
+    let task = gen.next_task();
+    let before = coord.env.link.mbps();
+    let mut clone = coord.env.clone();
+    for _ in 0..10 {
+        clone.execute(&task, &Decision::edge_only_max(clone.levels()), 0.0);
+    }
+    assert_eq!(coord.env.link.mbps(), before);
+    assert_eq!(coord.env.edge.transitions(), 0);
+}
+
+#[test]
+fn drldo_never_compresses_dvfo_always_does_when_offloading() {
+    let mut rng = Pcg32::seeded(0xC0);
+    for _ in 0..10 {
+        let mut cfg = rand_cfg(&mut rng);
+        cfg.policy = "drldo".into();
+        let mut coord = Coordinator::from_config(&cfg).unwrap();
+        let mut gen =
+            TaskGen::new(&cfg.model, coord.env.dataset, Arrivals::Sequential, cfg.seed).unwrap();
+        let task = gen.next_task();
+        let obs = coord.observe(&task);
+        let d = coord.policy.decide(&obs);
+        assert_eq!(d.compression, Compression::None);
+        assert!(!d.importance_guided);
+
+        cfg.policy = "dvfo".into();
+        let mut coord2 = Coordinator::from_config(&cfg).unwrap();
+        let d = coord2.policy.decide(&obs);
+        assert_eq!(d.compression, Compression::Int8);
+        assert!(d.importance_guided);
+    }
+}

@@ -1,0 +1,227 @@
+//! Integration tests over the real AOT artifacts: the rust runtime must
+//! reproduce the numbers the python build pipeline promised (manifest
+//! probe), the rust DQN forward must agree with the PJRT `dqn_q`
+//! artifact on identical weights, and the two-worker pipeline must hit
+//! the advertised accuracy. Skipped politely when `make artifacts` has
+//! not run.
+
+use dvfo::coordinator::pipeline::{Pipeline, PipelineRequest};
+use dvfo::dqn::{InferScratch, Mlp, Tensor2};
+use dvfo::runtime::Engine;
+use dvfo::scam::ImportanceDist;
+use dvfo::util::Pcg32;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn load_testset(engine: &Engine, dir: &Path) -> (Vec<f32>, Vec<u32>, usize) {
+    let (imgs, labels) = engine.manifest.load_testset(dir).unwrap();
+    let img_len: usize = engine.manifest.img_shape.iter().product();
+    (imgs, labels, img_len)
+}
+
+#[test]
+fn engine_loads_all_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    for name in [
+        "extractor",
+        "local_head",
+        "offload_prep",
+        "remote_head",
+        "fusion",
+        "collaborative",
+        "dqn_q",
+    ] {
+        assert!(engine.has(name), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn collaborative_artifact_matches_python_probe() {
+    // the manifest records the fused logits python computed for test
+    // image 0 with the top-8 mask and λ=0.5; the rust-side execution of
+    // the AOT artifact must reproduce them (build↔serve parity).
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load_filtered(&dir, Some(&["collaborative"])).unwrap();
+    let (imgs, _, img_len) = load_testset(&engine, &dir);
+    let m = &engine.manifest;
+
+    let imp = ImportanceDist::from_weights(&m.mean_importance);
+    let ranked = imp.ranked();
+    let mut mask = vec![0.0f32; m.feat_channels];
+    for &c in ranked.iter().take(m.probe.mask_topk) {
+        mask[c] = 1.0;
+    }
+    let lam = [m.probe.lambda as f32];
+    let out = engine
+        .execute_f32("collaborative", &[&imgs[..img_len], &mask, &lam])
+        .unwrap()
+        .remove(0);
+    assert_eq!(out.len(), m.probe.expected_logits.len());
+    for (got, want) in out.iter().zip(m.probe.expected_logits.iter()) {
+        assert!(
+            (*got as f64 - want).abs() < 1e-3 * (1.0 + want.abs()),
+            "logit mismatch: got {got}, want {want}"
+        );
+    }
+}
+
+#[test]
+fn rust_dqn_forward_matches_pjrt_artifact() {
+    // same weights → the in-process rust MLP and the AOT dqn_q artifact
+    // must produce (near-)identical Q-values. This is the guarantee that
+    // lets the coordinator train in rust and deploy through PJRT.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load_filtered(&dir, Some(&["dqn_q"])).unwrap();
+    let d = &engine.manifest.dqn;
+
+    let mut dims = vec![d.state_dim];
+    dims.extend(&d.hidden);
+    dims.push(d.action_dim);
+    let mut rng = Pcg32::seeded(42);
+    let mlp = Mlp::new(&dims, &mut rng);
+
+    let mut scratch = InferScratch::default();
+    for trial in 0..5u64 {
+        let mut srng = Pcg32::seeded(100 + trial);
+        let state: Vec<f32> = (0..d.state_dim).map(|_| srng.next_f32()).collect();
+        let rust_q = mlp.infer(&state, &mut scratch);
+
+        let args = mlp.flat_args();
+        let mut inputs: Vec<&[f32]> = vec![&state];
+        for a in &args {
+            inputs.push(a);
+        }
+        let pjrt_q = engine.execute_f32("dqn_q", &inputs).unwrap().remove(0);
+        assert_eq!(pjrt_q.len(), d.action_dim);
+        for (r, p) in rust_q.iter().zip(pjrt_q.iter()) {
+            assert!((r - p).abs() < 1e-4, "rust {r} vs pjrt {p}");
+        }
+    }
+}
+
+#[test]
+fn batched_mlp_forward_matches_infer() {
+    // sanity for the parity test above: batch path == scratch path
+    let mut rng = Pcg32::seeded(5);
+    let mlp = Mlp::new(&[8, 128, 64, 32, 41], &mut rng);
+    let state: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+    let t = Tensor2::from_vec(1, 8, state.clone());
+    let batch = mlp.forward(&t).output;
+    let mut scratch = InferScratch::default();
+    let single = mlp.infer(&state, &mut scratch);
+    for (a, b) in batch.data.iter().zip(single.iter()) {
+        assert!((a - b).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn pipeline_end_to_end_accuracy_matches_manifest() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pipeline = Pipeline::load(&dir).unwrap();
+    let engine = pipeline.engine();
+    let (imgs, labels, img_len) = load_testset(engine, &dir);
+    let n = 64.min(labels.len());
+
+    let requests: Vec<PipelineRequest> = (0..n)
+        .map(|i| PipelineRequest {
+            id: i as u64,
+            image: imgs[i * img_len..(i + 1) * img_len].to_vec(),
+            label: Some(labels[i]),
+            xi: 0.5,
+            lambda: 0.5,
+        })
+        .collect();
+    let responses = pipeline.serve(requests).unwrap();
+    assert_eq!(responses.len(), n);
+
+    let correct = responses.iter().filter(|r| r.correct == Some(true)).count();
+    let acc = correct as f64 / n as f64;
+    let promised = engine.manifest.accuracy["collab_k8"];
+    assert!(
+        acc > promised - 0.12,
+        "pipeline accuracy {acc} far below python-measured {promised}"
+    );
+
+    // phase timings and payloads are sane
+    for r in &responses {
+        assert!(r.t_total_s > 0.0 && r.t_total_s < 5.0);
+        assert!(r.payload_bytes > 0, "xi=0.5 must offload something");
+        assert_eq!(r.local_channels, 8);
+        let imp_sum: f64 = r.importance.iter().sum();
+        assert!((imp_sum - 1.0).abs() < 1e-3, "importance sums to {imp_sum}");
+    }
+}
+
+#[test]
+fn pipeline_edge_only_needs_no_cloud() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pipeline = Pipeline::load(&dir).unwrap();
+    let engine = pipeline.engine();
+    let (imgs, labels, img_len) = load_testset(engine, &dir);
+    let requests: Vec<PipelineRequest> = (0..16)
+        .map(|i| PipelineRequest {
+            id: i as u64,
+            image: imgs[i * img_len..(i + 1) * img_len].to_vec(),
+            label: Some(labels[i]),
+            xi: 0.0,
+            lambda: 0.5,
+        })
+        .collect();
+    let responses = pipeline.serve(requests).unwrap();
+    let correct = responses.iter().filter(|r| r.correct == Some(true)).count();
+    assert!(responses.iter().all(|r| r.payload_bytes == 0));
+    // edge-only accuracy should track the python-measured edge_only
+    let acc = correct as f64 / responses.len() as f64;
+    let promised = engine.manifest.accuracy["edge_only"];
+    assert!(acc > promised - 0.15, "edge acc {acc} vs promised {promised}");
+}
+
+#[test]
+fn quantized_offload_changes_little() {
+    // int8 round trip: remote logits from quantized features must stay
+    // close to logits from raw features (the <1% accuracy-loss mechanism)
+    let Some(dir) = artifacts_dir() else { return };
+    let engine =
+        Engine::load_filtered(&dir, Some(&["extractor", "offload_prep", "remote_head"]))
+            .unwrap();
+    let (imgs, _, img_len) = load_testset(&engine, &dir);
+    let m = &engine.manifest;
+    let outs = engine
+        .execute_f32("extractor", &[&imgs[..img_len]])
+        .unwrap();
+    let features = &outs[0];
+    let inv_mask = vec![1.0f32; m.feat_channels];
+
+    let dq = engine
+        .execute_f32("offload_prep", &[features, &inv_mask])
+        .unwrap()
+        .remove(0);
+    let logits_q = engine
+        .execute_f32("remote_head", &[&dq, &inv_mask])
+        .unwrap()
+        .remove(0);
+    let logits_raw = engine
+        .execute_f32("remote_head", &[features, &inv_mask])
+        .unwrap()
+        .remove(0);
+    let max_abs = logits_raw
+        .iter()
+        .fold(0f32, |a, &x| a.max(x.abs()))
+        .max(1e-6);
+    for (q, r) in logits_q.iter().zip(logits_raw.iter()) {
+        assert!(
+            (q - r).abs() / max_abs < 0.05,
+            "int8 perturbation too large: {q} vs {r}"
+        );
+    }
+}
