@@ -48,7 +48,10 @@ FEAT_HW = 16                 # feature-map spatial size after stride-2 stem
 NUM_CLASSES = 8
 SCAM_REDUCTION = 4           # channel-MLP bottleneck ratio r
 
-DQN_STATE_DIM = 8            # see rust/src/policy (state featurization)
+DQN_STATE_DIM = 8            # base featurization, rust Obs::features();
+                             # the queue-aware multi-stream variant uses
+                             # 10 (Obs::features_ext) but is not lowered
+                             # to artifacts yet
 DQN_HIDDEN = (128, 64, 32)   # paper §6.1
 
 

@@ -1,0 +1,8 @@
+//! Load sweep — latency vs offered load through the discrete-event
+//! multi-stream serving core: p50/p95/p99 end-to-end latency, queue
+//! wait, uplink batch size, and per-stream energy as the number of
+//! concurrent user streams grows (`DVFO_BENCH_FULL=1` for the full-size
+//! sweep). See rust/src/coordinator/des.rs.
+fn main() {
+    dvfo::bench_harness::run_experiment_bench("load");
+}

@@ -37,6 +37,21 @@ pub struct Config {
     pub train_episodes: usize,
     /// Use thinking-while-moving concurrent policy inference.
     pub concurrent: bool,
+    /// Concurrent user streams fed through the discrete-event serving
+    /// core (1 = the paper's single-stream evaluation).
+    pub streams: usize,
+    /// Uplink batching window in milliseconds (0 = no batching):
+    /// offloaded feature maps arriving within the window ship as one
+    /// transmission.
+    pub batch_window_ms: f64,
+    /// Arrival process spec per stream: "sequential" | "poisson:<r>" |
+    /// "bursty:<r>,<every_s>,<len>" | "mmpp:<lo>,<hi>,<dlo>,<dhi>" |
+    /// "diurnal:<base>,<amp>,<period_s>".
+    pub arrivals: String,
+    /// Widen the DVFO DQN state with queue-depth/backlog features so the
+    /// policy reacts to load (changes the network shape, so off by
+    /// default to preserve the paper's 8-dim formulation).
+    pub queue_aware: bool,
     /// RNG seed for the whole run.
     pub seed: u64,
     /// Artifacts directory (PJRT-loadable HLO text).
@@ -59,6 +74,10 @@ impl Default for Config {
             requests: 200,
             train_episodes: 60,
             concurrent: true,
+            streams: 1,
+            batch_window_ms: 0.0,
+            arrivals: "sequential".into(),
+            queue_aware: false,
             seed: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -87,10 +106,10 @@ impl Config {
     /// Apply one `key=value` override (all values accepted as strings).
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let j = match key {
-            "eta" | "lambda" => Json::Num(value.parse::<f64>()?),
+            "eta" | "lambda" | "batch_window_ms" => Json::Num(value.parse::<f64>()?),
             "freq_levels" | "xi_levels" | "requests" | "train_episodes"
-            | "seed" => Json::Num(value.parse::<f64>()?),
-            "concurrent" => Json::Bool(value.parse::<bool>()?),
+            | "streams" | "seed" => Json::Num(value.parse::<f64>()?),
+            "concurrent" | "queue_aware" => Json::Bool(value.parse::<bool>()?),
             _ => Json::Str(value.to_string()),
         };
         self.apply(key, &j)?;
@@ -125,6 +144,12 @@ impl Config {
                 self.train_episodes = v.as_usize().context("expected int")?
             }
             "concurrent" => self.concurrent = v.as_bool().context("expected bool")?,
+            "streams" => self.streams = v.as_usize().context("expected int")?,
+            "batch_window_ms" => {
+                self.batch_window_ms = v.as_f64().context("expected number")?
+            }
+            "arrivals" => str_field!(arrivals),
+            "queue_aware" => self.queue_aware = v.as_bool().context("expected bool")?,
             "seed" => self.seed = v.as_f64().context("expected number")? as u64,
             other => bail!("unknown config key `{other}`"),
         }
@@ -155,6 +180,16 @@ impl Config {
         if !policies.contains(&self.policy.as_str()) {
             bail!("unknown policy `{}` (want one of {policies:?})", self.policy);
         }
+        if self.streams == 0 {
+            bail!("streams must be >= 1");
+        }
+        if !(self.batch_window_ms.is_finite() && self.batch_window_ms >= 0.0) {
+            bail!(
+                "batch_window_ms must be a finite non-negative number, got {}",
+                self.batch_window_ms
+            );
+        }
+        crate::workload::Arrivals::parse(&self.arrivals).context("arrivals spec")?;
         crate::net::Bandwidth::parse(&self.bandwidth, self.seed)
             .context("bandwidth spec")?;
         Ok(())
@@ -192,7 +227,34 @@ mod tests {
         assert!(c.set("eta", "1.5").is_err());
         assert!(c.set("policy", "nonexistent").is_err());
         assert!(c.set("bandwidth", "bogus:x").is_err());
+        assert!(c.set("streams", "0").is_err());
+        assert!(c.set("batch_window_ms", "-1").is_err());
+        assert!(c.set("arrivals", "warp:9").is_err());
         assert!(Config::from_json(&Json::parse(r#"{"nope": 1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn multistream_fields_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.streams, 1);
+        assert_eq!(c.batch_window_ms, 0.0);
+        assert!(!c.queue_aware);
+        c.set("streams", "64").unwrap();
+        c.set("batch_window_ms", "5.5").unwrap();
+        c.set("arrivals", "mmpp:5,50,2,0.5").unwrap();
+        c.set("queue_aware", "true").unwrap();
+        assert_eq!(c.streams, 64);
+        assert_eq!(c.batch_window_ms, 5.5);
+        assert_eq!(c.arrivals, "mmpp:5,50,2,0.5");
+        assert!(c.queue_aware);
+        let j = Json::parse(
+            r#"{"streams": 8, "batch_window_ms": 2.0, "arrivals": "poisson:20",
+                "queue_aware": true}"#,
+        )
+        .unwrap();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c2.streams, 8);
+        assert_eq!(c2.arrivals, "poisson:20");
     }
 
     #[test]

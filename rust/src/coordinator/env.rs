@@ -72,6 +72,16 @@ pub struct TaskReport {
     pub xi: f64,
     pub local_mass: f64,
     pub bandwidth_mbps: f64,
+    /// queueing delay before edge service started (set by the
+    /// discrete-event serving core; 0 on the synchronous path)
+    pub queue_wait_s: f64,
+    /// end-to-end latency including queueing/batching delays (set by the
+    /// discrete-event serving core; 0 ⇒ interpret as queue_wait+tti_total)
+    pub e2e_s: f64,
+    /// originating user stream (discrete-event serving core)
+    pub stream: usize,
+    /// uplink batch size this task's offload shipped in (0 = no offload)
+    pub batch_size: usize,
 }
 
 /// The simulated serving environment for one (device, cloud, model,
@@ -342,13 +352,21 @@ mod tests {
         let mut mid = env(0.5);
         let r_mid = mid.execute(&task(4), &dvfo_decision(0.0, 6), 0.0);
         assert!(r_mid.tti_total_s > r_hi.tti_total_s);
-        assert!(r_mid.eti_total_j < r_hi.eti_total_j, "mid {} hi {}",
-                r_mid.eti_total_j, r_hi.eti_total_j);
+        assert!(
+            r_mid.eti_total_j < r_hi.eti_total_j,
+            "mid {} hi {}",
+            r_mid.eti_total_j,
+            r_hi.eti_total_j
+        );
         // and the floor is NOT optimal: energy turns back up
         let mut lo = env(0.5);
         let r_lo = lo.execute(&task(4), &dvfo_decision(0.0, 0), 0.0);
-        assert!(r_lo.eti_total_j > r_mid.eti_total_j, "lo {} mid {}",
-                r_lo.eti_total_j, r_mid.eti_total_j);
+        assert!(
+            r_lo.eti_total_j > r_mid.eti_total_j,
+            "lo {} mid {}",
+            r_lo.eti_total_j,
+            r_mid.eti_total_j
+        );
     }
 
     #[test]

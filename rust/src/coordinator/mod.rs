@@ -3,9 +3,11 @@
 //! offline"), and serves task streams, producing the telemetry every
 //! experiment consumes.
 
+pub mod des;
 pub mod env;
 pub mod pipeline;
 
+pub use des::{serve_multistream, DesOpts};
 pub use env::{Decision, EdgeCloudEnv, TaskReport, EXTRACTOR_FRAC};
 
 use crate::configx::Config;
@@ -37,7 +39,13 @@ pub fn build_env(cfg: &Config) -> Result<EdgeCloudEnv> {
 pub fn build_policy(cfg: &Config, env: &EdgeCloudEnv) -> Result<Box<dyn Policy>> {
     let l = cfg.freq_levels;
     Ok(match cfg.policy.as_str() {
-        "dvfo" => Box::new(DvfoPolicy::new(l, cfg.xi_levels, cfg.concurrent, cfg.seed)),
+        "dvfo" => Box::new(DvfoPolicy::new(
+            l,
+            cfg.xi_levels,
+            cfg.concurrent,
+            cfg.queue_aware,
+            cfg.seed,
+        )),
         "drldo" => Box::new(DrldoPolicy::new(l, cfg.xi_levels, cfg.seed)),
         "appealnet" => Box::new(AppealNetPolicy::new(l, cfg.seed)),
         "cloud_only" => Box::new(CloudOnlyPolicy::new(l)),
@@ -65,6 +73,17 @@ pub fn build_policy(cfg: &Config, env: &EdgeCloudEnv) -> Result<Box<dyn Policy>>
     })
 }
 
+/// Live load signals the discrete-event serving core publishes before
+/// each decision so queue-aware policies can react to backlog (zeros on
+/// the synchronous single-task path).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadSignals {
+    /// tasks waiting in the edge queue
+    pub queue_depth: usize,
+    /// estimated seconds of edge work queued ahead
+    pub backlog_s: f64,
+}
+
 /// The serving system: one environment, one policy, shared telemetry.
 pub struct Coordinator {
     pub env: EdgeCloudEnv,
@@ -72,6 +91,8 @@ pub struct Coordinator {
     /// cost of the edge-only max-frequency decision — the reward scale
     /// (rewards are r = −C/C_ref so DQN targets are O(1))
     pub ref_cost: f64,
+    /// queue state visible to the next observation (set by the DES core)
+    pub load: LoadSignals,
     prev_xi: f64,
 }
 
@@ -89,6 +110,14 @@ pub struct ServeSummary {
     pub tti_decision_ms: Samples,
     pub xi: Samples,
     pub payload_kb: Samples,
+    /// queueing delay before edge service (0 on the synchronous path)
+    pub queue_wait_ms: Samples,
+    /// end-to-end latency including queueing/batching delays
+    pub e2e_ms: Samples,
+    /// uplink batch size per task (0 = the task did not offload)
+    pub batch_size: Samples,
+    /// total energy per user stream (index = stream id)
+    pub per_stream_j: Vec<f64>,
     pub per_unit_j: [f64; 3],
     pub reports: Vec<TaskReport>,
 }
@@ -106,6 +135,18 @@ impl ServeSummary {
         self.tti_decision_ms.push(r.tti_decision_s * 1e3);
         self.xi.push(r.xi);
         self.payload_kb.push(r.payload_bytes / 1024.0);
+        self.queue_wait_ms.push(r.queue_wait_s * 1e3);
+        let e2e_s = if r.e2e_s > 0.0 {
+            r.e2e_s
+        } else {
+            r.queue_wait_s + r.tti_total_s
+        };
+        self.e2e_ms.push(e2e_s * 1e3);
+        self.batch_size.push(r.batch_size as f64);
+        if r.stream >= self.per_stream_j.len() {
+            self.per_stream_j.resize(r.stream + 1, 0.0);
+        }
+        self.per_stream_j[r.stream] += r.eti_total_j;
         for i in 0..3 {
             self.per_unit_j[i] += r.eti_per_unit_j[i];
         }
@@ -136,6 +177,7 @@ impl Coordinator {
             env,
             policy,
             ref_cost,
+            load: LoadSignals::default(),
             prev_xi: 0.0,
         }
     }
@@ -156,8 +198,10 @@ impl Coordinator {
             top_quarter_mass: task.importance.top_quarter_mass(),
             skewness: task.importance.skewness(),
             entropy_norm: task.importance.entropy_norm(),
-            intensity_norm: ((intensity.ln() / 6.0).clamp(0.0, 1.0)),
+            intensity_norm: (intensity.ln() / 6.0).clamp(0.0, 1.0),
             prev_xi: self.prev_xi,
+            queue_depth_norm: (self.load.queue_depth as f64 / 8.0).min(2.0),
+            backlog_norm: (self.load.backlog_s / 2.0).min(2.0),
         }
     }
 
@@ -319,9 +363,9 @@ mod tests {
         c.xi_levels = 4;
         let mut coord = Coordinator::from_config(&c).unwrap();
         // isolate decision *quality*: don't charge the (deliberately
-        // huge) exhaustive-search latency to the critical path here
-        if let Some(_) = Some(()) {
-            // rebuild the oracle with zero charged latency
+        // huge) exhaustive-search latency to the critical path here —
+        // rebuild the oracle with zero charged latency
+        {
             let probe_env = coord.env.clone();
             let mut pgen =
                 TaskGen::new(&c.model, coord.env.dataset, Arrivals::Sequential, 5).unwrap();

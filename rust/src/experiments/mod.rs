@@ -560,6 +560,84 @@ pub fn tab_scalability(dataset: &str, requests: usize, train_eps: usize) -> Resu
     Ok(t)
 }
 
+// ======================================================================
+// Load sweep — latency vs offered load through the discrete-event
+// multi-stream serving core (p50/p95/p99 end-to-end latency, queue wait,
+// uplink batch size, per-stream energy).
+// ======================================================================
+pub fn load_sweep(quick: bool) -> Result<Table> {
+    use crate::coordinator::des::{serve_multistream, DesOpts};
+    let mut t = Table::new(vec![
+        "streams",
+        "offered req/s",
+        "policy",
+        "e2e p50 ms",
+        "e2e p95 ms",
+        "e2e p99 ms",
+        "queue p95 ms",
+        "mean batch",
+        "per-stream mJ",
+    ]);
+    let streams_list: &[usize] = if quick { &[1, 8, 64] } else { &[1, 4, 16, 64, 128] };
+    let per_stream = if quick { 10 } else { 40 };
+    let rate = 2.0; // req/s offered per stream
+    for &n in streams_list {
+        for policy in ["edge_only", "dvfo"] {
+            let mut cfg = Config::default();
+            cfg.policy = policy.into();
+            cfg.queue_aware = policy == "dvfo";
+            cfg.seed = 61;
+            let mut coord = Coordinator::from_config(&cfg)?;
+            if policy == "dvfo" {
+                let mut tgen =
+                    TaskGen::new(&cfg.model, coord.env.dataset, Arrivals::Sequential, 71)?;
+                coord.train(&mut tgen, if quick { 4 } else { 20 }, 16);
+            }
+            let mut gens = (0..n)
+                .map(|s| {
+                    TaskGen::new(
+                        &cfg.model,
+                        coord.env.dataset,
+                        Arrivals::Poisson { rate },
+                        100 + s as u64,
+                    )
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let opts = DesOpts {
+                batch_window_s: 0.004,
+                ..DesOpts::default()
+            };
+            let s = serve_multistream(&mut coord, &mut gens, per_stream, &opts);
+            let offloaded: Vec<f64> = s
+                .batch_size
+                .values()
+                .iter()
+                .copied()
+                .filter(|&b| b > 0.0)
+                .collect();
+            let mean_batch = if offloaded.is_empty() {
+                0.0
+            } else {
+                offloaded.iter().sum::<f64>() / offloaded.len() as f64
+            };
+            let stream_mj =
+                1e3 * s.per_stream_j.iter().sum::<f64>() / s.per_stream_j.len().max(1) as f64;
+            t.row(vec![
+                n.to_string(),
+                format!("{:.0}", rate * n as f64),
+                policy.to_string(),
+                format!("{:.1}", s.e2e_ms.p50()),
+                format!("{:.1}", s.e2e_ms.p95()),
+                format!("{:.1}", s.e2e_ms.p99()),
+                format!("{:.1}", s.queue_wait_ms.p95()),
+                format!("{mean_batch:.2}"),
+                format!("{stream_mj:.0}"),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
 /// Ablation (DESIGN.md §7): factored vs exact-joint argmax and oracle gap.
 pub fn ablation_action_space(requests: usize) -> Result<Table> {
     let mut t = Table::new(vec!["policy", "cost mean", "tti ms", "eti mJ"]);
@@ -606,13 +684,14 @@ pub fn run_by_name(name: &str, quick: bool) -> Result<Table> {
         "tab05" => tab_scalability("cifar100", req.min(60), eps),
         "tab06" => tab_scalability("imagenet", req.min(60), eps),
         "ablation" => ablation_action_space(req.min(40)),
+        "load" => load_sweep(quick),
         other => anyhow::bail!("unknown experiment `{other}`"),
     }
 }
 
 pub const ALL: &[&str] = &[
     "fig01", "fig02", "fig07", "fig08", "fig09", "fig10", "fig11", "fig12", "fig13",
-    "tab04", "fig14", "fig15", "fig16", "tab05", "tab06", "ablation",
+    "tab04", "fig14", "fig15", "fig16", "tab05", "tab06", "ablation", "load",
 ];
 
 #[cfg(test)]
@@ -644,6 +723,16 @@ mod tests {
         let csv = t.to_csv();
         let dvfo_line = csv.lines().find(|l| l.starts_with("dvfo")).unwrap();
         assert!(dvfo_line.contains("1.0x"));
+    }
+
+    #[test]
+    fn load_sweep_emits_latency_percentiles() {
+        let t = load_sweep(true).unwrap();
+        let csv = t.to_csv();
+        assert!(csv.lines().next().unwrap().contains("e2e p95 ms"));
+        // one row per (streams, policy) cell
+        assert_eq!(csv.lines().count(), 1 + 3 * 2);
+        assert!(csv.contains("\n64,"), "64-stream cell present:\n{csv}");
     }
 
     #[test]

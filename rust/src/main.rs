@@ -11,7 +11,7 @@
 use dvfo::cli::{parse, Cmd};
 use dvfo::configx::Config;
 use dvfo::coordinator::pipeline::{Pipeline, PipelineRequest};
-use dvfo::coordinator::Coordinator;
+use dvfo::coordinator::{serve_multistream, Coordinator, DesOpts};
 use dvfo::telemetry::Table;
 use dvfo::workload::{Arrivals, TaskGen};
 use std::path::Path;
@@ -32,7 +32,7 @@ SUBCOMMANDS:
   serve        simulate serving a request stream with a policy
   pipeline     run the real AOT-artifact pipeline (edge+cloud workers)
   experiment   regenerate a paper table/figure: fig01..fig16, tab04..tab06,
-               ablation, or `all`
+               ablation, load (multi-stream load sweep), or `all`
   train        offline DQN training, prints the learning curve
   devices      list the edge/cloud device zoo (paper Table 3)
   models       list the DNN model zoo
@@ -64,41 +64,89 @@ fn real_main() -> anyhow::Result<()> {
         "serve" => {
             let cmd = Cmd::new("dvfo serve", "simulate serving a request stream")
                 .opt("config", "JSON config file", None)
-                .opt("requests", "number of requests", Some("200"))
+                .opt("requests", "number of requests (total across streams)", Some("200"))
+                .opt("streams", "concurrent user streams", None)
+                .opt("batch-window", "uplink batching window (ms, 0 = off)", None)
+                .opt(
+                    "arrivals",
+                    "per-stream arrival process: sequential | poisson:<r> | \
+                     bursty:<r>,<every_s>,<len> | mmpp:<lo>,<hi>,<dlo>,<dhi> | \
+                     diurnal:<base>,<amp>,<period_s>",
+                    None,
+                )
                 .flag("verbose", "per-request reports");
             let a = parse(&cmd, rest)?;
             let mut cfg = config_from(&a)?;
             cfg.requests = a.parse_or("requests", cfg.requests)?;
+            cfg.streams = a.parse_or("streams", cfg.streams)?;
+            cfg.batch_window_ms = a.parse_or("batch-window", cfg.batch_window_ms)?;
+            if let Some(spec) = a.get("arrivals") {
+                cfg.arrivals = spec.to_string();
+            }
+            cfg.validate()?;
+            let arrivals = Arrivals::parse(&cfg.arrivals)?;
             let mut coord = Coordinator::from_config(&cfg)?;
-            let mut gen = TaskGen::new(
-                &cfg.model,
-                coord.env.dataset,
-                Arrivals::Sequential,
-                cfg.seed ^ 0x5E,
-            )?;
+            let mut gens = (0..cfg.streams)
+                .map(|stream| {
+                    TaskGen::new(
+                        &cfg.model,
+                        coord.env.dataset,
+                        arrivals,
+                        cfg.seed ^ 0x5E ^ ((stream as u64) << 8),
+                    )
+                })
+                .collect::<anyhow::Result<Vec<TaskGen>>>()?;
             if matches!(cfg.policy.as_str(), "dvfo" | "drldo") {
                 eprintln!("[train] {} episodes offline...", cfg.train_episodes);
-                coord.train(&mut gen, cfg.train_episodes, 24);
+                // dedicated closed-loop generator: training must not
+                // advance any serving stream's arrival clock
+                let mut tgen = TaskGen::new(
+                    &cfg.model,
+                    coord.env.dataset,
+                    Arrivals::Sequential,
+                    cfg.seed ^ 0x7341,
+                )?;
+                coord.train(&mut tgen, cfg.train_episodes, 24);
             }
-            let tasks = gen.take(cfg.requests);
-            let s = coord.serve(&tasks);
+            let per_stream = (cfg.requests / cfg.streams).max(1);
+            if per_stream * cfg.streams != cfg.requests {
+                eprintln!(
+                    "[serve] rounding --requests {} to {} ({} per stream x {} streams)",
+                    cfg.requests,
+                    per_stream * cfg.streams,
+                    per_stream,
+                    cfg.streams
+                );
+            }
+            let opts = DesOpts {
+                batch_window_s: cfg.batch_window_ms / 1e3,
+                ..DesOpts::default()
+            };
+            let s = serve_multistream(&mut coord, &mut gens, per_stream, &opts);
             if a.flag("verbose") {
                 for r in &s.reports {
                     println!(
-                        "xi={:.2} tti={:.1}ms eti={:.0}mJ acc={:.2}% f=({:.0},{:.0},{:.0})",
+                        "s={} xi={:.2} tti={:.1}ms queue={:.1}ms e2e={:.1}ms eti={:.0}mJ \
+                         acc={:.2}% batch={} f=({:.0},{:.0},{:.0})",
+                        r.stream,
                         r.xi,
                         r.tti_total_s * 1e3,
+                        r.queue_wait_s * 1e3,
+                        r.e2e_s.max(r.queue_wait_s + r.tti_total_s) * 1e3,
                         r.eti_total_j * 1e3,
                         r.accuracy_pct,
+                        r.batch_size,
                         r.freqs[0],
                         r.freqs[1],
                         r.freqs[2]
                     );
                 }
             }
-            let mut t = Table::new(vec!["metric", "mean", "p50", "p99"]);
+            let mut t = Table::new(vec!["metric", "mean", "p50", "p95", "p99"]);
             for (name, s) in [
                 ("tti ms", &s.tti_ms),
+                ("queue ms", &s.queue_wait_ms),
+                ("e2e ms", &s.e2e_ms),
                 ("eti mJ", &s.eti_mj),
                 ("accuracy %", &s.accuracy_pct),
                 ("xi", &s.xi),
@@ -108,14 +156,35 @@ fn real_main() -> anyhow::Result<()> {
                     name.to_string(),
                     format!("{:.2}", s.mean()),
                     format!("{:.2}", s.p50()),
+                    format!("{:.2}", s.p95()),
                     format!("{:.2}", s.p99()),
                 ]);
             }
             println!(
-                "policy={} model={} dataset={} device={} bw={}",
-                cfg.policy, cfg.model, cfg.dataset, cfg.device, cfg.bandwidth
+                "policy={} model={} dataset={} device={} bw={} streams={} arrivals={} \
+                 batch-window={}ms",
+                cfg.policy,
+                cfg.model,
+                cfg.dataset,
+                cfg.device,
+                cfg.bandwidth,
+                cfg.streams,
+                cfg.arrivals,
+                cfg.batch_window_ms
             );
             println!("{}", t.render());
+            if cfg.streams > 1 {
+                let mean_mj = 1e3 * s.per_stream_j.iter().sum::<f64>()
+                    / s.per_stream_j.len().max(1) as f64;
+                let max_mj = 1e3
+                    * s.per_stream_j
+                        .iter()
+                        .fold(f64::NEG_INFINITY, |acc, &x| acc.max(x));
+                println!(
+                    "per-stream energy: mean {mean_mj:.0} mJ, max {max_mj:.0} mJ over {} streams",
+                    s.per_stream_j.len()
+                );
+            }
         }
         "pipeline" => {
             let cmd = Cmd::new("dvfo pipeline", "run the real AOT-artifact pipeline")
@@ -164,7 +233,7 @@ fn real_main() -> anyhow::Result<()> {
         }
         "experiment" => {
             let cmd = Cmd::new("dvfo experiment", "regenerate a paper table/figure")
-                .positional("id", "fig01..fig16 | tab04..tab06 | ablation | all")
+                .positional("id", "fig01..fig16 | tab04..tab06 | ablation | load | all")
                 .flag("full", "full-size sweep (slower)")
                 .opt("csv", "also write CSV to this directory", None);
             let a = parse(&cmd, rest)?;

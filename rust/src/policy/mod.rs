@@ -22,6 +22,11 @@ pub struct Obs {
     /// operational intensity of the model, log-normalized
     pub intensity_norm: f64,
     pub prev_xi: f64,
+    /// edge-queue depth, normalized (0 outside the discrete-event core)
+    pub queue_depth_norm: f64,
+    /// estimated edge backlog seconds, normalized (0 outside the
+    /// discrete-event core)
+    pub backlog_norm: f64,
 }
 
 impl Obs {
@@ -37,6 +42,16 @@ impl Obs {
             self.intensity_norm as f32,
             self.prev_xi as f32,
         ]
+    }
+
+    /// Queue-aware 10-dim featurization for multi-stream serving: the
+    /// base 8 features plus edge queue depth and backlog, so the policy
+    /// can trade frequency/offloading against load.
+    pub fn features_ext(&self) -> Vec<f32> {
+        let mut f = self.features();
+        f.push(self.queue_depth_norm.clamp(0.0, 2.0) as f32);
+        f.push(self.backlog_norm.clamp(0.0, 2.0) as f32);
+        f
     }
 }
 
@@ -86,20 +101,41 @@ pub struct DvfoPolicy {
     xi_levels: usize,
     training: bool,
     concurrent: bool,
+    /// widen the DQN state with queue-depth/backlog features (10-dim)
+    queue_aware: bool,
     /// measured DQN inference latency (updated by the coordinator)
     pub latency_s: f64,
 }
 
 impl DvfoPolicy {
-    pub fn new(freq_levels: usize, xi_levels: usize, concurrent: bool, seed: u64) -> Self {
+    pub fn new(
+        freq_levels: usize,
+        xi_levels: usize,
+        concurrent: bool,
+        queue_aware: bool,
+        seed: u64,
+    ) -> Self {
         let space = ActionSpace::new(vec![freq_levels, freq_levels, freq_levels, xi_levels]);
-        let agent = DqnAgent::new(DqnConfig::default(), space, seed);
+        let cfg = DqnConfig {
+            state_dim: if queue_aware { 10 } else { 8 },
+            ..DqnConfig::default()
+        };
+        let agent = DqnAgent::new(cfg, space, seed);
         Self {
             agent,
             xi_levels,
             training: true,
             concurrent,
+            queue_aware,
             latency_s: 2e-5,
+        }
+    }
+
+    fn obs_features(&self, obs: &Obs) -> Vec<f32> {
+        if self.queue_aware {
+            obs.features_ext()
+        } else {
+            obs.features()
         }
     }
 
@@ -128,7 +164,7 @@ impl Policy for DvfoPolicy {
     }
 
     fn decide(&mut self, obs: &Obs) -> Decision {
-        let s = obs.features();
+        let s = self.obs_features(obs);
         let a = if self.training {
             self.agent.act(&s)
         } else {
@@ -139,10 +175,10 @@ impl Policy for DvfoPolicy {
 
     fn feedback(&mut self, obs: &Obs, decision: &Decision, next_obs: &Obs, fb: Feedback) {
         self.agent.remember(Transition {
-            state: obs.features(),
+            state: self.obs_features(obs),
             action: self.to_action(decision),
             reward: fb.reward,
-            next_state: next_obs.features(),
+            next_state: self.obs_features(next_obs),
             done: fb.done,
             gamma_pow: fb.gamma_pow,
         });
@@ -413,6 +449,8 @@ mod tests {
             entropy_norm: 0.7,
             intensity_norm: 0.4,
             prev_xi: 0.5,
+            queue_depth_norm: 0.25,
+            backlog_norm: 0.1,
         }
     }
 
@@ -424,8 +462,17 @@ mod tests {
     }
 
     #[test]
+    fn extended_features_append_queue_signals() {
+        let f = obs().features_ext();
+        assert_eq!(f.len(), 10);
+        assert_eq!(f[..8], obs().features()[..]);
+        assert!((f[8] - 0.25).abs() < 1e-6 && (f[9] - 0.1).abs() < 1e-6);
+        assert!(f.iter().all(|x| x.is_finite() && x.abs() <= 2.0));
+    }
+
+    #[test]
     fn dvfo_decisions_in_range() {
-        let mut p = DvfoPolicy::new(10, 11, true, 1);
+        let mut p = DvfoPolicy::new(10, 11, true, false, 1);
         for _ in 0..50 {
             let d = p.decide(&obs());
             assert!(d.cpu_lvl < 10 && d.gpu_lvl < 10 && d.mem_lvl < 10);
@@ -436,8 +483,31 @@ mod tests {
     }
 
     #[test]
+    fn queue_aware_dvfo_decides_and_learns_on_10dim_state() {
+        let mut p = DvfoPolicy::new(10, 11, true, true, 4);
+        let d = p.decide(&obs());
+        assert!(d.cpu_lvl < 10 && (0.0..=1.0).contains(&d.xi));
+        p.feedback(
+            &obs(),
+            &d,
+            &obs(),
+            Feedback {
+                reward: -0.5,
+                gamma_pow: 1.0,
+                done: false,
+            },
+        );
+        // load changes must be able to change the greedy action over
+        // training life; at minimum the featurization differs
+        let mut hot = obs();
+        hot.queue_depth_norm = 2.0;
+        hot.backlog_norm = 2.0;
+        assert_ne!(obs().features_ext(), hot.features_ext());
+    }
+
+    #[test]
     fn dvfo_greedy_is_deterministic_when_deployed() {
-        let mut p = DvfoPolicy::new(10, 11, true, 2);
+        let mut p = DvfoPolicy::new(10, 11, true, false, 2);
         p.set_training(false);
         let d1 = p.decide(&obs());
         let d2 = p.decide(&obs());

@@ -136,6 +136,10 @@ impl Samples {
         self.percentile(50.0)
     }
 
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
     pub fn p99(&self) -> f64 {
         self.percentile(99.0)
     }
@@ -240,6 +244,7 @@ mod tests {
         assert!((s.p50() - 50.5).abs() < 1e-9);
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!(s.p95() > 94.0 && s.p95() < s.p99());
         assert!(s.p99() > 98.0);
     }
 

@@ -4,7 +4,7 @@
 use crate::perfmodel::{find_model, Dataset, ModelProfile};
 use crate::scam::ImportanceDist;
 use crate::util::Pcg32;
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 /// One inference request.
 #[derive(Clone, Debug)]
@@ -27,6 +27,105 @@ pub enum Arrivals {
     Sequential,
     /// Poisson baseline with periodic bursts
     Bursty { rate: f64, burst_every_s: f64, burst_len: usize },
+    /// 2-state Markov-modulated Poisson process: exponential dwell in a
+    /// low-rate and a high-rate regime (bursty multi-user traffic).
+    Mmpp {
+        rate_lo: f64,
+        rate_hi: f64,
+        dwell_lo_s: f64,
+        dwell_hi_s: f64,
+    },
+    /// Diurnal-trace process: a Poisson process whose rate follows a
+    /// sinusoidal day/night profile,
+    /// `rate(t) = base · (1 + amplitude · sin(2πt / period))`,
+    /// simulated by Lewis thinning (deterministic per seed).
+    Diurnal {
+        base_rate: f64,
+        amplitude: f64,
+        period_s: f64,
+    },
+}
+
+impl Arrivals {
+    /// Parse a spec string:
+    /// `sequential` | `poisson:<rate>` | `bursty:<rate>,<every_s>,<len>` |
+    /// `mmpp:<rate_lo>,<rate_hi>,<dwell_lo_s>,<dwell_hi_s>` |
+    /// `diurnal:<base_rate>,<amplitude>,<period_s>`.
+    pub fn parse(spec: &str) -> Result<Arrivals> {
+        if spec == "sequential" {
+            return Ok(Arrivals::Sequential);
+        }
+        let (kind, rest) = spec
+            .split_once(':')
+            .context("arrivals spec wants `kind:args` (or `sequential`)")?;
+        let nums: Vec<f64> = rest
+            .split(',')
+            .map(|x| x.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("arrivals `{kind}` wants comma-separated numbers"))?;
+        match (kind, nums.as_slice()) {
+            ("poisson", [rate]) => {
+                if *rate <= 0.0 {
+                    bail!("poisson rate must be positive");
+                }
+                Ok(Arrivals::Poisson { rate: *rate })
+            }
+            ("bursty", [rate, every_s, len]) => {
+                if *rate <= 0.0 || *every_s <= 0.0 || *len < 1.0 {
+                    bail!("bursty wants rate>0, every_s>0, len>=1");
+                }
+                Ok(Arrivals::Bursty {
+                    rate: *rate,
+                    burst_every_s: *every_s,
+                    burst_len: *len as usize,
+                })
+            }
+            ("mmpp", [lo, hi, dw_lo, dw_hi]) => {
+                if !(*lo > 0.0 && *hi >= *lo && *dw_lo > 0.0 && *dw_hi > 0.0) {
+                    bail!("mmpp wants 0 < rate_lo <= rate_hi and positive dwells");
+                }
+                Ok(Arrivals::Mmpp {
+                    rate_lo: *lo,
+                    rate_hi: *hi,
+                    dwell_lo_s: *dw_lo,
+                    dwell_hi_s: *dw_hi,
+                })
+            }
+            ("diurnal", [base, amp, period]) => {
+                if !(*base > 0.0 && (0.0..=1.0).contains(amp) && *period > 0.0) {
+                    bail!("diurnal wants base>0, amplitude in [0,1], period>0");
+                }
+                Ok(Arrivals::Diurnal {
+                    base_rate: *base,
+                    amplitude: *amp,
+                    period_s: *period,
+                })
+            }
+            (other, _) => bail!(
+                "unknown or malformed arrivals `{other}:{rest}` (want sequential | \
+                 poisson:<r> | bursty:<r>,<every>,<len> | mmpp:<lo>,<hi>,<dlo>,<dhi> | \
+                 diurnal:<base>,<amp>,<period>)"
+            ),
+        }
+    }
+
+    /// Long-run mean arrival rate (req/s); `None` for the closed-loop
+    /// `Sequential` process. For `Bursty` this is the baseline rate (the
+    /// bursts add extra mass on top).
+    pub fn mean_rate(&self) -> Option<f64> {
+        match *self {
+            Arrivals::Sequential => None,
+            Arrivals::Poisson { rate } => Some(rate),
+            Arrivals::Bursty { rate, .. } => Some(rate),
+            Arrivals::Mmpp {
+                rate_lo,
+                rate_hi,
+                dwell_lo_s,
+                dwell_hi_s,
+            } => Some((rate_lo * dwell_lo_s + rate_hi * dwell_hi_s) / (dwell_lo_s + dwell_hi_s)),
+            Arrivals::Diurnal { base_rate, .. } => Some(base_rate),
+        }
+    }
 }
 
 /// Generates the task stream for one model/dataset configuration.
@@ -39,6 +138,10 @@ pub struct TaskGen {
     next_id: u64,
     clock_s: f64,
     burst_left: usize,
+    /// MMPP regime state: currently in the high-rate regime?
+    mmpp_high: bool,
+    /// remaining dwell in the current MMPP regime (<0 = uninitialized)
+    mmpp_left_s: f64,
     testset_count: usize,
 }
 
@@ -58,6 +161,8 @@ impl TaskGen {
             next_id: 0,
             clock_s: 0.0,
             burst_left: 0,
+            mmpp_high: false,
+            mmpp_left_s: -1.0,
             testset_count: 256,
         })
     }
@@ -90,6 +195,51 @@ impl TaskGen {
                     0.0005
                 } else {
                     self.rng.exponential(rate)
+                }
+            }
+            Arrivals::Mmpp {
+                rate_lo,
+                rate_hi,
+                dwell_lo_s,
+                dwell_hi_s,
+            } => {
+                if self.mmpp_left_s < 0.0 {
+                    // enter the low regime with an exponential dwell
+                    self.mmpp_left_s = self.rng.exponential(1.0 / dwell_lo_s);
+                }
+                let mut dt = 0.0;
+                loop {
+                    let rate = if self.mmpp_high { rate_hi } else { rate_lo };
+                    let x = self.rng.exponential(rate);
+                    if x <= self.mmpp_left_s {
+                        self.mmpp_left_s -= x;
+                        break dt + x;
+                    }
+                    // regime switch before the candidate arrival lands
+                    dt += self.mmpp_left_s;
+                    self.mmpp_high = !self.mmpp_high;
+                    let dwell = if self.mmpp_high { dwell_hi_s } else { dwell_lo_s };
+                    self.mmpp_left_s = self.rng.exponential(1.0 / dwell);
+                }
+            }
+            Arrivals::Diurnal {
+                base_rate,
+                amplitude,
+                period_s,
+            } => {
+                // Lewis thinning against the peak rate
+                let peak = base_rate * (1.0 + amplitude);
+                let mut dt = 0.0;
+                loop {
+                    dt += self.rng.exponential(peak);
+                    let t = self.clock_s + dt;
+                    let inst = base_rate
+                        * (1.0
+                            + amplitude
+                                * (2.0 * std::f64::consts::PI * t / period_s).sin());
+                    if self.rng.next_f64() * peak <= inst {
+                        break dt;
+                    }
                 }
             }
         };
@@ -175,5 +325,102 @@ mod tests {
         assert!(
             TaskGen::new("nope", Dataset::Cifar100, Arrivals::Sequential, 0).is_err()
         );
+    }
+
+    #[test]
+    fn parse_accepts_every_process_kind() {
+        assert!(matches!(
+            Arrivals::parse("sequential").unwrap(),
+            Arrivals::Sequential
+        ));
+        assert!(matches!(
+            Arrivals::parse("poisson:50").unwrap(),
+            Arrivals::Poisson { rate } if rate == 50.0
+        ));
+        assert!(matches!(
+            Arrivals::parse("bursty:20,2,10").unwrap(),
+            Arrivals::Bursty { burst_len: 10, .. }
+        ));
+        assert!(matches!(
+            Arrivals::parse("mmpp:5,50,2,0.5").unwrap(),
+            Arrivals::Mmpp { .. }
+        ));
+        assert!(matches!(
+            Arrivals::parse("diurnal:30,0.5,60").unwrap(),
+            Arrivals::Diurnal { .. }
+        ));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "mmpp:1",
+            "mmpp:0,5,1,1",
+            "mmpp:5,1,1,1",
+            "diurnal:10,1.5,60",
+            "diurnal:-1,0.5,60",
+            "poisson:-3",
+            "poisson:x",
+            "bursty:1,2",
+            "warp:1",
+            "poisson",
+        ] {
+            assert!(Arrivals::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn mmpp_mean_rate_formula() {
+        let a = Arrivals::parse("mmpp:10,100,2,0.5").unwrap();
+        // (10·2 + 100·0.5) / 2.5 = 28
+        assert!((a.mean_rate().unwrap() - 28.0).abs() < 1e-9);
+        assert!(Arrivals::Sequential.mean_rate().is_none());
+    }
+
+    #[test]
+    fn mmpp_interarrivals_hit_configured_mean() {
+        let a = Arrivals::parse("mmpp:10,100,2,0.5").unwrap();
+        let mut g = TaskGen::new("resnet-18", Dataset::Cifar100, a, 11).unwrap();
+        let ts = g.take(4000);
+        let rate = 4000.0 / ts.last().unwrap().arrival_s;
+        let want = a.mean_rate().unwrap();
+        assert!(
+            (rate - want).abs() / want < 0.3,
+            "empirical {rate} vs configured {want}"
+        );
+        // arrivals are strictly increasing
+        assert!(ts.windows(2).all(|w| w[1].arrival_s > w[0].arrival_s));
+    }
+
+    #[test]
+    fn diurnal_mean_tracks_base_rate() {
+        let a = Arrivals::parse("diurnal:40,0.8,10").unwrap();
+        let mut g = TaskGen::new("resnet-18", Dataset::Cifar100, a, 13).unwrap();
+        let ts = g.take(4000);
+        let span = ts.last().unwrap().arrival_s;
+        let rate = 4000.0 / span;
+        assert!(
+            (rate - 40.0).abs() / 40.0 < 0.35,
+            "empirical {rate} vs base 40 over {span}s"
+        );
+        assert!(span > 5.0 * 10.0, "must cover several periods, got {span}s");
+    }
+
+    #[test]
+    fn new_processes_are_seed_deterministic() {
+        for spec in ["mmpp:5,50,1,0.2", "diurnal:40,0.8,10"] {
+            let a = Arrivals::parse(spec).unwrap();
+            let mk = || {
+                TaskGen::new("resnet-18", Dataset::Cifar100, a, 77)
+                    .unwrap()
+                    .take(200)
+            };
+            let xs = mk();
+            let ys = mk();
+            for (x, y) in xs.iter().zip(ys.iter()) {
+                assert_eq!(x.arrival_s, y.arrival_s, "{spec}");
+                assert_eq!(x.sample_idx, y.sample_idx, "{spec}");
+            }
+        }
     }
 }

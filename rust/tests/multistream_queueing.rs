@@ -1,0 +1,212 @@
+//! Integration tests for the discrete-event multi-stream serving core
+//! (`rust/src/coordinator/des.rs`) and the extended arrival processes:
+//!
+//! * the N=1 parity gate — with one stream, sequential arrivals and
+//!   batching disabled, the discrete-event core must reproduce the
+//!   legacy synchronous `Coordinator::serve` results task-for-task
+//! * queueing/batching telemetry under 64-stream load
+//! * reproducibility and rate calibration of the MMPP / diurnal
+//!   arrival processes at the serving level
+
+use dvfo::configx::Config;
+use dvfo::coordinator::des::{serve_multistream, DesOpts};
+use dvfo::coordinator::Coordinator;
+use dvfo::perfmodel::Dataset;
+use dvfo::workload::{Arrivals, TaskGen};
+
+fn mk(policy: &str, seed: u64) -> (Config, Coordinator) {
+    let mut cfg = Config::default();
+    cfg.policy = policy.into();
+    cfg.seed = seed;
+    let coord = Coordinator::from_config(&cfg).unwrap();
+    (cfg, coord)
+}
+
+#[test]
+fn single_stream_matches_legacy_serve_exactly() {
+    // The parity gate: per-task reports must be bit-identical between the
+    // synchronous path and the discrete-event core for every policy kind
+    // (fixed, stochastic discriminator, untrained DQN greedy).
+    for policy in ["edge_only", "cloud_only", "appealnet", "dvfo"] {
+        let (cfg, mut legacy) = mk(policy, 42);
+        let mut gen =
+            TaskGen::new(&cfg.model, legacy.env.dataset, Arrivals::Sequential, 7).unwrap();
+        let tasks = gen.take(25);
+        let a = legacy.serve(&tasks);
+
+        let (cfg2, mut des) = mk(policy, 42);
+        let mut gens =
+            vec![TaskGen::new(&cfg2.model, des.env.dataset, Arrivals::Sequential, 7).unwrap()];
+        let b = serve_multistream(&mut des, &mut gens, 25, &DesOpts::default());
+
+        assert_eq!(a.count(), b.count(), "{policy}");
+        for (x, y) in a.reports.iter().zip(b.reports.iter()) {
+            assert_eq!(x.tti_total_s, y.tti_total_s, "{policy}: tti");
+            assert_eq!(x.eti_total_j, y.eti_total_j, "{policy}: eti");
+            assert_eq!(x.cost, y.cost, "{policy}: cost");
+            assert_eq!(x.xi, y.xi, "{policy}: xi");
+            assert_eq!(x.accuracy_pct, y.accuracy_pct, "{policy}: accuracy");
+            assert_eq!(x.payload_bytes, y.payload_bytes, "{policy}: payload");
+            assert_eq!(x.freqs, y.freqs, "{policy}: freqs");
+        }
+        // and the aggregate views agree too
+        assert_eq!(a.tti_ms.mean(), b.tti_ms.mean(), "{policy}");
+        assert_eq!(a.cost.mean(), b.cost.mean(), "{policy}");
+    }
+}
+
+#[test]
+fn sixty_four_streams_report_queueing_and_per_stream_energy() {
+    let (cfg, mut coord) = mk("cloud_only", 5);
+    let mut gens: Vec<TaskGen> = (0..64)
+        .map(|s| {
+            TaskGen::new(
+                &cfg.model,
+                coord.env.dataset,
+                Arrivals::Poisson { rate: 5.0 },
+                1000 + s,
+            )
+            .unwrap()
+        })
+        .collect();
+    let opts = DesOpts {
+        batch_window_s: 0.05,
+        ..DesOpts::default()
+    };
+    let s = serve_multistream(&mut coord, &mut gens, 6, &opts);
+    assert_eq!(s.count(), 64 * 6);
+
+    // per-stream energy telemetry: one positive total per stream
+    assert_eq!(s.per_stream_j.len(), 64);
+    assert!(s.per_stream_j.iter().all(|&e| e > 0.0));
+
+    // tail-latency telemetry is ordered and nonzero
+    let (p50, p95, p99) = (s.e2e_ms.p50(), s.e2e_ms.p95(), s.e2e_ms.p99());
+    assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+
+    // 64 streams offering ~320 req/s must overload one edge: real waits
+    assert!(
+        s.queue_wait_ms.p99() > s.tti_ms.mean(),
+        "queue p99 {} vs tti mean {}",
+        s.queue_wait_ms.p99(),
+        s.tti_ms.mean()
+    );
+
+    // cloud_only offloads every task: each rides in some uplink batch,
+    // and the 50 ms window groups at least some of them
+    assert!(s.batch_size.values().iter().all(|&b| b >= 1.0));
+    assert!(
+        s.batch_size.values().iter().any(|&b| b > 1.0),
+        "window should batch some uplinks"
+    );
+}
+
+#[test]
+fn batching_disabled_ships_singletons() {
+    let (cfg, mut coord) = mk("cloud_only", 9);
+    let mut gens: Vec<TaskGen> = (0..8)
+        .map(|s| {
+            TaskGen::new(
+                &cfg.model,
+                coord.env.dataset,
+                Arrivals::Poisson { rate: 50.0 },
+                70 + s,
+            )
+            .unwrap()
+        })
+        .collect();
+    let s = serve_multistream(&mut coord, &mut gens, 5, &DesOpts::default());
+    assert_eq!(s.count(), 40);
+    assert!(s
+        .batch_size
+        .values()
+        .iter()
+        .all(|&b| (b - 1.0).abs() < 1e-12));
+}
+
+#[test]
+fn des_is_deterministic_per_seed() {
+    let run = || {
+        let (cfg, mut coord) = mk("cloud_only", 33);
+        let mut gens: Vec<TaskGen> = (0..4)
+            .map(|s| {
+                TaskGen::new(
+                    &cfg.model,
+                    coord.env.dataset,
+                    Arrivals::parse("mmpp:10,80,1,0.3").unwrap(),
+                    900 + s,
+                )
+                .unwrap()
+            })
+            .collect();
+        let opts = DesOpts {
+            batch_window_s: 0.01,
+            ..DesOpts::default()
+        };
+        let s = serve_multistream(&mut coord, &mut gens, 8, &opts);
+        (s.e2e_ms.mean(), s.queue_wait_ms.mean(), s.cost.mean())
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn queue_aware_dvfo_trains_and_serves_multistream() {
+    let mut cfg = Config::default();
+    cfg.policy = "dvfo".into();
+    cfg.queue_aware = true;
+    cfg.seed = 21;
+    let mut coord = Coordinator::from_config(&cfg).unwrap();
+    let mut tgen =
+        TaskGen::new(&cfg.model, coord.env.dataset, Arrivals::Sequential, 3).unwrap();
+    coord.train(&mut tgen, 2, 8);
+    let mut gens: Vec<TaskGen> = (0..4)
+        .map(|s| {
+            TaskGen::new(
+                &cfg.model,
+                coord.env.dataset,
+                Arrivals::Poisson { rate: 20.0 },
+                500 + s,
+            )
+            .unwrap()
+        })
+        .collect();
+    let opts = DesOpts {
+        batch_window_s: 0.002,
+        ..DesOpts::default()
+    };
+    let s = serve_multistream(&mut coord, &mut gens, 10, &opts);
+    assert_eq!(s.count(), 40);
+    assert!(s.e2e_ms.mean() > 0.0);
+    assert!(s.accuracy_pct.mean() > 70.0);
+}
+
+#[test]
+fn mmpp_and_diurnal_streams_drive_the_core() {
+    for spec in ["mmpp:10,60,2,0.5", "diurnal:30,0.7,20"] {
+        let arr = Arrivals::parse(spec).unwrap();
+        let (cfg, mut coord) = mk("edge_only", 2);
+        let mut gens: Vec<TaskGen> = (0..3)
+            .map(|s| TaskGen::new(&cfg.model, coord.env.dataset, arr, 40 + s).unwrap())
+            .collect();
+        let s = serve_multistream(&mut coord, &mut gens, 6, &DesOpts::default());
+        assert_eq!(s.count(), 18, "{spec}");
+        assert!(s.e2e_ms.mean() > 0.0, "{spec}");
+    }
+}
+
+#[test]
+fn arrival_rate_calibration_poisson_and_mmpp() {
+    // Empirical interarrival means must track the configured rates at
+    // the TaskGen level (the same generators the serving core consumes).
+    for (spec, tol) in [("poisson:50", 0.2), ("mmpp:10,100,2,0.5", 0.3)] {
+        let arr = Arrivals::parse(spec).unwrap();
+        let mut g = TaskGen::new("resnet-18", Dataset::Cifar100, arr, 911).unwrap();
+        let ts = g.take(3000);
+        let rate = 3000.0 / ts.last().unwrap().arrival_s;
+        let want = arr.mean_rate().unwrap();
+        assert!(
+            (rate - want).abs() / want < tol,
+            "{spec}: empirical {rate} vs configured {want}"
+        );
+    }
+}

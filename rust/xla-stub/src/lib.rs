@@ -1,0 +1,167 @@
+//! Offline stand-in for the PJRT `xla` bindings.
+//!
+//! The dvfo runtime (`rust/src/runtime`) loads AOT HLO-text artifacts and
+//! executes them through PJRT. The real bindings need a compiled XLA
+//! toolchain which is not available in the offline build environment, so
+//! this in-tree stub provides the same API surface:
+//!
+//! * `Literal` construction/reshape/readback work for real (they are pure
+//!   host-side data plumbing, and the runtime unit tests exercise them).
+//! * Everything that would touch a PJRT device (`PjRtClient::cpu`,
+//!   `compile`, `execute`) returns a descriptive error, so the engine
+//!   fails loudly at load time instead of pretending to run artifacts.
+//!
+//! Swapping in the real bindings is a one-line change in
+//! `rust/Cargo.toml` (replace the path dependency); no runtime source
+//! changes are needed.
+
+use std::fmt;
+
+/// Error type matching the `?`/`with_context` usage in the runtime.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: PJRT is unavailable in this offline build (xla stub crate); \
+             link the real xla bindings to execute artifacts"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// A host-side literal: flat f32 data plus dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            data: data.to_vec(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reshape without copying semantics (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n != self.data.len() as i64 {
+            return Err(Error(format!(
+                "reshape to {dims:?} incompatible with {} elements",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Read the literal back as a flat vector (f32 only in the stub).
+    pub fn to_vec<T: Clone + 'static>(&self) -> Result<Vec<T>, Error> {
+        let any: &dyn std::any::Any = &self.data;
+        any.downcast_ref::<Vec<T>>()
+            .cloned()
+            .ok_or_else(|| Error::unavailable("Literal::to_vec (non-f32 element type)"))
+    }
+
+    /// Unpack a tuple literal — only produced by device execution, which
+    /// the stub cannot perform.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module handle (text is validated to exist, not parsed).
+pub struct HloModuleProto {
+    _path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        match std::fs::metadata(path) {
+            Ok(_) => Ok(HloModuleProto {
+                _path: path.to_string(),
+            }),
+            Err(e) => Err(Error(format!("reading HLO text {path}: {e}"))),
+        }
+    }
+}
+
+/// Computation handle built from an HLO proto.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client — creation fails in the stub so callers error at load
+/// time rather than at first execution.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_works_host_side() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn device_paths_error_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("PJRT is unavailable"));
+    }
+}
