@@ -1,0 +1,8 @@
+//! Fleet sweep — goodput/energy/violation curves vs offered load through
+//! the multi-edge dispatcher (`rust/src/coordinator/fleet.rs`): a
+//! heterogeneous 3-device fleet under energy-aware routing with a
+//! per-stream SLO, comparing admission control off / shed / downgrade at
+//! each load point (`DVFO_BENCH_FULL=1` for the full-size sweep).
+fn main() {
+    dvfo::bench_harness::run_experiment_bench("fleet");
+}

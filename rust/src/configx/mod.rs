@@ -48,6 +48,25 @@ pub struct Config {
     /// "bursty:<r>,<every_s>,<len>" | "mmpp:<lo>,<hi>,<dlo>,<dhi>" |
     /// "diurnal:<base>,<amp>,<period_s>".
     pub arrivals: String,
+    /// Maximum offloads per uplink batch (a full batch flushes before
+    /// the window closes).
+    pub max_batch: usize,
+    /// Concurrent cloud executors shared by the whole fleet (beyond
+    /// this, cloud work queues).
+    pub cloud_slots: usize,
+    /// Fleet spec: comma-separated edge device names, `name*count` for
+    /// repeats (e.g. "xavier-nx,jetson-nano*2"). Empty = one device of
+    /// `device` (the single-edge configuration).
+    pub fleet: String,
+    /// Fleet dispatch policy: "round_robin" | "shortest_queue" |
+    /// "least_backlog" (energy-aware).
+    pub router: String,
+    /// Per-stream SLO class: "none" | "<deadline_ms>" |
+    /// "<deadline_ms>,<priority>".
+    pub slo: String,
+    /// Admission control under overload: "off" | "shed" | "downgrade"
+    /// (downgrade forces edge-only execution instead of dropping).
+    pub admission: String,
     /// Widen the DVFO DQN state with queue-depth/backlog features so the
     /// policy reacts to load (changes the network shape, so off by
     /// default to preserve the paper's 8-dim formulation).
@@ -76,6 +95,12 @@ impl Default for Config {
             concurrent: true,
             streams: 1,
             batch_window_ms: 0.0,
+            max_batch: 16,
+            cloud_slots: 4,
+            fleet: String::new(),
+            router: "round_robin".into(),
+            slo: "none".into(),
+            admission: "off".into(),
             arrivals: "sequential".into(),
             queue_aware: false,
             seed: 0,
@@ -108,7 +133,9 @@ impl Config {
         let j = match key {
             "eta" | "lambda" | "batch_window_ms" => Json::Num(value.parse::<f64>()?),
             "freq_levels" | "xi_levels" | "requests" | "train_episodes"
-            | "streams" | "seed" => Json::Num(value.parse::<f64>()?),
+            | "streams" | "seed" | "max_batch" | "cloud_slots" => {
+                Json::Num(value.parse::<f64>()?)
+            }
             "concurrent" | "queue_aware" => Json::Bool(value.parse::<bool>()?),
             _ => Json::Str(value.to_string()),
         };
@@ -148,6 +175,12 @@ impl Config {
             "batch_window_ms" => {
                 self.batch_window_ms = v.as_f64().context("expected number")?
             }
+            "max_batch" => self.max_batch = v.as_usize().context("expected int")?,
+            "cloud_slots" => self.cloud_slots = v.as_usize().context("expected int")?,
+            "fleet" => str_field!(fleet),
+            "router" => str_field!(router),
+            "slo" => str_field!(slo),
+            "admission" => str_field!(admission),
             "arrivals" => str_field!(arrivals),
             "queue_aware" => self.queue_aware = v.as_bool().context("expected bool")?,
             "seed" => self.seed = v.as_f64().context("expected number")? as u64,
@@ -189,7 +222,19 @@ impl Config {
                 self.batch_window_ms
             );
         }
+        if self.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        if self.cloud_slots == 0 {
+            bail!("cloud_slots must be >= 1");
+        }
         crate::workload::Arrivals::parse(&self.arrivals).context("arrivals spec")?;
+        crate::workload::SloClass::parse(&self.slo).context("slo spec")?;
+        crate::coordinator::fleet::Router::parse(&self.router).context("router spec")?;
+        crate::coordinator::fleet::Admission::parse(&self.admission)
+            .context("admission spec")?;
+        crate::coordinator::fleet::parse_fleet_spec(&self.fleet, &self.device)
+            .context("fleet spec")?;
         crate::net::Bandwidth::parse(&self.bandwidth, self.seed)
             .context("bandwidth spec")?;
         Ok(())
@@ -255,6 +300,44 @@ mod tests {
         let c2 = Config::from_json(&j).unwrap();
         assert_eq!(c2.streams, 8);
         assert_eq!(c2.arrivals, "poisson:20");
+    }
+
+    #[test]
+    fn fleet_fields_parse_and_validate() {
+        let mut c = Config::default();
+        assert!(c.fleet.is_empty());
+        assert_eq!(c.router, "round_robin");
+        assert_eq!(c.slo, "none");
+        assert_eq!(c.admission, "off");
+        assert_eq!(c.max_batch, 16);
+        assert_eq!(c.cloud_slots, 4);
+        c.set("fleet", "xavier-nx,jetson-nano*2").unwrap();
+        c.set("router", "least_backlog").unwrap();
+        c.set("slo", "250,1").unwrap();
+        c.set("admission", "shed").unwrap();
+        c.set("max_batch", "8").unwrap();
+        c.set("cloud_slots", "2").unwrap();
+        assert_eq!(c.fleet, "xavier-nx,jetson-nano*2");
+        assert_eq!(c.max_batch, 8);
+        assert_eq!(c.cloud_slots, 2);
+        // bad values are rejected
+        let mut c = Config::default();
+        assert!(c.set("fleet", "warp-drive").is_err());
+        assert!(c.set("fleet", "xavier-nx*0").is_err());
+        assert!(c.set("router", "psychic").is_err());
+        assert!(c.set("slo", "-5").is_err());
+        assert!(c.set("admission", "maybe").is_err());
+        assert!(c.set("max_batch", "0").is_err());
+        assert!(c.set("cloud_slots", "0").is_err());
+        let j = Json::parse(
+            r#"{"fleet": "jetson-tx2*2", "router": "shortest_queue",
+                "slo": "100", "admission": "downgrade", "cloud_slots": 3}"#,
+        )
+        .unwrap();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c2.fleet, "jetson-tx2*2");
+        assert_eq!(c2.admission, "downgrade");
+        assert_eq!(c2.cloud_slots, 3);
     }
 
     #[test]

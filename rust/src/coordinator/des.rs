@@ -52,6 +52,18 @@ impl Default for DesOpts {
     }
 }
 
+impl DesOpts {
+    /// Build from a run config (`batch_window_ms`, `max_batch`,
+    /// `cloud_slots` config keys / CLI flags).
+    pub fn from_config(cfg: &crate::configx::Config) -> Self {
+        Self {
+            batch_window_s: cfg.batch_window_ms / 1e3,
+            max_batch: cfg.max_batch,
+            cloud_slots: cfg.cloud_slots,
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum EventKind {
     /// payload = stream index
@@ -92,11 +104,13 @@ impl PartialOrd for Event {
 
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest first
+        // reversed: BinaryHeap is a max-heap, we want earliest first.
+        // total_cmp gives NaN a fixed place in the order instead of
+        // silently collapsing it to Equal, so a NaN time can never
+        // reorder the heap nondeterministically.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -424,6 +438,75 @@ mod tests {
         q.push(0.5, EventKind::EdgeDone, 3);
         let order: Vec<usize> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
         assert_eq!(order, vec![3, 1, 2, 0]);
+    }
+
+    #[test]
+    fn event_queue_fifo_tiebreak_is_deterministic() {
+        // Property: pops come out in nondecreasing time order, and events
+        // with equal timestamps come out in insertion (FIFO) order. Times
+        // are quantized to a coarse grid so ties actually occur.
+        use crate::proptest_mini::{check, f64_in, vec_of};
+        check(
+            "event queue time order + FIFO ties",
+            0xDE5,
+            300,
+            vec_of(f64_in(0.0, 4.0), 1, 48),
+            |times| {
+                let mut q = EventQueue {
+                    heap: BinaryHeap::new(),
+                    seq: 0,
+                };
+                let quantized: Vec<f64> =
+                    times.iter().map(|t| (t * 4.0).floor() / 4.0).collect();
+                for (i, &t) in quantized.iter().enumerate() {
+                    q.push(t, EventKind::Arrival, i);
+                }
+                let mut prev: Option<Event> = None;
+                while let Some(ev) = q.pop() {
+                    if let Some(p) = prev {
+                        if ev.time < p.time {
+                            return Err(format!("time went backwards: {} < {}", ev.time, p.time));
+                        }
+                        if ev.time == p.time && ev.payload < p.payload {
+                            return Err(format!(
+                                "FIFO tiebreak violated at t={}: {} before {}",
+                                ev.time, p.payload, ev.payload
+                            ));
+                        }
+                    }
+                    prev = Some(ev);
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn nan_event_time_cannot_reorder_real_events() {
+        // total_cmp gives NaN a fixed slot (after +inf in ascending order,
+        // i.e. popped last from the min-ordered heap) instead of making
+        // comparisons against it nondeterministic.
+        let mut q = EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        };
+        q.push(f64::NAN, EventKind::Arrival, 0);
+        q.push(1.0, EventKind::Arrival, 1);
+        q.push(2.0, EventKind::Arrival, 2);
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn opts_from_config_picks_up_knobs() {
+        let mut cfg = Config::default();
+        cfg.batch_window_ms = 8.0;
+        cfg.max_batch = 5;
+        cfg.cloud_slots = 2;
+        let o = DesOpts::from_config(&cfg);
+        assert_eq!(o.batch_window_s, 0.008);
+        assert_eq!(o.max_batch, 5);
+        assert_eq!(o.cloud_slots, 2);
     }
 
     #[test]

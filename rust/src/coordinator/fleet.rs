@@ -1,0 +1,953 @@
+//! Fleet-scale serving: a multi-edge dispatcher layered over the
+//! discrete-event core.
+//!
+//! Where `des.rs` simulates one loaded edge node, this module owns a
+//! **fleet** of N heterogeneous edge devices. Each device is a full
+//! `Coordinator` (its own `EdgeCloudEnv`, DVFS state, FIFO/priority
+//! queue, residency estimate, and policy instance built from a
+//! per-device `DeviceSpec`), with its own uplink and batching window;
+//! all devices share one bounded cloud executor pool. Arriving tasks are
+//! routed by a pluggable [`Router`] (round-robin, join-shortest-queue,
+//! energy-aware least-backlog) and screened by an [`Admission`] policy:
+//! when the chosen device's estimated backlog would blow the task's SLO
+//! deadline, the dispatcher can shed the task outright or downgrade it
+//! to edge-only execution (skipping the uplink/cloud detour). Shed,
+//! downgrade, and SLO-violation counts are first-class telemetry next to
+//! the p50/p95/p99 latency percentiles.
+//!
+//! Per-task physics still come from `EdgeCloudEnv::execute` via
+//! `Coordinator::step_constrained`, invoked exactly once per task at
+//! edge-service start — so a 1-device fleet with round-robin routing, no
+//! SLOs, and admission disabled reproduces `serve_multistream` reports
+//! task-for-task (the parity gate in `rust/tests/fleet_serving.rs`).
+
+use super::{Coordinator, LoadSignals, ServeSummary};
+use crate::configx::Config;
+use crate::coordinator::des::DesOpts;
+use crate::coordinator::env::TaskReport;
+use crate::device::spec::find_device;
+use crate::util::Ewma;
+use crate::workload::{Arrivals, Task, TaskGen};
+use anyhow::{bail, Context, Result};
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Dispatch policy: which edge device an arriving task lands on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Router {
+    /// cycle through devices in index order
+    RoundRobin,
+    /// join-shortest-queue: fewest tasks queued or in service
+    ShortestQueue,
+    /// energy-aware least-backlog: minimize estimated backlog seconds
+    /// weighted by the device's power envelope, so work drifts toward
+    /// idle *and* efficient devices
+    LeastBacklog,
+}
+
+impl Router {
+    /// Parse a router spec: `round_robin` | `shortest_queue` | `least_backlog`
+    /// (aliases: `rr`, `jsq`, `energy`).
+    pub fn parse(spec: &str) -> Result<Router> {
+        Ok(match spec.trim() {
+            "round_robin" | "rr" => Router::RoundRobin,
+            "shortest_queue" | "jsq" => Router::ShortestQueue,
+            "least_backlog" | "energy" => Router::LeastBacklog,
+            other => bail!(
+                "unknown router `{other}` (want round_robin | shortest_queue | least_backlog)"
+            ),
+        })
+    }
+}
+
+/// What the dispatcher does with a task whose estimated completion time
+/// would blow its SLO deadline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// accept everything (no admission control)
+    Off,
+    /// drop doomed best-effort tasks; priority > 0 tasks are downgraded
+    /// to edge-only instead of dropped
+    Shed,
+    /// keep every task but force doomed ones to edge-only execution
+    /// (skips the uplink/cloud detour, freeing the shared pool)
+    Downgrade,
+}
+
+impl Admission {
+    /// Parse an admission spec: `off` | `shed` | `downgrade`.
+    pub fn parse(spec: &str) -> Result<Admission> {
+        Ok(match spec.trim() {
+            "off" | "none" => Admission::Off,
+            "shed" => Admission::Shed,
+            "downgrade" => Admission::Downgrade,
+            other => bail!("unknown admission policy `{other}` (want off | shed | downgrade)"),
+        })
+    }
+}
+
+/// Tunables of a fleet serving run.
+#[derive(Clone, Debug)]
+pub struct FleetOpts {
+    /// per-device DES tunables (uplink batch window + cap) and the size
+    /// of the *shared* cloud executor pool
+    pub des: DesOpts,
+    pub router: Router,
+    pub admission: Admission,
+}
+
+impl Default for FleetOpts {
+    fn default() -> Self {
+        Self {
+            des: DesOpts::default(),
+            router: Router::RoundRobin,
+            admission: Admission::Off,
+        }
+    }
+}
+
+impl FleetOpts {
+    /// Build from a run config (`fleet`/`router`/`slo`/`admission` plus
+    /// the DES knobs).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        Ok(Self {
+            des: DesOpts::from_config(cfg),
+            router: Router::parse(&cfg.router)?,
+            admission: Admission::parse(&cfg.admission)?,
+        })
+    }
+}
+
+/// Expand a fleet spec into a device-name list. Empty spec = one device
+/// of `default_device`. Entries are comma-separated device-zoo names,
+/// with `name*count` for homogeneous groups.
+pub fn parse_fleet_spec(spec: &str, default_device: &str) -> Result<Vec<String>> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        find_device(default_device)?;
+        return Ok(vec![default_device.to_string()]);
+    }
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!("empty device entry in fleet spec `{spec}`");
+        }
+        let (name, count) = match part.split_once('*') {
+            Some((n, c)) => (
+                n.trim(),
+                c.trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("fleet count `{c}` in `{part}`"))?,
+            ),
+            None => (part, 1),
+        };
+        if count == 0 {
+            bail!("fleet count must be >= 1 in `{part}`");
+        }
+        find_device(name)?;
+        for _ in 0..count {
+            out.push(name.to_string());
+        }
+    }
+    Ok(out)
+}
+
+/// The fleet: N per-device serving systems sharing a cloud pool.
+pub struct Fleet {
+    pub devices: Vec<Coordinator>,
+    pub names: Vec<String>,
+}
+
+impl Fleet {
+    /// Build one `Coordinator` per fleet entry. Device 0 uses the
+    /// config's seed unchanged (that is what the N=1 parity gate relies
+    /// on); later devices get decorrelated seeds.
+    pub fn from_config(cfg: &Config) -> Result<Fleet> {
+        let names = parse_fleet_spec(&cfg.fleet, &cfg.device)?;
+        let mut devices = Vec::with_capacity(names.len());
+        for (i, name) in names.iter().enumerate() {
+            let mut dcfg = cfg.clone();
+            dcfg.device = name.clone();
+            dcfg.seed = cfg.seed ^ ((i as u64) << 17);
+            devices.push(Coordinator::from_config(&dcfg)?);
+        }
+        Ok(Fleet { devices, names })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Offline-train every device's policy (no-op feedback for fixed
+    /// policies; callers usually gate this on the policy being a
+    /// learning one to save the wasted simulation).
+    pub fn train_offline(&mut self, episodes: usize, tasks_per_ep: usize, seed: u64) -> Result<()> {
+        for (i, coord) in self.devices.iter_mut().enumerate() {
+            let mut gen = TaskGen::new(
+                coord.env.profile.name,
+                coord.env.dataset,
+                Arrivals::Sequential,
+                seed ^ 0x7341 ^ ((i as u64) << 9),
+            )?;
+            coord.train(&mut gen, episodes, tasks_per_ep);
+        }
+        Ok(())
+    }
+}
+
+/// Per-device telemetry row of a fleet run.
+#[derive(Clone, Debug)]
+pub struct DeviceTelemetry {
+    pub name: String,
+    /// tasks that completed on this device
+    pub served: usize,
+    /// total energy spent by this device's completed tasks (J)
+    pub energy_j: f64,
+    /// completed tasks that missed their deadline
+    pub violations: usize,
+}
+
+/// Aggregated outcome of a fleet serving run: the usual latency/energy
+/// summary plus SLO/admission accounting.
+#[derive(Default)]
+pub struct FleetSummary {
+    pub serve: ServeSummary,
+    /// tasks generated by the streams
+    pub offered: usize,
+    /// tasks that ran to completion
+    pub completed: usize,
+    /// tasks dropped by admission control
+    pub shed: usize,
+    /// tasks forced to edge-only by admission control
+    pub downgraded: usize,
+    /// completed tasks whose end-to-end latency missed their deadline
+    pub slo_violations: usize,
+    /// completed tasks that met their deadline (== completed when no
+    /// task carries a deadline)
+    pub goodput: usize,
+    pub per_device: Vec<DeviceTelemetry>,
+}
+
+// ---------------------------------------------------------------------
+// event machinery: a device-tagged variant of des.rs (NaN-proof
+// ordering). Deliberately a parallel implementation for this PR so the
+// battle-tested single-edge path stays byte-identical; once a local
+// toolchain can re-gate parity, `serve_multistream` should delegate to
+// this engine with N=1 and the des.rs copy be deleted (ROADMAP item).
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Ev {
+    Arrival { stream: usize },
+    EdgeDone { dev: usize, job: usize },
+    BatchClose { dev: usize, generation: usize },
+    UplinkDone { dev: usize, batch: usize },
+    CloudDone { job: usize },
+}
+
+/// Heap entry; the `seq` tiebreak makes simultaneous events FIFO and the
+/// whole simulation deterministic.
+#[derive(Clone, Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl EventQueue {
+    fn push(&mut self, time: f64, ev: Ev) {
+        self.heap.push(Event {
+            time,
+            seq: self.seq,
+            ev,
+        });
+        self.seq += 1;
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+}
+
+/// One in-flight task.
+struct Job {
+    task: Task,
+    stream: usize,
+    dev: usize,
+    arrival_s: f64,
+    queue_wait_s: f64,
+    solo_off_s: f64,
+    cloud_s: f64,
+    payload_bytes: f64,
+    /// admission control forced this task to edge-only execution
+    downgraded: bool,
+    report: Option<TaskReport>,
+}
+
+/// Per-device queueing state (mirrors the single-edge `DesState`).
+struct DevState {
+    edge_queue: VecDeque<usize>,
+    edge_busy: bool,
+    /// EWMA of edge residency, drives backlog estimates for routing,
+    /// admission, and the policy's LoadSignals
+    residency: Ewma,
+    open_batch: Vec<usize>,
+    /// bumps on every flush so stale BatchClose events are ignored
+    batch_open_id: usize,
+    uplink_queue: VecDeque<usize>,
+    uplink_busy: bool,
+}
+
+impl DevState {
+    fn new() -> Self {
+        Self {
+            edge_queue: VecDeque::new(),
+            edge_busy: false,
+            residency: Ewma::new(0.2),
+            open_batch: Vec::new(),
+            batch_open_id: 0,
+            uplink_queue: VecDeque::new(),
+            uplink_busy: false,
+        }
+    }
+
+    /// Tasks queued or in service on this device.
+    fn in_system(&self) -> usize {
+        self.edge_queue.len() + self.edge_busy as usize
+    }
+
+    /// Estimated seconds until a newly queued task would *finish* edge
+    /// service, from the residency EWMA. `None` before the first
+    /// completion (cold start — admission stays open).
+    fn est_completion_s(&self) -> Option<f64> {
+        self.residency
+            .get()
+            .map(|res| res * (self.in_system() as f64 + 1.0))
+    }
+}
+
+struct FleetState {
+    q: EventQueue,
+    jobs: Vec<Job>,
+    devs: Vec<DevState>,
+    /// flushed batches, addressed by UplinkDone payload (global ids;
+    /// the owning device rides in the event)
+    batches: Vec<Vec<usize>>,
+    cloud_active: usize,
+    cloud_queue: VecDeque<usize>,
+    opts: FleetOpts,
+    rr_next: usize,
+    shed: usize,
+    downgraded: usize,
+}
+
+impl FleetState {
+    /// Pick the device for an arriving task.
+    fn route(&mut self, fleet: &Fleet) -> usize {
+        let n = self.devs.len();
+        match self.opts.router {
+            Router::RoundRobin => {
+                let d = self.rr_next % n;
+                self.rr_next += 1;
+                d
+            }
+            Router::ShortestQueue => (0..n)
+                .min_by_key(|&d| self.devs[d].in_system())
+                .unwrap_or(0),
+            Router::LeastBacklog => {
+                let score = |d: usize| {
+                    let res = self.devs[d].residency.get().unwrap_or(1.0);
+                    let power = fleet.devices[d].env.edge.spec().max_power_w;
+                    self.devs[d].in_system() as f64 * res * power
+                };
+                (0..n)
+                    .min_by(|&a, &b| score(a).total_cmp(&score(b)))
+                    .unwrap_or(0)
+            }
+        }
+    }
+
+    /// Queue a job on its device, honoring priority classes: a task
+    /// jumps ahead of queued lower-priority tasks (FIFO within a class,
+    /// so all-default-priority traffic keeps the exact legacy order).
+    fn enqueue_edge(&mut self, id: usize) {
+        let dev = self.jobs[id].dev;
+        let prio = self.jobs[id].task.priority;
+        if prio == 0 {
+            self.devs[dev].edge_queue.push_back(id);
+            return;
+        }
+        let pos = self.devs[dev]
+            .edge_queue
+            .iter()
+            .position(|&j| self.jobs[j].task.priority < prio)
+            .unwrap_or(self.devs[dev].edge_queue.len());
+        self.devs[dev].edge_queue.insert(pos, id);
+    }
+
+    /// Start edge service on the next queued job if the device is idle:
+    /// publish per-device load signals, run decide→execute through the
+    /// device's coordinator, and schedule the edge-completion event.
+    fn maybe_start_edge(&mut self, fleet: &mut Fleet, dev: usize, now: f64) {
+        if self.devs[dev].edge_busy {
+            return;
+        }
+        let Some(id) = self.devs[dev].edge_queue.pop_front() else {
+            return;
+        };
+        let coord = &mut fleet.devices[dev];
+        coord.load.queue_depth = self.devs[dev].edge_queue.len();
+        coord.load.backlog_s = self.devs[dev].residency.get().unwrap_or(0.0)
+            * self.devs[dev].edge_queue.len() as f64;
+        let force_edge = self.jobs[id].downgraded;
+        let r = coord.step_constrained(&self.jobs[id].task, false, force_edge);
+        let residency = (r.tti_total_s - r.tti_off_s - r.tti_cloud_s).max(0.0);
+        self.devs[dev].residency.push(residency);
+        let job = &mut self.jobs[id];
+        job.queue_wait_s = (now - job.arrival_s).max(0.0);
+        job.solo_off_s = r.tti_off_s;
+        job.cloud_s = r.tti_cloud_s;
+        job.payload_bytes = r.payload_bytes;
+        job.report = Some(r);
+        self.devs[dev].edge_busy = true;
+        self.q.push(now + residency, Ev::EdgeDone { dev, job: id });
+    }
+
+    fn freeze_batch(&mut self, members: Vec<usize>) -> usize {
+        self.batches.push(members);
+        self.batches.len() - 1
+    }
+
+    fn flush_open_batch(&mut self, fleet: &Fleet, dev: usize, now: f64) {
+        if self.devs[dev].open_batch.is_empty() {
+            return;
+        }
+        let members = std::mem::take(&mut self.devs[dev].open_batch);
+        self.devs[dev].batch_open_id += 1;
+        let b = self.freeze_batch(members);
+        self.devs[dev].uplink_queue.push_back(b);
+        self.maybe_start_uplink(fleet, dev, now);
+    }
+
+    /// Start transmitting the next batch on the device's uplink if it is
+    /// idle (singleton batches reuse the env-computed solo transmission
+    /// time; real batches ship the summed payload in one transfer).
+    fn maybe_start_uplink(&mut self, fleet: &Fleet, dev: usize, now: f64) {
+        if self.devs[dev].uplink_busy {
+            return;
+        }
+        let Some(b) = self.devs[dev].uplink_queue.pop_front() else {
+            return;
+        };
+        let members = self.batches[b].clone();
+        let tx_s = if members.len() == 1 {
+            self.jobs[members[0]].solo_off_s
+        } else {
+            let payload: f64 = members.iter().map(|&id| self.jobs[id].payload_bytes).sum();
+            fleet.devices[dev].env.link.tx_time_s(payload)
+        };
+        let n = members.len();
+        for &id in &members {
+            if let Some(r) = self.jobs[id].report.as_mut() {
+                r.batch_size = n;
+            }
+        }
+        self.devs[dev].uplink_busy = true;
+        self.q.push(now + tx_s, Ev::UplinkDone { dev, batch: b });
+    }
+
+    /// Hand a job to the shared cloud pool (or its queue).
+    fn dispatch_cloud(&mut self, id: usize, now: f64) {
+        if self.cloud_active < self.opts.des.cloud_slots {
+            self.cloud_active += 1;
+            self.q.push(now + self.jobs[id].cloud_s, Ev::CloudDone { job: id });
+        } else {
+            self.cloud_queue.push_back(id);
+        }
+    }
+
+    /// Stamp the queueing-aware fields on the job's report.
+    fn finish(&mut self, id: usize, now: f64) {
+        let job = &mut self.jobs[id];
+        if let Some(r) = job.report.as_mut() {
+            r.queue_wait_s = job.queue_wait_s;
+            r.e2e_s = (now - job.arrival_s).max(0.0);
+            r.stream = job.stream;
+        }
+    }
+
+    /// Admission decision for a routed task. Returns what to do given
+    /// the device's backlog estimate and the task's SLO class.
+    ///
+    /// The estimate is deliberately the *edge* backlog only (residency
+    /// EWMA × queue occupancy): at admission time the offload decision
+    /// hasn't been made yet, so uplink and cloud-pool time are unknown.
+    /// That makes this a lower bound on completion time — admission can
+    /// under-shed when the uplink or shared cloud pool is the
+    /// bottleneck, never over-shed. Folding a cloud/uplink wait estimate
+    /// in is a ROADMAP item.
+    fn admit(&self, dev: usize, task: &Task) -> Verdict {
+        if self.opts.admission == Admission::Off || !task.deadline_s.is_finite() {
+            return Verdict::Accept;
+        }
+        let Some(est) = self.devs[dev].est_completion_s() else {
+            // cold start: no residency estimate yet, accept everything
+            return Verdict::Accept;
+        };
+        if est <= task.deadline_s {
+            return Verdict::Accept;
+        }
+        match self.opts.admission {
+            Admission::Shed if task.priority == 0 => Verdict::Shed,
+            // high-priority tasks (and every task under `downgrade`)
+            // stay in the system but skip the cloud detour
+            _ => Verdict::Downgrade,
+        }
+    }
+}
+
+enum Verdict {
+    Accept,
+    Shed,
+    Downgrade,
+}
+
+/// Serve `per_stream` tasks from each stream through the fleet. Streams
+/// are routed per task by the configured router; reports accumulate in
+/// job-creation (arrival) order so a 1-device round-robin fleet is
+/// report-ordered exactly like `serve_multistream`.
+pub fn serve_fleet(
+    fleet: &mut Fleet,
+    gens: &mut [TaskGen],
+    per_stream: usize,
+    opts: &FleetOpts,
+) -> FleetSummary {
+    for coord in fleet.devices.iter_mut() {
+        coord.policy.set_training(false);
+    }
+    let mut summary = FleetSummary {
+        per_device: fleet
+            .names
+            .iter()
+            .map(|n| DeviceTelemetry {
+                name: n.clone(),
+                served: 0,
+                energy_j: 0.0,
+                violations: 0,
+            })
+            .collect(),
+        ..FleetSummary::default()
+    };
+    if gens.is_empty() || per_stream == 0 || fleet.devices.is_empty() {
+        return summary;
+    }
+    let streams = gens.len();
+    let mut state = FleetState {
+        q: EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        },
+        jobs: Vec::with_capacity(streams * per_stream),
+        devs: (0..fleet.len()).map(|_| DevState::new()).collect(),
+        batches: Vec::new(),
+        cloud_active: 0,
+        cloud_queue: VecDeque::new(),
+        opts: opts.clone(),
+        rr_next: 0,
+        shed: 0,
+        downgraded: 0,
+    };
+
+    // prime every stream with its first arrival
+    let mut next_task: Vec<Option<Task>> = Vec::with_capacity(streams);
+    let mut remaining: Vec<usize> = vec![per_stream; streams];
+    for (s, gen) in gens.iter_mut().enumerate() {
+        let t = gen.next_task();
+        remaining[s] -= 1;
+        state.q.push(t.arrival_s, Ev::Arrival { stream: s });
+        next_task.push(Some(t));
+    }
+
+    while let Some(ev) = state.q.pop() {
+        let now = ev.time;
+        match ev.ev {
+            Ev::Arrival { stream } => {
+                let task = next_task[stream]
+                    .take()
+                    .expect("arrival without pending task");
+                if remaining[stream] > 0 {
+                    remaining[stream] -= 1;
+                    let t = gens[stream].next_task();
+                    state.q.push(t.arrival_s, Ev::Arrival { stream });
+                    next_task[stream] = Some(t);
+                }
+                summary.offered += 1;
+                let dev = state.route(fleet);
+                let verdict = state.admit(dev, &task);
+                let downgraded = match verdict {
+                    Verdict::Shed => {
+                        state.shed += 1;
+                        continue;
+                    }
+                    Verdict::Downgrade => {
+                        state.downgraded += 1;
+                        true
+                    }
+                    Verdict::Accept => false,
+                };
+                let id = state.jobs.len();
+                state.jobs.push(Job {
+                    task,
+                    stream,
+                    dev,
+                    arrival_s: now,
+                    queue_wait_s: 0.0,
+                    solo_off_s: 0.0,
+                    cloud_s: 0.0,
+                    payload_bytes: 0.0,
+                    downgraded,
+                    report: None,
+                });
+                state.enqueue_edge(id);
+                state.maybe_start_edge(fleet, dev, now);
+            }
+            Ev::EdgeDone { dev, job: id } => {
+                state.devs[dev].edge_busy = false;
+                let offloads = state.jobs[id]
+                    .report
+                    .as_ref()
+                    .map(|r| r.xi > 0.0)
+                    .unwrap_or(false);
+                if offloads {
+                    if state.opts.des.batch_window_s > 0.0 {
+                        if state.devs[dev].open_batch.is_empty() {
+                            state.q.push(
+                                now + state.opts.des.batch_window_s,
+                                Ev::BatchClose {
+                                    dev,
+                                    generation: state.devs[dev].batch_open_id,
+                                },
+                            );
+                        }
+                        state.devs[dev].open_batch.push(id);
+                        if state.devs[dev].open_batch.len() >= state.opts.des.max_batch {
+                            state.flush_open_batch(fleet, dev, now);
+                        }
+                    } else {
+                        let b = state.freeze_batch(vec![id]);
+                        state.devs[dev].uplink_queue.push_back(b);
+                        state.maybe_start_uplink(fleet, dev, now);
+                    }
+                } else {
+                    state.finish(id, now);
+                }
+                state.maybe_start_edge(fleet, dev, now);
+            }
+            Ev::BatchClose { dev, generation } => {
+                if generation == state.devs[dev].batch_open_id {
+                    state.flush_open_batch(fleet, dev, now);
+                }
+            }
+            Ev::UplinkDone { dev, batch } => {
+                state.devs[dev].uplink_busy = false;
+                let members = state.batches[batch].clone();
+                for id in members {
+                    state.dispatch_cloud(id, now);
+                }
+                state.maybe_start_uplink(fleet, dev, now);
+            }
+            Ev::CloudDone { job: id } => {
+                state.cloud_active -= 1;
+                state.finish(id, now);
+                if let Some(next) = state.cloud_queue.pop_front() {
+                    state.cloud_active += 1;
+                    state
+                        .q
+                        .push(now + state.jobs[next].cloud_s, Ev::CloudDone { job: next });
+                }
+            }
+        }
+    }
+
+    // reset load signals so later synchronous use observes idle edges
+    for coord in fleet.devices.iter_mut() {
+        coord.load = LoadSignals::default();
+    }
+
+    summary.shed = state.shed;
+    summary.downgraded = state.downgraded;
+    for job in &state.jobs {
+        if let Some(r) = &job.report {
+            summary.serve.push(r);
+            summary.completed += 1;
+            let e2e = if r.e2e_s > 0.0 {
+                r.e2e_s
+            } else {
+                r.queue_wait_s + r.tti_total_s
+            };
+            let violated = job.task.deadline_s.is_finite() && e2e > job.task.deadline_s;
+            if violated {
+                summary.slo_violations += 1;
+            } else {
+                summary.goodput += 1;
+            }
+            let d = &mut summary.per_device[job.dev];
+            d.served += 1;
+            d.energy_j += r.eti_total_j;
+            if violated {
+                d.violations += 1;
+            }
+        }
+    }
+    summary
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::SloClass;
+
+    fn cfg(policy: &str, fleet: &str) -> Config {
+        let mut c = Config::default();
+        c.policy = policy.into();
+        c.fleet = fleet.into();
+        c.seed = 19;
+        c
+    }
+
+    fn gens(
+        fleet: &Fleet,
+        n: usize,
+        arrivals: Arrivals,
+        base_seed: u64,
+        slo: SloClass,
+    ) -> Vec<TaskGen> {
+        (0..n)
+            .map(|s| {
+                TaskGen::new(
+                    fleet.devices[0].env.profile.name,
+                    fleet.devices[0].env.dataset,
+                    arrivals,
+                    base_seed + s as u64,
+                )
+                .unwrap()
+                .with_slo(slo)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fleet_spec_expansion() {
+        assert_eq!(
+            parse_fleet_spec("", "xavier-nx").unwrap(),
+            vec!["xavier-nx"]
+        );
+        assert_eq!(
+            parse_fleet_spec("jetson-nano*2, jetson-tx2", "xavier-nx").unwrap(),
+            vec!["jetson-nano", "jetson-nano", "jetson-tx2"]
+        );
+        assert!(parse_fleet_spec("warp-core", "xavier-nx").is_err());
+        assert!(parse_fleet_spec("jetson-nano*0", "xavier-nx").is_err());
+        assert!(parse_fleet_spec("jetson-nano*x", "xavier-nx").is_err());
+        assert!(parse_fleet_spec(",", "xavier-nx").is_err());
+    }
+
+    #[test]
+    fn router_and_admission_parse() {
+        assert_eq!(Router::parse("rr").unwrap(), Router::RoundRobin);
+        assert_eq!(Router::parse("jsq").unwrap(), Router::ShortestQueue);
+        assert_eq!(Router::parse("energy").unwrap(), Router::LeastBacklog);
+        assert!(Router::parse("psychic").is_err());
+        assert_eq!(Admission::parse("off").unwrap(), Admission::Off);
+        assert_eq!(Admission::parse("shed").unwrap(), Admission::Shed);
+        assert_eq!(Admission::parse("downgrade").unwrap(), Admission::Downgrade);
+        assert!(Admission::parse("maybe").is_err());
+    }
+
+    #[test]
+    fn round_robin_spreads_tasks_across_heterogeneous_devices() {
+        let c = cfg("edge_only", "xavier-nx,jetson-nano,jetson-tx2");
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(
+            &fleet,
+            3,
+            Arrivals::Poisson { rate: 10.0 },
+            700,
+            SloClass::default(),
+        );
+        let s = serve_fleet(&mut fleet, &mut g, 4, &FleetOpts::default());
+        assert_eq!(s.offered, 12);
+        assert_eq!(s.completed, 12);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.per_device.len(), 3);
+        assert_eq!(s.per_device.iter().map(|d| d.served).sum::<usize>(), 12);
+        assert_eq!(s.per_device.iter().map(|d| d.served).collect::<Vec<_>>(), vec![4, 4, 4]);
+        assert!(s.per_device.iter().all(|d| d.energy_j > 0.0));
+    }
+
+    #[test]
+    fn shortest_queue_uses_every_device_under_load() {
+        let c = cfg("edge_only", "xavier-nx,jetson-nano");
+        c.validate().unwrap();
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(&fleet, 8, Arrivals::Sequential, 800, SloClass::default());
+        let opts = FleetOpts {
+            router: Router::ShortestQueue,
+            ..FleetOpts::default()
+        };
+        let s = serve_fleet(&mut fleet, &mut g, 4, &opts);
+        assert_eq!(s.completed, 32);
+        assert!(s.per_device.iter().all(|d| d.served > 0), "{:?}", s.per_device);
+    }
+
+    #[test]
+    fn least_backlog_prefers_the_fast_efficient_device() {
+        // xavier-nx is both faster and the backlog metric is
+        // power-weighted; it must end up with the lion's share.
+        let c = cfg("edge_only", "xavier-nx,jetson-nano");
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(&fleet, 6, Arrivals::Sequential, 900, SloClass::default());
+        let opts = FleetOpts {
+            router: Router::LeastBacklog,
+            ..FleetOpts::default()
+        };
+        let s = serve_fleet(&mut fleet, &mut g, 5, &opts);
+        assert_eq!(s.completed, 30);
+        assert!(
+            s.per_device[0].served >= s.per_device[1].served,
+            "{:?}",
+            s.per_device
+        );
+    }
+
+    #[test]
+    fn priority_tasks_jump_the_queue() {
+        // one stream of priority-2 tasks against seven best-effort
+        // streams, all arriving at t=0: the priority stream's mean queue
+        // wait must be below the best-effort mean.
+        let c = cfg("edge_only", "jetson-nano");
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(&fleet, 8, Arrivals::Sequential, 300, SloClass::default());
+        g[0] = TaskGen::new(
+            fleet.devices[0].env.profile.name,
+            fleet.devices[0].env.dataset,
+            Arrivals::Sequential,
+            300,
+        )
+        .unwrap()
+        .with_slo(SloClass {
+            deadline_s: f64::INFINITY,
+            priority: 2,
+        });
+        let s = serve_fleet(&mut fleet, &mut g, 4, &FleetOpts::default());
+        assert_eq!(s.completed, 32);
+        let mean_wait = |stream: usize| {
+            let ws: Vec<f64> = s
+                .serve
+                .reports
+                .iter()
+                .filter(|r| r.stream == stream)
+                .map(|r| r.queue_wait_s)
+                .collect();
+            ws.iter().sum::<f64>() / ws.len() as f64
+        };
+        let prio = mean_wait(0);
+        let best_effort =
+            (1..8).map(mean_wait).sum::<f64>() / 7.0;
+        assert!(
+            prio < best_effort,
+            "priority wait {prio} vs best-effort {best_effort}"
+        );
+    }
+
+    #[test]
+    fn downgrade_forces_edge_only_under_overload() {
+        // cloud_only policy wants xi=1 for every task; a tight deadline
+        // plus admission=downgrade must force some tasks to xi=0.
+        let c = cfg("cloud_only", "jetson-nano");
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let slo = SloClass::parse("60").unwrap();
+        let mut g = gens(&fleet, 8, Arrivals::Sequential, 400, slo);
+        let opts = FleetOpts {
+            admission: Admission::Downgrade,
+            ..FleetOpts::default()
+        };
+        let s = serve_fleet(&mut fleet, &mut g, 5, &opts);
+        assert_eq!(s.completed, 40, "downgrade never drops tasks");
+        assert_eq!(s.shed, 0);
+        assert!(s.downgraded > 0, "overload must trigger downgrades");
+        assert!(
+            s.serve.reports.iter().any(|r| r.xi == 0.0),
+            "downgraded tasks must run edge-only"
+        );
+        assert!(s.serve.reports.iter().any(|r| r.xi > 0.0));
+    }
+
+    #[test]
+    fn no_deadline_means_no_violations_and_full_goodput() {
+        let c = cfg("edge_only", "xavier-nx");
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(&fleet, 4, Arrivals::Sequential, 500, SloClass::default());
+        let s = serve_fleet(&mut fleet, &mut g, 3, &FleetOpts::default());
+        assert_eq!(s.slo_violations, 0);
+        assert_eq!(s.goodput, s.completed);
+        assert_eq!(s.completed, 12);
+    }
+
+    #[test]
+    fn fleet_run_is_deterministic_per_seed() {
+        let run = || {
+            let c = cfg("cloud_only", "xavier-nx,jetson-tx2");
+            let mut fleet = Fleet::from_config(&c).unwrap();
+            let slo = SloClass::parse("150").unwrap();
+            let mut g = gens(&fleet, 6, Arrivals::Poisson { rate: 40.0 }, 600, slo);
+            let opts = FleetOpts {
+                des: DesOpts {
+                    batch_window_s: 0.01,
+                    ..DesOpts::default()
+                },
+                router: Router::LeastBacklog,
+                admission: Admission::Shed,
+            };
+            let s = serve_fleet(&mut fleet, &mut g, 6, &opts);
+            (
+                s.completed,
+                s.shed,
+                s.slo_violations,
+                s.serve.e2e_ms.mean(),
+                s.serve.cost.mean(),
+            )
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -5,10 +5,12 @@
 
 pub mod des;
 pub mod env;
+pub mod fleet;
 pub mod pipeline;
 
 pub use des::{serve_multistream, DesOpts};
 pub use env::{Decision, EdgeCloudEnv, TaskReport, EXTRACTOR_FRAC};
+pub use fleet::{serve_fleet, Admission, Fleet, FleetOpts, FleetSummary, Router};
 
 use crate::configx::Config;
 use crate::device::spec::find_device;
@@ -207,8 +209,27 @@ impl Coordinator {
 
     /// Serve one task end-to-end (decide → execute → feedback).
     pub fn step(&mut self, task: &Task, learn: bool) -> TaskReport {
+        self.step_constrained(task, learn, false)
+    }
+
+    /// `step` with an optional admission-control override: when
+    /// `force_edge_only` is set, the policy still picks frequencies but
+    /// the offload proportion is clamped to ξ=0 (the fleet dispatcher's
+    /// "downgrade" action for tasks whose deadline the uplink/cloud
+    /// detour would blow).
+    pub fn step_constrained(
+        &mut self,
+        task: &Task,
+        learn: bool,
+        force_edge_only: bool,
+    ) -> TaskReport {
         let obs = self.observe(task);
-        let decision = self.policy.decide(&obs);
+        let mut decision = self.policy.decide(&obs);
+        if force_edge_only {
+            decision.xi = 0.0;
+            decision.compression = crate::offload::Compression::None;
+            decision.fusion = crate::accuracy::Fusion::Single;
+        }
         // thinking-while-moving: policy inference overlaps the ongoing
         // execution, so only a small residual lands on the critical path
         let lat = self.policy.decision_latency_s();

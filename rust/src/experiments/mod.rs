@@ -638,6 +638,87 @@ pub fn load_sweep(quick: bool) -> Result<Table> {
     Ok(t)
 }
 
+// ======================================================================
+// Fleet sweep — goodput/energy/violation curves vs offered load through
+// the multi-edge dispatcher: a heterogeneous 3-device fleet (the paper's
+// Table 3 edge boards) under energy-aware routing and a per-stream SLO,
+// with admission control off / shed / downgrade at each load point.
+// ======================================================================
+pub fn fleet_sweep(quick: bool) -> Result<Table> {
+    use crate::coordinator::des::DesOpts;
+    use crate::coordinator::fleet::{serve_fleet, Fleet, FleetOpts, Router};
+    use crate::workload::SloClass;
+    let mut t = Table::new(vec![
+        "streams",
+        "offered req/s",
+        "admission",
+        "offered",
+        "completed",
+        "shed",
+        "goodput",
+        "violations",
+        "e2e p50 ms",
+        "e2e p99 ms",
+        "mJ/task",
+    ]);
+    let streams_list: &[usize] = if quick { &[6, 24] } else { &[6, 24, 96] };
+    let per_stream = if quick { 8 } else { 30 };
+    let rate = 4.0; // req/s offered per stream
+    for &n in streams_list {
+        for admission in ["off", "shed", "downgrade"] {
+            let mut cfg = Config::default();
+            cfg.policy = "edge_only".into();
+            cfg.fleet = "xavier-nx,jetson-tx2,jetson-nano".into();
+            cfg.router = "least_backlog".into();
+            cfg.slo = "300".into();
+            cfg.admission = admission.into();
+            cfg.seed = 83;
+            let mut fleet = Fleet::from_config(&cfg)?;
+            let slo = SloClass::parse(&cfg.slo)?;
+            let mut gens = (0..n)
+                .map(|s| {
+                    Ok(TaskGen::new(
+                        &cfg.model,
+                        fleet.devices[0].env.dataset,
+                        Arrivals::Poisson { rate },
+                        7000 + s as u64,
+                    )?
+                    .with_slo(slo))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let opts = FleetOpts {
+                des: DesOpts {
+                    batch_window_s: 0.004,
+                    ..DesOpts::default()
+                },
+                router: Router::parse(&cfg.router)?,
+                admission: crate::coordinator::fleet::Admission::parse(admission)?,
+            };
+            let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
+            let mj_per_task = if s.completed > 0 {
+                1e3 * s.per_device.iter().map(|d| d.energy_j).sum::<f64>()
+                    / s.completed as f64
+            } else {
+                0.0
+            };
+            t.row(vec![
+                n.to_string(),
+                format!("{:.0}", rate * n as f64),
+                admission.to_string(),
+                s.offered.to_string(),
+                s.completed.to_string(),
+                s.shed.to_string(),
+                s.goodput.to_string(),
+                s.slo_violations.to_string(),
+                format!("{:.1}", s.serve.e2e_ms.p50()),
+                format!("{:.1}", s.serve.e2e_ms.p99()),
+                format!("{mj_per_task:.0}"),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
 /// Ablation (DESIGN.md §7): factored vs exact-joint argmax and oracle gap.
 pub fn ablation_action_space(requests: usize) -> Result<Table> {
     let mut t = Table::new(vec!["policy", "cost mean", "tti ms", "eti mJ"]);
@@ -685,13 +766,14 @@ pub fn run_by_name(name: &str, quick: bool) -> Result<Table> {
         "tab06" => tab_scalability("imagenet", req.min(60), eps),
         "ablation" => ablation_action_space(req.min(40)),
         "load" => load_sweep(quick),
+        "fleet" => fleet_sweep(quick),
         other => anyhow::bail!("unknown experiment `{other}`"),
     }
 }
 
 pub const ALL: &[&str] = &[
     "fig01", "fig02", "fig07", "fig08", "fig09", "fig10", "fig11", "fig12", "fig13",
-    "tab04", "fig14", "fig15", "fig16", "tab05", "tab06", "ablation", "load",
+    "tab04", "fig14", "fig15", "fig16", "tab05", "tab06", "ablation", "load", "fleet",
 ];
 
 #[cfg(test)]
@@ -733,6 +815,17 @@ mod tests {
         // one row per (streams, policy) cell
         assert_eq!(csv.lines().count(), 1 + 3 * 2);
         assert!(csv.contains("\n64,"), "64-stream cell present:\n{csv}");
+    }
+
+    #[test]
+    fn fleet_sweep_emits_goodput_columns() {
+        let t = fleet_sweep(true).unwrap();
+        let csv = t.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.contains("goodput") && header.contains("violations"));
+        // one row per (streams, admission) cell
+        assert_eq!(csv.lines().count(), 1 + 2 * 3);
+        assert!(csv.contains(",shed,"), "admission=shed cell present:\n{csv}");
     }
 
     #[test]

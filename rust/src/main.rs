@@ -11,9 +11,11 @@
 use dvfo::cli::{parse, Cmd};
 use dvfo::configx::Config;
 use dvfo::coordinator::pipeline::{Pipeline, PipelineRequest};
-use dvfo::coordinator::{serve_multistream, Coordinator, DesOpts};
+use dvfo::coordinator::{
+    serve_fleet, serve_multistream, Admission, Coordinator, DesOpts, Fleet, FleetOpts, Router,
+};
 use dvfo::telemetry::Table;
-use dvfo::workload::{Arrivals, TaskGen};
+use dvfo::workload::{Arrivals, SloClass, TaskGen};
 use std::path::Path;
 
 fn main() {
@@ -30,9 +32,12 @@ USAGE: dvfo <subcommand> [options]
 
 SUBCOMMANDS:
   serve        simulate serving a request stream with a policy
+               (single edge, or a multi-device fleet via --fleet/--router/
+               --slo/--admission)
   pipeline     run the real AOT-artifact pipeline (edge+cloud workers)
   experiment   regenerate a paper table/figure: fig01..fig16, tab04..tab06,
-               ablation, load (multi-stream load sweep), or `all`
+               ablation, load (multi-stream load sweep), fleet (multi-edge
+               goodput/energy/violation curves), or `all`
   train        offline DQN training, prints the learning curve
   devices      list the edge/cloud device zoo (paper Table 3)
   models       list the DNN model zoo
@@ -52,6 +57,48 @@ fn config_from(args: &dvfo::cli::Args) -> anyhow::Result<Config> {
     Ok(cfg)
 }
 
+fn print_reports(reports: &[dvfo::coordinator::TaskReport]) {
+    for r in reports {
+        println!(
+            "s={} xi={:.2} tti={:.1}ms queue={:.1}ms e2e={:.1}ms eti={:.0}mJ \
+             acc={:.2}% batch={} f=({:.0},{:.0},{:.0})",
+            r.stream,
+            r.xi,
+            r.tti_total_s * 1e3,
+            r.queue_wait_s * 1e3,
+            r.e2e_s.max(r.queue_wait_s + r.tti_total_s) * 1e3,
+            r.eti_total_j * 1e3,
+            r.accuracy_pct,
+            r.batch_size,
+            r.freqs[0],
+            r.freqs[1],
+            r.freqs[2]
+        );
+    }
+}
+
+fn print_summary_table(s: &dvfo::coordinator::ServeSummary) {
+    let mut t = Table::new(vec!["metric", "mean", "p50", "p95", "p99"]);
+    for (name, s) in [
+        ("tti ms", &s.tti_ms),
+        ("queue ms", &s.queue_wait_ms),
+        ("e2e ms", &s.e2e_ms),
+        ("eti mJ", &s.eti_mj),
+        ("accuracy %", &s.accuracy_pct),
+        ("xi", &s.xi),
+        ("payload KB", &s.payload_kb),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", s.mean()),
+            format!("{:.2}", s.p50()),
+            format!("{:.2}", s.p95()),
+            format!("{:.2}", s.p99()),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
 fn real_main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(sub) = argv.first().cloned() else {
@@ -67,6 +114,25 @@ fn real_main() -> anyhow::Result<()> {
                 .opt("requests", "number of requests (total across streams)", Some("200"))
                 .opt("streams", "concurrent user streams", None)
                 .opt("batch-window", "uplink batching window (ms, 0 = off)", None)
+                .opt("max-batch", "max offloads per uplink batch", None)
+                .opt("cloud-slots", "concurrent cloud executors (shared pool)", None)
+                .opt(
+                    "fleet",
+                    "edge fleet: comma-separated device names, name*count for \
+                     repeats (empty = single --set device=...)",
+                    None,
+                )
+                .opt(
+                    "router",
+                    "fleet dispatch: round_robin | shortest_queue | least_backlog",
+                    None,
+                )
+                .opt(
+                    "slo",
+                    "per-stream SLO class: none | <deadline_ms> | <deadline_ms>,<priority>",
+                    None,
+                )
+                .opt("admission", "admission control: off | shed | downgrade", None)
                 .opt(
                     "arrivals",
                     "per-stream arrival process: sequential | poisson:<r> | \
@@ -80,34 +146,32 @@ fn real_main() -> anyhow::Result<()> {
             cfg.requests = a.parse_or("requests", cfg.requests)?;
             cfg.streams = a.parse_or("streams", cfg.streams)?;
             cfg.batch_window_ms = a.parse_or("batch-window", cfg.batch_window_ms)?;
-            if let Some(spec) = a.get("arrivals") {
-                cfg.arrivals = spec.to_string();
+            cfg.max_batch = a.parse_or("max-batch", cfg.max_batch)?;
+            cfg.cloud_slots = a.parse_or("cloud-slots", cfg.cloud_slots)?;
+            for (key, flag) in [
+                ("arrivals", "arrivals"),
+                ("fleet", "fleet"),
+                ("router", "router"),
+                ("slo", "slo"),
+                ("admission", "admission"),
+            ] {
+                if let Some(spec) = a.get(flag) {
+                    cfg.set(key, spec)?;
+                }
             }
             cfg.validate()?;
             let arrivals = Arrivals::parse(&cfg.arrivals)?;
-            let mut coord = Coordinator::from_config(&cfg)?;
-            let mut gens = (0..cfg.streams)
-                .map(|stream| {
-                    TaskGen::new(
-                        &cfg.model,
-                        coord.env.dataset,
-                        arrivals,
-                        cfg.seed ^ 0x5E ^ ((stream as u64) << 8),
-                    )
-                })
-                .collect::<anyhow::Result<Vec<TaskGen>>>()?;
-            if matches!(cfg.policy.as_str(), "dvfo" | "drldo") {
-                eprintln!("[train] {} episodes offline...", cfg.train_episodes);
-                // dedicated closed-loop generator: training must not
-                // advance any serving stream's arrival clock
-                let mut tgen = TaskGen::new(
-                    &cfg.model,
-                    coord.env.dataset,
-                    Arrivals::Sequential,
-                    cfg.seed ^ 0x7341,
-                )?;
-                coord.train(&mut tgen, cfg.train_episodes, 24);
-            }
+            let slo = SloClass::parse(&cfg.slo)?;
+            let router = Router::parse(&cfg.router)?;
+            let admission = Admission::parse(&cfg.admission)?;
+            // the fleet path switches on when any fleet knob leaves its
+            // default (compared post-parse so aliases like `rr` or `none`
+            // don't flip the path); otherwise the legacy single-edge core
+            // runs
+            let fleet_mode = !cfg.fleet.trim().is_empty()
+                || router != Router::RoundRobin
+                || !slo.is_none()
+                || admission != Admission::Off;
             let per_stream = (cfg.requests / cfg.streams).max(1);
             if per_stream * cfg.streams != cfg.requests {
                 eprintln!(
@@ -118,72 +182,113 @@ fn real_main() -> anyhow::Result<()> {
                     cfg.streams
                 );
             }
-            let opts = DesOpts {
-                batch_window_s: cfg.batch_window_ms / 1e3,
-                ..DesOpts::default()
+            let mk_gens = |dataset| -> anyhow::Result<Vec<TaskGen>> {
+                (0..cfg.streams)
+                    .map(|stream| {
+                        Ok(TaskGen::new(
+                            &cfg.model,
+                            dataset,
+                            arrivals,
+                            cfg.seed ^ 0x5E ^ ((stream as u64) << 8),
+                        )?
+                        .with_slo(slo))
+                    })
+                    .collect()
             };
-            let s = serve_multistream(&mut coord, &mut gens, per_stream, &opts);
-            if a.flag("verbose") {
-                for r in &s.reports {
+            let learning = matches!(cfg.policy.as_str(), "dvfo" | "drldo");
+            if fleet_mode {
+                let mut fleet = Fleet::from_config(&cfg)?;
+                if learning {
+                    eprintln!(
+                        "[train] {} episodes offline x {} devices...",
+                        cfg.train_episodes,
+                        fleet.len()
+                    );
+                    fleet.train_offline(cfg.train_episodes, 24, cfg.seed)?;
+                }
+                let mut gens = mk_gens(fleet.devices[0].env.dataset)?;
+                let opts = FleetOpts {
+                    des: DesOpts::from_config(&cfg),
+                    router,
+                    admission,
+                };
+                let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
+                if a.flag("verbose") {
+                    print_reports(&s.serve.reports);
+                }
+                println!(
+                    "policy={} model={} dataset={} fleet=[{}] router={} slo={} admission={} \
+                     bw={} streams={} arrivals={} batch-window={}ms cloud-slots={}",
+                    cfg.policy,
+                    cfg.model,
+                    cfg.dataset,
+                    fleet.names.join(","),
+                    cfg.router,
+                    cfg.slo,
+                    cfg.admission,
+                    cfg.bandwidth,
+                    cfg.streams,
+                    cfg.arrivals,
+                    cfg.batch_window_ms,
+                    cfg.cloud_slots
+                );
+                print_summary_table(&s.serve);
+                println!(
+                    "offered={} completed={} shed={} downgraded={} violations={} goodput={}",
+                    s.offered, s.completed, s.shed, s.downgraded, s.slo_violations, s.goodput
+                );
+                for d in &s.per_device {
                     println!(
-                        "s={} xi={:.2} tti={:.1}ms queue={:.1}ms e2e={:.1}ms eti={:.0}mJ \
-                         acc={:.2}% batch={} f=({:.0},{:.0},{:.0})",
-                        r.stream,
-                        r.xi,
-                        r.tti_total_s * 1e3,
-                        r.queue_wait_s * 1e3,
-                        r.e2e_s.max(r.queue_wait_s + r.tti_total_s) * 1e3,
-                        r.eti_total_j * 1e3,
-                        r.accuracy_pct,
-                        r.batch_size,
-                        r.freqs[0],
-                        r.freqs[1],
-                        r.freqs[2]
+                        "  device {:<12} served={:<5} energy={:.1} J violations={}",
+                        d.name, d.served, d.energy_j, d.violations
                     );
                 }
-            }
-            let mut t = Table::new(vec!["metric", "mean", "p50", "p95", "p99"]);
-            for (name, s) in [
-                ("tti ms", &s.tti_ms),
-                ("queue ms", &s.queue_wait_ms),
-                ("e2e ms", &s.e2e_ms),
-                ("eti mJ", &s.eti_mj),
-                ("accuracy %", &s.accuracy_pct),
-                ("xi", &s.xi),
-                ("payload KB", &s.payload_kb),
-            ] {
-                t.row(vec![
-                    name.to_string(),
-                    format!("{:.2}", s.mean()),
-                    format!("{:.2}", s.p50()),
-                    format!("{:.2}", s.p95()),
-                    format!("{:.2}", s.p99()),
-                ]);
-            }
-            println!(
-                "policy={} model={} dataset={} device={} bw={} streams={} arrivals={} \
-                 batch-window={}ms",
-                cfg.policy,
-                cfg.model,
-                cfg.dataset,
-                cfg.device,
-                cfg.bandwidth,
-                cfg.streams,
-                cfg.arrivals,
-                cfg.batch_window_ms
-            );
-            println!("{}", t.render());
-            if cfg.streams > 1 {
-                let mean_mj = 1e3 * s.per_stream_j.iter().sum::<f64>()
-                    / s.per_stream_j.len().max(1) as f64;
-                let max_mj = 1e3
-                    * s.per_stream_j
-                        .iter()
-                        .fold(f64::NEG_INFINITY, |acc, &x| acc.max(x));
+            } else {
+                let mut coord = Coordinator::from_config(&cfg)?;
+                if learning {
+                    eprintln!("[train] {} episodes offline...", cfg.train_episodes);
+                    // dedicated closed-loop generator: training must not
+                    // advance any serving stream's arrival clock
+                    let mut tgen = TaskGen::new(
+                        &cfg.model,
+                        coord.env.dataset,
+                        Arrivals::Sequential,
+                        cfg.seed ^ 0x7341,
+                    )?;
+                    coord.train(&mut tgen, cfg.train_episodes, 24);
+                }
+                let mut gens = mk_gens(coord.env.dataset)?;
+                let opts = DesOpts::from_config(&cfg);
+                let s = serve_multistream(&mut coord, &mut gens, per_stream, &opts);
+                if a.flag("verbose") {
+                    print_reports(&s.reports);
+                }
                 println!(
-                    "per-stream energy: mean {mean_mj:.0} mJ, max {max_mj:.0} mJ over {} streams",
-                    s.per_stream_j.len()
+                    "policy={} model={} dataset={} device={} bw={} streams={} arrivals={} \
+                     batch-window={}ms",
+                    cfg.policy,
+                    cfg.model,
+                    cfg.dataset,
+                    cfg.device,
+                    cfg.bandwidth,
+                    cfg.streams,
+                    cfg.arrivals,
+                    cfg.batch_window_ms
                 );
+                print_summary_table(&s);
+                if cfg.streams > 1 {
+                    let mean_mj = 1e3 * s.per_stream_j.iter().sum::<f64>()
+                        / s.per_stream_j.len().max(1) as f64;
+                    let max_mj = 1e3
+                        * s.per_stream_j
+                            .iter()
+                            .fold(f64::NEG_INFINITY, |acc, &x| acc.max(x));
+                    println!(
+                        "per-stream energy: mean {mean_mj:.0} mJ, max {max_mj:.0} mJ \
+                         over {} streams",
+                        s.per_stream_j.len()
+                    );
+                }
             }
         }
         "pipeline" => {
@@ -233,7 +338,7 @@ fn real_main() -> anyhow::Result<()> {
         }
         "experiment" => {
             let cmd = Cmd::new("dvfo experiment", "regenerate a paper table/figure")
-                .positional("id", "fig01..fig16 | tab04..tab06 | ablation | load | all")
+                .positional("id", "fig01..fig16 | tab04..tab06 | ablation | load | fleet | all")
                 .flag("full", "full-size sweep (slower)")
                 .opt("csv", "also write CSV to this directory", None);
             let a = parse(&cmd, rest)?;

@@ -11,6 +11,12 @@ use crate::util::Pcg32;
 /// S = {λ, η, x~p(a), B}, with the importance distribution summarized to
 /// fixed-width features, plus the previous action for the concurrent
 /// formulation).
+///
+/// The observation is strictly **per-device**: in fleet serving every
+/// edge device owns its own policy instance, and the dispatcher
+/// publishes that device's `LoadSignals` (queue depth + backlog) before
+/// each decision — so the featurization stays 8-dim (10-dim with
+/// `queue_aware`) no matter how many devices the fleet has.
 #[derive(Clone, Debug)]
 pub struct Obs {
     pub lambda: f64,

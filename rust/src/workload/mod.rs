@@ -16,6 +16,66 @@ pub struct Task {
     pub importance: ImportanceDist,
     /// index into the synthetic test set (real-artifact path only)
     pub sample_idx: usize,
+    /// end-to-end deadline relative to arrival (∞ = best-effort)
+    pub deadline_s: f64,
+    /// SLO priority class (higher = more important; 0 = best-effort)
+    pub priority: u8,
+}
+
+/// Per-stream service-level objective: a relative deadline plus a
+/// priority class. The fleet dispatcher counts deadline misses as SLO
+/// violations, jumps high-priority tasks ahead in per-device queues, and
+/// (under admission control) sheds or downgrades tasks whose estimated
+/// completion would blow the deadline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloClass {
+    /// relative deadline in seconds (∞ = no deadline)
+    pub deadline_s: f64,
+    /// priority (higher wins the queue; admission never sheds prio > 0)
+    pub priority: u8,
+}
+
+impl Default for SloClass {
+    fn default() -> Self {
+        Self {
+            deadline_s: f64::INFINITY,
+            priority: 0,
+        }
+    }
+}
+
+impl SloClass {
+    /// Parse an SLO spec: `none` | `<deadline_ms>` | `<deadline_ms>,<priority>`.
+    pub fn parse(spec: &str) -> Result<SloClass> {
+        let s = spec.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(SloClass::default());
+        }
+        let (dl, prio) = match s.split_once(',') {
+            Some((d, p)) => (
+                d.trim(),
+                p.trim()
+                    .parse::<u8>()
+                    .with_context(|| format!("slo priority `{p}`"))?,
+            ),
+            None => (s, 0),
+        };
+        let ms: f64 = dl
+            .parse()
+            .with_context(|| format!("slo deadline `{dl}` (want ms)"))?;
+        if !(ms > 0.0 && ms.is_finite()) {
+            bail!("slo deadline must be a positive finite ms value, got `{dl}`");
+        }
+        Ok(SloClass {
+            deadline_s: ms / 1e3,
+            priority: prio,
+        })
+    }
+
+    /// True when the class imposes nothing (no deadline, base priority).
+    pub fn is_none(&self) -> bool {
+        self.deadline_s.is_infinite() && self.priority == 0
+    }
 }
 
 /// Arrival process shapes.
@@ -65,13 +125,14 @@ impl Arrivals {
             .with_context(|| format!("arrivals `{kind}` wants comma-separated numbers"))?;
         match (kind, nums.as_slice()) {
             ("poisson", [rate]) => {
-                if *rate <= 0.0 {
-                    bail!("poisson rate must be positive");
+                // `!(x > 0)` rather than `x <= 0` so NaN is rejected too
+                if !(*rate > 0.0 && rate.is_finite()) {
+                    bail!("poisson rate must be positive and finite");
                 }
                 Ok(Arrivals::Poisson { rate: *rate })
             }
             ("bursty", [rate, every_s, len]) => {
-                if *rate <= 0.0 || *every_s <= 0.0 || *len < 1.0 {
+                if !(*rate > 0.0 && *every_s > 0.0 && *len >= 1.0) {
                     bail!("bursty wants rate>0, every_s>0, len>=1");
                 }
                 Ok(Arrivals::Bursty {
@@ -143,6 +204,8 @@ pub struct TaskGen {
     /// remaining dwell in the current MMPP regime (<0 = uninitialized)
     mmpp_left_s: f64,
     testset_count: usize,
+    /// SLO class stamped on every generated task
+    slo: SloClass,
 }
 
 impl TaskGen {
@@ -164,7 +227,19 @@ impl TaskGen {
             mmpp_high: false,
             mmpp_left_s: -1.0,
             testset_count: 256,
+            slo: SloClass::default(),
         })
+    }
+
+    /// Attach an SLO class: every task this generator produces carries
+    /// the class's deadline and priority.
+    pub fn with_slo(mut self, slo: SloClass) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    pub fn slo(&self) -> SloClass {
+        self.slo
     }
 
     pub fn profile(&self) -> &ModelProfile {
@@ -255,6 +330,8 @@ impl TaskGen {
             dataset: self.dataset,
             importance: ImportanceDist::synthetic(self.channels, skew, &mut self.rng),
             sample_idx: (self.rng.below(self.testset_count as u32)) as usize,
+            deadline_s: self.slo.deadline_s,
+            priority: self.slo.priority,
         }
     }
 
@@ -367,6 +444,68 @@ mod tests {
         ] {
             assert!(Arrivals::parse(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_nonpositive_rates() {
+        for bad in [
+            "",
+            ":",
+            "poisson:",
+            "poisson:0",
+            "poisson:-1",
+            "poisson:abc",
+            "poisson:NaN",
+            "poisson:inf",
+            "poisson:1,2",
+            "bursty:-5,1,3",
+            "bursty:5,-1,3",
+            "bursty:5,1,0",
+            "bursty:NaN,1,3",
+            "mmpp:1,2,3",
+            "mmpp:1,2,3,4,5",
+            "mmpp:1,2,-3,4",
+            "mmpp:1,2,3,-4",
+            "mmpp:NaN,2,3,4",
+            "diurnal:10,0.5,-2",
+            "diurnal:10,NaN,2",
+            "sequential:1",
+            "🚀:1",
+        ] {
+            assert!(Arrivals::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn slo_class_parses_and_rejects() {
+        assert!(SloClass::parse("none").unwrap().is_none());
+        assert!(SloClass::parse("").unwrap().is_none());
+        let c = SloClass::parse("250").unwrap();
+        assert!((c.deadline_s - 0.25).abs() < 1e-12 && c.priority == 0);
+        let c = SloClass::parse("100,3").unwrap();
+        assert!((c.deadline_s - 0.1).abs() < 1e-12 && c.priority == 3);
+        assert!(!c.is_none());
+        for bad in ["-5", "0", "NaN", "inf", "abc", "100,-1", "100,x", "100,300"] {
+            assert!(SloClass::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn taskgen_stamps_slo_on_every_task() {
+        let slo = SloClass::parse("200,2").unwrap();
+        let mut g = TaskGen::new("resnet-18", Dataset::Cifar100, Arrivals::Sequential, 4)
+            .unwrap()
+            .with_slo(slo);
+        for t in g.take(5) {
+            assert_eq!(t.deadline_s, 0.2);
+            assert_eq!(t.priority, 2);
+        }
+        // default: best-effort
+        let mut g = TaskGen::new("resnet-18", Dataset::Cifar100, Arrivals::Sequential, 4)
+            .unwrap();
+        let t = g.next_task();
+        assert!(t.deadline_s.is_infinite());
+        assert_eq!(t.priority, 0);
     }
 
     #[test]

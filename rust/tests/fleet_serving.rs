@@ -1,0 +1,225 @@
+//! Integration tests for the multi-edge fleet dispatcher
+//! (`rust/src/coordinator/fleet.rs`):
+//!
+//! * the fleet parity gate — a 1-device fleet with round-robin routing,
+//!   no SLOs, and admission disabled must reproduce `serve_multistream`
+//!   reports task-for-task
+//! * admission control under overload strictly reduces p99 latency and
+//!   SLO violations versus no admission
+//! * heterogeneous routing and SLO accounting sanity
+
+use dvfo::configx::Config;
+use dvfo::coordinator::des::{serve_multistream, DesOpts};
+use dvfo::coordinator::fleet::{serve_fleet, Admission, Fleet, FleetOpts, Router};
+use dvfo::coordinator::Coordinator;
+use dvfo::workload::{Arrivals, SloClass, TaskGen};
+
+fn cfg(policy: &str, seed: u64) -> Config {
+    let mut c = Config::default();
+    c.policy = policy.into();
+    c.seed = seed;
+    c
+}
+
+fn gens(
+    c: &Config,
+    dataset: dvfo::perfmodel::Dataset,
+    n: usize,
+    arrivals: Arrivals,
+    base: u64,
+) -> Vec<TaskGen> {
+    (0..n)
+        .map(|s| TaskGen::new(&c.model, dataset, arrivals, base + s as u64).unwrap())
+        .collect()
+}
+
+#[test]
+fn one_device_fleet_matches_serve_multistream_exactly() {
+    // The parity gate: a 1-device fleet with round-robin routing, no
+    // SLOs, and admission disabled must reproduce the single-edge
+    // discrete-event core report-for-report, for every policy kind and
+    // for both batched and unbatched uplinks.
+    for policy in ["edge_only", "cloud_only", "appealnet", "dvfo"] {
+        for batch_window_s in [0.0, 0.02] {
+            let opts = DesOpts {
+                batch_window_s,
+                ..DesOpts::default()
+            };
+
+            let c1 = cfg(policy, 42);
+            let mut des = Coordinator::from_config(&c1).unwrap();
+            let mut g1 = gens(&c1, des.env.dataset, 3, Arrivals::Poisson { rate: 30.0 }, 7);
+            let a = serve_multistream(&mut des, &mut g1, 8, &opts);
+
+            let c2 = cfg(policy, 42);
+            let mut fleet = Fleet::from_config(&c2).unwrap();
+            assert_eq!(fleet.len(), 1);
+            assert_eq!(fleet.names, vec![c2.device.clone()]);
+            let arr = Arrivals::Poisson { rate: 30.0 };
+            let mut g2 = gens(&c2, fleet.devices[0].env.dataset, 3, arr, 7);
+            let fopts = FleetOpts {
+                des: opts.clone(),
+                router: Router::RoundRobin,
+                admission: Admission::Off,
+            };
+            let b = serve_fleet(&mut fleet, &mut g2, 8, &fopts);
+
+            assert_eq!(a.count(), b.serve.count(), "{policy}");
+            assert_eq!(b.offered, b.completed, "{policy}: nothing shed");
+            assert_eq!(b.shed, 0, "{policy}");
+            assert_eq!(b.downgraded, 0, "{policy}");
+            assert_eq!(b.slo_violations, 0, "{policy}");
+            for (x, y) in a.reports.iter().zip(b.serve.reports.iter()) {
+                assert_eq!(x.tti_total_s, y.tti_total_s, "{policy}: tti");
+                assert_eq!(x.eti_total_j, y.eti_total_j, "{policy}: eti");
+                assert_eq!(x.cost, y.cost, "{policy}: cost");
+                assert_eq!(x.xi, y.xi, "{policy}: xi");
+                assert_eq!(x.accuracy_pct, y.accuracy_pct, "{policy}: accuracy");
+                assert_eq!(x.payload_bytes, y.payload_bytes, "{policy}: payload");
+                assert_eq!(x.freqs, y.freqs, "{policy}: freqs");
+                assert_eq!(x.queue_wait_s, y.queue_wait_s, "{policy}: queue wait");
+                assert_eq!(x.e2e_s, y.e2e_s, "{policy}: e2e");
+                assert_eq!(x.batch_size, y.batch_size, "{policy}: batch size");
+                assert_eq!(x.stream, y.stream, "{policy}: stream tag");
+            }
+            assert_eq!(a.e2e_ms.mean(), b.serve.e2e_ms.mean(), "{policy}");
+            assert_eq!(a.cost.mean(), b.serve.cost.mean(), "{policy}");
+        }
+    }
+}
+
+/// Overload helper: one small device, offered load far beyond its
+/// capacity, every task carrying a 200 ms deadline.
+fn overloaded_run(admission: Admission) -> dvfo::coordinator::FleetSummary {
+    let mut c = cfg("edge_only", 11);
+    c.fleet = "jetson-nano".into();
+    let mut fleet = Fleet::from_config(&c).unwrap();
+    let slo = SloClass::parse("200").unwrap();
+    let mut g: Vec<TaskGen> = (0..16)
+        .map(|s| {
+            TaskGen::new(
+                &c.model,
+                fleet.devices[0].env.dataset,
+                Arrivals::Poisson { rate: 10.0 },
+                3000 + s as u64,
+            )
+            .unwrap()
+            .with_slo(slo)
+        })
+        .collect();
+    let opts = FleetOpts {
+        admission,
+        ..FleetOpts::default()
+    };
+    serve_fleet(&mut fleet, &mut g, 6, &opts)
+}
+
+#[test]
+fn admission_shed_cuts_p99_latency_and_violations_under_overload() {
+    let off = overloaded_run(Admission::Off);
+    let shed = overloaded_run(Admission::Shed);
+
+    // the no-admission run is genuinely overloaded
+    assert_eq!(off.offered, 96);
+    assert_eq!(off.completed, 96);
+    assert!(
+        off.slo_violations > off.completed / 2,
+        "overload must blow most deadlines: {} of {}",
+        off.slo_violations,
+        off.completed
+    );
+
+    // shedding actually happened, and what remained met more deadlines
+    assert!(shed.shed > 0, "admission must shed under overload");
+    assert_eq!(shed.completed + shed.shed, shed.offered);
+    assert!(
+        shed.serve.e2e_ms.p99() < off.serve.e2e_ms.p99(),
+        "shed p99 {} must be strictly below no-admission p99 {}",
+        shed.serve.e2e_ms.p99(),
+        off.serve.e2e_ms.p99()
+    );
+    assert!(
+        shed.slo_violations < off.slo_violations,
+        "shed violations {} must be strictly below no-admission {}",
+        shed.slo_violations,
+        off.slo_violations
+    );
+    // goodput rate among completed tasks improves too
+    let off_rate = off.goodput as f64 / off.completed as f64;
+    let shed_rate = shed.goodput as f64 / shed.completed as f64;
+    assert!(
+        shed_rate > off_rate,
+        "goodput rate {shed_rate} vs {off_rate}"
+    );
+}
+
+#[test]
+fn heterogeneous_fleet_shrinks_tail_latency_vs_single_overloaded_device() {
+    // Same offered load on a lone jetson-nano (massively overloaded) vs
+    // a 3-device fleet that adds tx2 + xavier capacity: every device
+    // must contribute and the tail must collapse.
+    let run = |fleet_spec: &str, router: Router| {
+        let mut c = cfg("edge_only", 13);
+        c.fleet = fleet_spec.into();
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(
+            &c,
+            fleet.devices[0].env.dataset,
+            8,
+            Arrivals::Poisson { rate: 6.0 },
+            5000,
+        );
+        let opts = FleetOpts {
+            router,
+            ..FleetOpts::default()
+        };
+        serve_fleet(&mut fleet, &mut g, 5, &opts)
+    };
+    let single = run("jetson-nano", Router::RoundRobin);
+    let fleet = run("jetson-nano,jetson-tx2,xavier-nx", Router::ShortestQueue);
+    assert_eq!(single.completed, 40);
+    assert_eq!(fleet.completed, 40);
+    assert!(fleet.per_device.iter().all(|d| d.served > 0));
+    assert!(
+        fleet.serve.e2e_ms.p95() < single.serve.e2e_ms.p95(),
+        "fleet p95 {} vs single-device p95 {}",
+        fleet.serve.e2e_ms.p95(),
+        single.serve.e2e_ms.p95()
+    );
+}
+
+#[test]
+fn cloud_pool_is_shared_across_the_fleet() {
+    // cloud_only traffic from every device lands in ONE bounded pool.
+    // Batching dumps several offloads onto the pool at the same instant,
+    // so a 1-slot pool serializes them and mean end-to-end latency must
+    // come out strictly above the 8-slot run (the simulation is
+    // deterministic, so any pool wait at all separates the two).
+    let run = |slots: usize| {
+        let mut c = cfg("cloud_only", 17);
+        c.fleet = "xavier-nx,jetson-tx2".into();
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(&c, fleet.devices[0].env.dataset, 8, Arrivals::Sequential, 6000);
+        let opts = FleetOpts {
+            des: DesOpts {
+                batch_window_s: 0.05,
+                cloud_slots: slots,
+                ..DesOpts::default()
+            },
+            ..FleetOpts::default()
+        };
+        serve_fleet(&mut fleet, &mut g, 4, &opts)
+    };
+    let tight = run(1);
+    let wide = run(8);
+    assert_eq!(tight.completed, 32);
+    assert_eq!(wide.completed, 32);
+    // batching actually grouped offloads
+    assert!(tight.serve.batch_size.values().iter().any(|&b| b > 1.0));
+    assert!(
+        tight.serve.e2e_ms.mean() > wide.serve.e2e_ms.mean(),
+        "1-slot pool mean {} must exceed 8-slot mean {}",
+        tight.serve.e2e_ms.mean(),
+        wide.serve.e2e_ms.mean()
+    );
+}
