@@ -1,0 +1,11 @@
+//! Cloud-batch sweep — goodput and executor occupancy vs the
+//! cloud-side cross-device batching window
+//! (`rust/src/coordinator/engine.rs`): cloud-heavy traffic from a
+//! 2-device fleet into a tight shared executor pool, sweeping
+//! `--cloud-batch-window` from 0 (pre-batching behavior) upward and
+//! emitting invocation counts, batch occupancy, amortized dispatch
+//! time, total executor busy time, and latency telemetry
+//! (`DVFO_BENCH_FULL=1` for the full-size sweep).
+fn main() {
+    dvfo::bench_harness::run_experiment_bench("cloudbatch");
+}

@@ -54,6 +54,14 @@ pub struct Config {
     /// Concurrent cloud executors shared by the whole fleet (beyond
     /// this, cloud work queues).
     pub cloud_slots: usize,
+    /// Cloud-side batching window in milliseconds (0 = no batching):
+    /// cloud work arriving within the window — across devices in a
+    /// fleet — merges into one batched executor invocation that pays
+    /// the service-runtime dispatch overhead once.
+    pub cloud_batch_window_ms: f64,
+    /// Maximum jobs per batched cloud invocation (a full batch flushes
+    /// before the window closes).
+    pub cloud_max_batch: usize,
     /// Fleet spec: comma-separated edge device names, `name*count` for
     /// repeats (e.g. "xavier-nx,jetson-nano*2"). Empty = one device of
     /// `device` (the single-edge configuration).
@@ -97,6 +105,8 @@ impl Default for Config {
             batch_window_ms: 0.0,
             max_batch: 16,
             cloud_slots: 4,
+            cloud_batch_window_ms: 0.0,
+            cloud_max_batch: 16,
             fleet: String::new(),
             router: "round_robin".into(),
             slo: "none".into(),
@@ -131,9 +141,11 @@ impl Config {
     /// Apply one `key=value` override (all values accepted as strings).
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let j = match key {
-            "eta" | "lambda" | "batch_window_ms" => Json::Num(value.parse::<f64>()?),
-            "freq_levels" | "xi_levels" | "requests" | "train_episodes"
-            | "streams" | "seed" | "max_batch" | "cloud_slots" => {
+            // every numeric key rides through Json::Num; apply() picks
+            // the float vs integer interpretation per field
+            "eta" | "lambda" | "batch_window_ms" | "cloud_batch_window_ms"
+            | "freq_levels" | "xi_levels" | "requests" | "train_episodes"
+            | "streams" | "seed" | "max_batch" | "cloud_slots" | "cloud_max_batch" => {
                 Json::Num(value.parse::<f64>()?)
             }
             "concurrent" | "queue_aware" => Json::Bool(value.parse::<bool>()?),
@@ -177,6 +189,12 @@ impl Config {
             }
             "max_batch" => self.max_batch = v.as_usize().context("expected int")?,
             "cloud_slots" => self.cloud_slots = v.as_usize().context("expected int")?,
+            "cloud_batch_window_ms" => {
+                self.cloud_batch_window_ms = v.as_f64().context("expected number")?
+            }
+            "cloud_max_batch" => {
+                self.cloud_max_batch = v.as_usize().context("expected int")?
+            }
             "fleet" => str_field!(fleet),
             "router" => str_field!(router),
             "slo" => str_field!(slo),
@@ -227,6 +245,15 @@ impl Config {
         }
         if self.cloud_slots == 0 {
             bail!("cloud_slots must be >= 1");
+        }
+        if !(self.cloud_batch_window_ms.is_finite() && self.cloud_batch_window_ms >= 0.0) {
+            bail!(
+                "cloud_batch_window_ms must be a finite non-negative number, got {}",
+                self.cloud_batch_window_ms
+            );
+        }
+        if self.cloud_max_batch == 0 {
+            bail!("cloud_max_batch must be >= 1");
         }
         crate::workload::Arrivals::parse(&self.arrivals).context("arrivals spec")?;
         crate::workload::SloClass::parse(&self.slo).context("slo spec")?;
@@ -311,15 +338,21 @@ mod tests {
         assert_eq!(c.admission, "off");
         assert_eq!(c.max_batch, 16);
         assert_eq!(c.cloud_slots, 4);
+        assert_eq!(c.cloud_batch_window_ms, 0.0);
+        assert_eq!(c.cloud_max_batch, 16);
         c.set("fleet", "xavier-nx,jetson-nano*2").unwrap();
         c.set("router", "least_backlog").unwrap();
         c.set("slo", "250,1").unwrap();
         c.set("admission", "shed").unwrap();
         c.set("max_batch", "8").unwrap();
         c.set("cloud_slots", "2").unwrap();
+        c.set("cloud_batch_window_ms", "5.5").unwrap();
+        c.set("cloud_max_batch", "4").unwrap();
         assert_eq!(c.fleet, "xavier-nx,jetson-nano*2");
         assert_eq!(c.max_batch, 8);
         assert_eq!(c.cloud_slots, 2);
+        assert_eq!(c.cloud_batch_window_ms, 5.5);
+        assert_eq!(c.cloud_max_batch, 4);
         // bad values are rejected
         let mut c = Config::default();
         assert!(c.set("fleet", "warp-drive").is_err());
@@ -329,15 +362,21 @@ mod tests {
         assert!(c.set("admission", "maybe").is_err());
         assert!(c.set("max_batch", "0").is_err());
         assert!(c.set("cloud_slots", "0").is_err());
+        assert!(c.set("cloud_batch_window_ms", "-1").is_err());
+        assert!(c.set("cloud_batch_window_ms", "NaN").is_err());
+        assert!(c.set("cloud_max_batch", "0").is_err());
         let j = Json::parse(
             r#"{"fleet": "jetson-tx2*2", "router": "shortest_queue",
-                "slo": "100", "admission": "downgrade", "cloud_slots": 3}"#,
+                "slo": "100", "admission": "downgrade", "cloud_slots": 3,
+                "cloud_batch_window_ms": 2.0, "cloud_max_batch": 8}"#,
         )
         .unwrap();
         let c2 = Config::from_json(&j).unwrap();
         assert_eq!(c2.fleet, "jetson-tx2*2");
         assert_eq!(c2.admission, "downgrade");
         assert_eq!(c2.cloud_slots, 3);
+        assert_eq!(c2.cloud_batch_window_ms, 2.0);
+        assert_eq!(c2.cloud_max_batch, 8);
     }
 
     #[test]

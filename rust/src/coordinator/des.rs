@@ -1,34 +1,30 @@
-//! Discrete-event, multi-stream serving core.
+//! Discrete-event, multi-stream serving: the single-edge entry point.
 //!
-//! Replaces the synchronous per-task stepping of `Coordinator::serve`
-//! with an event-driven simulation of a loaded edge node: N concurrent
-//! user streams (each a `TaskGen` with its own seed and arrival process)
-//! feed a FIFO edge queue; offloaded feature maps queue on a single
-//! uplink where they can be **batched** within a configurable window;
-//! cloud execution runs on a bounded pool of executors with its own
-//! queue. Events (arrival, edge-compute-done, batch-window-close,
-//! uplink-done, cloud-compute-done) are processed off a time-ordered
-//! heap.
+//! `serve_multistream` simulates one loaded edge node — N concurrent
+//! user streams (each a `TaskGen` with its own seed and arrival
+//! process) feed a FIFO edge queue; offloaded feature maps queue on a
+//! single uplink where they can be **batched** within a configurable
+//! window; cloud execution runs on a bounded executor pool with its own
+//! cross-device batching window.
 //!
-//! Per-task physics (latency phases, energy, accuracy, cost) still come
-//! from `EdgeCloudEnv::execute`, invoked exactly once per task at edge
-//! service start through `Coordinator::step` — so with one stream,
-//! sequential arrivals and batching disabled, the discrete-event core
-//! reproduces the legacy synchronous results task-for-task (the parity
-//! gate in `rust/tests/multistream_queueing.rs`). What the core adds on
-//! top is *queueing*: per-task queue wait, batching delay, and an
-//! end-to-end latency that includes them, plus per-stream energy totals.
+//! The event machinery itself lives in the unified kernel
+//! (`super::engine`) shared with the fleet dispatcher; this module is
+//! the N = 1 delegation plus the [`DesOpts`] tunables. With one stream,
+//! sequential arrivals and batching disabled, the kernel reproduces the
+//! legacy synchronous `Coordinator::serve` results task-for-task (the
+//! parity gate in `rust/tests/multistream_queueing.rs`). What the
+//! discrete-event path adds on top is *queueing*: per-task queue wait,
+//! batching delay, and an end-to-end latency that includes them, plus
+//! per-stream energy totals.
 //!
-//! Before each decision the core publishes `Coordinator::load`
+//! Before each decision the kernel publishes `Coordinator::load`
 //! (queue depth + backlog estimate), which queue-aware policies fold
 //! into the DQN state (`Obs::features_ext`).
 
+use super::engine;
+use super::fleet::FleetOpts;
 use super::{Coordinator, ServeSummary};
-use crate::coordinator::env::TaskReport;
-use crate::util::Ewma;
-use crate::workload::{Task, TaskGen};
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use crate::workload::TaskGen;
 
 /// Tunables of the discrete-event serving core.
 #[derive(Clone, Debug)]
@@ -40,6 +36,14 @@ pub struct DesOpts {
     pub max_batch: usize,
     /// concurrent cloud executors (beyond this, cloud work queues)
     pub cloud_slots: usize,
+    /// cloud-side batching window in seconds; co-arriving cloud work —
+    /// across devices in a fleet — merges into one batched executor
+    /// invocation. 0 disables batching (every cloud job runs in its own
+    /// invocation, preserving pre-batching timing exactly)
+    pub cloud_batch_window_s: f64,
+    /// maximum jobs per batched cloud invocation (a full batch flushes
+    /// before the window closes)
+    pub cloud_max_batch: usize,
 }
 
 impl Default for DesOpts {
@@ -48,363 +52,44 @@ impl Default for DesOpts {
             batch_window_s: 0.0,
             max_batch: 16,
             cloud_slots: 4,
+            cloud_batch_window_s: 0.0,
+            cloud_max_batch: 16,
         }
     }
 }
 
 impl DesOpts {
     /// Build from a run config (`batch_window_ms`, `max_batch`,
-    /// `cloud_slots` config keys / CLI flags).
+    /// `cloud_slots`, `cloud_batch_window_ms`, `cloud_max_batch` config
+    /// keys / CLI flags).
     pub fn from_config(cfg: &crate::configx::Config) -> Self {
         Self {
             batch_window_s: cfg.batch_window_ms / 1e3,
             max_batch: cfg.max_batch,
             cloud_slots: cfg.cloud_slots,
-        }
-    }
-}
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum EventKind {
-    /// payload = stream index
-    Arrival,
-    /// payload = job id
-    EdgeDone,
-    /// payload = batch-generation id (guards stale closes)
-    BatchClose,
-    /// payload = frozen-batch index
-    UplinkDone,
-    /// payload = job id
-    CloudDone,
-}
-
-/// Heap entry; the `seq` tiebreak makes simultaneous events FIFO and the
-/// whole simulation deterministic.
-#[derive(Clone, Debug)]
-struct Event {
-    time: f64,
-    seq: u64,
-    kind: EventKind,
-    payload: usize,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest first.
-        // total_cmp gives NaN a fixed place in the order instead of
-        // silently collapsing it to Equal, so a NaN time can never
-        // reorder the heap nondeterministically.
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-struct EventQueue {
-    heap: BinaryHeap<Event>,
-    seq: u64,
-}
-
-impl EventQueue {
-    fn push(&mut self, time: f64, kind: EventKind, payload: usize) {
-        self.heap.push(Event {
-            time,
-            seq: self.seq,
-            kind,
-            payload,
-        });
-        self.seq += 1;
-    }
-
-    fn pop(&mut self) -> Option<Event> {
-        self.heap.pop()
-    }
-}
-
-/// One in-flight task.
-struct Job {
-    task: Task,
-    stream: usize,
-    arrival_s: f64,
-    queue_wait_s: f64,
-    /// solo transmission time computed by the env (used for singleton
-    /// batches so unbatched timing matches the legacy path exactly)
-    solo_off_s: f64,
-    cloud_s: f64,
-    payload_bytes: f64,
-    report: Option<TaskReport>,
-}
-
-impl Job {
-    fn new(task: Task, stream: usize, arrival_s: f64) -> Self {
-        Self {
-            task,
-            stream,
-            arrival_s,
-            queue_wait_s: 0.0,
-            solo_off_s: 0.0,
-            cloud_s: 0.0,
-            payload_bytes: 0.0,
-            report: None,
-        }
-    }
-}
-
-struct DesState {
-    q: EventQueue,
-    jobs: Vec<Job>,
-    edge_queue: VecDeque<usize>,
-    edge_busy: bool,
-    /// EWMA of edge residency, drives the backlog estimate in LoadSignals
-    residency: Ewma,
-    open_batch: Vec<usize>,
-    /// bumps on every flush so stale BatchClose events are ignored
-    batch_open_id: usize,
-    /// flushed batches, addressed by UplinkDone payload
-    batches: Vec<Vec<usize>>,
-    uplink_queue: VecDeque<usize>,
-    uplink_busy: bool,
-    cloud_active: usize,
-    cloud_queue: VecDeque<usize>,
-    opts: DesOpts,
-}
-
-impl DesState {
-    /// Start edge service on the next queued job if the edge is idle:
-    /// publish load signals, run decide→execute via the coordinator, and
-    /// schedule the edge-completion event after the edge-side residency
-    /// (local compute + compression + decision overhead + DVFS switch).
-    fn maybe_start_edge(&mut self, coord: &mut Coordinator, now: f64) {
-        if self.edge_busy {
-            return;
-        }
-        let Some(id) = self.edge_queue.pop_front() else {
-            return;
-        };
-        coord.load.queue_depth = self.edge_queue.len();
-        coord.load.backlog_s =
-            self.residency.get().unwrap_or(0.0) * self.edge_queue.len() as f64;
-        let r = coord.step(&self.jobs[id].task, false);
-        let residency = (r.tti_total_s - r.tti_off_s - r.tti_cloud_s).max(0.0);
-        self.residency.push(residency);
-        let job = &mut self.jobs[id];
-        job.queue_wait_s = (now - job.arrival_s).max(0.0);
-        job.solo_off_s = r.tti_off_s;
-        job.cloud_s = r.tti_cloud_s;
-        job.payload_bytes = r.payload_bytes;
-        job.report = Some(r);
-        self.edge_busy = true;
-        self.q.push(now + residency, EventKind::EdgeDone, id);
-    }
-
-    fn freeze_batch(&mut self, members: Vec<usize>) -> usize {
-        self.batches.push(members);
-        self.batches.len() - 1
-    }
-
-    fn flush_open_batch(&mut self, coord: &Coordinator, now: f64) {
-        if self.open_batch.is_empty() {
-            return;
-        }
-        let members = std::mem::take(&mut self.open_batch);
-        self.batch_open_id += 1;
-        let b = self.freeze_batch(members);
-        self.uplink_queue.push_back(b);
-        self.maybe_start_uplink(coord, now);
-    }
-
-    /// Start transmitting the next batch if the uplink is idle. A
-    /// singleton batch reuses the env-computed solo transmission time; a
-    /// real batch transmits the summed payload in one go (one wire
-    /// header amortized, one bandwidth-limited transfer).
-    fn maybe_start_uplink(&mut self, coord: &Coordinator, now: f64) {
-        if self.uplink_busy {
-            return;
-        }
-        let Some(b) = self.uplink_queue.pop_front() else {
-            return;
-        };
-        let members = self.batches[b].clone();
-        let tx_s = if members.len() == 1 {
-            self.jobs[members[0]].solo_off_s
-        } else {
-            let payload: f64 = members.iter().map(|&id| self.jobs[id].payload_bytes).sum();
-            coord.env.link.tx_time_s(payload)
-        };
-        let n = members.len();
-        for &id in &members {
-            if let Some(r) = self.jobs[id].report.as_mut() {
-                r.batch_size = n;
-            }
-        }
-        self.uplink_busy = true;
-        self.q.push(now + tx_s, EventKind::UplinkDone, b);
-    }
-
-    fn dispatch_cloud(&mut self, id: usize, now: f64) {
-        if self.cloud_active < self.opts.cloud_slots {
-            self.cloud_active += 1;
-            self.q.push(now + self.jobs[id].cloud_s, EventKind::CloudDone, id);
-        } else {
-            self.cloud_queue.push_back(id);
-        }
-    }
-
-    /// Stamp the queueing-aware fields on the job's report.
-    fn finish(&mut self, id: usize, now: f64) {
-        let job = &mut self.jobs[id];
-        if let Some(r) = job.report.as_mut() {
-            r.queue_wait_s = job.queue_wait_s;
-            r.e2e_s = (now - job.arrival_s).max(0.0);
-            r.stream = job.stream;
+            cloud_batch_window_s: cfg.cloud_batch_window_ms / 1e3,
+            cloud_max_batch: cfg.cloud_max_batch,
         }
     }
 }
 
 /// Serve `per_stream` tasks from each of the given streams through the
-/// discrete-event core. Reports are accumulated in job-creation
-/// (arrival) order, so with one stream the summary is task-ordered
-/// exactly like `Coordinator::serve`.
+/// unified discrete-event kernel with a single edge device. Reports are
+/// accumulated in job-creation (arrival) order, so with one stream the
+/// summary is task-ordered exactly like `Coordinator::serve`.
 pub fn serve_multistream(
     coord: &mut Coordinator,
     gens: &mut [TaskGen],
     per_stream: usize,
     opts: &DesOpts,
 ) -> ServeSummary {
-    coord.policy.set_training(false);
-    if gens.is_empty() || per_stream == 0 {
-        return ServeSummary::default();
-    }
-    let streams = gens.len();
-    let mut state = DesState {
-        q: EventQueue {
-            heap: BinaryHeap::new(),
-            seq: 0,
-        },
-        jobs: Vec::with_capacity(streams * per_stream),
-        edge_queue: VecDeque::new(),
-        edge_busy: false,
-        residency: Ewma::new(0.2),
-        open_batch: Vec::new(),
-        batch_open_id: 0,
-        batches: Vec::new(),
-        uplink_queue: VecDeque::new(),
-        uplink_busy: false,
-        cloud_active: 0,
-        cloud_queue: VecDeque::new(),
-        opts: opts.clone(),
+    let fopts = FleetOpts {
+        des: opts.clone(),
+        ..FleetOpts::default()
     };
-
-    // prime every stream with its first arrival
-    let mut next_task: Vec<Option<Task>> = Vec::with_capacity(streams);
-    let mut remaining: Vec<usize> = vec![per_stream; streams];
-    for (s, gen) in gens.iter_mut().enumerate() {
-        if per_stream > 0 {
-            let t = gen.next_task();
-            remaining[s] -= 1;
-            state.q.push(t.arrival_s, EventKind::Arrival, s);
-            next_task.push(Some(t));
-        } else {
-            next_task.push(None);
-        }
-    }
-
-    while let Some(ev) = state.q.pop() {
-        let now = ev.time;
-        match ev.kind {
-            EventKind::Arrival => {
-                let s = ev.payload;
-                let task = next_task[s].take().expect("arrival without pending task");
-                if remaining[s] > 0 {
-                    remaining[s] -= 1;
-                    let t = gens[s].next_task();
-                    state.q.push(t.arrival_s, EventKind::Arrival, s);
-                    next_task[s] = Some(t);
-                }
-                let id = state.jobs.len();
-                state.jobs.push(Job::new(task, s, now));
-                state.edge_queue.push_back(id);
-                state.maybe_start_edge(coord, now);
-            }
-            EventKind::EdgeDone => {
-                let id = ev.payload;
-                state.edge_busy = false;
-                let offloads = state.jobs[id]
-                    .report
-                    .as_ref()
-                    .map(|r| r.xi > 0.0)
-                    .unwrap_or(false);
-                if offloads {
-                    if state.opts.batch_window_s > 0.0 {
-                        if state.open_batch.is_empty() {
-                            state.q.push(
-                                now + state.opts.batch_window_s,
-                                EventKind::BatchClose,
-                                state.batch_open_id,
-                            );
-                        }
-                        state.open_batch.push(id);
-                        if state.open_batch.len() >= state.opts.max_batch {
-                            state.flush_open_batch(coord, now);
-                        }
-                    } else {
-                        let b = state.freeze_batch(vec![id]);
-                        state.uplink_queue.push_back(b);
-                        state.maybe_start_uplink(coord, now);
-                    }
-                } else {
-                    state.finish(id, now);
-                }
-                state.maybe_start_edge(coord, now);
-            }
-            EventKind::BatchClose => {
-                if ev.payload == state.batch_open_id {
-                    state.flush_open_batch(coord, now);
-                }
-            }
-            EventKind::UplinkDone => {
-                let b = ev.payload;
-                state.uplink_busy = false;
-                let members = state.batches[b].clone();
-                for id in members {
-                    state.dispatch_cloud(id, now);
-                }
-                state.maybe_start_uplink(coord, now);
-            }
-            EventKind::CloudDone => {
-                let id = ev.payload;
-                state.cloud_active -= 1;
-                state.finish(id, now);
-                if let Some(next) = state.cloud_queue.pop_front() {
-                    state.cloud_active += 1;
-                    state
-                        .q
-                        .push(now + state.jobs[next].cloud_s, EventKind::CloudDone, next);
-                }
-            }
-        }
-    }
-
-    // reset load signals so later synchronous use observes an idle edge
-    coord.load = super::LoadSignals::default();
-
+    let result = engine::serve(std::slice::from_mut(coord), gens, per_stream, &fopts);
     let mut summary = ServeSummary::default();
-    for job in &state.jobs {
+    for job in &result.jobs {
         if let Some(r) = &job.report {
             summary.push(r);
         }
@@ -427,86 +112,19 @@ mod tests {
     }
 
     #[test]
-    fn event_heap_orders_by_time_then_seq() {
-        let mut q = EventQueue {
-            heap: BinaryHeap::new(),
-            seq: 0,
-        };
-        q.push(2.0, EventKind::Arrival, 0);
-        q.push(1.0, EventKind::Arrival, 1);
-        q.push(1.0, EventKind::Arrival, 2);
-        q.push(0.5, EventKind::EdgeDone, 3);
-        let order: Vec<usize> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
-        assert_eq!(order, vec![3, 1, 2, 0]);
-    }
-
-    #[test]
-    fn event_queue_fifo_tiebreak_is_deterministic() {
-        // Property: pops come out in nondecreasing time order, and events
-        // with equal timestamps come out in insertion (FIFO) order. Times
-        // are quantized to a coarse grid so ties actually occur.
-        use crate::proptest_mini::{check, f64_in, vec_of};
-        check(
-            "event queue time order + FIFO ties",
-            0xDE5,
-            300,
-            vec_of(f64_in(0.0, 4.0), 1, 48),
-            |times| {
-                let mut q = EventQueue {
-                    heap: BinaryHeap::new(),
-                    seq: 0,
-                };
-                let quantized: Vec<f64> =
-                    times.iter().map(|t| (t * 4.0).floor() / 4.0).collect();
-                for (i, &t) in quantized.iter().enumerate() {
-                    q.push(t, EventKind::Arrival, i);
-                }
-                let mut prev: Option<Event> = None;
-                while let Some(ev) = q.pop() {
-                    if let Some(p) = prev {
-                        if ev.time < p.time {
-                            return Err(format!("time went backwards: {} < {}", ev.time, p.time));
-                        }
-                        if ev.time == p.time && ev.payload < p.payload {
-                            return Err(format!(
-                                "FIFO tiebreak violated at t={}: {} before {}",
-                                ev.time, p.payload, ev.payload
-                            ));
-                        }
-                    }
-                    prev = Some(ev);
-                }
-                Ok(())
-            },
-        );
-    }
-
-    #[test]
-    fn nan_event_time_cannot_reorder_real_events() {
-        // total_cmp gives NaN a fixed slot (after +inf in ascending order,
-        // i.e. popped last from the min-ordered heap) instead of making
-        // comparisons against it nondeterministic.
-        let mut q = EventQueue {
-            heap: BinaryHeap::new(),
-            seq: 0,
-        };
-        q.push(f64::NAN, EventKind::Arrival, 0);
-        q.push(1.0, EventKind::Arrival, 1);
-        q.push(2.0, EventKind::Arrival, 2);
-        let order: Vec<usize> = std::iter::from_fn(|| q.pop().map(|e| e.payload)).collect();
-        assert_eq!(order, vec![1, 2, 0]);
-    }
-
-    #[test]
     fn opts_from_config_picks_up_knobs() {
         let mut cfg = Config::default();
         cfg.batch_window_ms = 8.0;
         cfg.max_batch = 5;
         cfg.cloud_slots = 2;
+        cfg.cloud_batch_window_ms = 6.0;
+        cfg.cloud_max_batch = 7;
         let o = DesOpts::from_config(&cfg);
         assert_eq!(o.batch_window_s, 0.008);
         assert_eq!(o.max_batch, 5);
         assert_eq!(o.cloud_slots, 2);
+        assert_eq!(o.cloud_batch_window_s, 0.006);
+        assert_eq!(o.cloud_max_batch, 7);
     }
 
     #[test]
@@ -569,5 +187,41 @@ mod tests {
         let s = serve_multistream(&mut c, &mut gens, 3, &opts);
         assert!(s.reports.iter().all(|r| (1..=3).contains(&r.batch_size)));
         assert!(s.reports.iter().any(|r| r.batch_size == 3));
+    }
+
+    #[test]
+    fn cloud_batch_window_groups_and_caps_on_a_single_edge() {
+        // cloud_only herd through one edge: with a wide cloud window and
+        // a cap of 3, cloud invocations must group (some size > 1) and
+        // never exceed the cap; without a window every invocation is a
+        // singleton.
+        let run = |cloud_batch_window_s: f64| {
+            let (cfg, mut c) = coord("cloud_only");
+            let mut gens: Vec<TaskGen> = (0..6)
+                .map(|s| {
+                    TaskGen::new(&cfg.model, c.env.dataset, Arrivals::Sequential, 500 + s)
+                        .unwrap()
+                })
+                .collect();
+            let opts = DesOpts {
+                batch_window_s: 0.01,
+                cloud_batch_window_s,
+                cloud_max_batch: 3,
+                cloud_slots: 2,
+                ..DesOpts::default()
+            };
+            serve_multistream(&mut c, &mut gens, 3, &opts)
+        };
+        let batched = run(10.0);
+        assert!(batched
+            .reports
+            .iter()
+            .all(|r| (1..=3).contains(&r.cloud_batch_size)));
+        assert!(batched.reports.iter().any(|r| r.cloud_batch_size > 1));
+        // the summary aggregates the same telemetry (single-edge CLI
+        // prints its task-weighted mean)
+        assert!(batched.cloud_batch_size.values().iter().any(|&b| b > 1.0));
+        let solo = run(0.0);
+        assert!(solo.reports.iter().all(|r| r.cloud_batch_size == 1));
     }
 }

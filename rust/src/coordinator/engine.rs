@@ -1,0 +1,930 @@
+//! The one event engine: a single discrete-event serving kernel shared
+//! by every serving path in the crate.
+//!
+//! Historically `des.rs` (single edge, N streams) and `fleet.rs`
+//! (N edges, shared cloud pool) each carried their own copy of the
+//! event machinery — two heaps, two `Job` structs, two state machines
+//! that had to evolve in lockstep. This module is the merge: it owns
+//! the time-ordered event heap with FIFO `seq` tiebreaks, the
+//! per-device edge queues (priority-aware), the per-device uplink
+//! batching windows, and the bounded **shared** cloud executor pool,
+//! parameterized over N devices. `serve_multistream` delegates here
+//! with N = 1 and `serve_fleet` with N = fleet size; both parity gates
+//! (`rust/tests/multistream_queueing.rs`, `rust/tests/fleet_serving.rs`)
+//! run against this kernel.
+//!
+//! On top of the merged machinery the kernel adds **cloud-side
+//! cross-device batching** (the server-side analogue of the uplink
+//! window, after arXiv:2504.14611): cloud work arriving from *any*
+//! device within `cloud_batch_window_s` merges into one batched
+//! executor invocation. A batch occupies a single executor slot, pays
+//! the service-runtime dispatch overhead once (amortized across its
+//! members), is size-capped by `cloud_max_batch` (a full batch flushes
+//! before the window closes), and is guarded against stale window
+//! closes by a generation id — mirroring the uplink window exactly.
+//! With `cloud_batch_window_s == 0` every cloud job runs in its own
+//! invocation and the kernel reproduces the pre-batching event
+//! sequence bit-for-bit (gated by `rust/tests/engine_golden.rs`).
+//!
+//! Per-task physics still come from `EdgeCloudEnv::execute` via
+//! `Coordinator::step_constrained`, invoked exactly once per task at
+//! edge-service start. Before each decision the kernel publishes the
+//! owning device's `LoadSignals` so queue-aware policies can react to
+//! backlog.
+
+use super::fleet::{Admission, FleetOpts, Router};
+use super::{Coordinator, LoadSignals};
+use crate::coordinator::env::TaskReport;
+use crate::perfmodel::CLOUD_DISPATCH_OVERHEAD_S;
+use crate::util::{Ewma, Samples};
+use crate::workload::{Task, TaskGen};
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Ev {
+    Arrival { stream: usize },
+    EdgeDone { dev: usize, job: usize },
+    /// per-device uplink batch window expired (generation guards stale
+    /// closes after an early size-capped flush)
+    BatchClose { dev: usize, generation: usize },
+    UplinkDone { dev: usize, batch: usize },
+    /// shared cloud batch window expired (same stale-close guard)
+    CloudBatchClose { generation: usize },
+    /// one batched executor invocation completed
+    CloudDone { batch: usize },
+}
+
+/// Heap entry; the `seq` tiebreak makes simultaneous events FIFO and the
+/// whole simulation deterministic.
+#[derive(Clone, Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first.
+        // total_cmp gives NaN a fixed place in the order instead of
+        // silently collapsing it to Equal, so a NaN time can never
+        // reorder the heap nondeterministically.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl EventQueue {
+    fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    fn push(&mut self, time: f64, ev: Ev) {
+        self.heap.push(Event {
+            time,
+            seq: self.seq,
+            ev,
+        });
+        self.seq += 1;
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+}
+
+/// One open batching window — the uplink windows (one per device) and
+/// the shared cloud window are the same state machine: members
+/// accumulate until the size cap flushes early or the close event
+/// scheduled at open time fires; `generation` bumps on every flush so
+/// a stale close (scheduled for a window that already cap-flushed) is
+/// ignored.
+#[derive(Default)]
+struct BatchWindow {
+    members: Vec<usize>,
+    generation: usize,
+}
+
+impl BatchWindow {
+    /// Add a member; true when this member OPENED the window (the
+    /// caller schedules the close event, guarded by `generation`).
+    fn join(&mut self, id: usize) -> bool {
+        let opened = self.members.is_empty();
+        self.members.push(id);
+        opened
+    }
+
+    fn is_full(&self, cap: usize) -> bool {
+        self.members.len() >= cap
+    }
+
+    fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Freeze the window: take the members and bump the generation so
+    /// any still-scheduled close event for this window goes stale.
+    fn take(&mut self) -> Vec<usize> {
+        self.generation += 1;
+        std::mem::take(&mut self.members)
+    }
+}
+
+/// One in-flight task.
+struct Job {
+    task: Task,
+    stream: usize,
+    dev: usize,
+    arrival_s: f64,
+    queue_wait_s: f64,
+    /// solo transmission time computed by the env (used for singleton
+    /// batches so unbatched timing matches the legacy path exactly)
+    solo_off_s: f64,
+    cloud_s: f64,
+    payload_bytes: f64,
+    /// admission control forced this task to edge-only execution
+    downgraded: bool,
+    report: Option<TaskReport>,
+}
+
+/// Per-device queueing state.
+struct DevState {
+    edge_queue: VecDeque<usize>,
+    edge_busy: bool,
+    /// EWMA of edge residency, drives backlog estimates for routing,
+    /// admission, and the policy's LoadSignals
+    residency: Ewma,
+    /// EWMA of the offload proportion ξ of tasks started here — the
+    /// admission estimator's weight on the uplink/cloud detour
+    xi: Ewma,
+    /// EWMA of the solo uplink transfer time of offloading tasks
+    uplink_s: Ewma,
+    /// open uplink batch (stale closes guarded by its generation)
+    open_batch: BatchWindow,
+    uplink_queue: VecDeque<usize>,
+    uplink_busy: bool,
+}
+
+impl DevState {
+    fn new() -> Self {
+        Self {
+            edge_queue: VecDeque::new(),
+            edge_busy: false,
+            residency: Ewma::new(0.2),
+            xi: Ewma::new(0.2),
+            uplink_s: Ewma::new(0.2),
+            open_batch: BatchWindow::default(),
+            uplink_queue: VecDeque::new(),
+            uplink_busy: false,
+        }
+    }
+
+    /// Tasks queued or in service on this device.
+    fn in_system(&self) -> usize {
+        self.edge_queue.len() + self.edge_busy as usize
+    }
+}
+
+/// Per-job row of an engine run: the env report plus the dispatch
+/// metadata the fleet layer folds into SLO accounting.
+pub struct EngineJob {
+    pub report: Option<TaskReport>,
+    /// device the job was routed to
+    pub dev: usize,
+    /// the task's SLO deadline (∞ = best-effort)
+    pub deadline_s: f64,
+}
+
+/// Raw outcome of one engine run, in job-creation (arrival) order.
+#[derive(Default)]
+pub struct EngineResult {
+    /// one entry per accepted job
+    pub jobs: Vec<EngineJob>,
+    /// tasks generated by the streams (accepted + shed)
+    pub offered: usize,
+    /// tasks dropped by admission control
+    pub shed: usize,
+    /// tasks forced to edge-only by admission control
+    pub downgraded: usize,
+    /// cloud executor invocations (batched and singleton)
+    pub cloud_invocations: usize,
+    /// jobs per cloud executor invocation (batch occupancy)
+    pub cloud_occupancy: Samples,
+    /// dispatch/runtime overhead amortized away by cloud batching (s)
+    pub cloud_dispatch_saved_s: f64,
+}
+
+enum Verdict {
+    Accept,
+    Shed,
+    Downgrade,
+}
+
+struct EngineState {
+    q: EventQueue,
+    jobs: Vec<Job>,
+    devs: Vec<DevState>,
+    /// flushed uplink batches, addressed by UplinkDone payload (global
+    /// ids; the owning device rides in the event)
+    batches: Vec<Vec<usize>>,
+    /// open cross-device cloud batch (cloud work waiting for the
+    /// window; stale closes guarded by its generation)
+    cloud_open: BatchWindow,
+    /// frozen cloud batches, addressed by CloudDone payload
+    cloud_batches: Vec<Vec<usize>>,
+    /// frozen batches waiting for a free executor slot
+    cloud_ready: VecDeque<usize>,
+    /// busy executor slots (one per invocation, regardless of occupancy)
+    cloud_active: usize,
+    /// jobs between uplink completion and cloud completion — the live
+    /// pool pressure the admission estimator reads
+    cloud_in_flight: usize,
+    /// EWMA of the solo cloud service time
+    cloud_service: Ewma,
+    cloud_invocations: usize,
+    cloud_occupancy: Samples,
+    cloud_dispatch_saved_s: f64,
+    opts: FleetOpts,
+    rr_next: usize,
+    offered: usize,
+    shed: usize,
+    downgraded: usize,
+}
+
+impl EngineState {
+    fn new(devices: usize, capacity: usize, opts: &FleetOpts) -> Self {
+        Self {
+            q: EventQueue::new(),
+            jobs: Vec::with_capacity(capacity),
+            devs: (0..devices).map(|_| DevState::new()).collect(),
+            batches: Vec::new(),
+            cloud_open: BatchWindow::default(),
+            cloud_batches: Vec::new(),
+            cloud_ready: VecDeque::new(),
+            cloud_active: 0,
+            cloud_in_flight: 0,
+            cloud_service: Ewma::new(0.2),
+            cloud_invocations: 0,
+            cloud_occupancy: Samples::new(),
+            cloud_dispatch_saved_s: 0.0,
+            opts: opts.clone(),
+            rr_next: 0,
+            offered: 0,
+            shed: 0,
+            downgraded: 0,
+        }
+    }
+
+    /// Pick the device for an arriving task.
+    fn route(&mut self, devices: &[Coordinator]) -> usize {
+        let n = self.devs.len();
+        match self.opts.router {
+            Router::RoundRobin => {
+                let d = self.rr_next % n;
+                self.rr_next += 1;
+                d
+            }
+            Router::ShortestQueue => (0..n)
+                .min_by_key(|&d| self.devs[d].in_system())
+                .unwrap_or(0),
+            Router::LeastBacklog => {
+                let score = |d: usize| {
+                    let res = self.devs[d].residency.get().unwrap_or(1.0);
+                    let power = devices[d].env.edge.spec().max_power_w;
+                    self.devs[d].in_system() as f64 * res * power
+                };
+                (0..n)
+                    .min_by(|&a, &b| score(a).total_cmp(&score(b)))
+                    .unwrap_or(0)
+            }
+        }
+    }
+
+    /// Estimated seconds until a task routed to `dev` right now would
+    /// finish: edge backlog (residency EWMA × queue occupancy) plus the
+    /// expected uplink/cloud detour, weighted by the device's observed
+    /// offload propensity — expected solo transfer time, shared-pool
+    /// wait (in-flight cloud jobs over executor slots), and one cloud
+    /// service. `None` before the first edge start (cold start —
+    /// admission stays open). Devices that never offload (ξ-EWMA 0)
+    /// reduce to the pure edge estimate, so shedding also triggers when
+    /// the cloud, not the edge, is the bottleneck, without penalizing
+    /// edge-only traffic.
+    fn est_completion_s(&self, dev: usize) -> Option<f64> {
+        let res = self.devs[dev].residency.get()?;
+        let edge = res * (self.devs[dev].in_system() as f64 + 1.0);
+        let xi = self.devs[dev].xi.get().unwrap_or(0.0);
+        if xi <= 0.0 {
+            return Some(edge);
+        }
+        let tx = self.devs[dev].uplink_s.get().unwrap_or(0.0);
+        let svc = self.cloud_service.get().unwrap_or(0.0);
+        let pool_wait =
+            svc * self.cloud_in_flight as f64 / self.opts.des.cloud_slots.max(1) as f64;
+        Some(edge + xi * (tx + svc + pool_wait))
+    }
+
+    /// Admission decision for a routed task, given the completion
+    /// estimate and the task's SLO class.
+    fn admit(&self, dev: usize, task: &Task) -> Verdict {
+        if self.opts.admission == Admission::Off || !task.deadline_s.is_finite() {
+            return Verdict::Accept;
+        }
+        let Some(est) = self.est_completion_s(dev) else {
+            // cold start: no residency estimate yet, accept everything
+            return Verdict::Accept;
+        };
+        if est <= task.deadline_s {
+            return Verdict::Accept;
+        }
+        match self.opts.admission {
+            Admission::Shed if task.priority == 0 => Verdict::Shed,
+            // high-priority tasks (and every task under `downgrade`)
+            // stay in the system but skip the cloud detour
+            _ => Verdict::Downgrade,
+        }
+    }
+
+    /// Queue a job on its device, honoring priority classes: a task
+    /// jumps ahead of queued lower-priority tasks (FIFO within a class,
+    /// so all-default-priority traffic keeps the exact legacy order).
+    fn enqueue_edge(&mut self, id: usize) {
+        let dev = self.jobs[id].dev;
+        let prio = self.jobs[id].task.priority;
+        if prio == 0 {
+            self.devs[dev].edge_queue.push_back(id);
+            return;
+        }
+        let pos = self.devs[dev]
+            .edge_queue
+            .iter()
+            .position(|&j| self.jobs[j].task.priority < prio)
+            .unwrap_or(self.devs[dev].edge_queue.len());
+        self.devs[dev].edge_queue.insert(pos, id);
+    }
+
+    /// Start edge service on the next queued job if the device is idle:
+    /// publish per-device load signals, run decide→execute through the
+    /// device's coordinator, and schedule the edge-completion event
+    /// after the edge-side residency (local compute + compression +
+    /// decision overhead + DVFS switch).
+    fn maybe_start_edge(&mut self, devices: &mut [Coordinator], dev: usize, now: f64) {
+        if self.devs[dev].edge_busy {
+            return;
+        }
+        let Some(id) = self.devs[dev].edge_queue.pop_front() else {
+            return;
+        };
+        let coord = &mut devices[dev];
+        coord.load.queue_depth = self.devs[dev].edge_queue.len();
+        coord.load.backlog_s = self.devs[dev].residency.get().unwrap_or(0.0)
+            * self.devs[dev].edge_queue.len() as f64;
+        let force_edge = self.jobs[id].downgraded;
+        let r = coord.step_constrained(&self.jobs[id].task, false, force_edge);
+        let residency = (r.tti_total_s - r.tti_off_s - r.tti_cloud_s).max(0.0);
+        self.devs[dev].residency.push(residency);
+        // track the policy's NATURAL offload propensity: an
+        // admission-forced ξ=0 must not decay the EWMA, or sustained
+        // downgrades would erase the cloud-detour term from
+        // est_completion_s and re-admit traffic into the very backlog
+        // that triggered them (oscillating under-protection)
+        if !force_edge {
+            self.devs[dev].xi.push(r.xi);
+            if r.xi > 0.0 {
+                self.devs[dev].uplink_s.push(r.tti_off_s);
+            }
+        }
+        let job = &mut self.jobs[id];
+        job.queue_wait_s = (now - job.arrival_s).max(0.0);
+        job.solo_off_s = r.tti_off_s;
+        job.cloud_s = r.tti_cloud_s;
+        job.payload_bytes = r.payload_bytes;
+        job.report = Some(r);
+        self.devs[dev].edge_busy = true;
+        self.q.push(now + residency, Ev::EdgeDone { dev, job: id });
+    }
+
+    fn freeze_batch(&mut self, members: Vec<usize>) -> usize {
+        self.batches.push(members);
+        self.batches.len() - 1
+    }
+
+    fn flush_open_batch(&mut self, devices: &[Coordinator], dev: usize, now: f64) {
+        if self.devs[dev].open_batch.is_empty() {
+            return;
+        }
+        let members = self.devs[dev].open_batch.take();
+        let b = self.freeze_batch(members);
+        self.devs[dev].uplink_queue.push_back(b);
+        self.maybe_start_uplink(devices, dev, now);
+    }
+
+    /// Start transmitting the next batch on the device's uplink if it is
+    /// idle (singleton batches reuse the env-computed solo transmission
+    /// time; real batches ship the summed payload in one transfer — one
+    /// wire header amortized, one bandwidth-limited transfer).
+    fn maybe_start_uplink(&mut self, devices: &[Coordinator], dev: usize, now: f64) {
+        if self.devs[dev].uplink_busy {
+            return;
+        }
+        let Some(b) = self.devs[dev].uplink_queue.pop_front() else {
+            return;
+        };
+        let members = self.batches[b].clone();
+        let tx_s = if members.len() == 1 {
+            self.jobs[members[0]].solo_off_s
+        } else {
+            let payload: f64 = members.iter().map(|&id| self.jobs[id].payload_bytes).sum();
+            devices[dev].env.link.tx_time_s(payload)
+        };
+        let n = members.len();
+        for &id in &members {
+            if let Some(r) = self.jobs[id].report.as_mut() {
+                r.batch_size = n;
+            }
+        }
+        self.devs[dev].uplink_busy = true;
+        self.q.push(now + tx_s, Ev::UplinkDone { dev, batch: b });
+    }
+
+    /// Hand an offloading job to its device's uplink stage. With a
+    /// batch window it joins the device's open batch (size-capped,
+    /// stale-close guarded); without one it ships as a singleton batch
+    /// immediately. Mirrors `enqueue_cloud` — the two stages share the
+    /// `BatchWindow` state machine.
+    fn enqueue_uplink(&mut self, devices: &[Coordinator], dev: usize, id: usize, now: f64) {
+        if self.opts.des.batch_window_s > 0.0 {
+            if self.devs[dev].open_batch.join(id) {
+                self.q.push(
+                    now + self.opts.des.batch_window_s,
+                    Ev::BatchClose {
+                        dev,
+                        generation: self.devs[dev].open_batch.generation,
+                    },
+                );
+            }
+            if self.devs[dev].open_batch.is_full(self.opts.des.max_batch) {
+                self.flush_open_batch(devices, dev, now);
+            }
+        } else {
+            let b = self.freeze_batch(vec![id]);
+            self.devs[dev].uplink_queue.push_back(b);
+            self.maybe_start_uplink(devices, dev, now);
+        }
+    }
+
+    fn freeze_cloud_batch(&mut self, members: Vec<usize>) -> usize {
+        self.cloud_batches.push(members);
+        self.cloud_batches.len() - 1
+    }
+
+    /// Hand a job to the shared cloud stage. With a cloud batch window
+    /// it joins the open cross-device batch (size-capped, stale-close
+    /// guarded); without one it becomes a singleton invocation exactly
+    /// like the pre-batching pool.
+    fn enqueue_cloud(&mut self, id: usize, now: f64) {
+        self.cloud_in_flight += 1;
+        self.cloud_service.push(self.jobs[id].cloud_s);
+        if self.opts.des.cloud_batch_window_s > 0.0 {
+            if self.cloud_open.join(id) {
+                self.q.push(
+                    now + self.opts.des.cloud_batch_window_s,
+                    Ev::CloudBatchClose {
+                        generation: self.cloud_open.generation,
+                    },
+                );
+            }
+            if self.cloud_open.is_full(self.opts.des.cloud_max_batch) {
+                self.flush_cloud_batch(now);
+            }
+        } else {
+            let b = self.freeze_cloud_batch(vec![id]);
+            self.cloud_ready.push_back(b);
+            self.maybe_start_cloud(now);
+        }
+    }
+
+    fn flush_cloud_batch(&mut self, now: f64) {
+        if self.cloud_open.is_empty() {
+            return;
+        }
+        let members = self.cloud_open.take();
+        let b = self.freeze_cloud_batch(members);
+        self.cloud_ready.push_back(b);
+        self.maybe_start_cloud(now);
+    }
+
+    /// Start batched executor invocations while slots are free. A
+    /// singleton invocation runs for the env-computed solo cloud time
+    /// (bit-identical to the unbatched pool); a real batch pays the
+    /// service-runtime dispatch overhead once and runs its members'
+    /// compute back-to-back in one slot — the server-side analogue of
+    /// the uplink's amortized wire header.
+    fn maybe_start_cloud(&mut self, now: f64) {
+        while self.cloud_active < self.opts.des.cloud_slots {
+            let Some(b) = self.cloud_ready.pop_front() else {
+                return;
+            };
+            let members = self.cloud_batches[b].clone();
+            let n = members.len();
+            let svc = if n == 1 {
+                self.jobs[members[0]].cloud_s
+            } else {
+                let compute: f64 = members
+                    .iter()
+                    .map(|&id| (self.jobs[id].cloud_s - CLOUD_DISPATCH_OVERHEAD_S).max(0.0))
+                    .sum();
+                self.cloud_dispatch_saved_s += (n - 1) as f64 * CLOUD_DISPATCH_OVERHEAD_S;
+                CLOUD_DISPATCH_OVERHEAD_S + compute
+            };
+            for &id in &members {
+                if let Some(r) = self.jobs[id].report.as_mut() {
+                    r.cloud_batch_size = n;
+                }
+            }
+            self.cloud_invocations += 1;
+            self.cloud_occupancy.push(n as f64);
+            self.cloud_active += 1;
+            self.q.push(now + svc, Ev::CloudDone { batch: b });
+        }
+    }
+
+    /// Stamp the queueing-aware fields on the job's report.
+    fn finish(&mut self, id: usize, now: f64) {
+        let job = &mut self.jobs[id];
+        if let Some(r) = job.report.as_mut() {
+            r.queue_wait_s = job.queue_wait_s;
+            r.e2e_s = (now - job.arrival_s).max(0.0);
+            r.stream = job.stream;
+        }
+    }
+}
+
+/// Serve `per_stream` tasks from each stream through the kernel over
+/// the given devices. Streams are routed per task by the configured
+/// router and screened by the admission policy; jobs accumulate in
+/// creation (arrival) order, so a 1-device round-robin run is
+/// report-ordered exactly like the legacy single-edge core.
+pub fn serve(
+    devices: &mut [Coordinator],
+    gens: &mut [TaskGen],
+    per_stream: usize,
+    opts: &FleetOpts,
+) -> EngineResult {
+    for coord in devices.iter_mut() {
+        coord.policy.set_training(false);
+    }
+    if gens.is_empty() || per_stream == 0 || devices.is_empty() {
+        return EngineResult::default();
+    }
+    let streams = gens.len();
+    let mut state = EngineState::new(devices.len(), streams * per_stream, opts);
+
+    // prime every stream with its first arrival
+    let mut next_task: Vec<Option<Task>> = Vec::with_capacity(streams);
+    let mut remaining: Vec<usize> = vec![per_stream; streams];
+    for (s, gen) in gens.iter_mut().enumerate() {
+        let t = gen.next_task();
+        remaining[s] -= 1;
+        state.q.push(t.arrival_s, Ev::Arrival { stream: s });
+        next_task.push(Some(t));
+    }
+
+    let mut clock = f64::NEG_INFINITY;
+    while let Some(ev) = state.q.pop() {
+        let now = ev.time;
+        // the kernel invariant the heap ordering guarantees: events pop
+        // in nondecreasing time order across every device and stage
+        debug_assert!(now >= clock, "event clock went backwards: {now} < {clock}");
+        clock = now;
+        match ev.ev {
+            Ev::Arrival { stream } => {
+                let task = next_task[stream]
+                    .take()
+                    .expect("arrival without pending task");
+                if remaining[stream] > 0 {
+                    remaining[stream] -= 1;
+                    let t = gens[stream].next_task();
+                    state.q.push(t.arrival_s, Ev::Arrival { stream });
+                    next_task[stream] = Some(t);
+                }
+                state.offered += 1;
+                let dev = state.route(devices);
+                let downgraded = match state.admit(dev, &task) {
+                    Verdict::Shed => {
+                        state.shed += 1;
+                        continue;
+                    }
+                    Verdict::Downgrade => {
+                        state.downgraded += 1;
+                        true
+                    }
+                    Verdict::Accept => false,
+                };
+                let id = state.jobs.len();
+                state.jobs.push(Job {
+                    task,
+                    stream,
+                    dev,
+                    arrival_s: now,
+                    queue_wait_s: 0.0,
+                    solo_off_s: 0.0,
+                    cloud_s: 0.0,
+                    payload_bytes: 0.0,
+                    downgraded,
+                    report: None,
+                });
+                state.enqueue_edge(id);
+                state.maybe_start_edge(devices, dev, now);
+            }
+            Ev::EdgeDone { dev, job: id } => {
+                state.devs[dev].edge_busy = false;
+                let offloads = state.jobs[id]
+                    .report
+                    .as_ref()
+                    .map(|r| r.xi > 0.0)
+                    .unwrap_or(false);
+                if offloads {
+                    state.enqueue_uplink(devices, dev, id, now);
+                } else {
+                    state.finish(id, now);
+                }
+                state.maybe_start_edge(devices, dev, now);
+            }
+            Ev::BatchClose { dev, generation } => {
+                if generation == state.devs[dev].open_batch.generation {
+                    state.flush_open_batch(devices, dev, now);
+                }
+            }
+            Ev::UplinkDone { dev, batch } => {
+                state.devs[dev].uplink_busy = false;
+                // final use of this batch slot — take, don't clone
+                let members = std::mem::take(&mut state.batches[batch]);
+                for id in members {
+                    state.enqueue_cloud(id, now);
+                }
+                state.maybe_start_uplink(devices, dev, now);
+            }
+            Ev::CloudBatchClose { generation } => {
+                if generation == state.cloud_open.generation {
+                    state.flush_cloud_batch(now);
+                }
+            }
+            Ev::CloudDone { batch } => {
+                state.cloud_active -= 1;
+                // final use of this invocation's slot — take, don't clone
+                let members = std::mem::take(&mut state.cloud_batches[batch]);
+                for id in members {
+                    state.cloud_in_flight -= 1;
+                    state.finish(id, now);
+                }
+                state.maybe_start_cloud(now);
+            }
+        }
+    }
+
+    // reset load signals so later synchronous use observes idle edges
+    for coord in devices.iter_mut() {
+        coord.load = LoadSignals::default();
+    }
+
+    EngineResult {
+        jobs: state
+            .jobs
+            .into_iter()
+            .map(|j| EngineJob {
+                report: j.report,
+                dev: j.dev,
+                deadline_s: j.task.deadline_s,
+            })
+            .collect(),
+        offered: state.offered,
+        shed: state.shed,
+        downgraded: state.downgraded,
+        cloud_invocations: state.cloud_invocations,
+        cloud_occupancy: state.cloud_occupancy,
+        cloud_dispatch_saved_s: state.cloud_dispatch_saved_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::Config;
+    use crate::coordinator::des::DesOpts;
+    use crate::coordinator::fleet::{serve_fleet, Fleet};
+    use crate::workload::Arrivals;
+
+    #[test]
+    fn event_heap_orders_by_time_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(2.0, Ev::Arrival { stream: 0 });
+        q.push(1.0, Ev::Arrival { stream: 1 });
+        q.push(1.0, Ev::Arrival { stream: 2 });
+        q.push(0.5, Ev::Arrival { stream: 3 });
+        let order: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|e| match e.ev {
+                Ev::Arrival { stream } => stream,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(order, vec![3, 1, 2, 0]);
+    }
+
+    #[test]
+    fn event_queue_never_pops_out_of_time_order_across_devices() {
+        // Property: with events scattered across N devices and every
+        // event kind, pops come out in nondecreasing time order, and
+        // events with equal timestamps come out in insertion (FIFO)
+        // order regardless of which device they belong to. Times are
+        // quantized to a coarse grid so cross-device ties actually occur.
+        use crate::proptest_mini::{check, f64_in, vec_of};
+        check(
+            "cross-device event time order + FIFO ties",
+            0xE6E1,
+            300,
+            vec_of(f64_in(0.0, 4.0), 1, 64),
+            |times| {
+                let mut q = EventQueue::new();
+                let quantized: Vec<f64> =
+                    times.iter().map(|t| (t * 4.0).floor() / 4.0).collect();
+                for (i, &t) in quantized.iter().enumerate() {
+                    let ev = match i % 4 {
+                        0 => Ev::Arrival { stream: i },
+                        1 => Ev::EdgeDone { dev: i % 3, job: i },
+                        2 => Ev::UplinkDone {
+                            dev: i % 3,
+                            batch: i,
+                        },
+                        _ => Ev::CloudDone { batch: i },
+                    };
+                    q.push(t, ev);
+                }
+                let mut prev: Option<Event> = None;
+                while let Some(ev) = q.pop() {
+                    if let Some(p) = prev {
+                        if ev.time < p.time {
+                            return Err(format!("time went backwards: {} < {}", ev.time, p.time));
+                        }
+                        if ev.time == p.time && ev.seq < p.seq {
+                            return Err(format!(
+                                "FIFO tiebreak violated at t={}: seq {} before {}",
+                                ev.time, p.seq, ev.seq
+                            ));
+                        }
+                    }
+                    prev = Some(ev);
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn nan_event_time_cannot_reorder_real_events() {
+        // total_cmp gives NaN a fixed slot (after +inf in ascending order,
+        // i.e. popped last from the min-ordered heap) instead of making
+        // comparisons against it nondeterministic.
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, Ev::Arrival { stream: 0 });
+        q.push(1.0, Ev::Arrival { stream: 1 });
+        q.push(2.0, Ev::Arrival { stream: 2 });
+        let order: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|e| match e.ev {
+                Ev::Arrival { stream } => stream,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn randomized_fleets_never_violate_engine_invariants() {
+        // Property: for random fleet sizes, stream counts, uplink and
+        // cloud batch windows, the unified engine (a) conserves tasks
+        // (offered = completed + shed), (b) keeps every cloud invocation
+        // within the size cap, and (c) never pops events out of time
+        // order — the in-loop debug_assert on the event clock fires
+        // under `cargo test` if it ever regresses.
+        use crate::proptest_mini::{check, usize_in, Gen};
+        let fleets = ["xavier-nx", "xavier-nx,jetson-nano", "jetson-nano*2,jetson-tx2"];
+        check(
+            "engine invariants over random fleets",
+            0xF1EE7,
+            12,
+            |r: &mut crate::util::Pcg32| {
+                (
+                    usize_in(0, 2).sample(r),
+                    usize_in(1, 4).sample(r),
+                    usize_in(1, 4).sample(r),
+                    usize_in(0, 2).sample(r),
+                    usize_in(0, 2).sample(r),
+                    r.next_u64(),
+                )
+            },
+            |&(fi, streams, per_stream, wi, cwi, seed)| {
+                let mut cfg = Config::default();
+                cfg.policy = "cloud_only".into();
+                cfg.fleet = fleets[fi].into();
+                cfg.seed = seed;
+                let mut fleet = Fleet::from_config(&cfg).map_err(|e| e.to_string())?;
+                let mut gens: Vec<TaskGen> = (0..streams)
+                    .map(|s| {
+                        TaskGen::new(
+                            &cfg.model,
+                            fleet.devices[0].env.dataset,
+                            Arrivals::Poisson { rate: 40.0 },
+                            seed ^ (s as u64),
+                        )
+                        .map_err(|e| e.to_string())
+                    })
+                    .collect::<Result<_, _>>()?;
+                let windows = [0.0, 0.005, 0.05];
+                let opts = FleetOpts {
+                    des: DesOpts {
+                        batch_window_s: windows[wi],
+                        cloud_batch_window_s: windows[cwi],
+                        cloud_max_batch: 3,
+                        cloud_slots: 2,
+                        ..DesOpts::default()
+                    },
+                    ..FleetOpts::default()
+                };
+                let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
+                if s.offered != s.completed + s.shed {
+                    return Err(format!(
+                        "task conservation: offered {} vs completed {} + shed {}",
+                        s.offered, s.completed, s.shed
+                    ));
+                }
+                if s.completed != streams * per_stream {
+                    return Err(format!("completed {}", s.completed));
+                }
+                let occ = s.cloud_occupancy.values();
+                if occ.iter().any(|&o| !(1.0..=3.0).contains(&o)) {
+                    return Err(format!("occupancy outside [1, cap]: {occ:?}"));
+                }
+                if occ.iter().map(|&o| o as usize).sum::<usize>() != s.completed {
+                    return Err("cloud invocations do not cover all cloud jobs".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn admission_estimate_includes_cloud_detour() {
+        // Two states that differ only in cloud-side signals: once the
+        // device is known to offload and the shared pool is saturated,
+        // the completion estimate must exceed the pure edge backlog.
+        let opts = FleetOpts::default();
+        let mut st = EngineState::new(1, 4, &opts);
+        st.devs[0].residency.push(0.1);
+        let edge_only = st.est_completion_s(0).unwrap();
+        st.devs[0].xi.push(1.0);
+        st.devs[0].uplink_s.push(0.05);
+        st.cloud_service.push(0.2);
+        st.cloud_in_flight = 8;
+        let saturated = st.est_completion_s(0).unwrap();
+        assert!((edge_only - 0.1).abs() < 1e-12, "edge backlog {edge_only}");
+        // detour = 1.0 * (0.05 + 0.2 + 0.2 * 8 / 4) = 0.65
+        assert!(
+            (saturated - (0.1 + 0.65)).abs() < 1e-9,
+            "estimate {saturated}"
+        );
+    }
+
+    #[test]
+    fn cold_start_estimate_is_none() {
+        let st = EngineState::new(2, 4, &FleetOpts::default());
+        assert!(st.est_completion_s(0).is_none());
+        assert!(st.est_completion_s(1).is_none());
+    }
+}

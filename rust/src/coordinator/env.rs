@@ -82,6 +82,9 @@ pub struct TaskReport {
     pub stream: usize,
     /// uplink batch size this task's offload shipped in (0 = no offload)
     pub batch_size: usize,
+    /// cloud-invocation batch size this task's cloud work ran in
+    /// (0 = the task never reached the cloud executor)
+    pub cloud_batch_size: usize,
 }
 
 /// The simulated serving environment for one (device, cloud, model,

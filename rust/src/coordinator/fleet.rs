@@ -1,36 +1,39 @@
-//! Fleet-scale serving: a multi-edge dispatcher layered over the
-//! discrete-event core.
+//! Fleet-scale serving: the multi-edge dispatch layer over the unified
+//! discrete-event kernel (`super::engine`).
 //!
-//! Where `des.rs` simulates one loaded edge node, this module owns a
+//! Where `des.rs` drives one loaded edge node, this module owns a
 //! **fleet** of N heterogeneous edge devices. Each device is a full
 //! `Coordinator` (its own `EdgeCloudEnv`, DVFS state, FIFO/priority
 //! queue, residency estimate, and policy instance built from a
 //! per-device `DeviceSpec`), with its own uplink and batching window;
-//! all devices share one bounded cloud executor pool. Arriving tasks are
-//! routed by a pluggable [`Router`] (round-robin, join-shortest-queue,
-//! energy-aware least-backlog) and screened by an [`Admission`] policy:
-//! when the chosen device's estimated backlog would blow the task's SLO
-//! deadline, the dispatcher can shed the task outright or downgrade it
-//! to edge-only execution (skipping the uplink/cloud detour). Shed,
-//! downgrade, and SLO-violation counts are first-class telemetry next to
-//! the p50/p95/p99 latency percentiles.
+//! all devices share one bounded cloud executor pool, where co-arriving
+//! cloud work from different devices can merge into batched invocations
+//! within the cloud batch window. Arriving tasks are routed by a
+//! pluggable [`Router`] (round-robin, join-shortest-queue, energy-aware
+//! least-backlog) and screened by an [`Admission`] policy: when the
+//! chosen device's estimated completion time — edge backlog *plus* the
+//! expected uplink transfer and shared cloud-pool wait — would blow the
+//! task's SLO deadline, the dispatcher can shed the task outright or
+//! downgrade it to edge-only execution (skipping the uplink/cloud
+//! detour). Shed, downgrade, SLO-violation, and cloud-batch-occupancy
+//! counts are first-class telemetry next to the p50/p95/p99 latency
+//! percentiles.
 //!
-//! Per-task physics still come from `EdgeCloudEnv::execute` via
-//! `Coordinator::step_constrained`, invoked exactly once per task at
-//! edge-service start — so a 1-device fleet with round-robin routing, no
-//! SLOs, and admission disabled reproduces `serve_multistream` reports
-//! task-for-task (the parity gate in `rust/tests/fleet_serving.rs`).
+//! This module holds the policy surface (specs, parsing, fleet
+//! construction, summary folding); the event loop itself lives in the
+//! kernel, shared bit-for-bit with `serve_multistream` — a 1-device
+//! fleet with round-robin routing, no SLOs, and admission disabled
+//! reproduces it task-for-task (the parity gate in
+//! `rust/tests/fleet_serving.rs`).
 
-use super::{Coordinator, LoadSignals, ServeSummary};
+use super::engine;
+use super::{Coordinator, ServeSummary};
 use crate::configx::Config;
 use crate::coordinator::des::DesOpts;
-use crate::coordinator::env::TaskReport;
 use crate::device::spec::find_device;
-use crate::util::Ewma;
-use crate::workload::{Arrivals, Task, TaskGen};
+use crate::util::Samples;
+use crate::workload::{Arrivals, TaskGen};
 use anyhow::{bail, Context, Result};
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
 
 /// Dispatch policy: which edge device an arriving task lands on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -54,7 +57,8 @@ impl Router {
             "shortest_queue" | "jsq" => Router::ShortestQueue,
             "least_backlog" | "energy" => Router::LeastBacklog,
             other => bail!(
-                "unknown router `{other}` (want round_robin | shortest_queue | least_backlog)"
+                "unknown router `{other}`; valid routers: round_robin (alias rr), \
+                 shortest_queue (alias jsq), least_backlog (alias energy)"
             ),
         })
     }
@@ -81,7 +85,10 @@ impl Admission {
             "off" | "none" => Admission::Off,
             "shed" => Admission::Shed,
             "downgrade" => Admission::Downgrade,
-            other => bail!("unknown admission policy `{other}` (want off | shed | downgrade)"),
+            other => bail!(
+                "unknown admission policy `{other}`; valid policies: off (alias none), \
+                 shed, downgrade"
+            ),
         })
     }
 }
@@ -89,8 +96,9 @@ impl Admission {
 /// Tunables of a fleet serving run.
 #[derive(Clone, Debug)]
 pub struct FleetOpts {
-    /// per-device DES tunables (uplink batch window + cap) and the size
-    /// of the *shared* cloud executor pool
+    /// per-device DES tunables (uplink batch window + cap), the size of
+    /// the *shared* cloud executor pool, and the cross-device cloud
+    /// batching window
     pub des: DesOpts,
     pub router: Router,
     pub admission: Admission,
@@ -209,7 +217,7 @@ pub struct DeviceTelemetry {
 }
 
 /// Aggregated outcome of a fleet serving run: the usual latency/energy
-/// summary plus SLO/admission accounting.
+/// summary plus SLO/admission accounting and cloud-batching telemetry.
 #[derive(Default)]
 pub struct FleetSummary {
     pub serve: ServeSummary,
@@ -227,334 +235,25 @@ pub struct FleetSummary {
     /// task carries a deadline)
     pub goodput: usize,
     pub per_device: Vec<DeviceTelemetry>,
+    /// cloud executor invocations (batched and singleton)
+    pub cloud_invocations: usize,
+    /// jobs per cloud executor invocation (batch occupancy)
+    pub cloud_occupancy: Samples,
+    /// dispatch/runtime overhead amortized away by cloud batching (s)
+    pub cloud_dispatch_saved_s: f64,
 }
 
-// ---------------------------------------------------------------------
-// event machinery: a device-tagged variant of des.rs (NaN-proof
-// ordering). Deliberately a parallel implementation for this PR so the
-// battle-tested single-edge path stays byte-identical; once a local
-// toolchain can re-gate parity, `serve_multistream` should delegate to
-// this engine with N=1 and the des.rs copy be deleted (ROADMAP item).
-// ---------------------------------------------------------------------
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Ev {
-    Arrival { stream: usize },
-    EdgeDone { dev: usize, job: usize },
-    BatchClose { dev: usize, generation: usize },
-    UplinkDone { dev: usize, batch: usize },
-    CloudDone { job: usize },
-}
-
-/// Heap entry; the `seq` tiebreak makes simultaneous events FIFO and the
-/// whole simulation deterministic.
-#[derive(Clone, Debug)]
-struct Event {
-    time: f64,
-    seq: u64,
-    ev: Ev,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest first
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-struct EventQueue {
-    heap: BinaryHeap<Event>,
-    seq: u64,
-}
-
-impl EventQueue {
-    fn push(&mut self, time: f64, ev: Ev) {
-        self.heap.push(Event {
-            time,
-            seq: self.seq,
-            ev,
-        });
-        self.seq += 1;
-    }
-
-    fn pop(&mut self) -> Option<Event> {
-        self.heap.pop()
-    }
-}
-
-/// One in-flight task.
-struct Job {
-    task: Task,
-    stream: usize,
-    dev: usize,
-    arrival_s: f64,
-    queue_wait_s: f64,
-    solo_off_s: f64,
-    cloud_s: f64,
-    payload_bytes: f64,
-    /// admission control forced this task to edge-only execution
-    downgraded: bool,
-    report: Option<TaskReport>,
-}
-
-/// Per-device queueing state (mirrors the single-edge `DesState`).
-struct DevState {
-    edge_queue: VecDeque<usize>,
-    edge_busy: bool,
-    /// EWMA of edge residency, drives backlog estimates for routing,
-    /// admission, and the policy's LoadSignals
-    residency: Ewma,
-    open_batch: Vec<usize>,
-    /// bumps on every flush so stale BatchClose events are ignored
-    batch_open_id: usize,
-    uplink_queue: VecDeque<usize>,
-    uplink_busy: bool,
-}
-
-impl DevState {
-    fn new() -> Self {
-        Self {
-            edge_queue: VecDeque::new(),
-            edge_busy: false,
-            residency: Ewma::new(0.2),
-            open_batch: Vec::new(),
-            batch_open_id: 0,
-            uplink_queue: VecDeque::new(),
-            uplink_busy: false,
-        }
-    }
-
-    /// Tasks queued or in service on this device.
-    fn in_system(&self) -> usize {
-        self.edge_queue.len() + self.edge_busy as usize
-    }
-
-    /// Estimated seconds until a newly queued task would *finish* edge
-    /// service, from the residency EWMA. `None` before the first
-    /// completion (cold start — admission stays open).
-    fn est_completion_s(&self) -> Option<f64> {
-        self.residency
-            .get()
-            .map(|res| res * (self.in_system() as f64 + 1.0))
-    }
-}
-
-struct FleetState {
-    q: EventQueue,
-    jobs: Vec<Job>,
-    devs: Vec<DevState>,
-    /// flushed batches, addressed by UplinkDone payload (global ids;
-    /// the owning device rides in the event)
-    batches: Vec<Vec<usize>>,
-    cloud_active: usize,
-    cloud_queue: VecDeque<usize>,
-    opts: FleetOpts,
-    rr_next: usize,
-    shed: usize,
-    downgraded: usize,
-}
-
-impl FleetState {
-    /// Pick the device for an arriving task.
-    fn route(&mut self, fleet: &Fleet) -> usize {
-        let n = self.devs.len();
-        match self.opts.router {
-            Router::RoundRobin => {
-                let d = self.rr_next % n;
-                self.rr_next += 1;
-                d
-            }
-            Router::ShortestQueue => (0..n)
-                .min_by_key(|&d| self.devs[d].in_system())
-                .unwrap_or(0),
-            Router::LeastBacklog => {
-                let score = |d: usize| {
-                    let res = self.devs[d].residency.get().unwrap_or(1.0);
-                    let power = fleet.devices[d].env.edge.spec().max_power_w;
-                    self.devs[d].in_system() as f64 * res * power
-                };
-                (0..n)
-                    .min_by(|&a, &b| score(a).total_cmp(&score(b)))
-                    .unwrap_or(0)
-            }
-        }
-    }
-
-    /// Queue a job on its device, honoring priority classes: a task
-    /// jumps ahead of queued lower-priority tasks (FIFO within a class,
-    /// so all-default-priority traffic keeps the exact legacy order).
-    fn enqueue_edge(&mut self, id: usize) {
-        let dev = self.jobs[id].dev;
-        let prio = self.jobs[id].task.priority;
-        if prio == 0 {
-            self.devs[dev].edge_queue.push_back(id);
-            return;
-        }
-        let pos = self.devs[dev]
-            .edge_queue
-            .iter()
-            .position(|&j| self.jobs[j].task.priority < prio)
-            .unwrap_or(self.devs[dev].edge_queue.len());
-        self.devs[dev].edge_queue.insert(pos, id);
-    }
-
-    /// Start edge service on the next queued job if the device is idle:
-    /// publish per-device load signals, run decide→execute through the
-    /// device's coordinator, and schedule the edge-completion event.
-    fn maybe_start_edge(&mut self, fleet: &mut Fleet, dev: usize, now: f64) {
-        if self.devs[dev].edge_busy {
-            return;
-        }
-        let Some(id) = self.devs[dev].edge_queue.pop_front() else {
-            return;
-        };
-        let coord = &mut fleet.devices[dev];
-        coord.load.queue_depth = self.devs[dev].edge_queue.len();
-        coord.load.backlog_s = self.devs[dev].residency.get().unwrap_or(0.0)
-            * self.devs[dev].edge_queue.len() as f64;
-        let force_edge = self.jobs[id].downgraded;
-        let r = coord.step_constrained(&self.jobs[id].task, false, force_edge);
-        let residency = (r.tti_total_s - r.tti_off_s - r.tti_cloud_s).max(0.0);
-        self.devs[dev].residency.push(residency);
-        let job = &mut self.jobs[id];
-        job.queue_wait_s = (now - job.arrival_s).max(0.0);
-        job.solo_off_s = r.tti_off_s;
-        job.cloud_s = r.tti_cloud_s;
-        job.payload_bytes = r.payload_bytes;
-        job.report = Some(r);
-        self.devs[dev].edge_busy = true;
-        self.q.push(now + residency, Ev::EdgeDone { dev, job: id });
-    }
-
-    fn freeze_batch(&mut self, members: Vec<usize>) -> usize {
-        self.batches.push(members);
-        self.batches.len() - 1
-    }
-
-    fn flush_open_batch(&mut self, fleet: &Fleet, dev: usize, now: f64) {
-        if self.devs[dev].open_batch.is_empty() {
-            return;
-        }
-        let members = std::mem::take(&mut self.devs[dev].open_batch);
-        self.devs[dev].batch_open_id += 1;
-        let b = self.freeze_batch(members);
-        self.devs[dev].uplink_queue.push_back(b);
-        self.maybe_start_uplink(fleet, dev, now);
-    }
-
-    /// Start transmitting the next batch on the device's uplink if it is
-    /// idle (singleton batches reuse the env-computed solo transmission
-    /// time; real batches ship the summed payload in one transfer).
-    fn maybe_start_uplink(&mut self, fleet: &Fleet, dev: usize, now: f64) {
-        if self.devs[dev].uplink_busy {
-            return;
-        }
-        let Some(b) = self.devs[dev].uplink_queue.pop_front() else {
-            return;
-        };
-        let members = self.batches[b].clone();
-        let tx_s = if members.len() == 1 {
-            self.jobs[members[0]].solo_off_s
-        } else {
-            let payload: f64 = members.iter().map(|&id| self.jobs[id].payload_bytes).sum();
-            fleet.devices[dev].env.link.tx_time_s(payload)
-        };
-        let n = members.len();
-        for &id in &members {
-            if let Some(r) = self.jobs[id].report.as_mut() {
-                r.batch_size = n;
-            }
-        }
-        self.devs[dev].uplink_busy = true;
-        self.q.push(now + tx_s, Ev::UplinkDone { dev, batch: b });
-    }
-
-    /// Hand a job to the shared cloud pool (or its queue).
-    fn dispatch_cloud(&mut self, id: usize, now: f64) {
-        if self.cloud_active < self.opts.des.cloud_slots {
-            self.cloud_active += 1;
-            self.q.push(now + self.jobs[id].cloud_s, Ev::CloudDone { job: id });
-        } else {
-            self.cloud_queue.push_back(id);
-        }
-    }
-
-    /// Stamp the queueing-aware fields on the job's report.
-    fn finish(&mut self, id: usize, now: f64) {
-        let job = &mut self.jobs[id];
-        if let Some(r) = job.report.as_mut() {
-            r.queue_wait_s = job.queue_wait_s;
-            r.e2e_s = (now - job.arrival_s).max(0.0);
-            r.stream = job.stream;
-        }
-    }
-
-    /// Admission decision for a routed task. Returns what to do given
-    /// the device's backlog estimate and the task's SLO class.
-    ///
-    /// The estimate is deliberately the *edge* backlog only (residency
-    /// EWMA × queue occupancy): at admission time the offload decision
-    /// hasn't been made yet, so uplink and cloud-pool time are unknown.
-    /// That makes this a lower bound on completion time — admission can
-    /// under-shed when the uplink or shared cloud pool is the
-    /// bottleneck, never over-shed. Folding a cloud/uplink wait estimate
-    /// in is a ROADMAP item.
-    fn admit(&self, dev: usize, task: &Task) -> Verdict {
-        if self.opts.admission == Admission::Off || !task.deadline_s.is_finite() {
-            return Verdict::Accept;
-        }
-        let Some(est) = self.devs[dev].est_completion_s() else {
-            // cold start: no residency estimate yet, accept everything
-            return Verdict::Accept;
-        };
-        if est <= task.deadline_s {
-            return Verdict::Accept;
-        }
-        match self.opts.admission {
-            Admission::Shed if task.priority == 0 => Verdict::Shed,
-            // high-priority tasks (and every task under `downgrade`)
-            // stay in the system but skip the cloud detour
-            _ => Verdict::Downgrade,
-        }
-    }
-}
-
-enum Verdict {
-    Accept,
-    Shed,
-    Downgrade,
-}
-
-/// Serve `per_stream` tasks from each stream through the fleet. Streams
-/// are routed per task by the configured router; reports accumulate in
-/// job-creation (arrival) order so a 1-device round-robin fleet is
-/// report-ordered exactly like `serve_multistream`.
+/// Serve `per_stream` tasks from each stream through the fleet via the
+/// unified kernel. Streams are routed per task by the configured
+/// router; reports accumulate in job-creation (arrival) order so a
+/// 1-device round-robin fleet is report-ordered exactly like
+/// `serve_multistream`.
 pub fn serve_fleet(
     fleet: &mut Fleet,
     gens: &mut [TaskGen],
     per_stream: usize,
     opts: &FleetOpts,
 ) -> FleetSummary {
-    for coord in fleet.devices.iter_mut() {
-        coord.policy.set_training(false);
-    }
     let mut summary = FleetSummary {
         per_device: fleet
             .names
@@ -568,145 +267,14 @@ pub fn serve_fleet(
             .collect(),
         ..FleetSummary::default()
     };
-    if gens.is_empty() || per_stream == 0 || fleet.devices.is_empty() {
-        return summary;
-    }
-    let streams = gens.len();
-    let mut state = FleetState {
-        q: EventQueue {
-            heap: BinaryHeap::new(),
-            seq: 0,
-        },
-        jobs: Vec::with_capacity(streams * per_stream),
-        devs: (0..fleet.len()).map(|_| DevState::new()).collect(),
-        batches: Vec::new(),
-        cloud_active: 0,
-        cloud_queue: VecDeque::new(),
-        opts: opts.clone(),
-        rr_next: 0,
-        shed: 0,
-        downgraded: 0,
-    };
-
-    // prime every stream with its first arrival
-    let mut next_task: Vec<Option<Task>> = Vec::with_capacity(streams);
-    let mut remaining: Vec<usize> = vec![per_stream; streams];
-    for (s, gen) in gens.iter_mut().enumerate() {
-        let t = gen.next_task();
-        remaining[s] -= 1;
-        state.q.push(t.arrival_s, Ev::Arrival { stream: s });
-        next_task.push(Some(t));
-    }
-
-    while let Some(ev) = state.q.pop() {
-        let now = ev.time;
-        match ev.ev {
-            Ev::Arrival { stream } => {
-                let task = next_task[stream]
-                    .take()
-                    .expect("arrival without pending task");
-                if remaining[stream] > 0 {
-                    remaining[stream] -= 1;
-                    let t = gens[stream].next_task();
-                    state.q.push(t.arrival_s, Ev::Arrival { stream });
-                    next_task[stream] = Some(t);
-                }
-                summary.offered += 1;
-                let dev = state.route(fleet);
-                let verdict = state.admit(dev, &task);
-                let downgraded = match verdict {
-                    Verdict::Shed => {
-                        state.shed += 1;
-                        continue;
-                    }
-                    Verdict::Downgrade => {
-                        state.downgraded += 1;
-                        true
-                    }
-                    Verdict::Accept => false,
-                };
-                let id = state.jobs.len();
-                state.jobs.push(Job {
-                    task,
-                    stream,
-                    dev,
-                    arrival_s: now,
-                    queue_wait_s: 0.0,
-                    solo_off_s: 0.0,
-                    cloud_s: 0.0,
-                    payload_bytes: 0.0,
-                    downgraded,
-                    report: None,
-                });
-                state.enqueue_edge(id);
-                state.maybe_start_edge(fleet, dev, now);
-            }
-            Ev::EdgeDone { dev, job: id } => {
-                state.devs[dev].edge_busy = false;
-                let offloads = state.jobs[id]
-                    .report
-                    .as_ref()
-                    .map(|r| r.xi > 0.0)
-                    .unwrap_or(false);
-                if offloads {
-                    if state.opts.des.batch_window_s > 0.0 {
-                        if state.devs[dev].open_batch.is_empty() {
-                            state.q.push(
-                                now + state.opts.des.batch_window_s,
-                                Ev::BatchClose {
-                                    dev,
-                                    generation: state.devs[dev].batch_open_id,
-                                },
-                            );
-                        }
-                        state.devs[dev].open_batch.push(id);
-                        if state.devs[dev].open_batch.len() >= state.opts.des.max_batch {
-                            state.flush_open_batch(fleet, dev, now);
-                        }
-                    } else {
-                        let b = state.freeze_batch(vec![id]);
-                        state.devs[dev].uplink_queue.push_back(b);
-                        state.maybe_start_uplink(fleet, dev, now);
-                    }
-                } else {
-                    state.finish(id, now);
-                }
-                state.maybe_start_edge(fleet, dev, now);
-            }
-            Ev::BatchClose { dev, generation } => {
-                if generation == state.devs[dev].batch_open_id {
-                    state.flush_open_batch(fleet, dev, now);
-                }
-            }
-            Ev::UplinkDone { dev, batch } => {
-                state.devs[dev].uplink_busy = false;
-                let members = state.batches[batch].clone();
-                for id in members {
-                    state.dispatch_cloud(id, now);
-                }
-                state.maybe_start_uplink(fleet, dev, now);
-            }
-            Ev::CloudDone { job: id } => {
-                state.cloud_active -= 1;
-                state.finish(id, now);
-                if let Some(next) = state.cloud_queue.pop_front() {
-                    state.cloud_active += 1;
-                    state
-                        .q
-                        .push(now + state.jobs[next].cloud_s, Ev::CloudDone { job: next });
-                }
-            }
-        }
-    }
-
-    // reset load signals so later synchronous use observes idle edges
-    for coord in fleet.devices.iter_mut() {
-        coord.load = LoadSignals::default();
-    }
-
-    summary.shed = state.shed;
-    summary.downgraded = state.downgraded;
-    for job in &state.jobs {
+    let result = engine::serve(&mut fleet.devices, gens, per_stream, opts);
+    summary.offered = result.offered;
+    summary.shed = result.shed;
+    summary.downgraded = result.downgraded;
+    summary.cloud_invocations = result.cloud_invocations;
+    summary.cloud_occupancy = result.cloud_occupancy;
+    summary.cloud_dispatch_saved_s = result.cloud_dispatch_saved_s;
+    for job in &result.jobs {
         if let Some(r) = &job.report {
             summary.serve.push(r);
             summary.completed += 1;
@@ -715,7 +283,7 @@ pub fn serve_fleet(
             } else {
                 r.queue_wait_s + r.tti_total_s
             };
-            let violated = job.task.deadline_s.is_finite() && e2e > job.task.deadline_s;
+            let violated = job.deadline_s.is_finite() && e2e > job.deadline_s;
             if violated {
                 summary.slo_violations += 1;
             } else {
@@ -792,6 +360,22 @@ mod tests {
         assert_eq!(Admission::parse("shed").unwrap(), Admission::Shed);
         assert_eq!(Admission::parse("downgrade").unwrap(), Admission::Downgrade);
         assert!(Admission::parse("maybe").is_err());
+    }
+
+    #[test]
+    fn parse_errors_list_the_valid_variants() {
+        // a typo'd spec must name every accepted value (and alias) so
+        // the error is actionable without reading the source
+        let e = Router::parse("psychic").unwrap_err().to_string();
+        for want in ["psychic", "round_robin", "rr", "shortest_queue", "jsq",
+            "least_backlog", "energy"]
+        {
+            assert!(e.contains(want), "router error missing `{want}`: {e}");
+        }
+        let e = Admission::parse("maybe").unwrap_err().to_string();
+        for want in ["maybe", "off", "none", "shed", "downgrade"] {
+            assert!(e.contains(want), "admission error missing `{want}`: {e}");
+        }
     }
 
     #[test]
@@ -914,6 +498,45 @@ mod tests {
     }
 
     #[test]
+    fn cloud_aware_admission_sheds_when_the_pool_is_the_bottleneck() {
+        // cloud_only overload into a 1-slot shared pool. Poisson (not
+        // sequential) arrivals matter here: decisions must keep landing
+        // WHILE uplinks complete and cloud work is in flight, so the
+        // estimator's pool-wait and cloud-service terms are live (the
+        // formula itself is pinned by the unit test
+        // `admission_estimate_includes_cloud_detour` in engine.rs).
+        let run = |admission| {
+            let c = cfg("cloud_only", "xavier-nx,jetson-tx2");
+            let mut fleet = Fleet::from_config(&c).unwrap();
+            let slo = SloClass::parse("120").unwrap();
+            let mut g = gens(&fleet, 10, Arrivals::Poisson { rate: 30.0 }, 1100, slo);
+            let opts = FleetOpts {
+                des: DesOpts {
+                    cloud_slots: 1,
+                    ..DesOpts::default()
+                },
+                admission,
+                ..FleetOpts::default()
+            };
+            serve_fleet(&mut fleet, &mut g, 4, &opts)
+        };
+        let shed = run(Admission::Shed);
+        assert!(
+            shed.shed > 0,
+            "pool saturation must trigger shedding: {:?} shed",
+            shed.shed
+        );
+        let off = run(Admission::Off);
+        assert_eq!(off.shed, 0);
+        assert!(
+            shed.slo_violations < off.slo_violations,
+            "shed violations {} vs off {}",
+            shed.slo_violations,
+            off.slo_violations
+        );
+    }
+
+    #[test]
     fn no_deadline_means_no_violations_and_full_goodput() {
         let c = cfg("edge_only", "xavier-nx");
         let mut fleet = Fleet::from_config(&c).unwrap();
@@ -922,6 +545,31 @@ mod tests {
         assert_eq!(s.slo_violations, 0);
         assert_eq!(s.goodput, s.completed);
         assert_eq!(s.completed, 12);
+    }
+
+    #[test]
+    fn cross_device_cloud_batch_merges_two_devices() {
+        // one task per device, both offloading, with a wide cloud window:
+        // the two devices' cloud jobs must merge into ONE batched
+        // invocation — occupancy 2 from two distinct uplinks.
+        let c = cfg("cloud_only", "xavier-nx,jetson-tx2");
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(&fleet, 2, Arrivals::Sequential, 1200, SloClass::default());
+        let opts = FleetOpts {
+            des: DesOpts {
+                // wide enough to straddle both devices' edge + uplink time
+                cloud_batch_window_s: 2.0,
+                ..DesOpts::default()
+            },
+            ..FleetOpts::default()
+        };
+        let s = serve_fleet(&mut fleet, &mut g, 1, &opts);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.per_device.iter().map(|d| d.served).collect::<Vec<_>>(), vec![1, 1]);
+        assert_eq!(s.cloud_invocations, 1, "two devices, one invocation");
+        assert_eq!(s.cloud_occupancy.values().to_vec(), vec![2.0]);
+        assert!(s.cloud_dispatch_saved_s > 0.0);
+        assert!(s.serve.reports.iter().all(|r| r.cloud_batch_size == 2));
     }
 
     #[test]
@@ -934,6 +582,7 @@ mod tests {
             let opts = FleetOpts {
                 des: DesOpts {
                     batch_window_s: 0.01,
+                    cloud_batch_window_s: 0.005,
                     ..DesOpts::default()
                 },
                 router: Router::LeastBacklog,

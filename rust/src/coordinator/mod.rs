@@ -4,6 +4,7 @@
 //! experiment consumes.
 
 pub mod des;
+pub mod engine;
 pub mod env;
 pub mod fleet;
 pub mod pipeline;
@@ -118,6 +119,9 @@ pub struct ServeSummary {
     pub e2e_ms: Samples,
     /// uplink batch size per task (0 = the task did not offload)
     pub batch_size: Samples,
+    /// cloud-invocation batch size per task (0 = never reached the
+    /// cloud executor)
+    pub cloud_batch_size: Samples,
     /// total energy per user stream (index = stream id)
     pub per_stream_j: Vec<f64>,
     pub per_unit_j: [f64; 3],
@@ -145,6 +149,7 @@ impl ServeSummary {
         };
         self.e2e_ms.push(e2e_s * 1e3);
         self.batch_size.push(r.batch_size as f64);
+        self.cloud_batch_size.push(r.cloud_batch_size as f64);
         if r.stream >= self.per_stream_j.len() {
             self.per_stream_j.resize(r.stream + 1, 0.0);
         }

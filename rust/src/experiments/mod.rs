@@ -643,6 +643,8 @@ pub fn load_sweep(quick: bool) -> Result<Table> {
 // the multi-edge dispatcher: a heterogeneous 3-device fleet (the paper's
 // Table 3 edge boards) under energy-aware routing and a per-stream SLO,
 // with admission control off / shed / downgrade at each load point.
+// Runs with a non-zero cloud batch window so the cross-device batching
+// path is exercised on every regeneration (and in the CI smoke run).
 // ======================================================================
 pub fn fleet_sweep(quick: bool) -> Result<Table> {
     use crate::coordinator::des::DesOpts;
@@ -689,6 +691,7 @@ pub fn fleet_sweep(quick: bool) -> Result<Table> {
             let opts = FleetOpts {
                 des: DesOpts {
                     batch_window_s: 0.004,
+                    cloud_batch_window_s: 0.004,
                     ..DesOpts::default()
                 },
                 router: Router::parse(&cfg.router)?,
@@ -715,6 +718,97 @@ pub fn fleet_sweep(quick: bool) -> Result<Table> {
                 format!("{mj_per_task:.0}"),
             ]);
         }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Cloud-batch sweep — goodput and executor occupancy vs the cloud-side
+// cross-device batching window: cloud-heavy traffic from a 2-device
+// fleet into a tight shared executor pool, sweeping
+// `cloud_batch_window_ms` from 0 (pre-batching behavior) upward. Emits
+// invocation counts, batch occupancy, amortized dispatch time, total
+// executor busy time (the server-side cost batching actually reduces),
+// goodput/violations, and latency percentiles. Edge energy per task is
+// included for context but is *window-invariant by design*: per-task
+// physics are stamped at edge-service start, so cloud batching moves
+// completion timing and executor occupancy, not edge energy.
+// ======================================================================
+pub fn cloudbatch_sweep(quick: bool) -> Result<Table> {
+    use crate::coordinator::des::DesOpts;
+    use crate::coordinator::fleet::{serve_fleet, Fleet, FleetOpts};
+    use crate::workload::SloClass;
+    let mut t = Table::new(vec![
+        "cloud window ms",
+        "invocations",
+        "mean occupancy",
+        "dispatch saved ms",
+        "cloud busy ms",
+        "completed",
+        "goodput",
+        "violations",
+        "e2e p50 ms",
+        "e2e p99 ms",
+        "edge mJ/task",
+    ]);
+    let windows_ms: &[f64] = if quick {
+        &[0.0, 5.0, 20.0]
+    } else {
+        &[0.0, 2.0, 5.0, 10.0, 20.0, 50.0]
+    };
+    let streams = if quick { 8 } else { 24 };
+    let per_stream = if quick { 6 } else { 20 };
+    for &window_ms in windows_ms {
+        let mut cfg = Config::default();
+        cfg.policy = "cloud_only".into();
+        cfg.fleet = "xavier-nx,jetson-nano".into();
+        cfg.slo = "400".into();
+        cfg.seed = 97;
+        let mut fleet = Fleet::from_config(&cfg)?;
+        let slo = SloClass::parse(&cfg.slo)?;
+        let mut gens = (0..streams)
+            .map(|s| {
+                Ok(TaskGen::new(
+                    &cfg.model,
+                    fleet.devices[0].env.dataset,
+                    Arrivals::Poisson { rate: 6.0 },
+                    9000 + s as u64,
+                )?
+                .with_slo(slo))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let opts = FleetOpts {
+            des: DesOpts {
+                batch_window_s: 0.004,
+                cloud_batch_window_s: window_ms / 1e3,
+                cloud_slots: 2,
+                ..DesOpts::default()
+            },
+            ..FleetOpts::default()
+        };
+        let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
+        let mj_per_task = if s.completed > 0 {
+            1e3 * s.per_device.iter().map(|d| d.energy_j).sum::<f64>() / s.completed as f64
+        } else {
+            0.0
+        };
+        // total executor busy time = Σ solo cloud service − amortized
+        // dispatch: the exact server-side work batching eliminates
+        let cloud_busy_ms =
+            s.serve.tti_cloud_ms.values().iter().sum::<f64>() - s.cloud_dispatch_saved_s * 1e3;
+        t.row(vec![
+            format!("{window_ms}"),
+            s.cloud_invocations.to_string(),
+            format!("{:.2}", s.cloud_occupancy.mean()),
+            format!("{:.1}", s.cloud_dispatch_saved_s * 1e3),
+            format!("{cloud_busy_ms:.1}"),
+            s.completed.to_string(),
+            s.goodput.to_string(),
+            s.slo_violations.to_string(),
+            format!("{:.1}", s.serve.e2e_ms.p50()),
+            format!("{:.1}", s.serve.e2e_ms.p99()),
+            format!("{mj_per_task:.0}"),
+        ]);
     }
     Ok(t)
 }
@@ -767,6 +861,7 @@ pub fn run_by_name(name: &str, quick: bool) -> Result<Table> {
         "ablation" => ablation_action_space(req.min(40)),
         "load" => load_sweep(quick),
         "fleet" => fleet_sweep(quick),
+        "cloudbatch" => cloudbatch_sweep(quick),
         other => anyhow::bail!("unknown experiment `{other}`"),
     }
 }
@@ -774,6 +869,7 @@ pub fn run_by_name(name: &str, quick: bool) -> Result<Table> {
 pub const ALL: &[&str] = &[
     "fig01", "fig02", "fig07", "fig08", "fig09", "fig10", "fig11", "fig12", "fig13",
     "tab04", "fig14", "fig15", "fig16", "tab05", "tab06", "ablation", "load", "fleet",
+    "cloudbatch",
 ];
 
 #[cfg(test)]
@@ -826,6 +922,24 @@ mod tests {
         // one row per (streams, admission) cell
         assert_eq!(csv.lines().count(), 1 + 2 * 3);
         assert!(csv.contains(",shed,"), "admission=shed cell present:\n{csv}");
+    }
+
+    #[test]
+    fn cloudbatch_sweep_emits_occupancy_columns() {
+        let t = cloudbatch_sweep(true).unwrap();
+        let csv = t.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.contains("mean occupancy") && header.contains("dispatch saved ms"));
+        assert!(header.contains("cloud busy ms"));
+        // one row per window point
+        assert_eq!(csv.lines().count(), 1 + 3);
+        // the window-0 row is the pre-batching baseline: all singleton
+        // invocations, nothing amortized
+        let zero = csv.lines().nth(1).unwrap();
+        let cells: Vec<&str> = zero.split(',').collect();
+        assert_eq!(cells[0], "0");
+        assert_eq!(cells[2], "1.00", "window 0 must be all singletons: {zero}");
+        assert_eq!(cells[3], "0.0", "window 0 amortizes nothing: {zero}");
     }
 
     #[test]

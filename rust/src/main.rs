@@ -37,7 +37,8 @@ SUBCOMMANDS:
   pipeline     run the real AOT-artifact pipeline (edge+cloud workers)
   experiment   regenerate a paper table/figure: fig01..fig16, tab04..tab06,
                ablation, load (multi-stream load sweep), fleet (multi-edge
-               goodput/energy/violation curves), or `all`
+               goodput/energy/violation curves), cloudbatch (goodput/energy
+               vs cloud batch window), or `all`
   train        offline DQN training, prints the learning curve
   devices      list the edge/cloud device zoo (paper Table 3)
   models       list the DNN model zoo
@@ -117,6 +118,12 @@ fn real_main() -> anyhow::Result<()> {
                 .opt("max-batch", "max offloads per uplink batch", None)
                 .opt("cloud-slots", "concurrent cloud executors (shared pool)", None)
                 .opt(
+                    "cloud-batch-window",
+                    "cloud-side cross-device batching window (ms, 0 = off)",
+                    None,
+                )
+                .opt("cloud-max-batch", "max jobs per batched cloud invocation", None)
+                .opt(
                     "fleet",
                     "edge fleet: comma-separated device names, name*count for \
                      repeats (empty = single --set device=...)",
@@ -148,6 +155,9 @@ fn real_main() -> anyhow::Result<()> {
             cfg.batch_window_ms = a.parse_or("batch-window", cfg.batch_window_ms)?;
             cfg.max_batch = a.parse_or("max-batch", cfg.max_batch)?;
             cfg.cloud_slots = a.parse_or("cloud-slots", cfg.cloud_slots)?;
+            cfg.cloud_batch_window_ms =
+                a.parse_or("cloud-batch-window", cfg.cloud_batch_window_ms)?;
+            cfg.cloud_max_batch = a.parse_or("cloud-max-batch", cfg.cloud_max_batch)?;
             for (key, flag) in [
                 ("arrivals", "arrivals"),
                 ("fleet", "fleet"),
@@ -218,7 +228,8 @@ fn real_main() -> anyhow::Result<()> {
                 }
                 println!(
                     "policy={} model={} dataset={} fleet=[{}] router={} slo={} admission={} \
-                     bw={} streams={} arrivals={} batch-window={}ms cloud-slots={}",
+                     bw={} streams={} arrivals={} batch-window={}ms cloud-slots={} \
+                     cloud-batch-window={}ms",
                     cfg.policy,
                     cfg.model,
                     cfg.dataset,
@@ -230,13 +241,26 @@ fn real_main() -> anyhow::Result<()> {
                     cfg.streams,
                     cfg.arrivals,
                     cfg.batch_window_ms,
-                    cfg.cloud_slots
+                    cfg.cloud_slots,
+                    cfg.cloud_batch_window_ms
                 );
                 print_summary_table(&s.serve);
                 println!(
                     "offered={} completed={} shed={} downgraded={} violations={} goodput={}",
                     s.offered, s.completed, s.shed, s.downgraded, s.slo_violations, s.goodput
                 );
+                // gate on the knob (like the single-edge path): with
+                // batching off, invocations==jobs is implied, not news
+                if cfg.cloud_batch_window_ms > 0.0 && s.cloud_invocations > 0 {
+                    println!(
+                        "cloud: invocations={} mean-occupancy={:.2} max-occupancy={:.0} \
+                         dispatch-saved={:.1}ms",
+                        s.cloud_invocations,
+                        s.cloud_occupancy.mean(),
+                        s.cloud_occupancy.percentile(100.0),
+                        s.cloud_dispatch_saved_s * 1e3
+                    );
+                }
                 for d in &s.per_device {
                     println!(
                         "  device {:<12} served={:<5} energy={:.1} J violations={}",
@@ -265,7 +289,7 @@ fn real_main() -> anyhow::Result<()> {
                 }
                 println!(
                     "policy={} model={} dataset={} device={} bw={} streams={} arrivals={} \
-                     batch-window={}ms",
+                     batch-window={}ms cloud-batch-window={}ms",
                     cfg.policy,
                     cfg.model,
                     cfg.dataset,
@@ -273,7 +297,8 @@ fn real_main() -> anyhow::Result<()> {
                     cfg.bandwidth,
                     cfg.streams,
                     cfg.arrivals,
-                    cfg.batch_window_ms
+                    cfg.batch_window_ms,
+                    cfg.cloud_batch_window_ms
                 );
                 print_summary_table(&s);
                 if cfg.streams > 1 {
@@ -288,6 +313,26 @@ fn real_main() -> anyhow::Result<()> {
                          over {} streams",
                         s.per_stream_j.len()
                     );
+                }
+                if cfg.cloud_batch_window_ms > 0.0 {
+                    // task-weighted occupancy (same convention as the
+                    // uplink batch_size telemetry): each cloud job
+                    // reports the size of the invocation it rode in
+                    let occ: Vec<f64> = s
+                        .cloud_batch_size
+                        .values()
+                        .iter()
+                        .copied()
+                        .filter(|&b| b > 0.0)
+                        .collect();
+                    if !occ.is_empty() {
+                        println!(
+                            "cloud batching: mean occupancy {:.2} (task-weighted) \
+                             across {} cloud jobs",
+                            occ.iter().sum::<f64>() / occ.len() as f64,
+                            occ.len()
+                        );
+                    }
                 }
             }
         }
@@ -338,7 +383,10 @@ fn real_main() -> anyhow::Result<()> {
         }
         "experiment" => {
             let cmd = Cmd::new("dvfo experiment", "regenerate a paper table/figure")
-                .positional("id", "fig01..fig16 | tab04..tab06 | ablation | load | fleet | all")
+                .positional(
+                    "id",
+                    "fig01..fig16 | tab04..tab06 | ablation | load | fleet | cloudbatch | all",
+                )
                 .flag("full", "full-size sweep (slower)")
                 .opt("csv", "also write CSV to this directory", None);
             let a = parse(&cmd, rest)?;

@@ -104,6 +104,11 @@ pub fn edge_compute(
     }
 }
 
+/// Per-invocation service-runtime overhead of the cloud executor
+/// (scheduling + kernel-launch chain). Paid once per invocation, so the
+/// serving engine's cloud-side batching amortizes it across the batch.
+pub const CLOUD_DISPATCH_OVERHEAD_S: f64 = 0.0015;
+
 /// Cloud-side compute (Eq. 6): same roofline on the cloud spec at max
 /// frequency, plus a queuing/runtime constant.
 pub fn cloud_compute(
@@ -118,7 +123,7 @@ pub fn cloud_compute(
         mem_mhz: cloud.mem.max_mhz,
     };
     let mut t = edge_compute(profile, ds, cloud, &f, work_frac);
-    t.total_s += 0.0015; // service runtime overhead
+    t.total_s += CLOUD_DISPATCH_OVERHEAD_S; // service runtime overhead
     t
 }
 

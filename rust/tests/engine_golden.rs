@@ -1,0 +1,654 @@
+//! Golden-trace gate for the des.rs/fleet.rs → engine.rs unification.
+//!
+//! `reference` below is a frozen, verbatim-behavior copy of the
+//! PRE-refactor fleet event loop (the machinery that used to live in
+//! `rust/src/coordinator/fleet.rs` before it was collapsed into the
+//! unified kernel), kept alive here — against the public API only — as
+//! the golden implementation. The gate: at `--cloud-batch-window 0` a
+//! 2-device fleet run through the new kernel must be **byte-identical**
+//! (every f64 compared by bit pattern) to the pre-refactor machinery,
+//! across batched/unbatched uplinks, routers, policies, and the
+//! admission paths whose estimator did not change (edge-only traffic,
+//! where the cloud-detour term is provably zero).
+
+use dvfo::configx::Config;
+use dvfo::coordinator::des::DesOpts;
+use dvfo::coordinator::fleet::{serve_fleet, Admission, Fleet, FleetOpts, Router};
+use dvfo::coordinator::TaskReport;
+use dvfo::workload::{Arrivals, SloClass, TaskGen};
+
+// =====================================================================
+// frozen pre-refactor fleet event loop (golden reference) — do not
+// "improve" this code; its whole value is that it does not change
+// =====================================================================
+mod reference {
+    use dvfo::coordinator::env::TaskReport;
+    use dvfo::coordinator::fleet::{Admission, Fleet, FleetOpts, Router};
+    use dvfo::coordinator::LoadSignals;
+    use dvfo::util::Ewma;
+    use dvfo::workload::{Task, TaskGen};
+    use std::cmp::Ordering;
+    use std::collections::{BinaryHeap, VecDeque};
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    enum Ev {
+        Arrival { stream: usize },
+        EdgeDone { dev: usize, job: usize },
+        BatchClose { dev: usize, generation: usize },
+        UplinkDone { dev: usize, batch: usize },
+        CloudDone { job: usize },
+    }
+
+    #[derive(Clone, Debug)]
+    struct Event {
+        time: f64,
+        seq: u64,
+        ev: Ev,
+    }
+
+    impl PartialEq for Event {
+        fn eq(&self, other: &Self) -> bool {
+            self.seq == other.seq
+        }
+    }
+
+    impl Eq for Event {}
+
+    impl PartialOrd for Event {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    impl Ord for Event {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other
+                .time
+                .total_cmp(&self.time)
+                .then_with(|| other.seq.cmp(&self.seq))
+        }
+    }
+
+    struct EventQueue {
+        heap: BinaryHeap<Event>,
+        seq: u64,
+    }
+
+    impl EventQueue {
+        fn push(&mut self, time: f64, ev: Ev) {
+            self.heap.push(Event {
+                time,
+                seq: self.seq,
+                ev,
+            });
+            self.seq += 1;
+        }
+
+        fn pop(&mut self) -> Option<Event> {
+            self.heap.pop()
+        }
+    }
+
+    struct Job {
+        task: Task,
+        stream: usize,
+        dev: usize,
+        arrival_s: f64,
+        queue_wait_s: f64,
+        solo_off_s: f64,
+        cloud_s: f64,
+        payload_bytes: f64,
+        downgraded: bool,
+        report: Option<TaskReport>,
+    }
+
+    struct DevState {
+        edge_queue: VecDeque<usize>,
+        edge_busy: bool,
+        residency: Ewma,
+        open_batch: Vec<usize>,
+        batch_open_id: usize,
+        uplink_queue: VecDeque<usize>,
+        uplink_busy: bool,
+    }
+
+    impl DevState {
+        fn new() -> Self {
+            Self {
+                edge_queue: VecDeque::new(),
+                edge_busy: false,
+                residency: Ewma::new(0.2),
+                open_batch: Vec::new(),
+                batch_open_id: 0,
+                uplink_queue: VecDeque::new(),
+                uplink_busy: false,
+            }
+        }
+
+        fn in_system(&self) -> usize {
+            self.edge_queue.len() + self.edge_busy as usize
+        }
+
+        /// the PRE-refactor admission estimator: edge backlog only
+        fn est_completion_s(&self) -> Option<f64> {
+            self.residency
+                .get()
+                .map(|res| res * (self.in_system() as f64 + 1.0))
+        }
+    }
+
+    struct FleetState {
+        q: EventQueue,
+        jobs: Vec<Job>,
+        devs: Vec<DevState>,
+        batches: Vec<Vec<usize>>,
+        cloud_active: usize,
+        cloud_queue: VecDeque<usize>,
+        opts: FleetOpts,
+        rr_next: usize,
+        shed: usize,
+        downgraded: usize,
+    }
+
+    impl FleetState {
+        fn route(&mut self, fleet: &Fleet) -> usize {
+            let n = self.devs.len();
+            match self.opts.router {
+                Router::RoundRobin => {
+                    let d = self.rr_next % n;
+                    self.rr_next += 1;
+                    d
+                }
+                Router::ShortestQueue => (0..n)
+                    .min_by_key(|&d| self.devs[d].in_system())
+                    .unwrap_or(0),
+                Router::LeastBacklog => {
+                    let score = |d: usize| {
+                        let res = self.devs[d].residency.get().unwrap_or(1.0);
+                        let power = fleet.devices[d].env.edge.spec().max_power_w;
+                        self.devs[d].in_system() as f64 * res * power
+                    };
+                    (0..n)
+                        .min_by(|&a, &b| score(a).total_cmp(&score(b)))
+                        .unwrap_or(0)
+                }
+            }
+        }
+
+        fn enqueue_edge(&mut self, id: usize) {
+            let dev = self.jobs[id].dev;
+            let prio = self.jobs[id].task.priority;
+            if prio == 0 {
+                self.devs[dev].edge_queue.push_back(id);
+                return;
+            }
+            let pos = self.devs[dev]
+                .edge_queue
+                .iter()
+                .position(|&j| self.jobs[j].task.priority < prio)
+                .unwrap_or(self.devs[dev].edge_queue.len());
+            self.devs[dev].edge_queue.insert(pos, id);
+        }
+
+        fn maybe_start_edge(&mut self, fleet: &mut Fleet, dev: usize, now: f64) {
+            if self.devs[dev].edge_busy {
+                return;
+            }
+            let Some(id) = self.devs[dev].edge_queue.pop_front() else {
+                return;
+            };
+            let coord = &mut fleet.devices[dev];
+            coord.load.queue_depth = self.devs[dev].edge_queue.len();
+            coord.load.backlog_s = self.devs[dev].residency.get().unwrap_or(0.0)
+                * self.devs[dev].edge_queue.len() as f64;
+            let force_edge = self.jobs[id].downgraded;
+            let r = coord.step_constrained(&self.jobs[id].task, false, force_edge);
+            let residency = (r.tti_total_s - r.tti_off_s - r.tti_cloud_s).max(0.0);
+            self.devs[dev].residency.push(residency);
+            let job = &mut self.jobs[id];
+            job.queue_wait_s = (now - job.arrival_s).max(0.0);
+            job.solo_off_s = r.tti_off_s;
+            job.cloud_s = r.tti_cloud_s;
+            job.payload_bytes = r.payload_bytes;
+            job.report = Some(r);
+            self.devs[dev].edge_busy = true;
+            self.q.push(now + residency, Ev::EdgeDone { dev, job: id });
+        }
+
+        fn freeze_batch(&mut self, members: Vec<usize>) -> usize {
+            self.batches.push(members);
+            self.batches.len() - 1
+        }
+
+        fn flush_open_batch(&mut self, fleet: &Fleet, dev: usize, now: f64) {
+            if self.devs[dev].open_batch.is_empty() {
+                return;
+            }
+            let members = std::mem::take(&mut self.devs[dev].open_batch);
+            self.devs[dev].batch_open_id += 1;
+            let b = self.freeze_batch(members);
+            self.devs[dev].uplink_queue.push_back(b);
+            self.maybe_start_uplink(fleet, dev, now);
+        }
+
+        fn maybe_start_uplink(&mut self, fleet: &Fleet, dev: usize, now: f64) {
+            if self.devs[dev].uplink_busy {
+                return;
+            }
+            let Some(b) = self.devs[dev].uplink_queue.pop_front() else {
+                return;
+            };
+            let members = self.batches[b].clone();
+            let tx_s = if members.len() == 1 {
+                self.jobs[members[0]].solo_off_s
+            } else {
+                let payload: f64 =
+                    members.iter().map(|&id| self.jobs[id].payload_bytes).sum();
+                fleet.devices[dev].env.link.tx_time_s(payload)
+            };
+            let n = members.len();
+            for &id in &members {
+                if let Some(r) = self.jobs[id].report.as_mut() {
+                    r.batch_size = n;
+                }
+            }
+            self.devs[dev].uplink_busy = true;
+            self.q.push(now + tx_s, Ev::UplinkDone { dev, batch: b });
+        }
+
+        fn dispatch_cloud(&mut self, id: usize, now: f64) {
+            if self.cloud_active < self.opts.des.cloud_slots {
+                self.cloud_active += 1;
+                self.q
+                    .push(now + self.jobs[id].cloud_s, Ev::CloudDone { job: id });
+            } else {
+                self.cloud_queue.push_back(id);
+            }
+        }
+
+        fn finish(&mut self, id: usize, now: f64) {
+            let job = &mut self.jobs[id];
+            if let Some(r) = job.report.as_mut() {
+                r.queue_wait_s = job.queue_wait_s;
+                r.e2e_s = (now - job.arrival_s).max(0.0);
+                r.stream = job.stream;
+            }
+        }
+
+        fn admit(&self, dev: usize, task: &Task) -> Verdict {
+            if self.opts.admission == Admission::Off || !task.deadline_s.is_finite() {
+                return Verdict::Accept;
+            }
+            let Some(est) = self.devs[dev].est_completion_s() else {
+                return Verdict::Accept;
+            };
+            if est <= task.deadline_s {
+                return Verdict::Accept;
+            }
+            match self.opts.admission {
+                Admission::Shed if task.priority == 0 => Verdict::Shed,
+                _ => Verdict::Downgrade,
+            }
+        }
+    }
+
+    enum Verdict {
+        Accept,
+        Shed,
+        Downgrade,
+    }
+
+    /// Outcome of one golden run: per-job reports in creation order plus
+    /// the admission counters.
+    pub struct GoldenRun {
+        pub reports: Vec<TaskReport>,
+        pub offered: usize,
+        pub shed: usize,
+        pub downgraded: usize,
+    }
+
+    pub fn serve_fleet(
+        fleet: &mut Fleet,
+        gens: &mut [TaskGen],
+        per_stream: usize,
+        opts: &FleetOpts,
+    ) -> GoldenRun {
+        for coord in fleet.devices.iter_mut() {
+            coord.policy.set_training(false);
+        }
+        let streams = gens.len();
+        let mut state = FleetState {
+            q: EventQueue {
+                heap: BinaryHeap::new(),
+                seq: 0,
+            },
+            jobs: Vec::with_capacity(streams * per_stream),
+            devs: (0..fleet.len()).map(|_| DevState::new()).collect(),
+            batches: Vec::new(),
+            cloud_active: 0,
+            cloud_queue: VecDeque::new(),
+            opts: opts.clone(),
+            rr_next: 0,
+            shed: 0,
+            downgraded: 0,
+        };
+        let mut offered = 0usize;
+
+        let mut next_task: Vec<Option<Task>> = Vec::with_capacity(streams);
+        let mut remaining: Vec<usize> = vec![per_stream; streams];
+        for (s, gen) in gens.iter_mut().enumerate() {
+            let t = gen.next_task();
+            remaining[s] -= 1;
+            state.q.push(t.arrival_s, Ev::Arrival { stream: s });
+            next_task.push(Some(t));
+        }
+
+        while let Some(ev) = state.q.pop() {
+            let now = ev.time;
+            match ev.ev {
+                Ev::Arrival { stream } => {
+                    let task = next_task[stream]
+                        .take()
+                        .expect("arrival without pending task");
+                    if remaining[stream] > 0 {
+                        remaining[stream] -= 1;
+                        let t = gens[stream].next_task();
+                        state.q.push(t.arrival_s, Ev::Arrival { stream });
+                        next_task[stream] = Some(t);
+                    }
+                    offered += 1;
+                    let dev = state.route(fleet);
+                    let downgraded = match state.admit(dev, &task) {
+                        Verdict::Shed => {
+                            state.shed += 1;
+                            continue;
+                        }
+                        Verdict::Downgrade => {
+                            state.downgraded += 1;
+                            true
+                        }
+                        Verdict::Accept => false,
+                    };
+                    let id = state.jobs.len();
+                    state.jobs.push(Job {
+                        task,
+                        stream,
+                        dev,
+                        arrival_s: now,
+                        queue_wait_s: 0.0,
+                        solo_off_s: 0.0,
+                        cloud_s: 0.0,
+                        payload_bytes: 0.0,
+                        downgraded,
+                        report: None,
+                    });
+                    state.enqueue_edge(id);
+                    state.maybe_start_edge(fleet, dev, now);
+                }
+                Ev::EdgeDone { dev, job: id } => {
+                    state.devs[dev].edge_busy = false;
+                    let offloads = state.jobs[id]
+                        .report
+                        .as_ref()
+                        .map(|r| r.xi > 0.0)
+                        .unwrap_or(false);
+                    if offloads {
+                        if state.opts.des.batch_window_s > 0.0 {
+                            if state.devs[dev].open_batch.is_empty() {
+                                state.q.push(
+                                    now + state.opts.des.batch_window_s,
+                                    Ev::BatchClose {
+                                        dev,
+                                        generation: state.devs[dev].batch_open_id,
+                                    },
+                                );
+                            }
+                            state.devs[dev].open_batch.push(id);
+                            if state.devs[dev].open_batch.len() >= state.opts.des.max_batch {
+                                state.flush_open_batch(fleet, dev, now);
+                            }
+                        } else {
+                            let b = state.freeze_batch(vec![id]);
+                            state.devs[dev].uplink_queue.push_back(b);
+                            state.maybe_start_uplink(fleet, dev, now);
+                        }
+                    } else {
+                        state.finish(id, now);
+                    }
+                    state.maybe_start_edge(fleet, dev, now);
+                }
+                Ev::BatchClose { dev, generation } => {
+                    if generation == state.devs[dev].batch_open_id {
+                        state.flush_open_batch(fleet, dev, now);
+                    }
+                }
+                Ev::UplinkDone { dev, batch } => {
+                    state.devs[dev].uplink_busy = false;
+                    let members = state.batches[batch].clone();
+                    for id in members {
+                        state.dispatch_cloud(id, now);
+                    }
+                    state.maybe_start_uplink(fleet, dev, now);
+                }
+                Ev::CloudDone { job: id } => {
+                    state.cloud_active -= 1;
+                    state.finish(id, now);
+                    if let Some(next) = state.cloud_queue.pop_front() {
+                        state.cloud_active += 1;
+                        state
+                            .q
+                            .push(now + state.jobs[next].cloud_s, Ev::CloudDone { job: next });
+                    }
+                }
+            }
+        }
+
+        for coord in fleet.devices.iter_mut() {
+            coord.load = LoadSignals::default();
+        }
+
+        GoldenRun {
+            reports: state.jobs.into_iter().filter_map(|j| j.report).collect(),
+            offered,
+            shed: state.shed,
+            downgraded: state.downgraded,
+        }
+    }
+}
+
+// =====================================================================
+// the gate
+// =====================================================================
+
+fn assert_bits(a: f64, b: f64, what: &str) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b}");
+}
+
+fn assert_reports_byte_identical(golden: &TaskReport, new: &TaskReport, ctx: &str) {
+    assert_bits(golden.tti_local_s, new.tti_local_s, &format!("{ctx}: tti_local"));
+    assert_bits(golden.tti_comp_s, new.tti_comp_s, &format!("{ctx}: tti_comp"));
+    assert_bits(golden.tti_off_s, new.tti_off_s, &format!("{ctx}: tti_off"));
+    assert_bits(golden.tti_cloud_s, new.tti_cloud_s, &format!("{ctx}: tti_cloud"));
+    assert_bits(
+        golden.tti_decision_s,
+        new.tti_decision_s,
+        &format!("{ctx}: tti_decision"),
+    );
+    assert_bits(golden.tti_total_s, new.tti_total_s, &format!("{ctx}: tti_total"));
+    assert_bits(
+        golden.eti_compute_j,
+        new.eti_compute_j,
+        &format!("{ctx}: eti_compute"),
+    );
+    assert_bits(
+        golden.eti_offload_j,
+        new.eti_offload_j,
+        &format!("{ctx}: eti_offload"),
+    );
+    assert_bits(golden.eti_total_j, new.eti_total_j, &format!("{ctx}: eti_total"));
+    for u in 0..3 {
+        assert_bits(
+            golden.eti_per_unit_j[u],
+            new.eti_per_unit_j[u],
+            &format!("{ctx}: eti_per_unit[{u}]"),
+        );
+        assert_bits(golden.freqs[u], new.freqs[u], &format!("{ctx}: freqs[{u}]"));
+        for p in 0..3 {
+            assert_bits(
+                golden.phase_freqs[p][u],
+                new.phase_freqs[p][u],
+                &format!("{ctx}: phase_freqs[{p}][{u}]"),
+            );
+        }
+    }
+    assert_bits(golden.cost, new.cost, &format!("{ctx}: cost"));
+    assert_bits(golden.accuracy_pct, new.accuracy_pct, &format!("{ctx}: accuracy"));
+    assert_bits(
+        golden.accuracy_loss_pts,
+        new.accuracy_loss_pts,
+        &format!("{ctx}: accuracy_loss"),
+    );
+    assert_bits(golden.payload_bytes, new.payload_bytes, &format!("{ctx}: payload"));
+    assert_bits(golden.xi, new.xi, &format!("{ctx}: xi"));
+    assert_bits(golden.local_mass, new.local_mass, &format!("{ctx}: local_mass"));
+    assert_bits(
+        golden.bandwidth_mbps,
+        new.bandwidth_mbps,
+        &format!("{ctx}: bandwidth"),
+    );
+    assert_bits(golden.queue_wait_s, new.queue_wait_s, &format!("{ctx}: queue_wait"));
+    assert_bits(golden.e2e_s, new.e2e_s, &format!("{ctx}: e2e"));
+    assert_eq!(golden.stream, new.stream, "{ctx}: stream");
+    assert_eq!(golden.batch_size, new.batch_size, "{ctx}: batch_size");
+}
+
+struct Scenario {
+    name: &'static str,
+    policy: &'static str,
+    fleet: &'static str,
+    streams: usize,
+    per_stream: usize,
+    arrivals: &'static str,
+    slo: &'static str,
+    batch_window_s: f64,
+    cloud_slots: usize,
+    router: Router,
+    admission: Admission,
+}
+
+fn run_scenario(s: &Scenario) {
+    let mk_cfg = || {
+        let mut c = Config::default();
+        c.policy = s.policy.into();
+        c.fleet = s.fleet.into();
+        c.seed = 42;
+        c
+    };
+    let arrivals = Arrivals::parse(s.arrivals).unwrap();
+    let slo = SloClass::parse(s.slo).unwrap();
+    let mk_gens = |fleet: &Fleet| -> Vec<TaskGen> {
+        (0..s.streams)
+            .map(|i| {
+                TaskGen::new(
+                    fleet.devices[0].env.profile.name,
+                    fleet.devices[0].env.dataset,
+                    arrivals,
+                    7 + i as u64,
+                )
+                .unwrap()
+                .with_slo(slo)
+            })
+            .collect()
+    };
+    let opts = FleetOpts {
+        des: DesOpts {
+            batch_window_s: s.batch_window_s,
+            cloud_slots: s.cloud_slots,
+            // THE gate condition: cloud-side batching disabled must
+            // reproduce the pre-refactor machinery exactly
+            cloud_batch_window_s: 0.0,
+            ..DesOpts::default()
+        },
+        router: s.router,
+        admission: s.admission,
+    };
+
+    let mut golden_fleet = Fleet::from_config(&mk_cfg()).unwrap();
+    assert_eq!(golden_fleet.len(), 2, "{}: golden gate is 2-device", s.name);
+    let mut golden_gens = mk_gens(&golden_fleet);
+    let golden = reference::serve_fleet(&mut golden_fleet, &mut golden_gens, s.per_stream, &opts);
+
+    let mut new_fleet = Fleet::from_config(&mk_cfg()).unwrap();
+    let mut new_gens = mk_gens(&new_fleet);
+    let new = serve_fleet(&mut new_fleet, &mut new_gens, s.per_stream, &opts);
+
+    assert_eq!(golden.offered, new.offered, "{}: offered", s.name);
+    assert_eq!(golden.shed, new.shed, "{}: shed", s.name);
+    assert_eq!(golden.downgraded, new.downgraded, "{}: downgraded", s.name);
+    assert_eq!(
+        golden.reports.len(),
+        new.serve.reports.len(),
+        "{}: completed",
+        s.name
+    );
+    for (i, (g, n)) in golden
+        .reports
+        .iter()
+        .zip(new.serve.reports.iter())
+        .enumerate()
+    {
+        assert_reports_byte_identical(g, n, &format!("{} task {i}", s.name));
+    }
+}
+
+#[test]
+fn two_device_fleet_is_byte_identical_to_prerefactor_machinery() {
+    for scenario in [
+        // cloud-heavy traffic, batched uplinks, contended shared pool
+        Scenario {
+            name: "cloud_only/rr/batched-uplink",
+            policy: "cloud_only",
+            fleet: "xavier-nx,jetson-tx2",
+            streams: 6,
+            per_stream: 5,
+            arrivals: "poisson:40",
+            slo: "none",
+            batch_window_s: 0.02,
+            cloud_slots: 2,
+            router: Router::RoundRobin,
+            admission: Admission::Off,
+        },
+        // untrained DQN policy, unbatched uplinks, JSQ routing
+        Scenario {
+            name: "dvfo/jsq/unbatched",
+            policy: "dvfo",
+            fleet: "xavier-nx,jetson-nano",
+            streams: 4,
+            per_stream: 4,
+            arrivals: "mmpp:10,80,1,0.3",
+            slo: "none",
+            batch_window_s: 0.0,
+            cloud_slots: 4,
+            router: Router::ShortestQueue,
+            admission: Admission::Off,
+        },
+        // admission shed on edge-only traffic: the completion estimator
+        // is provably unchanged here (offload propensity is zero), so
+        // the shed/queueing trace must also match bit-for-bit
+        Scenario {
+            name: "edge_only/jsq/shed",
+            policy: "edge_only",
+            fleet: "jetson-nano,jetson-tx2",
+            streams: 8,
+            per_stream: 4,
+            arrivals: "sequential",
+            slo: "200",
+            batch_window_s: 0.0,
+            cloud_slots: 4,
+            router: Router::ShortestQueue,
+            admission: Admission::Shed,
+        },
+    ] {
+        run_scenario(&scenario);
+    }
+}

@@ -1,17 +1,22 @@
 //! Integration tests for the multi-edge fleet dispatcher
-//! (`rust/src/coordinator/fleet.rs`):
+//! (`rust/src/coordinator/fleet.rs` over the unified kernel in
+//! `rust/src/coordinator/engine.rs`):
 //!
 //! * the fleet parity gate — a 1-device fleet with round-robin routing,
 //!   no SLOs, and admission disabled must reproduce `serve_multistream`
-//!   reports task-for-task
+//!   reports task-for-task (both paths now share the kernel; the gate
+//!   pins the N=1 delegation)
 //! * admission control under overload strictly reduces p99 latency and
 //!   SLO violations versus no admission
 //! * heterogeneous routing and SLO accounting sanity
+//! * cloud-side cross-device batching: occupancy, the size cap, the
+//!   amortized-dispatch ledger, and window-0 inertness
 
 use dvfo::configx::Config;
 use dvfo::coordinator::des::{serve_multistream, DesOpts};
 use dvfo::coordinator::fleet::{serve_fleet, Admission, Fleet, FleetOpts, Router};
 use dvfo::coordinator::Coordinator;
+use dvfo::perfmodel::CLOUD_DISPATCH_OVERHEAD_S;
 use dvfo::workload::{Arrivals, SloClass, TaskGen};
 
 fn cfg(policy: &str, seed: u64) -> Config {
@@ -222,4 +227,87 @@ fn cloud_pool_is_shared_across_the_fleet() {
         tight.serve.e2e_ms.mean(),
         wide.serve.e2e_ms.mean()
     );
+}
+
+#[test]
+fn cloud_batching_amortizes_dispatch_under_pool_contention() {
+    // cloud_only herds from 2 devices into a 1-slot shared pool: with a
+    // cloud batch window, invocations collapse, occupancy rises above 1
+    // but never beyond the cap, and the amortized dispatch time follows
+    // the ledger exactly: (jobs − invocations) × per-invocation overhead.
+    let run = |cloud_batch_window_s: f64| {
+        let mut c = cfg("cloud_only", 23);
+        c.fleet = "xavier-nx,jetson-tx2".into();
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(&c, fleet.devices[0].env.dataset, 8, Arrivals::Sequential, 8000);
+        let opts = FleetOpts {
+            des: DesOpts {
+                // wide uplink window: the t=0 herd ships as multi-member
+                // uplink batches whose members co-arrive at the cloud
+                // stage, so the cloud window deterministically merges
+                batch_window_s: 10.0,
+                cloud_batch_window_s,
+                cloud_max_batch: 6,
+                cloud_slots: 1,
+                ..DesOpts::default()
+            },
+            ..FleetOpts::default()
+        };
+        serve_fleet(&mut fleet, &mut g, 4, &opts)
+    };
+    let solo = run(0.0);
+    assert_eq!(solo.completed, 32);
+    assert_eq!(solo.cloud_invocations, 32, "window 0: one invocation per job");
+    assert!((solo.cloud_occupancy.mean() - 1.0).abs() < 1e-12);
+    assert_eq!(solo.cloud_dispatch_saved_s, 0.0);
+
+    let batched = run(0.05);
+    assert_eq!(batched.completed, 32, "batching must not lose tasks");
+    assert!(
+        batched.cloud_invocations < 32,
+        "window must merge invocations: {}",
+        batched.cloud_invocations
+    );
+    assert!(batched.cloud_occupancy.mean() > 1.0);
+    assert!(
+        batched.cloud_occupancy.values().iter().all(|&o| o <= 6.0),
+        "cap respected: {:?}",
+        batched.cloud_occupancy.values()
+    );
+    let expected_saved =
+        (32 - batched.cloud_invocations) as f64 * CLOUD_DISPATCH_OVERHEAD_S;
+    assert!(
+        (batched.cloud_dispatch_saved_s - expected_saved).abs() < 1e-12,
+        "saved {} vs ledger {expected_saved}",
+        batched.cloud_dispatch_saved_s
+    );
+}
+
+#[test]
+fn cloud_window_zero_is_invariant_to_the_cloud_batch_cap() {
+    // at --cloud-batch-window 0 the cap must be inert: runs with wildly
+    // different caps produce bit-identical summaries
+    let run = |cloud_max_batch: usize| {
+        let mut c = cfg("cloud_only", 29);
+        c.fleet = "xavier-nx,jetson-nano".into();
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let arr = Arrivals::Poisson { rate: 25.0 };
+        let mut g = gens(&c, fleet.devices[0].env.dataset, 4, arr, 9000);
+        let opts = FleetOpts {
+            des: DesOpts {
+                batch_window_s: 0.01,
+                cloud_batch_window_s: 0.0,
+                cloud_max_batch,
+                ..DesOpts::default()
+            },
+            ..FleetOpts::default()
+        };
+        serve_fleet(&mut fleet, &mut g, 5, &opts)
+    };
+    let a = run(1);
+    let b = run(64);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.serve.e2e_ms.mean().to_bits(), b.serve.e2e_ms.mean().to_bits());
+    assert_eq!(a.serve.cost.mean().to_bits(), b.serve.cost.mean().to_bits());
+    assert_eq!(a.cloud_invocations, b.cloud_invocations);
 }

@@ -1,12 +1,15 @@
-//! Integration tests for the discrete-event multi-stream serving core
-//! (`rust/src/coordinator/des.rs`) and the extended arrival processes:
+//! Integration tests for the discrete-event multi-stream serving path
+//! (`rust/src/coordinator/des.rs`, now a thin N=1 delegation to the
+//! unified kernel in `rust/src/coordinator/engine.rs`) and the extended
+//! arrival processes:
 //!
 //! * the N=1 parity gate — with one stream, sequential arrivals and
-//!   batching disabled, the discrete-event core must reproduce the
-//!   legacy synchronous `Coordinator::serve` results task-for-task
+//!   batching disabled, the kernel must reproduce the legacy
+//!   synchronous `Coordinator::serve` results task-for-task
 //! * queueing/batching telemetry under 64-stream load
 //! * reproducibility and rate calibration of the MMPP / diurnal
 //!   arrival processes at the serving level
+//! * cloud-side batching leaves per-task physics untouched
 
 use dvfo::configx::Config;
 use dvfo::coordinator::des::{serve_multistream, DesOpts};
@@ -122,6 +125,50 @@ fn batching_disabled_ships_singletons() {
         .values()
         .iter()
         .all(|&b| (b - 1.0).abs() < 1e-12));
+}
+
+#[test]
+fn cloud_batching_changes_only_completion_telemetry() {
+    // Per-task physics (tti, energy, cost, ξ, payload) are fixed at edge
+    // service start, which the cloud stage cannot influence — so turning
+    // the cloud batch window on must leave them bit-identical and only
+    // move completion timing (e2e) and the cloud-batch metadata.
+    let run = |cloud_batch_window_s: f64| {
+        let (cfg, mut coord) = mk("cloud_only", 13);
+        let mut gens: Vec<TaskGen> = (0..4)
+            .map(|s| {
+                TaskGen::new(&cfg.model, coord.env.dataset, Arrivals::Sequential, 600 + s)
+                    .unwrap()
+            })
+            .collect();
+        let opts = DesOpts {
+            // a wide uplink window groups the t=0 herd into multi-member
+            // uplink batches, whose members land on the cloud stage at
+            // the same instant — guaranteeing the cloud window (when on)
+            // has co-arrivals to merge
+            batch_window_s: 10.0,
+            cloud_batch_window_s,
+            cloud_slots: 2,
+            ..DesOpts::default()
+        };
+        serve_multistream(&mut coord, &mut gens, 5, &opts)
+    };
+    let solo = run(0.0);
+    let batched = run(0.05);
+    assert_eq!(solo.count(), batched.count());
+    for (a, b) in solo.reports.iter().zip(batched.reports.iter()) {
+        assert_eq!(a.tti_total_s.to_bits(), b.tti_total_s.to_bits(), "tti");
+        assert_eq!(a.eti_total_j.to_bits(), b.eti_total_j.to_bits(), "eti");
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "cost");
+        assert_eq!(a.xi.to_bits(), b.xi.to_bits(), "xi");
+        assert_eq!(a.payload_bytes.to_bits(), b.payload_bytes.to_bits(), "payload");
+        assert_eq!(a.queue_wait_s.to_bits(), b.queue_wait_s.to_bits(), "queue wait");
+    }
+    assert!(solo.reports.iter().all(|r| r.cloud_batch_size == 1));
+    assert!(
+        batched.reports.iter().any(|r| r.cloud_batch_size > 1),
+        "the window must group some cloud invocations"
+    );
 }
 
 #[test]
