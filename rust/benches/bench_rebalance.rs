@@ -1,0 +1,9 @@
+//! Rebalance sweep — goodput/shed/violation vs backlog skew under an
+//! imbalanced round-robin router (`rust/src/coordinator/engine.rs`):
+//! increasingly heterogeneous fleets at the same offered load, comparing
+//! plain round-robin + shed admission against + re-route-before-shed
+//! and + mid-run queued-task migration (work stealing)
+//! (`DVFO_BENCH_FULL=1` for the full-size sweep).
+fn main() {
+    dvfo::bench_harness::run_experiment_bench("rebalance");
+}

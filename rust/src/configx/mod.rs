@@ -75,6 +75,21 @@ pub struct Config {
     /// Admission control under overload: "off" | "shed" | "downgrade"
     /// (downgrade forces edge-only execution instead of dropping).
     pub admission: String,
+    /// Re-route-before-shed: when the routed device's completion
+    /// estimate would blow a task's deadline, re-route to the cheapest
+    /// feasible sibling device; only shed/downgrade when no device can
+    /// make it (takes effect with admission shed|downgrade).
+    pub reroute: bool,
+    /// Cross-device rebalance tick period in milliseconds; 0 disables
+    /// mid-run migration entirely (no tick events are scheduled).
+    pub rebalance_window_ms: f64,
+    /// Backlog divergence (ms) between the most- and least-backlogged
+    /// devices above which queued tasks migrate at a rebalance tick
+    /// ("inf" = never migrate).
+    pub migrate_threshold_ms: f64,
+    /// Latency penalty (ms) each migrated task pays in transit before it
+    /// re-enqueues on the destination device.
+    pub migrate_penalty_ms: f64,
     /// Widen the DVFO DQN state with queue-depth/backlog features so the
     /// policy reacts to load (changes the network shape, so off by
     /// default to preserve the paper's 8-dim formulation).
@@ -111,6 +126,10 @@ impl Default for Config {
             router: "round_robin".into(),
             slo: "none".into(),
             admission: "off".into(),
+            reroute: false,
+            rebalance_window_ms: 0.0,
+            migrate_threshold_ms: f64::INFINITY,
+            migrate_penalty_ms: 5.0,
             arrivals: "sequential".into(),
             queue_aware: false,
             seed: 0,
@@ -145,10 +164,11 @@ impl Config {
             // the float vs integer interpretation per field
             "eta" | "lambda" | "batch_window_ms" | "cloud_batch_window_ms"
             | "freq_levels" | "xi_levels" | "requests" | "train_episodes"
-            | "streams" | "seed" | "max_batch" | "cloud_slots" | "cloud_max_batch" => {
+            | "streams" | "seed" | "max_batch" | "cloud_slots" | "cloud_max_batch"
+            | "rebalance_window_ms" | "migrate_threshold_ms" | "migrate_penalty_ms" => {
                 Json::Num(value.parse::<f64>()?)
             }
-            "concurrent" | "queue_aware" => Json::Bool(value.parse::<bool>()?),
+            "concurrent" | "queue_aware" | "reroute" => Json::Bool(value.parse::<bool>()?),
             _ => Json::Str(value.to_string()),
         };
         self.apply(key, &j)?;
@@ -199,6 +219,16 @@ impl Config {
             "router" => str_field!(router),
             "slo" => str_field!(slo),
             "admission" => str_field!(admission),
+            "reroute" => self.reroute = v.as_bool().context("expected bool")?,
+            "rebalance_window_ms" => {
+                self.rebalance_window_ms = v.as_f64().context("expected number")?
+            }
+            "migrate_threshold_ms" => {
+                self.migrate_threshold_ms = v.as_f64().context("expected number")?
+            }
+            "migrate_penalty_ms" => {
+                self.migrate_penalty_ms = v.as_f64().context("expected number")?
+            }
             "arrivals" => str_field!(arrivals),
             "queue_aware" => self.queue_aware = v.as_bool().context("expected bool")?,
             "seed" => self.seed = v.as_f64().context("expected number")? as u64,
@@ -254,6 +284,25 @@ impl Config {
         }
         if self.cloud_max_batch == 0 {
             bail!("cloud_max_batch must be >= 1");
+        }
+        if !(self.rebalance_window_ms.is_finite() && self.rebalance_window_ms >= 0.0) {
+            bail!(
+                "rebalance_window_ms must be a finite non-negative number, got {}",
+                self.rebalance_window_ms
+            );
+        }
+        // the threshold may be +inf ("never migrate"), but not NaN/negative
+        if self.migrate_threshold_ms.is_nan() || self.migrate_threshold_ms < 0.0 {
+            bail!(
+                "migrate_threshold_ms must be a non-negative number (inf allowed), got {}",
+                self.migrate_threshold_ms
+            );
+        }
+        if !(self.migrate_penalty_ms.is_finite() && self.migrate_penalty_ms >= 0.0) {
+            bail!(
+                "migrate_penalty_ms must be a finite non-negative number, got {}",
+                self.migrate_penalty_ms
+            );
         }
         crate::workload::Arrivals::parse(&self.arrivals).context("arrivals spec")?;
         crate::workload::SloClass::parse(&self.slo).context("slo spec")?;
@@ -377,6 +426,44 @@ mod tests {
         assert_eq!(c2.cloud_slots, 3);
         assert_eq!(c2.cloud_batch_window_ms, 2.0);
         assert_eq!(c2.cloud_max_batch, 8);
+    }
+
+    #[test]
+    fn rebalance_fields_parse_and_validate() {
+        let mut c = Config::default();
+        assert!(!c.reroute);
+        assert_eq!(c.rebalance_window_ms, 0.0);
+        assert!(c.migrate_threshold_ms.is_infinite());
+        assert_eq!(c.migrate_penalty_ms, 5.0);
+        c.set("reroute", "true").unwrap();
+        c.set("rebalance_window_ms", "10").unwrap();
+        c.set("migrate_threshold_ms", "40").unwrap();
+        c.set("migrate_penalty_ms", "2.5").unwrap();
+        assert!(c.reroute);
+        assert_eq!(c.rebalance_window_ms, 10.0);
+        assert_eq!(c.migrate_threshold_ms, 40.0);
+        assert_eq!(c.migrate_penalty_ms, 2.5);
+        // "inf" disables migration at any tick
+        c.set("migrate_threshold_ms", "inf").unwrap();
+        assert!(c.migrate_threshold_ms.is_infinite());
+        // bad values are rejected
+        let mut c = Config::default();
+        assert!(c.set("rebalance_window_ms", "-1").is_err());
+        assert!(c.set("rebalance_window_ms", "inf").is_err());
+        assert!(c.set("migrate_threshold_ms", "-5").is_err());
+        assert!(c.set("migrate_threshold_ms", "NaN").is_err());
+        assert!(c.set("migrate_penalty_ms", "-1").is_err());
+        assert!(c.set("migrate_penalty_ms", "inf").is_err());
+        assert!(c.set("reroute", "maybe").is_err());
+        let j = Json::parse(
+            r#"{"reroute": true, "rebalance_window_ms": 8.0,
+                "migrate_penalty_ms": 1.0}"#,
+        )
+        .unwrap();
+        let c2 = Config::from_json(&j).unwrap();
+        assert!(c2.reroute);
+        assert_eq!(c2.rebalance_window_ms, 8.0);
+        assert_eq!(c2.migrate_penalty_ms, 1.0);
     }
 
     #[test]

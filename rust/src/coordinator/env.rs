@@ -85,6 +85,12 @@ pub struct TaskReport {
     /// cloud-invocation batch size this task's cloud work ran in
     /// (0 = the task never reached the cloud executor)
     pub cloud_batch_size: usize,
+    /// admission re-routed this task to a sibling device before
+    /// accepting it (fleet re-route-before-shed)
+    pub rerouted: bool,
+    /// the rebalancer migrated this task to another device while it was
+    /// still queued (its e2e keeps the original arrival time)
+    pub migrated: bool,
 }
 
 /// The simulated serving environment for one (device, cloud, model,

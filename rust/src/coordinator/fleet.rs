@@ -15,8 +15,13 @@
 //! expected uplink transfer and shared cloud-pool wait — would blow the
 //! task's SLO deadline, the dispatcher can shed the task outright or
 //! downgrade it to edge-only execution (skipping the uplink/cloud
-//! detour). Shed, downgrade, SLO-violation, and cloud-batch-occupancy
-//! counts are first-class telemetry next to the p50/p95/p99 latency
+//! detour) — or, with re-route-before-shed enabled, first retry the
+//! cheapest feasible sibling device. A periodic rebalance tick can also
+//! migrate queued-but-not-started tasks from the most-backlogged device
+//! to the least-backlogged one mid-run (work stealing, with a
+//! configurable in-transit latency penalty). Shed, downgrade,
+//! SLO-violation, re-route/migration, and cloud-batch-occupancy counts
+//! are first-class telemetry next to the p50/p95/p99 latency
 //! percentiles.
 //!
 //! This module holds the policy surface (specs, parsing, fleet
@@ -102,6 +107,22 @@ pub struct FleetOpts {
     pub des: DesOpts,
     pub router: Router,
     pub admission: Admission,
+    /// re-route-before-shed: when the routed device's completion
+    /// estimate would blow the task's deadline, re-route to the
+    /// cheapest feasible sibling and only shed/downgrade when no device
+    /// can make it (takes effect with `admission` shed|downgrade)
+    pub reroute: bool,
+    /// period of the cross-device rebalance tick in seconds; 0 (the
+    /// default) schedules no ticks at all and reproduces the
+    /// non-rebalancing engine trace bit-for-bit
+    pub rebalance_window_s: f64,
+    /// backlog divergence (seconds) between the most- and least-
+    /// backlogged devices above which queued tasks migrate; ∞ (the
+    /// default) makes every tick a no-op
+    pub migrate_threshold_s: f64,
+    /// latency penalty a migrated task pays in transit (it re-enqueues
+    /// on the destination only after the transfer completes)
+    pub migrate_penalty_s: f64,
 }
 
 impl Default for FleetOpts {
@@ -110,18 +131,26 @@ impl Default for FleetOpts {
             des: DesOpts::default(),
             router: Router::RoundRobin,
             admission: Admission::Off,
+            reroute: false,
+            rebalance_window_s: 0.0,
+            migrate_threshold_s: f64::INFINITY,
+            migrate_penalty_s: 0.005,
         }
     }
 }
 
 impl FleetOpts {
-    /// Build from a run config (`fleet`/`router`/`slo`/`admission` plus
-    /// the DES knobs).
+    /// Build from a run config (`fleet`/`router`/`slo`/`admission` and
+    /// the rebalancing knobs, plus the DES knobs).
     pub fn from_config(cfg: &Config) -> Result<Self> {
         Ok(Self {
             des: DesOpts::from_config(cfg),
             router: Router::parse(&cfg.router)?,
             admission: Admission::parse(&cfg.admission)?,
+            reroute: cfg.reroute,
+            rebalance_window_s: cfg.rebalance_window_ms / 1e3,
+            migrate_threshold_s: cfg.migrate_threshold_ms / 1e3,
+            migrate_penalty_s: cfg.migrate_penalty_ms / 1e3,
         })
     }
 }
@@ -214,6 +243,12 @@ pub struct DeviceTelemetry {
     pub energy_j: f64,
     /// completed tasks that missed their deadline
     pub violations: usize,
+    /// tasks re-routed TO this device by re-route-before-shed
+    pub rerouted_in: usize,
+    /// queued tasks the rebalancer migrated onto this device
+    pub migrated_in: usize,
+    /// queued tasks the rebalancer migrated away from this device
+    pub migrated_out: usize,
 }
 
 /// Aggregated outcome of a fleet serving run: the usual latency/energy
@@ -241,6 +276,12 @@ pub struct FleetSummary {
     pub cloud_occupancy: Samples,
     /// dispatch/runtime overhead amortized away by cloud batching (s)
     pub cloud_dispatch_saved_s: f64,
+    /// tasks re-routed to a sibling device instead of shed/downgraded
+    pub rerouted: usize,
+    /// queued tasks migrated between devices by the rebalancer
+    pub migrated: usize,
+    /// total migration latency penalty paid by migrated tasks (s)
+    pub migration_latency_s: f64,
 }
 
 /// Serve `per_stream` tasks from each stream through the fleet via the
@@ -263,6 +304,9 @@ pub fn serve_fleet(
                 served: 0,
                 energy_j: 0.0,
                 violations: 0,
+                rerouted_in: 0,
+                migrated_in: 0,
+                migrated_out: 0,
             })
             .collect(),
         ..FleetSummary::default()
@@ -274,6 +318,15 @@ pub fn serve_fleet(
     summary.cloud_invocations = result.cloud_invocations;
     summary.cloud_occupancy = result.cloud_occupancy;
     summary.cloud_dispatch_saved_s = result.cloud_dispatch_saved_s;
+    summary.rerouted = result.rerouted;
+    summary.migrated = result.migrated;
+    summary.migration_latency_s = result.migration_latency_s;
+    for (i, d) in summary.per_device.iter_mut().enumerate() {
+        // EngineResult::default() (empty run) carries empty vectors
+        d.rerouted_in = result.per_dev_rerouted.get(i).copied().unwrap_or(0);
+        d.migrated_in = result.per_dev_migrated_in.get(i).copied().unwrap_or(0);
+        d.migrated_out = result.per_dev_migrated_out.get(i).copied().unwrap_or(0);
+    }
     for job in &result.jobs {
         if let Some(r) = &job.report {
             summary.serve.push(r);
@@ -587,6 +640,7 @@ mod tests {
                 },
                 router: Router::LeastBacklog,
                 admission: Admission::Shed,
+                ..FleetOpts::default()
             };
             let s = serve_fleet(&mut fleet, &mut g, 6, &opts);
             (

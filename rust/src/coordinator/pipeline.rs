@@ -205,10 +205,16 @@ impl Pipeline {
                 .remove(0);
             let t_end = Instant::now();
 
+            // total_cmp never panics on NaN, but a NaN logit would win
+            // the argmax — keep the fault loud where it's cheap
+            debug_assert!(
+                fused.iter().all(|x| !x.is_nan()),
+                "NaN in fused logits"
+            );
             let predicted = fused
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap_or(0);
             responses.push(PipelineResponse {

@@ -247,7 +247,7 @@ mod tests {
         let rewards: Vec<f64> = (0..4).map(|i| rb.get(i).reward).collect();
         // slots hold the last 4 pushes (6..10) in ring order
         let mut sorted = rewards.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         assert_eq!(sorted, vec![6.0, 7.0, 8.0, 9.0]);
     }
 

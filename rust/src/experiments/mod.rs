@@ -142,7 +142,7 @@ pub fn fig07_importance() -> Result<Table> {
     for _ in 0..n {
         let d = ImportanceDist::synthetic(16, m.importance_skew, &mut rng);
         let mut ps = d.probs().to_vec();
-        ps.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        ps.sort_by(|a, b| b.total_cmp(a));
         for (a, p) in acc.iter_mut().zip(ps.iter()) {
             *a += p / n as f64;
         }
@@ -152,7 +152,7 @@ pub fn fig07_importance() -> Result<Table> {
         .ok()
         .map(|m| {
             let mut ps = m.mean_importance.clone();
-            ps.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            ps.sort_by(|a, b| b.total_cmp(a));
             ps
         });
     let mut cum = 0.0;
@@ -696,6 +696,7 @@ pub fn fleet_sweep(quick: bool) -> Result<Table> {
                 },
                 router: Router::parse(&cfg.router)?,
                 admission: crate::coordinator::fleet::Admission::parse(admission)?,
+                ..FleetOpts::default()
             };
             let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
             let mj_per_task = if s.completed > 0 {
@@ -813,6 +814,85 @@ pub fn cloudbatch_sweep(quick: bool) -> Result<Table> {
     Ok(t)
 }
 
+// ======================================================================
+// Rebalance sweep — goodput/shed/violation vs backlog skew under an
+// imbalanced router: round-robin over increasingly heterogeneous fleets
+// (the skew axis) sends one third of the traffic to each device
+// regardless of speed, overloading the slow boards while the fast one
+// has headroom. At each skew point the same offered load runs three
+// ways: plain round-robin + shed admission, + re-route-before-shed,
+// and + mid-run migration (work stealing) on top.
+// ======================================================================
+pub fn rebalance_sweep(quick: bool) -> Result<Table> {
+    use crate::coordinator::fleet::{serve_fleet, Admission, Fleet, FleetOpts};
+    use crate::workload::SloClass;
+    let mut t = Table::new(vec![
+        "fleet",
+        "mode",
+        "offered",
+        "completed",
+        "shed",
+        "goodput",
+        "violations",
+        "rerouted",
+        "migrated",
+        "e2e p50 ms",
+        "e2e p99 ms",
+    ]);
+    let fleets: &[&str] = if quick {
+        &["xavier-nx*3", "xavier-nx,jetson-nano*2"]
+    } else {
+        &["xavier-nx*3", "xavier-nx*2,jetson-nano", "xavier-nx,jetson-nano*2"]
+    };
+    let streams = if quick { 9 } else { 24 };
+    let per_stream = if quick { 8 } else { 24 };
+    for fleet_spec in fleets {
+        for mode in ["rr", "rr+reroute", "rr+reroute+migrate"] {
+            let mut cfg = Config::default();
+            cfg.policy = "edge_only".into();
+            cfg.fleet = (*fleet_spec).into();
+            cfg.slo = "250".into();
+            cfg.seed = 131;
+            let mut fleet = Fleet::from_config(&cfg)?;
+            let slo = SloClass::parse(&cfg.slo)?;
+            let mut gens = (0..streams)
+                .map(|s| {
+                    Ok(TaskGen::new(
+                        &cfg.model,
+                        fleet.devices[0].env.dataset,
+                        Arrivals::Poisson { rate: 10.0 },
+                        11_000 + s as u64,
+                    )?
+                    .with_slo(slo))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let opts = FleetOpts {
+                admission: Admission::Shed,
+                reroute: mode != "rr",
+                rebalance_window_s: if mode == "rr+reroute+migrate" { 0.01 } else { 0.0 },
+                migrate_threshold_s: 0.05,
+                migrate_penalty_s: 0.002,
+                ..FleetOpts::default()
+            };
+            let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
+            t.row(vec![
+                fleet_spec.to_string(),
+                mode.to_string(),
+                s.offered.to_string(),
+                s.completed.to_string(),
+                s.shed.to_string(),
+                s.goodput.to_string(),
+                s.slo_violations.to_string(),
+                s.rerouted.to_string(),
+                s.migrated.to_string(),
+                format!("{:.1}", s.serve.e2e_ms.p50()),
+                format!("{:.1}", s.serve.e2e_ms.p99()),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
 /// Ablation (DESIGN.md §7): factored vs exact-joint argmax and oracle gap.
 pub fn ablation_action_space(requests: usize) -> Result<Table> {
     let mut t = Table::new(vec!["policy", "cost mean", "tti ms", "eti mJ"]);
@@ -862,6 +942,7 @@ pub fn run_by_name(name: &str, quick: bool) -> Result<Table> {
         "load" => load_sweep(quick),
         "fleet" => fleet_sweep(quick),
         "cloudbatch" => cloudbatch_sweep(quick),
+        "rebalance" => rebalance_sweep(quick),
         other => anyhow::bail!("unknown experiment `{other}`"),
     }
 }
@@ -869,7 +950,7 @@ pub fn run_by_name(name: &str, quick: bool) -> Result<Table> {
 pub const ALL: &[&str] = &[
     "fig01", "fig02", "fig07", "fig08", "fig09", "fig10", "fig11", "fig12", "fig13",
     "tab04", "fig14", "fig15", "fig16", "tab05", "tab06", "ablation", "load", "fleet",
-    "cloudbatch",
+    "cloudbatch", "rebalance",
 ];
 
 #[cfg(test)]
@@ -940,6 +1021,20 @@ mod tests {
         assert_eq!(cells[0], "0");
         assert_eq!(cells[2], "1.00", "window 0 must be all singletons: {zero}");
         assert_eq!(cells[3], "0.0", "window 0 amortizes nothing: {zero}");
+    }
+
+    #[test]
+    fn rebalance_sweep_emits_rebalancing_columns() {
+        let t = rebalance_sweep(true).unwrap();
+        let csv = t.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.contains("rerouted") && header.contains("migrated"));
+        // one row per (fleet, mode) cell
+        assert_eq!(csv.lines().count(), 1 + 2 * 3);
+        assert!(
+            csv.contains(",rr+reroute+migrate,"),
+            "migration cell present:\n{csv}"
+        );
     }
 
     #[test]

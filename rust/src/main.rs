@@ -33,12 +33,14 @@ USAGE: dvfo <subcommand> [options]
 SUBCOMMANDS:
   serve        simulate serving a request stream with a policy
                (single edge, or a multi-device fleet via --fleet/--router/
-               --slo/--admission)
+               --slo/--admission, with cross-device rebalancing via
+               --reroute/--rebalance-window/--migrate-threshold)
   pipeline     run the real AOT-artifact pipeline (edge+cloud workers)
   experiment   regenerate a paper table/figure: fig01..fig16, tab04..tab06,
                ablation, load (multi-stream load sweep), fleet (multi-edge
                goodput/energy/violation curves), cloudbatch (goodput/energy
-               vs cloud batch window), or `all`
+               vs cloud batch window), rebalance (goodput/shed vs backlog
+               skew with re-route + migration), or `all`
   train        offline DQN training, prints the learning curve
   devices      list the edge/cloud device zoo (paper Table 3)
   models       list the DNN model zoo
@@ -140,6 +142,27 @@ fn real_main() -> anyhow::Result<()> {
                     None,
                 )
                 .opt("admission", "admission control: off | shed | downgrade", None)
+                .flag(
+                    "reroute",
+                    "re-route-before-shed: try the cheapest feasible sibling device \
+                     before shedding/downgrading (with --admission shed|downgrade)",
+                )
+                .opt(
+                    "rebalance-window",
+                    "cross-device rebalance tick (ms, 0 = no mid-run migration)",
+                    None,
+                )
+                .opt(
+                    "migrate-threshold",
+                    "backlog divergence (ms) that triggers queued-task migration \
+                     (inf = never)",
+                    None,
+                )
+                .opt(
+                    "migrate-penalty",
+                    "latency penalty per migrated task in transit (ms)",
+                    None,
+                )
                 .opt(
                     "arrivals",
                     "per-stream arrival process: sequential | poisson:<r> | \
@@ -158,6 +181,14 @@ fn real_main() -> anyhow::Result<()> {
             cfg.cloud_batch_window_ms =
                 a.parse_or("cloud-batch-window", cfg.cloud_batch_window_ms)?;
             cfg.cloud_max_batch = a.parse_or("cloud-max-batch", cfg.cloud_max_batch)?;
+            cfg.rebalance_window_ms =
+                a.parse_or("rebalance-window", cfg.rebalance_window_ms)?;
+            cfg.migrate_threshold_ms =
+                a.parse_or("migrate-threshold", cfg.migrate_threshold_ms)?;
+            cfg.migrate_penalty_ms = a.parse_or("migrate-penalty", cfg.migrate_penalty_ms)?;
+            if a.flag("reroute") {
+                cfg.reroute = true;
+            }
             for (key, flag) in [
                 ("arrivals", "arrivals"),
                 ("fleet", "fleet"),
@@ -181,7 +212,9 @@ fn real_main() -> anyhow::Result<()> {
             let fleet_mode = !cfg.fleet.trim().is_empty()
                 || router != Router::RoundRobin
                 || !slo.is_none()
-                || admission != Admission::Off;
+                || admission != Admission::Off
+                || cfg.reroute
+                || cfg.rebalance_window_ms > 0.0;
             let per_stream = (cfg.requests / cfg.streams).max(1);
             if per_stream * cfg.streams != cfg.requests {
                 eprintln!(
@@ -217,11 +250,7 @@ fn real_main() -> anyhow::Result<()> {
                     fleet.train_offline(cfg.train_episodes, 24, cfg.seed)?;
                 }
                 let mut gens = mk_gens(fleet.devices[0].env.dataset)?;
-                let opts = FleetOpts {
-                    des: DesOpts::from_config(&cfg),
-                    router,
-                    admission,
-                };
+                let opts = FleetOpts::from_config(&cfg)?;
                 let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
                 if a.flag("verbose") {
                     print_reports(&s.serve.reports);
@@ -249,6 +278,16 @@ fn real_main() -> anyhow::Result<()> {
                     "offered={} completed={} shed={} downgraded={} violations={} goodput={}",
                     s.offered, s.completed, s.shed, s.downgraded, s.slo_violations, s.goodput
                 );
+                // gate on the knobs (like the cloud-batching line): with
+                // rebalancing off, zero counts are implied, not news
+                if cfg.reroute || cfg.rebalance_window_ms > 0.0 {
+                    println!(
+                        "rebalance: rerouted={} migrated={} migration-latency={:.1}ms",
+                        s.rerouted,
+                        s.migrated,
+                        s.migration_latency_s * 1e3
+                    );
+                }
                 // gate on the knob (like the single-edge path): with
                 // batching off, invocations==jobs is implied, not news
                 if cfg.cloud_batch_window_ms > 0.0 && s.cloud_invocations > 0 {
@@ -262,9 +301,17 @@ fn real_main() -> anyhow::Result<()> {
                     );
                 }
                 for d in &s.per_device {
+                    let rebalance_cols = if cfg.reroute || cfg.rebalance_window_ms > 0.0 {
+                        format!(
+                            " rerouted-in={} migrated-in={} migrated-out={}",
+                            d.rerouted_in, d.migrated_in, d.migrated_out
+                        )
+                    } else {
+                        String::new()
+                    };
                     println!(
-                        "  device {:<12} served={:<5} energy={:.1} J violations={}",
-                        d.name, d.served, d.energy_j, d.violations
+                        "  device {:<12} served={:<5} energy={:.1} J violations={}{}",
+                        d.name, d.served, d.energy_j, d.violations, rebalance_cols
                     );
                 }
             } else {
@@ -385,7 +432,8 @@ fn real_main() -> anyhow::Result<()> {
             let cmd = Cmd::new("dvfo experiment", "regenerate a paper table/figure")
                 .positional(
                     "id",
-                    "fig01..fig16 | tab04..tab06 | ablation | load | fleet | cloudbatch | all",
+                    "fig01..fig16 | tab04..tab06 | ablation | load | fleet | cloudbatch \
+                     | rebalance | all",
                 )
                 .flag("full", "full-size sweep (slower)")
                 .opt("csv", "also write CSV to this directory", None);

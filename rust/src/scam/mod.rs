@@ -57,8 +57,14 @@ impl ImportanceDist {
 
     /// Channel indices sorted by descending importance.
     pub fn ranked(&self) -> Vec<usize> {
+        // total_cmp never panics on NaN, but a NaN prob would rank as
+        // the most important channel — keep the fault loud in debug
+        debug_assert!(
+            self.probs.iter().all(|p| !p.is_nan()),
+            "NaN importance prob"
+        );
         let mut idx: Vec<usize> = (0..self.probs.len()).collect();
-        idx.sort_by(|&a, &b| self.probs[b].partial_cmp(&self.probs[a]).unwrap());
+        idx.sort_by(|&a, &b| self.probs[b].total_cmp(&self.probs[a]));
         idx
     }
 

@@ -85,19 +85,28 @@ impl Running {
     }
 }
 
-/// Exact-percentile sample buffer (sorts on query; fine for bench sizes).
+/// Exact-percentile sample buffer. The sorted view is computed lazily on
+/// the first percentile query after a push and cached until the next
+/// push, so a p50/p95/p99 triple costs one O(n log n) sort instead of
+/// three clone-and-sorts per summary.
 #[derive(Clone, Debug, Default)]
 pub struct Samples {
     xs: Vec<f64>,
+    /// lazily sorted copy of `xs` (total_cmp order); `None` = stale
+    sorted: std::cell::RefCell<Option<Vec<f64>>>,
 }
 
 impl Samples {
     pub fn new() -> Self {
-        Self { xs: Vec::new() }
+        Self {
+            xs: Vec::new(),
+            sorted: std::cell::RefCell::new(None),
+        }
     }
 
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
+        *self.sorted.get_mut() = None;
     }
 
     pub fn len(&self) -> usize {
@@ -120,8 +129,14 @@ impl Samples {
         if self.xs.is_empty() {
             return f64::NAN;
         }
-        let mut s = self.xs.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut cache = self.sorted.borrow_mut();
+        let s = cache.get_or_insert_with(|| {
+            let mut v = self.xs.clone();
+            // total_cmp: a NaN sample sorts after +inf instead of
+            // panicking the comparator
+            v.sort_by(f64::total_cmp);
+            v
+        });
         let rank = (p / 100.0) * (s.len() - 1) as f64;
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
@@ -246,6 +261,78 @@ mod tests {
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
         assert!(s.p95() > 94.0 && s.p95() < s.p99());
         assert!(s.p99() > 98.0);
+    }
+
+    /// The pre-cache implementation, verbatim: clone + sort on every
+    /// query. The cached path must agree with it exactly.
+    fn naive_percentile(xs: &[f64], p: f64) -> f64 {
+        if xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+        }
+    }
+
+    #[test]
+    fn cached_percentiles_match_the_old_implementation() {
+        let mut s = Samples::new();
+        let mut xs = Vec::new();
+        // deterministic scrambled sequence with duplicates
+        for i in 0u64..257 {
+            let x = ((i * 37) % 101) as f64 - 50.0;
+            s.push(x);
+            xs.push(x);
+        }
+        for p in [0.0, 10.0, 50.0, 95.0, 99.0, 100.0] {
+            let want = naive_percentile(&xs, p);
+            let got = s.percentile(p);
+            assert_eq!(got.to_bits(), want.to_bits(), "p{p}: {got} vs {want}");
+        }
+        // pushes after a query must invalidate the cached sort
+        for x in [1e6, -1e6, 0.25] {
+            s.push(x);
+            xs.push(x);
+        }
+        for p in [50.0, 95.0, 99.0] {
+            let want = naive_percentile(&xs, p);
+            let got = s.percentile(p);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "post-push p{p}: {got} vs {want}"
+            );
+        }
+        // a clone must not share (or miss) the original's cache
+        let mut c = s.clone();
+        c.push(42.0);
+        xs.push(42.0);
+        assert_eq!(c.p50().to_bits(), naive_percentile(&xs, 50.0).to_bits());
+        xs.pop();
+        assert_eq!(s.p50().to_bits(), naive_percentile(&xs, 50.0).to_bits());
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // regression: the old partial_cmp().unwrap() comparator panicked
+        // the moment a NaN landed in the buffer; total_cmp gives NaN a
+        // fixed slot after +inf instead
+        let mut s = Samples::new();
+        s.push(1.0);
+        s.push(f64::NAN);
+        s.push(3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.p50(), 3.0);
+        assert!(s.percentile(100.0).is_nan(), "NaN sorts last");
+        // interpolation across the NaN slot propagates NaN, no panic
+        assert!(s.percentile(75.0).is_nan());
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! across batched/unbatched uplinks, routers, policies, and the
 //! admission paths whose estimator did not change (edge-only traffic,
 //! where the cloud-detour term is provably zero).
+//!
+//! The gate also pins the cross-device rebalancing compat condition:
+//! with re-routing off and `--rebalance-window 0` no rebalance event is
+//! ever scheduled, and with a window but `--migrate-threshold inf` the
+//! ticks fire yet are fully inert — both configurations must reproduce
+//! the pre-rebalancing trace bit-for-bit.
 
 use dvfo::configx::Config;
 use dvfo::coordinator::des::DesOpts;
@@ -571,6 +577,14 @@ fn run_scenario(s: &Scenario) {
         },
         router: s.router,
         admission: s.admission,
+        // the rebalancing compat condition: no re-routing, no rebalance
+        // ticks, migration threshold at infinity (FleetOpts::default()
+        // pins the same values — spelled out here because this is what
+        // the gate is gating)
+        reroute: false,
+        rebalance_window_s: 0.0,
+        migrate_threshold_s: f64::INFINITY,
+        ..FleetOpts::default()
     };
 
     let mut golden_fleet = Fleet::from_config(&mk_cfg()).unwrap();
@@ -581,15 +595,35 @@ fn run_scenario(s: &Scenario) {
     let mut new_fleet = Fleet::from_config(&mk_cfg()).unwrap();
     let mut new_gens = mk_gens(&new_fleet);
     let new = serve_fleet(&mut new_fleet, &mut new_gens, s.per_stream, &opts);
+    assert_matches_golden(&golden, &new, s.name);
 
-    assert_eq!(golden.offered, new.offered, "{}: offered", s.name);
-    assert_eq!(golden.shed, new.shed, "{}: shed", s.name);
-    assert_eq!(golden.downgraded, new.downgraded, "{}: downgraded", s.name);
+    // rebalance ticks with the migration threshold at infinity must be
+    // fully inert: the tick events interleave with the real trace but
+    // never move work or perturb any report bit
+    let ticking = FleetOpts {
+        rebalance_window_s: 0.004,
+        migrate_threshold_s: f64::INFINITY,
+        ..opts.clone()
+    };
+    let mut tick_fleet = Fleet::from_config(&mk_cfg()).unwrap();
+    let mut tick_gens = mk_gens(&tick_fleet);
+    let tick = serve_fleet(&mut tick_fleet, &mut tick_gens, s.per_stream, &ticking);
+    assert_eq!(tick.migrated, 0, "{}: inert ticks must not migrate", s.name);
+    assert_matches_golden(&golden, &tick, &format!("{} (inert ticks)", s.name));
+}
+
+fn assert_matches_golden(
+    golden: &reference::GoldenRun,
+    new: &dvfo::coordinator::FleetSummary,
+    name: &str,
+) {
+    assert_eq!(golden.offered, new.offered, "{name}: offered");
+    assert_eq!(golden.shed, new.shed, "{name}: shed");
+    assert_eq!(golden.downgraded, new.downgraded, "{name}: downgraded");
     assert_eq!(
         golden.reports.len(),
         new.serve.reports.len(),
-        "{}: completed",
-        s.name
+        "{name}: completed"
     );
     for (i, (g, n)) in golden
         .reports
@@ -597,7 +631,7 @@ fn run_scenario(s: &Scenario) {
         .zip(new.serve.reports.iter())
         .enumerate()
     {
-        assert_reports_byte_identical(g, n, &format!("{} task {i}", s.name));
+        assert_reports_byte_identical(g, n, &format!("{name} task {i}"));
     }
 }
 

@@ -11,6 +11,12 @@
 //! * heterogeneous routing and SLO accounting sanity
 //! * cloud-side cross-device batching: occupancy, the size cap, the
 //!   amortized-dispatch ledger, and window-0 inertness
+//! * cross-device rebalancing: round-robin + re-route-before-shed +
+//!   migration strictly beats round-robin alone on a skewed fleet,
+//!   migration strictly shrinks latency on an imbalanced herd, migrated
+//!   tasks keep their original arrival time (no clock reset on
+//!   requeue), and a property check that no migration schedule ever
+//!   loses or duplicates a task
 
 use dvfo::configx::Config;
 use dvfo::coordinator::des::{serve_multistream, DesOpts};
@@ -66,6 +72,7 @@ fn one_device_fleet_matches_serve_multistream_exactly() {
                 des: opts.clone(),
                 router: Router::RoundRobin,
                 admission: Admission::Off,
+                ..FleetOpts::default()
             };
             let b = serve_fleet(&mut fleet, &mut g2, 8, &fopts);
 
@@ -280,6 +287,267 @@ fn cloud_batching_amortizes_dispatch_under_pool_contention() {
         (batched.cloud_dispatch_saved_s - expected_saved).abs() < 1e-12,
         "saved {} vs ledger {expected_saved}",
         batched.cloud_dispatch_saved_s
+    );
+}
+
+/// Skewed-fleet helper: one fast xavier-nx and two slow jetson-nanos
+/// behind a round-robin router, every task carrying a 250 ms deadline,
+/// offered load far beyond the nanos' capacity (the multi-user
+/// contention regime: a hot device sheds while a sibling has headroom).
+fn skewed_run(reroute: bool, rebalance_window_s: f64) -> dvfo::coordinator::FleetSummary {
+    let mut c = cfg("edge_only", 47);
+    c.fleet = "xavier-nx,jetson-nano,jetson-nano".into();
+    let mut fleet = Fleet::from_config(&c).unwrap();
+    let slo = SloClass::parse("250").unwrap();
+    let mut g: Vec<TaskGen> = (0..12)
+        .map(|s| {
+            TaskGen::new(
+                &c.model,
+                fleet.devices[0].env.dataset,
+                Arrivals::Poisson { rate: 10.0 },
+                12_000 + s as u64,
+            )
+            .unwrap()
+            .with_slo(slo)
+        })
+        .collect();
+    let opts = FleetOpts {
+        admission: Admission::Shed,
+        reroute,
+        rebalance_window_s,
+        migrate_threshold_s: 0.05,
+        migrate_penalty_s: 0.002,
+        ..FleetOpts::default()
+    };
+    serve_fleet(&mut fleet, &mut g, 10, &opts)
+}
+
+#[test]
+fn rebalancing_beats_round_robin_alone_on_a_skewed_fleet() {
+    // THE acceptance gate: at the same offered load, round-robin +
+    // re-route-before-shed + migration must yield strictly higher
+    // goodput and strictly fewer sheds than round-robin alone.
+    let base = skewed_run(false, 0.0);
+    let reb = skewed_run(true, 0.01);
+    assert_eq!(base.offered, reb.offered, "same offered load");
+    assert!(
+        base.shed > 0,
+        "baseline must actually shed under the skew: {} shed",
+        base.shed
+    );
+    assert!(
+        reb.goodput > base.goodput,
+        "rebalanced goodput {} must strictly beat round-robin {}",
+        reb.goodput,
+        base.goodput
+    );
+    assert!(
+        reb.shed < base.shed,
+        "rebalanced sheds {} must be strictly below round-robin {}",
+        reb.shed,
+        base.shed
+    );
+    assert!(reb.rerouted > 0, "the skew must trigger re-routing");
+    // conservation under rebalancing
+    assert_eq!(reb.offered, reb.completed + reb.shed);
+    let rerouted_in: usize = reb.per_device.iter().map(|d| d.rerouted_in).sum();
+    assert_eq!(rerouted_in, reb.rerouted);
+}
+
+#[test]
+fn migration_shrinks_latency_on_an_imbalanced_herd() {
+    // A t=0 herd split round-robin between one fast and one slow device
+    // (no SLOs, no admission): work stealing must move queued tasks off
+    // the slow device and strictly cut mean end-to-end latency.
+    let run = |rebalance_window_s: f64| {
+        let mut c = cfg("edge_only", 53);
+        c.fleet = "xavier-nx,jetson-nano".into();
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(&c, fleet.devices[0].env.dataset, 8, Arrivals::Sequential, 13_000);
+        let opts = FleetOpts {
+            rebalance_window_s,
+            migrate_threshold_s: 0.03,
+            migrate_penalty_s: 0.001,
+            ..FleetOpts::default()
+        };
+        serve_fleet(&mut fleet, &mut g, 4, &opts)
+    };
+    let still = run(0.0);
+    let moved = run(0.01);
+    assert_eq!(still.completed, 32);
+    assert_eq!(moved.completed, 32, "migration must not lose tasks");
+    assert_eq!(still.migrated, 0);
+    assert!(moved.migrated > 0, "the imbalance must trigger migration");
+    // migrated tasks end up served by the fast device
+    assert!(
+        moved.per_device[0].served > still.per_device[0].served,
+        "xavier served {} vs {} without migration",
+        moved.per_device[0].served,
+        still.per_device[0].served
+    );
+    assert_eq!(
+        moved.per_device[1].migrated_out,
+        moved.per_device[0].migrated_in
+    );
+    assert_eq!(
+        moved.per_device.iter().map(|d| d.migrated_in).sum::<usize>(),
+        moved.migrated
+    );
+    assert!(
+        moved.serve.e2e_ms.mean() < still.serve.e2e_ms.mean(),
+        "migrated mean e2e {} must be strictly below static {}",
+        moved.serve.e2e_ms.mean(),
+        still.serve.e2e_ms.mean()
+    );
+    // the reports carry the migration flag; `migrated` counts MOVES, so
+    // a task that bounced twice is one flagged report but two moves
+    let flagged = moved.serve.reports.iter().filter(|r| r.migrated).count();
+    assert!(flagged > 0 && flagged <= moved.migrated, "{flagged} flagged");
+}
+
+#[test]
+fn migrated_tasks_keep_their_original_arrival_time() {
+    // Violation-accounting audit: a migrated task's queue wait and e2e
+    // are measured from its ORIGINAL arrival (no clock reset on
+    // requeue). With a huge migration penalty every migrated task must
+    // show the penalty inside its queue wait and blow its deadline —
+    // if the clock reset on requeue, its wait would look tiny and the
+    // violation would vanish.
+    let penalty_s = 5.0;
+    let mut c = cfg("edge_only", 59);
+    c.fleet = "xavier-nx,jetson-nano".into();
+    let mut fleet = Fleet::from_config(&c).unwrap();
+    let slo = SloClass::parse("400").unwrap();
+    let mut g: Vec<TaskGen> = (0..8)
+        .map(|s| {
+            TaskGen::new(
+                &c.model,
+                fleet.devices[0].env.dataset,
+                Arrivals::Sequential,
+                14_000 + s as u64,
+            )
+            .unwrap()
+            .with_slo(slo)
+        })
+        .collect();
+    let opts = FleetOpts {
+        rebalance_window_s: 0.01,
+        migrate_threshold_s: 0.03,
+        migrate_penalty_s: penalty_s,
+        ..FleetOpts::default()
+    };
+    let s = serve_fleet(&mut fleet, &mut g, 4, &opts);
+    assert_eq!(s.completed, 32, "migration must not lose tasks");
+    let migrated: Vec<_> = s.serve.reports.iter().filter(|r| r.migrated).collect();
+    assert!(!migrated.is_empty(), "the herd must trigger migration");
+    for r in &migrated {
+        assert!(
+            r.queue_wait_s >= penalty_s,
+            "migrated task wait {} must include the {}s transit (measured \
+             from the original arrival)",
+            r.queue_wait_s,
+            penalty_s
+        );
+        assert!(r.e2e_s >= r.queue_wait_s, "e2e includes the wait");
+    }
+    assert!(
+        s.slo_violations >= migrated.len(),
+        "every migrated task blows the 400ms deadline: {} violations vs {}",
+        s.slo_violations,
+        migrated.len()
+    );
+}
+
+#[test]
+fn no_migration_schedule_loses_or_duplicates_tasks() {
+    // Property: across random fleets, loads, SLOs, and rebalancing
+    // schedules (tick period / threshold / penalty / re-routing), the
+    // dispatcher conserves tasks exactly — offered = completed + shed,
+    // one report per completed task, and the per-device migration
+    // ledger balances.
+    use dvfo::proptest_mini::{check, usize_in, Gen};
+    let fleets = [
+        "xavier-nx,jetson-nano",
+        "xavier-nx,jetson-nano*2",
+        "jetson-tx2*2,jetson-nano",
+    ];
+    let windows = [0.0, 0.002, 0.02];
+    let thresholds = [f64::INFINITY, 0.05, 0.0];
+    let penalties = [0.0, 0.001, 0.1];
+    let slos = ["none", "200", "80,1"];
+    check(
+        "rebalancing task conservation",
+        0xBA1A,
+        10,
+        |r: &mut dvfo::util::Pcg32| {
+            (
+                usize_in(0, 2).sample(r),
+                usize_in(1, 6).sample(r),
+                usize_in(1, 5).sample(r),
+                usize_in(0, 2).sample(r),
+                usize_in(0, 2).sample(r),
+                usize_in(0, 2).sample(r),
+                usize_in(0, 2).sample(r),
+                usize_in(0, 1).sample(r),
+                r.next_u64(),
+            )
+        },
+        |&(fi, streams, per_stream, wi, ti, pi, si, rr, seed)| {
+            let mut c = cfg("edge_only", seed);
+            c.fleet = fleets[fi].into();
+            let mut fleet = Fleet::from_config(&c).map_err(|e| e.to_string())?;
+            let slo = SloClass::parse(slos[si]).map_err(|e| e.to_string())?;
+            let mut g: Vec<TaskGen> = (0..streams)
+                .map(|s| {
+                    TaskGen::new(
+                        &c.model,
+                        fleet.devices[0].env.dataset,
+                        Arrivals::Poisson { rate: 25.0 },
+                        seed ^ (s as u64) << 3,
+                    )
+                    .map(|g| g.with_slo(slo))
+                    .map_err(|e| e.to_string())
+                })
+                .collect::<Result<_, _>>()?;
+            let opts = FleetOpts {
+                admission: Admission::Shed,
+                reroute: rr == 1,
+                rebalance_window_s: windows[wi],
+                migrate_threshold_s: thresholds[ti],
+                migrate_penalty_s: penalties[pi],
+                ..FleetOpts::default()
+            };
+            let s = serve_fleet(&mut fleet, &mut g, per_stream, &opts);
+            if s.offered != streams * per_stream {
+                return Err(format!("offered {} != {}", s.offered, streams * per_stream));
+            }
+            if s.offered != s.completed + s.shed {
+                return Err(format!(
+                    "conservation: offered {} vs completed {} + shed {}",
+                    s.offered, s.completed, s.shed
+                ));
+            }
+            if s.serve.reports.len() != s.completed {
+                return Err(format!(
+                    "duplicate/missing reports: {} vs {} completed",
+                    s.serve.reports.len(),
+                    s.completed
+                ));
+            }
+            let served: usize = s.per_device.iter().map(|d| d.served).sum();
+            if served != s.completed {
+                return Err(format!("per-device served {served} != {}", s.completed));
+            }
+            let mig_in: usize = s.per_device.iter().map(|d| d.migrated_in).sum();
+            let mig_out: usize = s.per_device.iter().map(|d| d.migrated_out).sum();
+            if mig_in != s.migrated || mig_out != s.migrated {
+                return Err(format!(
+                    "migration ledger: {mig_in} in / {mig_out} out vs {} migrated",
+                    s.migrated
+                ));
+            }
+            Ok(())
+        },
     );
 }
 
