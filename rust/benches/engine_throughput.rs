@@ -1,0 +1,168 @@
+//! §Perf — whole-engine throughput bench: drives the unified DES kernel
+//! (`src/coordinator/engine.rs`) end-to-end on two pinned reference
+//! configs and reports **events/sec** and wall-clock, recording the
+//! full per-iteration trajectory into `BENCH_5.json` (CI uploads it as
+//! an artifact; the numbers are recorded, never gated, so shared-runner
+//! noise cannot break the build).
+//!
+//! Pinned configs:
+//!   * `ref-1dev`  — one xavier-nx, cloud-heavy traffic through batched
+//!     uplink + cloud windows into a 2-slot shared pool (exercises the
+//!     batch-slot free lists and the cloud stage).
+//!   * `ref-3dev`  — the paper's three edge boards under shed admission
+//!     with re-route-before-shed and mid-run migration armed (exercises
+//!     the O(1) backlog accumulators, sibling scans, and work stealing).
+//!
+//! `DVFO_BENCH_FULL=1` scales the task counts up ~10×;
+//! `DVFO_BENCH_JSON=path` overrides the output path (default
+//! `BENCH_5.json` in the working directory).
+
+use dvfo::configx::Config;
+use dvfo::coordinator::des::DesOpts;
+use dvfo::coordinator::fleet::{serve_fleet, Admission, Fleet, FleetOpts};
+use dvfo::workload::{Arrivals, SloClass, TaskGen};
+use std::time::Instant;
+
+struct RefCase {
+    name: &'static str,
+    policy: &'static str,
+    fleet: &'static str,
+    streams: usize,
+    per_stream: usize,
+    rate: f64,
+    slo: &'static str,
+    opts: FleetOpts,
+}
+
+fn cases(full: bool) -> Vec<RefCase> {
+    let scale = if full { 10 } else { 1 };
+    vec![
+        RefCase {
+            name: "ref-1dev",
+            policy: "cloud_only",
+            fleet: "xavier-nx",
+            streams: 8,
+            per_stream: 25 * scale,
+            rate: 40.0,
+            slo: "none",
+            opts: FleetOpts {
+                des: DesOpts {
+                    batch_window_s: 0.004,
+                    cloud_batch_window_s: 0.005,
+                    cloud_slots: 2,
+                    ..DesOpts::default()
+                },
+                ..FleetOpts::default()
+            },
+        },
+        RefCase {
+            name: "ref-3dev",
+            policy: "edge_only",
+            fleet: "xavier-nx,jetson-tx2,jetson-nano",
+            streams: 9,
+            per_stream: 20 * scale,
+            rate: 10.0,
+            slo: "250",
+            opts: FleetOpts {
+                admission: Admission::Shed,
+                reroute: true,
+                rebalance_window_s: 0.01,
+                migrate_threshold_s: 0.05,
+                migrate_penalty_s: 0.002,
+                ..FleetOpts::default()
+            },
+        },
+    ]
+}
+
+/// One timed run: fleet/generator construction is excluded from the
+/// clock — the figure is kernel throughput, not setup cost. Returns
+/// (events, completed, wall_s).
+fn run_once(c: &RefCase) -> (usize, usize, f64) {
+    let mut cfg = Config::default();
+    cfg.policy = c.policy.into();
+    cfg.fleet = c.fleet.into();
+    cfg.seed = 4242;
+    let mut fleet = Fleet::from_config(&cfg).expect("pinned fleet builds");
+    let slo = SloClass::parse(c.slo).expect("pinned slo parses");
+    let mut gens: Vec<TaskGen> = (0..c.streams)
+        .map(|s| {
+            TaskGen::new(
+                &cfg.model,
+                fleet.devices[0].env.dataset,
+                Arrivals::Poisson { rate: c.rate },
+                5000 + s as u64,
+            )
+            .expect("pinned generator builds")
+            .with_slo(slo)
+        })
+        .collect();
+    let t0 = Instant::now();
+    let s = serve_fleet(&mut fleet, &mut gens, c.per_stream, &c.opts);
+    let wall = t0.elapsed().as_secs_f64();
+    (s.events, s.completed, wall)
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.9}")
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let full = std::env::var("DVFO_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let iters = if full { 10 } else { 5 };
+    let out_path =
+        std::env::var("DVFO_BENCH_JSON").unwrap_or_else(|_| "BENCH_5.json".to_string());
+
+    let mut case_jsons = Vec::new();
+    for c in cases(full) {
+        // warmup (allocator, page cache, branch predictors)
+        let (events, completed, _) = run_once(&c);
+        let mut walls = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let (e, done, wall) = run_once(&c);
+            assert_eq!(e, events, "pinned config must be deterministic");
+            assert_eq!(done, completed, "pinned config must be deterministic");
+            walls.push(wall);
+        }
+        let mean = walls.iter().sum::<f64>() / walls.len() as f64;
+        let best = walls.iter().cloned().fold(f64::INFINITY, f64::min);
+        let eps_mean = events as f64 / mean;
+        let eps_best = events as f64 / best;
+        println!(
+            "{:<10} events={events:<7} tasks={completed:<5} iters={iters} \
+             mean={:.3} ms  best={:.3} ms  events/sec mean={:.0} best={:.0}",
+            c.name,
+            mean * 1e3,
+            best * 1e3,
+            eps_mean,
+            eps_best,
+        );
+        let trajectory: Vec<String> = walls.iter().map(|&w| json_num(w)).collect();
+        case_jsons.push(format!(
+            "{{\"name\":\"{}\",\"events\":{events},\"tasks\":{completed},\
+             \"iters\":{iters},\"mean_s\":{},\"best_s\":{},\
+             \"events_per_sec_mean\":{},\"events_per_sec_best\":{},\
+             \"wall_s_trajectory\":[{}]}}",
+            c.name,
+            json_num(mean),
+            json_num(best),
+            json_num(eps_mean),
+            json_num(eps_best),
+            trajectory.join(","),
+        ));
+    }
+
+    let json = format!(
+        "{{\"bench\":\"engine_throughput\",\"full\":{full},\"configs\":[{}]}}\n",
+        case_jsons.join(",")
+    );
+    if let Err(e) = std::fs::write(&out_path, &json) {
+        eprintln!("[engine_throughput] could not write {out_path}: {e}");
+        std::process::exit(1);
+    }
+    println!("[engine_throughput] wrote {out_path}");
+}

@@ -49,11 +49,17 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
 
 /// Standard main body for a per-figure bench target: run the experiment,
 /// print the paper-style table and the wall-clock, honoring
-/// `DVFO_BENCH_FULL=1` for the non-quick variant.
+/// `DVFO_BENCH_FULL=1` for the non-quick variant and
+/// `DVFO_BENCH_THREADS=N` for the parallel sweep runner (the table
+/// bytes are thread-count-invariant; only the wall-clock moves).
 pub fn run_experiment_bench(id: &str) {
     let quick = std::env::var("DVFO_BENCH_FULL").map(|v| v != "1").unwrap_or(true);
+    let threads = std::env::var("DVFO_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
     let t0 = Instant::now();
-    match crate::experiments::run_by_name(id, quick) {
+    match crate::experiments::run_by_name(id, quick, threads) {
         Ok(table) => {
             println!("== {id} ({}) ==", if quick { "quick" } else { "full" });
             println!("{}", table.render());

@@ -94,6 +94,10 @@ pub struct Config {
     /// policy reacts to load (changes the network shape, so off by
     /// default to preserve the paper's 8-dim formulation).
     pub queue_aware: bool,
+    /// Worker threads for the experiment grid sweeps (1 = serial).
+    /// Cells share nothing and seed their own RNGs, so any value
+    /// renders byte-identical tables — only the wall clock changes.
+    pub threads: usize,
     /// RNG seed for the whole run.
     pub seed: u64,
     /// Artifacts directory (PJRT-loadable HLO text).
@@ -132,6 +136,7 @@ impl Default for Config {
             migrate_penalty_ms: 5.0,
             arrivals: "sequential".into(),
             queue_aware: false,
+            threads: 1,
             seed: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -168,6 +173,7 @@ impl Config {
             | "rebalance_window_ms" | "migrate_threshold_ms" | "migrate_penalty_ms" => {
                 Json::Num(value.parse::<f64>()?)
             }
+            "threads" => Json::Num(value.parse::<f64>()?),
             "concurrent" | "queue_aware" | "reroute" => Json::Bool(value.parse::<bool>()?),
             _ => Json::Str(value.to_string()),
         };
@@ -231,6 +237,7 @@ impl Config {
             }
             "arrivals" => str_field!(arrivals),
             "queue_aware" => self.queue_aware = v.as_bool().context("expected bool")?,
+            "threads" => self.threads = v.as_usize().context("expected int")?,
             "seed" => self.seed = v.as_f64().context("expected number")? as u64,
             other => bail!("unknown config key `{other}`"),
         }
@@ -263,6 +270,9 @@ impl Config {
         }
         if self.streams == 0 {
             bail!("streams must be >= 1");
+        }
+        if self.threads == 0 {
+            bail!("threads must be >= 1");
         }
         if !(self.batch_window_ms.is_finite() && self.batch_window_ms >= 0.0) {
             bail!(
@@ -475,5 +485,16 @@ mod tests {
         assert_eq!(c.eta, 0.7);
         assert_eq!(c.requests, 42);
         assert!(!c.concurrent);
+    }
+
+    #[test]
+    fn threads_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.threads, 1);
+        c.set("threads", "4").unwrap();
+        assert_eq!(c.threads, 4);
+        assert!(c.set("threads", "0").is_err());
+        let j = Json::parse(r#"{"threads": 8}"#).unwrap();
+        assert_eq!(Config::from_json(&j).unwrap().threads, 8);
     }
 }

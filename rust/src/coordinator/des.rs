@@ -89,8 +89,8 @@ pub fn serve_multistream(
     };
     let result = engine::serve(std::slice::from_mut(coord), gens, per_stream, &fopts);
     let mut summary = ServeSummary::default();
-    for job in &result.jobs {
-        if let Some(r) = &job.report {
+    for job in result.jobs {
+        if let Some(r) = job.report {
             summary.push(r);
         }
     }

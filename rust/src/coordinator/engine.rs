@@ -180,11 +180,15 @@ impl BatchWindow {
         self.members.is_empty()
     }
 
-    /// Freeze the window: take the members and bump the generation so
-    /// any still-scheduled close event for this window goes stale.
-    fn take(&mut self) -> Vec<usize> {
+    /// Freeze the window into `slot` (an empty, recycled batch slot):
+    /// the members swap in and the generation bumps so any
+    /// still-scheduled close event for this window goes stale. The
+    /// window inherits the slot's previous (cleared) allocation, so in
+    /// steady state neither side ever reallocates.
+    fn freeze_into(&mut self, slot: &mut Vec<usize>) {
+        debug_assert!(slot.is_empty(), "freeze target slot must be empty");
         self.generation += 1;
-        std::mem::take(&mut self.members)
+        std::mem::swap(&mut self.members, slot);
     }
 }
 
@@ -230,6 +234,16 @@ struct DevState {
     /// admission) don't treat the destination as emptier than it is
     /// about to be when the migration penalty exceeds the tick period
     migrating_in: usize,
+    /// cached `residency × (queued + in-transit)` product — the O(1)
+    /// edge-backlog estimate the routing/admission/rebalance scans read
+    /// on every arrival. Re-derived by `sync_backlog` at every mutation
+    /// of the queue, the in-transit count, or the residency EWMA
+    /// (enqueue / service start / steal / migration landing), never
+    /// recomputed per query; a debug_assert in
+    /// `EngineState::edge_backlog_s` compares it bit-for-bit against a
+    /// fresh recomputation, so a missed update point fails loudly under
+    /// `cargo test`.
+    backlog_s: f64,
 }
 
 impl DevState {
@@ -244,12 +258,22 @@ impl DevState {
             uplink_queue: VecDeque::new(),
             uplink_busy: false,
             migrating_in: 0,
+            backlog_s: 0.0,
         }
     }
 
     /// Tasks queued, in service, or in transit toward this device.
     fn in_system(&self) -> usize {
         self.edge_queue.len() + self.edge_busy as usize + self.migrating_in
+    }
+
+    /// Recompute the cached backlog product after a queue / in-transit /
+    /// residency mutation. The recomputation (not an incremental ±)
+    /// keeps the cache bit-identical to the from-scratch formula, so
+    /// every trace gated by `engine_golden.rs` is unchanged.
+    fn sync_backlog(&mut self) {
+        self.backlog_s = self.residency.get().unwrap_or(0.0)
+            * (self.edge_queue.len() + self.migrating_in) as f64;
     }
 }
 
@@ -292,6 +316,9 @@ pub struct EngineResult {
     pub per_dev_migrated_in: Vec<usize>,
     /// per-device: queued tasks migrated away from this device
     pub per_dev_migrated_out: Vec<usize>,
+    /// discrete events processed by the kernel loop (the denominator of
+    /// the `engine_throughput` bench's events/sec figure)
+    pub events: usize,
 }
 
 enum Verdict {
@@ -305,13 +332,21 @@ struct EngineState {
     jobs: Vec<Job>,
     devs: Vec<DevState>,
     /// flushed uplink batches, addressed by UplinkDone payload (global
-    /// ids; the owning device rides in the event)
+    /// ids; the owning device rides in the event). Slots are recycled
+    /// through `free_batches` once their UplinkDone consumes them, so
+    /// the table stops growing (and stops re-allocating member lists)
+    /// after the first few windows.
     batches: Vec<Vec<usize>>,
+    /// slot indices in `batches` whose batch completed — each holds an
+    /// empty `Vec` that kept its allocation for the next batch
+    free_batches: Vec<usize>,
     /// open cross-device cloud batch (cloud work waiting for the
     /// window; stale closes guarded by its generation)
     cloud_open: BatchWindow,
-    /// frozen cloud batches, addressed by CloudDone payload
+    /// frozen cloud batches, addressed by CloudDone payload (slots
+    /// recycled through `free_cloud_batches`, same scheme as `batches`)
     cloud_batches: Vec<Vec<usize>>,
+    free_cloud_batches: Vec<usize>,
     /// frozen batches waiting for a free executor slot
     cloud_ready: VecDeque<usize>,
     /// busy executor slots (one per invocation, regardless of occupancy)
@@ -335,6 +370,7 @@ struct EngineState {
     per_dev_rerouted: Vec<usize>,
     per_dev_migrated_in: Vec<usize>,
     per_dev_migrated_out: Vec<usize>,
+    events: usize,
 }
 
 impl EngineState {
@@ -344,8 +380,10 @@ impl EngineState {
             jobs: Vec::with_capacity(capacity),
             devs: (0..devices).map(|_| DevState::new()).collect(),
             batches: Vec::new(),
+            free_batches: Vec::new(),
             cloud_open: BatchWindow::default(),
             cloud_batches: Vec::new(),
+            free_cloud_batches: Vec::new(),
             cloud_ready: VecDeque::new(),
             cloud_active: 0,
             cloud_in_flight: 0,
@@ -364,6 +402,7 @@ impl EngineState {
             per_dev_rerouted: vec![0; devices],
             per_dev_migrated_in: vec![0; devices],
             per_dev_migrated_out: vec![0; devices],
+            events: 0,
         }
     }
 
@@ -458,10 +497,19 @@ impl EngineState {
     /// keeps ticks that fire faster than the migration penalty from
     /// repeatedly stealing toward a destination that still looks empty.
     /// A cold device (no residency sample) reports 0 — it is an ideal
-    /// steal target and never a steal source.
+    /// steal target and never a steal source. Reads the accumulator
+    /// maintained by `DevState::sync_backlog` — an O(1) load per query —
+    /// and asserts (debug builds) it agrees bit-for-bit with a fresh
+    /// recomputation, so any missed sync point trips under `cargo test`.
     fn edge_backlog_s(&self, dev: usize) -> f64 {
-        self.devs[dev].residency.get().unwrap_or(0.0)
-            * (self.devs[dev].edge_queue.len() + self.devs[dev].migrating_in) as f64
+        let d = &self.devs[dev];
+        debug_assert_eq!(
+            d.backlog_s.to_bits(),
+            (d.residency.get().unwrap_or(0.0) * (d.edge_queue.len() + d.migrating_in) as f64)
+                .to_bits(),
+            "backlog accumulator out of sync on dev {dev}"
+        );
+        d.backlog_s
     }
 
     /// One work-stealing pass: while the backlog estimates of the most-
@@ -520,6 +568,10 @@ impl EngineState {
                 Ev::Migrate { dev: dst, job: id },
             );
         }
+        // the loop tracked projected backlogs locally; re-derive the
+        // per-device accumulators from the settled queues
+        self.devs[src].sync_backlog();
+        self.devs[dst].sync_backlog();
     }
 
     /// Queue a job on its device, honoring priority classes: a task
@@ -530,6 +582,7 @@ impl EngineState {
         let prio = self.jobs[id].task.priority;
         if prio == 0 {
             self.devs[dev].edge_queue.push_back(id);
+            self.devs[dev].sync_backlog();
             return;
         }
         let pos = self.devs[dev]
@@ -538,6 +591,7 @@ impl EngineState {
             .position(|&j| self.jobs[j].task.priority < prio)
             .unwrap_or(self.devs[dev].edge_queue.len());
         self.devs[dev].edge_queue.insert(pos, id);
+        self.devs[dev].sync_backlog();
     }
 
     /// Start edge service on the next queued job if the device is idle:
@@ -552,6 +606,7 @@ impl EngineState {
         let Some(id) = self.devs[dev].edge_queue.pop_front() else {
             return;
         };
+        self.devs[dev].sync_backlog();
         let coord = &mut devices[dev];
         coord.load.queue_depth = self.devs[dev].edge_queue.len();
         coord.load.backlog_s = self.edge_backlog_s(dev);
@@ -559,6 +614,7 @@ impl EngineState {
         let mut r = coord.step_constrained(&self.jobs[id].task, false, force_edge);
         let residency = (r.tti_total_s - r.tti_off_s - r.tti_cloud_s).max(0.0);
         self.devs[dev].residency.push(residency);
+        self.devs[dev].sync_backlog();
         // track the policy's NATURAL offload propensity: an
         // admission-forced ξ=0 must not decay the EWMA, or sustained
         // downgrades would erase the cloud-detour term from
@@ -582,17 +638,41 @@ impl EngineState {
         self.q.push(now + residency, Ev::EdgeDone { dev, job: id });
     }
 
-    fn freeze_batch(&mut self, members: Vec<usize>) -> usize {
-        self.batches.push(members);
-        self.batches.len() - 1
+    /// Claim an uplink-batch slot: a recycled one (its empty member
+    /// `Vec` kept the old allocation) when available, a fresh one
+    /// otherwise. Slot indices ride in `UplinkDone` events; a slot is
+    /// only recycled once that event has consumed it, so a live event
+    /// can never observe a reused slot.
+    fn acquire_batch_slot(&mut self) -> usize {
+        match self.free_batches.pop() {
+            Some(b) => {
+                debug_assert!(self.batches[b].is_empty());
+                b
+            }
+            None => {
+                self.batches.push(Vec::new());
+                self.batches.len() - 1
+            }
+        }
+    }
+
+    /// Return a consumed slot's (emptied) member list to the free list.
+    fn release_batch_slot(&mut self, b: usize, mut members: Vec<usize>) {
+        members.clear();
+        self.batches[b] = members;
+        self.free_batches.push(b);
     }
 
     fn flush_open_batch(&mut self, devices: &[Coordinator], dev: usize, now: f64) {
         if self.devs[dev].open_batch.is_empty() {
             return;
         }
-        let members = self.devs[dev].open_batch.take();
-        let b = self.freeze_batch(members);
+        let b = self.acquire_batch_slot();
+        // swap the window's members into the recycled slot; the window
+        // inherits the slot's cleared allocation for its next batch
+        let mut slot = std::mem::take(&mut self.batches[b]);
+        self.devs[dev].open_batch.freeze_into(&mut slot);
+        self.batches[b] = slot;
         self.devs[dev].uplink_queue.push_back(b);
         self.maybe_start_uplink(devices, dev, now);
     }
@@ -608,7 +688,10 @@ impl EngineState {
         let Some(b) = self.devs[dev].uplink_queue.pop_front() else {
             return;
         };
-        let members = self.batches[b].clone();
+        // take the member list instead of cloning it — stamping
+        // batch_size needs `jobs` mutable while the members are read —
+        // and restore it below: the UplinkDone event still needs it
+        let members = std::mem::take(&mut self.batches[b]);
         let tx_s = if members.len() == 1 {
             self.jobs[members[0]].solo_off_s
         } else {
@@ -621,6 +704,7 @@ impl EngineState {
                 r.batch_size = n;
             }
         }
+        self.batches[b] = members;
         self.devs[dev].uplink_busy = true;
         self.q.push(now + tx_s, Ev::UplinkDone { dev, batch: b });
     }
@@ -628,8 +712,9 @@ impl EngineState {
     /// Hand an offloading job to its device's uplink stage. With a
     /// batch window it joins the device's open batch (size-capped,
     /// stale-close guarded); without one it ships as a singleton batch
-    /// immediately. Mirrors `enqueue_cloud` — the two stages share the
-    /// `BatchWindow` state machine.
+    /// immediately — built in a recycled slot, not a fresh `vec![id]`.
+    /// Mirrors `enqueue_cloud` — the two stages share the `BatchWindow`
+    /// state machine.
     fn enqueue_uplink(&mut self, devices: &[Coordinator], dev: usize, id: usize, now: f64) {
         if self.opts.des.batch_window_s > 0.0 {
             if self.devs[dev].open_batch.join(id) {
@@ -645,15 +730,32 @@ impl EngineState {
                 self.flush_open_batch(devices, dev, now);
             }
         } else {
-            let b = self.freeze_batch(vec![id]);
+            let b = self.acquire_batch_slot();
+            self.batches[b].push(id);
             self.devs[dev].uplink_queue.push_back(b);
             self.maybe_start_uplink(devices, dev, now);
         }
     }
 
-    fn freeze_cloud_batch(&mut self, members: Vec<usize>) -> usize {
-        self.cloud_batches.push(members);
-        self.cloud_batches.len() - 1
+    /// Cloud-side twin of `acquire_batch_slot` (slot indices ride in
+    /// `CloudDone` events; recycled only after that event consumes them).
+    fn acquire_cloud_slot(&mut self) -> usize {
+        match self.free_cloud_batches.pop() {
+            Some(b) => {
+                debug_assert!(self.cloud_batches[b].is_empty());
+                b
+            }
+            None => {
+                self.cloud_batches.push(Vec::new());
+                self.cloud_batches.len() - 1
+            }
+        }
+    }
+
+    fn release_cloud_slot(&mut self, b: usize, mut members: Vec<usize>) {
+        members.clear();
+        self.cloud_batches[b] = members;
+        self.free_cloud_batches.push(b);
     }
 
     /// Hand a job to the shared cloud stage. With a cloud batch window
@@ -676,7 +778,8 @@ impl EngineState {
                 self.flush_cloud_batch(now);
             }
         } else {
-            let b = self.freeze_cloud_batch(vec![id]);
+            let b = self.acquire_cloud_slot();
+            self.cloud_batches[b].push(id);
             self.cloud_ready.push_back(b);
             self.maybe_start_cloud(now);
         }
@@ -686,8 +789,10 @@ impl EngineState {
         if self.cloud_open.is_empty() {
             return;
         }
-        let members = self.cloud_open.take();
-        let b = self.freeze_cloud_batch(members);
+        let b = self.acquire_cloud_slot();
+        let mut slot = std::mem::take(&mut self.cloud_batches[b]);
+        self.cloud_open.freeze_into(&mut slot);
+        self.cloud_batches[b] = slot;
         self.cloud_ready.push_back(b);
         self.maybe_start_cloud(now);
     }
@@ -703,7 +808,9 @@ impl EngineState {
             let Some(b) = self.cloud_ready.pop_front() else {
                 return;
             };
-            let members = self.cloud_batches[b].clone();
+            // take, stamp, restore — same clone-free pattern as
+            // `maybe_start_uplink`; CloudDone still needs the members
+            let members = std::mem::take(&mut self.cloud_batches[b]);
             let n = members.len();
             let svc = if n == 1 {
                 self.jobs[members[0]].cloud_s
@@ -720,6 +827,7 @@ impl EngineState {
                     r.cloud_batch_size = n;
                 }
             }
+            self.cloud_batches[b] = members;
             self.cloud_invocations += 1;
             self.cloud_occupancy.push(n as f64);
             self.cloud_active += 1;
@@ -782,6 +890,7 @@ pub fn serve(
         // in nondecreasing time order across every device and stage
         debug_assert!(now >= clock, "event clock went backwards: {now} < {clock}");
         clock = now;
+        state.events += 1;
         match ev.ev {
             Ev::Arrival { stream } => {
                 let task = next_task[stream]
@@ -862,11 +971,13 @@ pub fn serve(
             }
             Ev::UplinkDone { dev, batch } => {
                 state.devs[dev].uplink_busy = false;
-                // final use of this batch slot — take, don't clone
+                // final use of this batch slot: drain it, then hand the
+                // emptied member list back to the free list for reuse
                 let members = std::mem::take(&mut state.batches[batch]);
-                for id in members {
+                for &id in &members {
                     state.enqueue_cloud(id, now);
                 }
+                state.release_batch_slot(batch, members);
                 state.maybe_start_uplink(devices, dev, now);
             }
             Ev::CloudBatchClose { generation } => {
@@ -876,12 +987,13 @@ pub fn serve(
             }
             Ev::CloudDone { batch } => {
                 state.cloud_active -= 1;
-                // final use of this invocation's slot — take, don't clone
+                // final use of this invocation's slot — recycle it
                 let members = std::mem::take(&mut state.cloud_batches[batch]);
-                for id in members {
+                for &id in &members {
                     state.cloud_in_flight -= 1;
                     state.finish(id, now);
                 }
+                state.release_cloud_slot(batch, members);
                 state.maybe_start_cloud(now);
             }
             Ev::Rebalance => {
@@ -901,6 +1013,8 @@ pub fn serve(
                 state.devs[dev].migrating_in -= 1;
                 // the job kept its original arrival_s across the
                 // transfer: queue wait and deadline math never reset
+                // (enqueue_edge re-syncs the backlog accumulator after
+                // the in-transit decrement above)
                 state.enqueue_edge(job);
                 state.maybe_start_edge(devices, dev, now);
             }
@@ -934,6 +1048,7 @@ pub fn serve(
         per_dev_rerouted: state.per_dev_rerouted,
         per_dev_migrated_in: state.per_dev_migrated_in,
         per_dev_migrated_out: state.per_dev_migrated_out,
+        events: state.events,
     }
 }
 
@@ -1215,6 +1330,7 @@ mod tests {
             });
             st.devs[0].edge_queue.push_back(i);
         }
+        st.devs[0].sync_backlog();
         st.devs[0].edge_busy = true;
         st.rebalance(1.0);
         // backlog 0.6 vs 0: each move shifts the projected divergence by
@@ -1257,5 +1373,137 @@ mod tests {
         st.rebalance(0.5);
         assert_eq!(st.migrated, 0);
         assert!(st.q.is_empty());
+    }
+
+    #[test]
+    fn batch_slots_are_recycled_through_the_free_list() {
+        let mut st = EngineState::new(1, 4, &FleetOpts::default());
+        let a = st.acquire_batch_slot();
+        st.batches[a].push(7);
+        let members = std::mem::take(&mut st.batches[a]);
+        st.release_batch_slot(a, members);
+        // the next acquisition reuses the freed slot AND its allocation
+        let b = st.acquire_batch_slot();
+        assert_eq!(a, b);
+        assert!(st.batches[b].is_empty());
+        assert!(st.batches[b].capacity() >= 1, "allocation recycled");
+        // a second concurrent slot is fresh; the table holds exactly two
+        let c = st.acquire_batch_slot();
+        assert_ne!(b, c);
+        assert_eq!(st.batches.len(), 2);
+        // the cloud-side twins behave identically
+        let ca = st.acquire_cloud_slot();
+        st.cloud_batches[ca].push(1);
+        let m = std::mem::take(&mut st.cloud_batches[ca]);
+        st.release_cloud_slot(ca, m);
+        assert_eq!(st.acquire_cloud_slot(), ca);
+    }
+
+    #[test]
+    fn window_freeze_swaps_allocations_and_bumps_generation() {
+        let mut w = BatchWindow::default();
+        assert!(w.join(1));
+        assert!(!w.join(2));
+        let g = w.generation;
+        let mut slot = Vec::with_capacity(8);
+        w.freeze_into(&mut slot);
+        assert_eq!(slot, vec![1, 2]);
+        assert_eq!(w.generation, g + 1);
+        assert!(w.is_empty());
+        assert!(
+            w.members.capacity() >= 8,
+            "window inherited the slot's allocation"
+        );
+    }
+
+    #[test]
+    fn backlog_accumulator_matches_scan_under_random_mutation() {
+        // Property for the O(1) backlog estimate: drive the per-device
+        // queues through random enqueue / work-steal / migration-landing
+        // sequences and assert after every op that each device's cached
+        // accumulator equals the from-scratch product bit-for-bit. The
+        // service-start path is covered end-to-end by
+        // `randomized_fleets_never_violate_engine_invariants`, which
+        // runs the full kernel with the same debug_assert armed.
+        use crate::proptest_mini::{check, usize_in, vec_of, Gen};
+        let mk_task = |seed: u64| {
+            crate::workload::TaskGen::new(
+                "efficientnet-b0",
+                crate::perfmodel::Dataset::Cifar100,
+                Arrivals::Sequential,
+                seed,
+            )
+            .unwrap()
+            .next_task()
+        };
+        check(
+            "backlog accumulator == scan",
+            0xACC0,
+            40,
+            |r: &mut crate::util::Pcg32| {
+                let devs = usize_in(2, 4).sample(r);
+                let ops = vec_of(usize_in(0, 99), 4, 40).sample(r);
+                (devs, ops)
+            },
+            |&(devs, ref ops)| {
+                let opts = FleetOpts {
+                    migrate_threshold_s: 0.01,
+                    migrate_penalty_s: 0.001,
+                    ..FleetOpts::default()
+                };
+                let mut st = EngineState::new(devs, 64, &opts);
+                let scan = |st: &EngineState, d: usize| {
+                    st.devs[d].residency.get().unwrap_or(0.0)
+                        * (st.devs[d].edge_queue.len() + st.devs[d].migrating_in) as f64
+                };
+                for (step, &op) in ops.iter().enumerate() {
+                    let dev = op % devs;
+                    match op % 4 {
+                        // enqueue a fresh job on `dev` after a residency
+                        // sample lands (the test stands in for the
+                        // service-start path, so it syncs like it does)
+                        0 | 1 => {
+                            let id = st.jobs.len();
+                            st.jobs.push(Job {
+                                task: mk_task(step as u64),
+                                stream: 0,
+                                dev,
+                                arrival_s: 0.0,
+                                queue_wait_s: 0.0,
+                                solo_off_s: 0.0,
+                                cloud_s: 0.0,
+                                payload_bytes: 0.0,
+                                downgraded: false,
+                                rerouted: false,
+                                migrated: false,
+                                report: None,
+                            });
+                            st.devs[dev].residency.push(0.01 + op as f64 * 1e-3);
+                            st.devs[dev].sync_backlog();
+                            st.enqueue_edge(id);
+                        }
+                        // work-stealing pass across the whole fleet
+                        2 => st.rebalance(step as f64),
+                        // land one in-transit migration, if any
+                        _ => {
+                            if let Some(ev) = st.q.pop() {
+                                if let Ev::Migrate { dev, job } = ev.ev {
+                                    st.devs[dev].migrating_in -= 1;
+                                    st.enqueue_edge(job);
+                                }
+                            }
+                        }
+                    }
+                    for d in 0..devs {
+                        let got = st.devs[d].backlog_s;
+                        let want = scan(&st, d);
+                        if got.to_bits() != want.to_bits() {
+                            return Err(format!("dev {d} op {step}: cache {got} vs scan {want}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

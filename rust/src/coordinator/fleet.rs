@@ -282,6 +282,9 @@ pub struct FleetSummary {
     pub migrated: usize,
     /// total migration latency penalty paid by migrated tasks (s)
     pub migration_latency_s: f64,
+    /// discrete events the kernel processed for this run (the
+    /// `engine_throughput` bench divides these by wall-clock)
+    pub events: usize,
 }
 
 /// Serve `per_stream` tasks from each stream through the fleet via the
@@ -321,34 +324,36 @@ pub fn serve_fleet(
     summary.rerouted = result.rerouted;
     summary.migrated = result.migrated;
     summary.migration_latency_s = result.migration_latency_s;
+    summary.events = result.events;
     for (i, d) in summary.per_device.iter_mut().enumerate() {
         // EngineResult::default() (empty run) carries empty vectors
         d.rerouted_in = result.per_dev_rerouted.get(i).copied().unwrap_or(0);
         d.migrated_in = result.per_dev_migrated_in.get(i).copied().unwrap_or(0);
         d.migrated_out = result.per_dev_migrated_out.get(i).copied().unwrap_or(0);
     }
-    for job in &result.jobs {
-        if let Some(r) = &job.report {
-            summary.serve.push(r);
-            summary.completed += 1;
-            let e2e = if r.e2e_s > 0.0 {
-                r.e2e_s
-            } else {
-                r.queue_wait_s + r.tti_total_s
-            };
-            let violated = job.deadline_s.is_finite() && e2e > job.deadline_s;
-            if violated {
-                summary.slo_violations += 1;
-            } else {
-                summary.goodput += 1;
-            }
-            let d = &mut summary.per_device[job.dev];
-            d.served += 1;
-            d.energy_j += r.eti_total_j;
-            if violated {
-                d.violations += 1;
-            }
+    // consume the jobs so each report MOVES into the summary — the fold
+    // stays string- and clone-free per task
+    for job in result.jobs {
+        let Some(r) = job.report else { continue };
+        summary.completed += 1;
+        let e2e = if r.e2e_s > 0.0 {
+            r.e2e_s
+        } else {
+            r.queue_wait_s + r.tti_total_s
+        };
+        let violated = job.deadline_s.is_finite() && e2e > job.deadline_s;
+        if violated {
+            summary.slo_violations += 1;
+        } else {
+            summary.goodput += 1;
         }
+        let d = &mut summary.per_device[job.dev];
+        d.served += 1;
+        d.energy_j += r.eti_total_j;
+        if violated {
+            d.violations += 1;
+        }
+        summary.serve.push(r);
     }
     summary
 }

@@ -129,7 +129,10 @@ pub struct ServeSummary {
 }
 
 impl ServeSummary {
-    fn push(&mut self, r: &TaskReport) {
+    /// Fold one completed task in. Takes the report by value — the
+    /// telemetry path never clones (or formats) per task; strings only
+    /// appear when `main.rs` finally prints.
+    fn push(&mut self, r: TaskReport) {
         self.tti_ms.push(r.tti_total_s * 1e3);
         self.eti_mj.push(r.eti_total_j * 1e3);
         self.accuracy_pct.push(r.accuracy_pct);
@@ -157,7 +160,7 @@ impl ServeSummary {
         for i in 0..3 {
             self.per_unit_j[i] += r.eti_per_unit_j[i];
         }
-        self.reports.push(r.clone());
+        self.reports.push(r);
     }
 
     pub fn count(&self) -> usize {
@@ -286,7 +289,7 @@ impl Coordinator {
         let mut summary = ServeSummary::default();
         for t in tasks {
             let r = self.step(t, false);
-            summary.push(&r);
+            summary.push(r);
         }
         summary
     }

@@ -38,9 +38,10 @@ impl ActionSpace {
         self.factors[..g].iter().sum()
     }
 
-    /// Per-factor argmax over a flat Q row.
-    pub fn argmax(&self, q: &[f32]) -> Vec<usize> {
-        let mut out = Vec::with_capacity(self.factors.len());
+    /// Per-factor argmax over a flat Q row, written into a caller
+    /// buffer (the allocation-free deployment path).
+    pub fn argmax_into(&self, q: &[f32], out: &mut Vec<usize>) {
+        out.clear();
         let mut off = 0;
         for &f in &self.factors {
             let blk = &q[off..off + f];
@@ -53,6 +54,12 @@ impl ActionSpace {
             out.push(best);
             off += f;
         }
+    }
+
+    /// Per-factor argmax over a flat Q row.
+    pub fn argmax(&self, q: &[f32]) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.factors.len());
+        self.argmax_into(q, &mut out);
         out
     }
 
@@ -133,6 +140,20 @@ pub struct DqnAgent {
     steps: usize,
     grad_steps: usize,
     scratch: InferScratch,
+    arena: LearnArena,
+}
+
+/// Persistent minibatch buffers for `learn`: the flattened state
+/// matrices, the TD scratch, and the output-gradient tensor are rebuilt
+/// in place each gradient step instead of freshly allocated, so a
+/// training loop's steady-state learn() cost is the matmuls, not the
+/// allocator.
+#[derive(Default)]
+struct LearnArena {
+    xs: Vec<f32>,
+    nxs: Vec<f32>,
+    tds: Vec<f64>,
+    dout: Option<Tensor2>,
 }
 
 impl DqnAgent {
@@ -155,6 +176,7 @@ impl DqnAgent {
             steps: 0,
             grad_steps: 0,
             scratch: InferScratch::default(),
+            arena: LearnArena::default(),
         }
     }
 
@@ -175,13 +197,22 @@ impl DqnAgent {
 
     /// Greedy action (deployment path — no exploration, no counters).
     pub fn greedy(&mut self, state: &[f32]) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.space.factors.len());
+        self.greedy_into(state, &mut out);
+        out
+    }
+
+    /// Greedy action written into a caller buffer: with a warm scratch
+    /// and a reused buffer the whole state→Q→argmax path is
+    /// allocation-free (the serving engine's per-decision hot path).
+    pub fn greedy_into(&mut self, state: &[f32], out: &mut Vec<usize>) {
         let q = self.online.infer(state, &mut self.scratch);
-        self.space.argmax(&q)
+        self.space.argmax_into(q, out);
     }
 
     /// Raw Q-values for external consumers (e.g. the PJRT parity test).
     pub fn q_values(&mut self, state: &[f32]) -> Vec<f32> {
-        self.online.infer(state, &mut self.scratch)
+        self.online.infer(state, &mut self.scratch).to_vec()
     }
 
     pub fn remember(&mut self, t: Transition) {
@@ -198,9 +229,14 @@ impl DqnAgent {
         let (idxs, weights) = self.replay.sample(batch, &mut self.rng);
         let sd = self.cfg.state_dim;
 
-        // batched forward over states and next states
-        let mut xs = Vec::with_capacity(batch * sd);
-        let mut nxs = Vec::with_capacity(batch * sd);
+        // batched forward over states and next states; the flattened
+        // matrices reuse the arena's allocations from the previous step
+        let mut xs = std::mem::take(&mut self.arena.xs);
+        let mut nxs = std::mem::take(&mut self.arena.nxs);
+        xs.clear();
+        nxs.clear();
+        xs.reserve(batch * sd);
+        nxs.reserve(batch * sd);
         for &i in &idxs {
             let t = self.replay.get(i);
             xs.extend_from_slice(&t.state);
@@ -211,9 +247,19 @@ impl DqnAgent {
         let cache = self.online.forward(&xs);
         let q_next = self.target.forward(&nxs).output;
 
-        // TD targets with the thinking-while-moving fractional discount
-        let mut dout = Tensor2::zeros(batch, self.space.total_dim());
-        let mut tds = Vec::with_capacity(batch);
+        // TD targets with the thinking-while-moving fractional discount;
+        // dout is the arena tensor zeroed in place when the shape holds
+        let dim = self.space.total_dim();
+        let mut dout = match self.arena.dout.take() {
+            Some(mut t) if t.shape() == (batch, dim) => {
+                t.data.fill(0.0);
+                t
+            }
+            _ => Tensor2::zeros(batch, dim),
+        };
+        let mut tds = std::mem::take(&mut self.arena.tds);
+        tds.clear();
+        tds.reserve(batch);
         let nf = self.space.factors.len() as f32;
         for (b, &i) in idxs.iter().enumerate() {
             let t = self.replay.get(i);
@@ -244,7 +290,15 @@ impl DqnAgent {
         if self.grad_steps % self.cfg.target_sync_every == 0 {
             self.target.copy_from(&self.online);
         }
-        Some(tds.iter().map(|t| t.abs()).sum::<f64>() / batch as f64)
+        let mean_td = tds.iter().map(|t| t.abs()).sum::<f64>() / batch as f64;
+
+        // hand the minibatch buffers back to the arena for the next step
+        self.arena.xs = xs.data;
+        self.arena.nxs = nxs.data;
+        self.arena.tds = tds;
+        self.arena.dout = Some(dout);
+
+        Some(mean_td)
     }
 
     /// Exact joint argmax (enumerates the product space) — validation
@@ -255,7 +309,7 @@ impl DqnAgent {
         let mut best: Option<(f64, Vec<usize>)> = None;
         let mut idx = vec![0usize; self.space.factors.len()];
         loop {
-            let v = self.space.q_of(&q, &idx);
+            let v = self.space.q_of(q, &idx);
             if best.as_ref().map(|(b, _)| v > *b).unwrap_or(true) {
                 best = Some((v, idx.clone()));
             }
@@ -294,6 +348,81 @@ mod tests {
         assert_eq!(s.argmax(&q), vec![3, 3, 3, 4]);
         assert_eq!(s.max_sum(&q), 3.0 + 7.0 + 11.0 + 16.0);
         assert_eq!(s.q_of(&q, &[0, 1, 2, 3]), 0.0 + 5.0 + 10.0 + 15.0);
+    }
+
+    #[test]
+    fn argmax_into_matches_argmax_and_reuses_the_buffer() {
+        let s = space();
+        let q: Vec<f32> = (0..17).map(|i| ((i * 13) % 7) as f32).collect();
+        let mut out = Vec::with_capacity(4);
+        s.argmax_into(&q, &mut out);
+        assert_eq!(out, s.argmax(&q));
+        let cap = out.capacity();
+        s.argmax_into(&q, &mut out);
+        assert_eq!(out, s.argmax(&q));
+        assert_eq!(out.capacity(), cap, "warm argmax_into must not grow");
+    }
+
+    #[test]
+    fn greedy_into_matches_greedy() {
+        let mut agent = DqnAgent::new(
+            DqnConfig {
+                state_dim: 4,
+                hidden: vec![16, 8],
+                ..Default::default()
+            },
+            ActionSpace::new(vec![3, 3, 2]),
+            11,
+        );
+        let mut out = Vec::new();
+        for i in 0..10 {
+            let s: Vec<f32> = (0..4).map(|j| ((i * 3 + j) % 5) as f32 * 0.25).collect();
+            agent.greedy_into(&s, &mut out);
+            assert_eq!(out, agent.greedy(&s), "state {i}");
+        }
+    }
+
+    #[test]
+    fn learn_arena_is_reused_across_steps() {
+        let mut agent = DqnAgent::new(
+            DqnConfig {
+                state_dim: 2,
+                hidden: vec![8],
+                batch: 8,
+                ..Default::default()
+            },
+            ActionSpace::new(vec![2]),
+            13,
+        );
+        for i in 0..16 {
+            agent.remember(Transition {
+                state: vec![i as f32, 1.0],
+                action: vec![i % 2],
+                reward: 0.1,
+                next_state: vec![1.0, i as f32],
+                done: false,
+                gamma_pow: 1.0,
+            });
+        }
+        assert!(agent.learn().is_some());
+        let caps = (
+            agent.arena.xs.capacity(),
+            agent.arena.nxs.capacity(),
+            agent.arena.tds.capacity(),
+        );
+        assert!(caps.0 > 0 && caps.1 > 0 && caps.2 > 0, "arena warmed");
+        assert!(agent.arena.dout.is_some());
+        assert!(agent.learn().is_some());
+        // a same-sized second step reuses every buffer
+        assert_eq!(
+            (
+                agent.arena.xs.capacity(),
+                agent.arena.nxs.capacity(),
+                agent.arena.tds.capacity(),
+            ),
+            caps,
+            "warm learn must not reallocate the arena"
+        );
     }
 
     #[test]

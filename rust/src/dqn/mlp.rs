@@ -41,28 +41,34 @@ impl Mlp {
         d
     }
 
-    /// Forward with activations cached for backprop.
+    /// Forward with activations cached for backprop (the TRAIN path —
+    /// inference goes through `infer`). Each hidden activation MOVES
+    /// into the cache instead of being cloned, and the cache vector is
+    /// sized once up front, so one minibatch forward costs exactly one
+    /// allocation per layer output plus the cached input copy.
     pub fn forward(&self, x: &Tensor2) -> ForwardCache {
-        let mut inputs = vec![x.clone()];
-        let mut h = x.clone();
         let n = self.ws.len();
-        for (i, (w, b)) in self.ws.iter().zip(self.bs.iter()).enumerate() {
-            let mut z = h.matmul(w);
-            z.add_row_bias(b);
-            if i + 1 < n {
-                z.relu_inplace();
-                inputs.push(z.clone());
-            } else {
+        let mut inputs = Vec::with_capacity(n);
+        inputs.push(x.clone());
+        for i in 0..n {
+            let h = inputs.last().expect("seeded with the input tensor");
+            let mut z = h.matmul(&self.ws[i]);
+            z.add_row_bias(&self.bs[i]);
+            if i + 1 == n {
                 return ForwardCache { inputs, output: z };
             }
-            h = z;
+            z.relu_inplace();
+            inputs.push(z);
         }
         unreachable!("mlp must have at least one layer");
     }
 
-    /// Inference-only forward (no caches; ping-pong scratch buffers keep
-    /// the per-decision hot path allocation-free).
-    pub fn infer(&self, x: &[f32], scratch: &mut InferScratch) -> Vec<f32> {
+    /// Inference-only forward: ping-pong scratch buffers, no activation
+    /// caches, and the Q-row is returned as a borrow of the scratch —
+    /// the per-decision hot path performs no allocation at all (after
+    /// the scratch warms to the widest layer). Callers that need an
+    /// owned copy (checkpoint probes, parity tests) call `.to_vec()`.
+    pub fn infer<'s>(&self, x: &[f32], scratch: &'s mut InferScratch) -> &'s [f32] {
         debug_assert_eq!(x.len(), self.ws[0].rows);
         scratch.ensure(self);
         let n = self.ws.len();
@@ -90,7 +96,7 @@ impl Mlp {
             }
             std::mem::swap(&mut scratch.a, &mut scratch.b);
         }
-        scratch.a.clone()
+        &scratch.a
     }
 
     /// Backprop from dL/d(output); returns gradients aligned with (ws, bs).
@@ -197,14 +203,13 @@ pub struct InferScratch {
 
 impl InferScratch {
     fn ensure(&mut self, mlp: &Mlp) {
-        let cap = mlp
-            .dims()
-            .into_iter()
-            .max()
-            .unwrap_or(0);
+        // widest layer boundary, computed without the Vec `dims()` builds
+        let cap = mlp.ws.iter().map(|w| w.rows.max(w.cols)).max().unwrap_or(0);
         if self.a.capacity() < cap {
             self.a.reserve(cap - self.a.capacity());
-            self.b.reserve(cap.saturating_sub(self.b.capacity()));
+        }
+        if self.b.capacity() < cap {
+            self.b.reserve(cap - self.b.capacity());
         }
     }
 }
@@ -296,13 +301,20 @@ mod tests {
         let x = Tensor2::from_vec(1, 3, xs.clone());
         let c = mlp.forward(&x);
         let mut scratch = InferScratch::default();
-        let got = mlp.infer(&xs, &mut scratch);
+        let got = mlp.infer(&xs, &mut scratch).to_vec();
         for (a, b) in got.iter().zip(c.output.data.iter()) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
         }
-        // second call reuses buffers and still agrees
-        let got2 = mlp.infer(&xs, &mut scratch);
+        // second call reuses the (now-warm) buffers and still agrees —
+        // and performs no allocation: the scratch capacity is unchanged
+        let cap_before = (scratch.a.capacity(), scratch.b.capacity());
+        let got2 = mlp.infer(&xs, &mut scratch).to_vec();
         assert_eq!(got, got2);
+        assert_eq!(
+            (scratch.a.capacity(), scratch.b.capacity()),
+            cap_before,
+            "warm infer must not grow the scratch"
+        );
     }
 
     #[test]

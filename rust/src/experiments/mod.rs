@@ -2,6 +2,16 @@
 //! regenerating the corresponding rows/series (DESIGN.md §4 experiment
 //! index). Shared by the `dvfo` CLI (`dvfo experiment <id>`) and the
 //! `benches/` targets.
+//!
+//! The grid sweeps (fig08/fig11/fig12/fig13 and the serving sweeps
+//! load/fleet/cloudbatch/rebalance) run their cells through
+//! [`crate::util::parallel::sweep`] behind a `threads` knob
+//! (`dvfo experiment --threads N`, config key `threads`,
+//! `DVFO_BENCH_THREADS` for the bench targets). Cells share nothing —
+//! each builds its own config, coordinator, and per-cell-seeded task
+//! generators — and rows are reassembled in cell-index order, so the
+//! threaded tables are byte-identical to the serial ones (gated by
+//! `rust/tests/sweep_determinism.rs`).
 
 use crate::configx::Config;
 use crate::coordinator::Coordinator;
@@ -13,6 +23,22 @@ use crate::telemetry::Table;
 use crate::util::Pcg32;
 use crate::workload::{Arrivals, TaskGen};
 use anyhow::Result;
+
+/// Fan a cell list out over the sweep runner and flatten each cell's
+/// rows back in cell order. The first failing cell (in cell order, not
+/// completion order) reports its error.
+fn sweep_rows<C, F>(threads: usize, cells: &[C], f: F) -> Result<Vec<Vec<String>>>
+where
+    C: Sync,
+    F: Fn(&C) -> Result<Vec<Vec<String>>> + Sync,
+{
+    let results = crate::util::parallel::sweep(threads, cells.len(), |i| f(&cells[i]));
+    let mut rows = Vec::new();
+    for r in results {
+        rows.extend(r?);
+    }
+    Ok(rows)
+}
 
 /// Train-then-serve one (policy, model, dataset, device, bandwidth) cell.
 pub fn run_cell(
@@ -176,31 +202,42 @@ pub fn fig07_importance() -> Result<Table> {
 // ======================================================================
 // Fig. 8 — main comparison: E2E latency + energy, DVFO vs 4 baselines
 // ======================================================================
-pub fn fig08_main_comparison(requests: usize, train_eps: usize) -> Result<Table> {
+pub fn fig08_main_comparison(requests: usize, train_eps: usize, threads: usize) -> Result<Table> {
     let mut t = Table::new(vec![
         "model", "dataset", "policy", "tti ms", "eti mJ", "Δtti vs edge", "Δeti vs edge",
     ]);
+    // cell = (model, dataset): each cell needs its own edge baseline, so
+    // that is the smallest self-contained unit of work
+    let mut cells = Vec::new();
     for model in ["efficientnet-b0", "vit-b16"] {
         for dataset in ["cifar100", "imagenet"] {
-            let edge = run_cell(
-                "edge_only", model, dataset, "xavier-nx", "static:5", 0.5, 0.5, requests, 0, 11,
-            )?;
-            for policy in ["dvfo", "drldo", "appealnet", "cloud_only", "edge_only"] {
-                let s = run_cell(
-                    policy, model, dataset, "xavier-nx", "static:5", 0.5, 0.5, requests,
-                    train_eps, 11,
-                )?;
-                t.row(vec![
-                    model.to_string(),
-                    dataset.to_string(),
-                    policy.to_string(),
-                    format!("{:.1}", s.tti_ms.mean()),
-                    format!("{:.0}", s.eti_mj.mean()),
-                    format!("{:+.1}%", 100.0 * (s.tti_ms.mean() / edge.tti_ms.mean() - 1.0)),
-                    format!("{:+.1}%", 100.0 * (s.eti_mj.mean() / edge.eti_mj.mean() - 1.0)),
-                ]);
-            }
+            cells.push((model, dataset));
         }
+    }
+    let rows = sweep_rows(threads, &cells, |&(model, dataset)| {
+        let edge = run_cell(
+            "edge_only", model, dataset, "xavier-nx", "static:5", 0.5, 0.5, requests, 0, 11,
+        )?;
+        let mut rows = Vec::new();
+        for policy in ["dvfo", "drldo", "appealnet", "cloud_only", "edge_only"] {
+            let s = run_cell(
+                policy, model, dataset, "xavier-nx", "static:5", 0.5, 0.5, requests,
+                train_eps, 11,
+            )?;
+            rows.push(vec![
+                model.to_string(),
+                dataset.to_string(),
+                policy.to_string(),
+                format!("{:.1}", s.tti_ms.mean()),
+                format!("{:.0}", s.eti_mj.mean()),
+                format!("{:+.1}%", 100.0 * (s.tti_ms.mean() / edge.tti_ms.mean() - 1.0)),
+                format!("{:+.1}%", 100.0 * (s.eti_mj.mean() / edge.eti_mj.mean() - 1.0)),
+            ]);
+        }
+        Ok(rows)
+    })?;
+    for r in rows {
+        t.row(r);
     }
     Ok(t)
 }
@@ -273,24 +310,31 @@ pub fn fig10_freq_trend(train_eps: usize) -> Result<Table> {
 // ======================================================================
 // Fig. 11 — latency vs bandwidth (0.5–8 Mbps)
 // ======================================================================
-pub fn fig11_bandwidth(requests: usize, train_eps: usize) -> Result<Table> {
+pub fn fig11_bandwidth(requests: usize, train_eps: usize, threads: usize) -> Result<Table> {
     let mut t = Table::new(vec!["dataset", "bandwidth Mbps", "policy", "tti ms"]);
+    let mut cells = Vec::new();
     for dataset in ["cifar100", "imagenet"] {
         for bw in [0.5, 1.0, 2.0, 4.0, 5.0, 8.0] {
-            let spec = format!("static:{bw}");
             for policy in ["dvfo", "drldo", "appealnet", "cloud_only"] {
-                let s = run_cell(
-                    policy, "efficientnet-b0", dataset, "xavier-nx", &spec, 0.5, 0.5, requests,
-                    train_eps, 19,
-                )?;
-                t.row(vec![
-                    dataset.to_string(),
-                    format!("{bw}"),
-                    policy.to_string(),
-                    format!("{:.1}", s.tti_ms.mean()),
-                ]);
+                cells.push((dataset, bw, policy));
             }
         }
+    }
+    let rows = sweep_rows(threads, &cells, |&(dataset, bw, policy)| {
+        let spec = format!("static:{bw}");
+        let s = run_cell(
+            policy, "efficientnet-b0", dataset, "xavier-nx", &spec, 0.5, 0.5, requests,
+            train_eps, 19,
+        )?;
+        Ok(vec![vec![
+            dataset.to_string(),
+            format!("{bw}"),
+            policy.to_string(),
+            format!("{:.1}", s.tti_ms.mean()),
+        ]])
+    })?;
+    for r in rows {
+        t.row(r);
     }
     Ok(t)
 }
@@ -298,21 +342,28 @@ pub fn fig11_bandwidth(requests: usize, train_eps: usize) -> Result<Table> {
 // ======================================================================
 // Fig. 12 — sensitivity to the summation weight λ
 // ======================================================================
-pub fn fig12_lambda(requests: usize, train_eps: usize) -> Result<Table> {
+pub fn fig12_lambda(requests: usize, train_eps: usize, threads: usize) -> Result<Table> {
     let mut t = Table::new(vec!["dataset", "lambda", "accuracy %", "eti mJ"]);
+    let mut cells = Vec::new();
     for dataset in ["cifar100", "imagenet"] {
         for lam in [0.0, 0.1, 0.2, 0.4, 0.5, 0.6, 0.8, 0.9, 1.0] {
-            let s = run_cell(
-                "dvfo", "efficientnet-b0", dataset, "xavier-nx", "static:5", 0.5, lam, requests,
-                train_eps, 23,
-            )?;
-            t.row(vec![
-                dataset.to_string(),
-                format!("{lam}"),
-                format!("{:.2}", s.accuracy_pct.mean()),
-                format!("{:.0}", s.eti_mj.mean()),
-            ]);
+            cells.push((dataset, lam));
         }
+    }
+    let rows = sweep_rows(threads, &cells, |&(dataset, lam)| {
+        let s = run_cell(
+            "dvfo", "efficientnet-b0", dataset, "xavier-nx", "static:5", 0.5, lam, requests,
+            train_eps, 23,
+        )?;
+        Ok(vec![vec![
+            dataset.to_string(),
+            format!("{lam}"),
+            format!("{:.2}", s.accuracy_pct.mean()),
+            format!("{:.0}", s.eti_mj.mean()),
+        ]])
+    })?;
+    for r in rows {
+        t.row(r);
     }
     Ok(t)
 }
@@ -320,21 +371,28 @@ pub fn fig12_lambda(requests: usize, train_eps: usize) -> Result<Table> {
 // ======================================================================
 // Fig. 13 — sensitivity to the cost weight η
 // ======================================================================
-pub fn fig13_eta(requests: usize, train_eps: usize) -> Result<Table> {
+pub fn fig13_eta(requests: usize, train_eps: usize, threads: usize) -> Result<Table> {
     let mut t = Table::new(vec!["dataset", "eta", "tti ms", "eti mJ"]);
+    let mut cells = Vec::new();
     for dataset in ["cifar100", "imagenet"] {
         for eta in [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
-            let s = run_cell(
-                "dvfo", "efficientnet-b0", dataset, "xavier-nx", "static:5", eta, 0.5, requests,
-                train_eps, 29,
-            )?;
-            t.row(vec![
-                dataset.to_string(),
-                format!("{eta}"),
-                format!("{:.1}", s.tti_ms.mean()),
-                format!("{:.0}", s.eti_mj.mean()),
-            ]);
+            cells.push((dataset, eta));
         }
+    }
+    let rows = sweep_rows(threads, &cells, |&(dataset, eta)| {
+        let s = run_cell(
+            "dvfo", "efficientnet-b0", dataset, "xavier-nx", "static:5", eta, 0.5, requests,
+            train_eps, 29,
+        )?;
+        Ok(vec![vec![
+            dataset.to_string(),
+            format!("{eta}"),
+            format!("{:.1}", s.tti_ms.mean()),
+            format!("{:.0}", s.eti_mj.mean()),
+        ]])
+    })?;
+    for r in rows {
+        t.row(r);
     }
     Ok(t)
 }
@@ -565,7 +623,7 @@ pub fn tab_scalability(dataset: &str, requests: usize, train_eps: usize) -> Resu
 // multi-stream serving core (p50/p95/p99 end-to-end latency, queue wait,
 // uplink batch size, per-stream energy).
 // ======================================================================
-pub fn load_sweep(quick: bool) -> Result<Table> {
+pub fn load_sweep(quick: bool, threads: usize) -> Result<Table> {
     use crate::coordinator::des::{serve_multistream, DesOpts};
     let mut t = Table::new(vec![
         "streams",
@@ -581,59 +639,65 @@ pub fn load_sweep(quick: bool) -> Result<Table> {
     let streams_list: &[usize] = if quick { &[1, 8, 64] } else { &[1, 4, 16, 64, 128] };
     let per_stream = if quick { 10 } else { 40 };
     let rate = 2.0; // req/s offered per stream
+    let mut cells = Vec::new();
     for &n in streams_list {
         for policy in ["edge_only", "dvfo"] {
-            let mut cfg = Config::default();
-            cfg.policy = policy.into();
-            cfg.queue_aware = policy == "dvfo";
-            cfg.seed = 61;
-            let mut coord = Coordinator::from_config(&cfg)?;
-            if policy == "dvfo" {
-                let mut tgen =
-                    TaskGen::new(&cfg.model, coord.env.dataset, Arrivals::Sequential, 71)?;
-                coord.train(&mut tgen, if quick { 4 } else { 20 }, 16);
-            }
-            let mut gens = (0..n)
-                .map(|s| {
-                    TaskGen::new(
-                        &cfg.model,
-                        coord.env.dataset,
-                        Arrivals::Poisson { rate },
-                        100 + s as u64,
-                    )
-                })
-                .collect::<Result<Vec<_>>>()?;
-            let opts = DesOpts {
-                batch_window_s: 0.004,
-                ..DesOpts::default()
-            };
-            let s = serve_multistream(&mut coord, &mut gens, per_stream, &opts);
-            let offloaded: Vec<f64> = s
-                .batch_size
-                .values()
-                .iter()
-                .copied()
-                .filter(|&b| b > 0.0)
-                .collect();
-            let mean_batch = if offloaded.is_empty() {
-                0.0
-            } else {
-                offloaded.iter().sum::<f64>() / offloaded.len() as f64
-            };
-            let stream_mj =
-                1e3 * s.per_stream_j.iter().sum::<f64>() / s.per_stream_j.len().max(1) as f64;
-            t.row(vec![
-                n.to_string(),
-                format!("{:.0}", rate * n as f64),
-                policy.to_string(),
-                format!("{:.1}", s.e2e_ms.p50()),
-                format!("{:.1}", s.e2e_ms.p95()),
-                format!("{:.1}", s.e2e_ms.p99()),
-                format!("{:.1}", s.queue_wait_ms.p95()),
-                format!("{mean_batch:.2}"),
-                format!("{stream_mj:.0}"),
-            ]);
+            cells.push((n, policy));
         }
+    }
+    let rows = sweep_rows(threads, &cells, |&(n, policy)| {
+        let mut cfg = Config::default();
+        cfg.policy = policy.into();
+        cfg.queue_aware = policy == "dvfo";
+        cfg.seed = 61;
+        let mut coord = Coordinator::from_config(&cfg)?;
+        if policy == "dvfo" {
+            let mut tgen = TaskGen::new(&cfg.model, coord.env.dataset, Arrivals::Sequential, 71)?;
+            coord.train(&mut tgen, if quick { 4 } else { 20 }, 16);
+        }
+        let mut gens = (0..n)
+            .map(|s| {
+                TaskGen::new(
+                    &cfg.model,
+                    coord.env.dataset,
+                    Arrivals::Poisson { rate },
+                    100 + s as u64,
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let opts = DesOpts {
+            batch_window_s: 0.004,
+            ..DesOpts::default()
+        };
+        let s = serve_multistream(&mut coord, &mut gens, per_stream, &opts);
+        let offloaded: Vec<f64> = s
+            .batch_size
+            .values()
+            .iter()
+            .copied()
+            .filter(|&b| b > 0.0)
+            .collect();
+        let mean_batch = if offloaded.is_empty() {
+            0.0
+        } else {
+            offloaded.iter().sum::<f64>() / offloaded.len() as f64
+        };
+        let stream_mj =
+            1e3 * s.per_stream_j.iter().sum::<f64>() / s.per_stream_j.len().max(1) as f64;
+        Ok(vec![vec![
+            n.to_string(),
+            format!("{:.0}", rate * n as f64),
+            policy.to_string(),
+            format!("{:.1}", s.e2e_ms.p50()),
+            format!("{:.1}", s.e2e_ms.p95()),
+            format!("{:.1}", s.e2e_ms.p99()),
+            format!("{:.1}", s.queue_wait_ms.p95()),
+            format!("{mean_batch:.2}"),
+            format!("{stream_mj:.0}"),
+        ]])
+    })?;
+    for r in rows {
+        t.row(r);
     }
     Ok(t)
 }
@@ -646,7 +710,7 @@ pub fn load_sweep(quick: bool) -> Result<Table> {
 // Runs with a non-zero cloud batch window so the cross-device batching
 // path is exercised on every regeneration (and in the CI smoke run).
 // ======================================================================
-pub fn fleet_sweep(quick: bool) -> Result<Table> {
+pub fn fleet_sweep(quick: bool, threads: usize) -> Result<Table> {
     use crate::coordinator::des::DesOpts;
     use crate::coordinator::fleet::{serve_fleet, Fleet, FleetOpts, Router};
     use crate::workload::SloClass;
@@ -666,59 +730,65 @@ pub fn fleet_sweep(quick: bool) -> Result<Table> {
     let streams_list: &[usize] = if quick { &[6, 24] } else { &[6, 24, 96] };
     let per_stream = if quick { 8 } else { 30 };
     let rate = 4.0; // req/s offered per stream
+    let mut cells = Vec::new();
     for &n in streams_list {
         for admission in ["off", "shed", "downgrade"] {
-            let mut cfg = Config::default();
-            cfg.policy = "edge_only".into();
-            cfg.fleet = "xavier-nx,jetson-tx2,jetson-nano".into();
-            cfg.router = "least_backlog".into();
-            cfg.slo = "300".into();
-            cfg.admission = admission.into();
-            cfg.seed = 83;
-            let mut fleet = Fleet::from_config(&cfg)?;
-            let slo = SloClass::parse(&cfg.slo)?;
-            let mut gens = (0..n)
-                .map(|s| {
-                    Ok(TaskGen::new(
-                        &cfg.model,
-                        fleet.devices[0].env.dataset,
-                        Arrivals::Poisson { rate },
-                        7000 + s as u64,
-                    )?
-                    .with_slo(slo))
-                })
-                .collect::<Result<Vec<_>>>()?;
-            let opts = FleetOpts {
-                des: DesOpts {
-                    batch_window_s: 0.004,
-                    cloud_batch_window_s: 0.004,
-                    ..DesOpts::default()
-                },
-                router: Router::parse(&cfg.router)?,
-                admission: crate::coordinator::fleet::Admission::parse(admission)?,
-                ..FleetOpts::default()
-            };
-            let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
-            let mj_per_task = if s.completed > 0 {
-                1e3 * s.per_device.iter().map(|d| d.energy_j).sum::<f64>()
-                    / s.completed as f64
-            } else {
-                0.0
-            };
-            t.row(vec![
-                n.to_string(),
-                format!("{:.0}", rate * n as f64),
-                admission.to_string(),
-                s.offered.to_string(),
-                s.completed.to_string(),
-                s.shed.to_string(),
-                s.goodput.to_string(),
-                s.slo_violations.to_string(),
-                format!("{:.1}", s.serve.e2e_ms.p50()),
-                format!("{:.1}", s.serve.e2e_ms.p99()),
-                format!("{mj_per_task:.0}"),
-            ]);
+            cells.push((n, admission));
         }
+    }
+    let rows = sweep_rows(threads, &cells, |&(n, admission)| {
+        let mut cfg = Config::default();
+        cfg.policy = "edge_only".into();
+        cfg.fleet = "xavier-nx,jetson-tx2,jetson-nano".into();
+        cfg.router = "least_backlog".into();
+        cfg.slo = "300".into();
+        cfg.admission = admission.into();
+        cfg.seed = 83;
+        let mut fleet = Fleet::from_config(&cfg)?;
+        let slo = SloClass::parse(&cfg.slo)?;
+        let mut gens = (0..n)
+            .map(|s| {
+                Ok(TaskGen::new(
+                    &cfg.model,
+                    fleet.devices[0].env.dataset,
+                    Arrivals::Poisson { rate },
+                    7000 + s as u64,
+                )?
+                .with_slo(slo))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let opts = FleetOpts {
+            des: DesOpts {
+                batch_window_s: 0.004,
+                cloud_batch_window_s: 0.004,
+                ..DesOpts::default()
+            },
+            router: Router::parse(&cfg.router)?,
+            admission: crate::coordinator::fleet::Admission::parse(admission)?,
+            ..FleetOpts::default()
+        };
+        let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
+        let mj_per_task = if s.completed > 0 {
+            1e3 * s.per_device.iter().map(|d| d.energy_j).sum::<f64>() / s.completed as f64
+        } else {
+            0.0
+        };
+        Ok(vec![vec![
+            n.to_string(),
+            format!("{:.0}", rate * n as f64),
+            admission.to_string(),
+            s.offered.to_string(),
+            s.completed.to_string(),
+            s.shed.to_string(),
+            s.goodput.to_string(),
+            s.slo_violations.to_string(),
+            format!("{:.1}", s.serve.e2e_ms.p50()),
+            format!("{:.1}", s.serve.e2e_ms.p99()),
+            format!("{mj_per_task:.0}"),
+        ]])
+    })?;
+    for r in rows {
+        t.row(r);
     }
     Ok(t)
 }
@@ -735,7 +805,7 @@ pub fn fleet_sweep(quick: bool) -> Result<Table> {
 // physics are stamped at edge-service start, so cloud batching moves
 // completion timing and executor occupancy, not edge energy.
 // ======================================================================
-pub fn cloudbatch_sweep(quick: bool) -> Result<Table> {
+pub fn cloudbatch_sweep(quick: bool, threads: usize) -> Result<Table> {
     use crate::coordinator::des::DesOpts;
     use crate::coordinator::fleet::{serve_fleet, Fleet, FleetOpts};
     use crate::workload::SloClass;
@@ -759,7 +829,7 @@ pub fn cloudbatch_sweep(quick: bool) -> Result<Table> {
     };
     let streams = if quick { 8 } else { 24 };
     let per_stream = if quick { 6 } else { 20 };
-    for &window_ms in windows_ms {
+    let rows = sweep_rows(threads, windows_ms, |&window_ms| {
         let mut cfg = Config::default();
         cfg.policy = "cloud_only".into();
         cfg.fleet = "xavier-nx,jetson-nano".into();
@@ -797,7 +867,7 @@ pub fn cloudbatch_sweep(quick: bool) -> Result<Table> {
         // dispatch: the exact server-side work batching eliminates
         let cloud_busy_ms =
             s.serve.tti_cloud_ms.values().iter().sum::<f64>() - s.cloud_dispatch_saved_s * 1e3;
-        t.row(vec![
+        Ok(vec![vec![
             format!("{window_ms}"),
             s.cloud_invocations.to_string(),
             format!("{:.2}", s.cloud_occupancy.mean()),
@@ -809,7 +879,10 @@ pub fn cloudbatch_sweep(quick: bool) -> Result<Table> {
             format!("{:.1}", s.serve.e2e_ms.p50()),
             format!("{:.1}", s.serve.e2e_ms.p99()),
             format!("{mj_per_task:.0}"),
-        ]);
+        ]])
+    })?;
+    for r in rows {
+        t.row(r);
     }
     Ok(t)
 }
@@ -823,7 +896,7 @@ pub fn cloudbatch_sweep(quick: bool) -> Result<Table> {
 // ways: plain round-robin + shed admission, + re-route-before-shed,
 // and + mid-run migration (work stealing) on top.
 // ======================================================================
-pub fn rebalance_sweep(quick: bool) -> Result<Table> {
+pub fn rebalance_sweep(quick: bool, threads: usize) -> Result<Table> {
     use crate::coordinator::fleet::{serve_fleet, Admission, Fleet, FleetOpts};
     use crate::workload::SloClass;
     let mut t = Table::new(vec![
@@ -846,49 +919,56 @@ pub fn rebalance_sweep(quick: bool) -> Result<Table> {
     };
     let streams = if quick { 9 } else { 24 };
     let per_stream = if quick { 8 } else { 24 };
+    let mut cells = Vec::new();
     for fleet_spec in fleets {
         for mode in ["rr", "rr+reroute", "rr+reroute+migrate"] {
-            let mut cfg = Config::default();
-            cfg.policy = "edge_only".into();
-            cfg.fleet = (*fleet_spec).into();
-            cfg.slo = "250".into();
-            cfg.seed = 131;
-            let mut fleet = Fleet::from_config(&cfg)?;
-            let slo = SloClass::parse(&cfg.slo)?;
-            let mut gens = (0..streams)
-                .map(|s| {
-                    Ok(TaskGen::new(
-                        &cfg.model,
-                        fleet.devices[0].env.dataset,
-                        Arrivals::Poisson { rate: 10.0 },
-                        11_000 + s as u64,
-                    )?
-                    .with_slo(slo))
-                })
-                .collect::<Result<Vec<_>>>()?;
-            let opts = FleetOpts {
-                admission: Admission::Shed,
-                reroute: mode != "rr",
-                rebalance_window_s: if mode == "rr+reroute+migrate" { 0.01 } else { 0.0 },
-                migrate_threshold_s: 0.05,
-                migrate_penalty_s: 0.002,
-                ..FleetOpts::default()
-            };
-            let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
-            t.row(vec![
-                fleet_spec.to_string(),
-                mode.to_string(),
-                s.offered.to_string(),
-                s.completed.to_string(),
-                s.shed.to_string(),
-                s.goodput.to_string(),
-                s.slo_violations.to_string(),
-                s.rerouted.to_string(),
-                s.migrated.to_string(),
-                format!("{:.1}", s.serve.e2e_ms.p50()),
-                format!("{:.1}", s.serve.e2e_ms.p99()),
-            ]);
+            cells.push((*fleet_spec, mode));
         }
+    }
+    let rows = sweep_rows(threads, &cells, |&(fleet_spec, mode)| {
+        let mut cfg = Config::default();
+        cfg.policy = "edge_only".into();
+        cfg.fleet = fleet_spec.into();
+        cfg.slo = "250".into();
+        cfg.seed = 131;
+        let mut fleet = Fleet::from_config(&cfg)?;
+        let slo = SloClass::parse(&cfg.slo)?;
+        let mut gens = (0..streams)
+            .map(|s| {
+                Ok(TaskGen::new(
+                    &cfg.model,
+                    fleet.devices[0].env.dataset,
+                    Arrivals::Poisson { rate: 10.0 },
+                    11_000 + s as u64,
+                )?
+                .with_slo(slo))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let opts = FleetOpts {
+            admission: Admission::Shed,
+            reroute: mode != "rr",
+            rebalance_window_s: if mode == "rr+reroute+migrate" { 0.01 } else { 0.0 },
+            migrate_threshold_s: 0.05,
+            migrate_penalty_s: 0.002,
+            ..FleetOpts::default()
+        };
+        let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
+        Ok(vec![vec![
+            fleet_spec.to_string(),
+            mode.to_string(),
+            s.offered.to_string(),
+            s.completed.to_string(),
+            s.shed.to_string(),
+            s.goodput.to_string(),
+            s.slo_violations.to_string(),
+            s.rerouted.to_string(),
+            s.migrated.to_string(),
+            format!("{:.1}", s.serve.e2e_ms.p50()),
+            format!("{:.1}", s.serve.e2e_ms.p99()),
+        ]])
+    })?;
+    for r in rows {
+        t.row(r);
     }
     Ok(t)
 }
@@ -919,19 +999,22 @@ pub fn ablation_action_space(requests: usize) -> Result<Table> {
     Ok(t)
 }
 
-/// Registry for the CLI and benches.
-pub fn run_by_name(name: &str, quick: bool) -> Result<Table> {
+/// Registry for the CLI and benches. `threads` fans the grid sweeps
+/// (fig08/11/12/13, load/fleet/cloudbatch/rebalance) out over the
+/// scoped-thread runner; 1 is the serial harness, and any N renders the
+/// same bytes (gated by `rust/tests/sweep_determinism.rs`).
+pub fn run_by_name(name: &str, quick: bool, threads: usize) -> Result<Table> {
     let (req, eps) = if quick { (40, 30) } else { (150, 60) };
     match name {
         "fig01" => fig01_energy_breakdown(),
         "fig02" => fig02_freq_sweep(),
         "fig07" => fig07_importance(),
-        "fig08" => fig08_main_comparison(req, eps),
+        "fig08" => fig08_main_comparison(req, eps, threads),
         "fig09" => fig09_accuracy(req, eps),
         "fig10" => fig10_freq_trend(eps),
-        "fig11" => fig11_bandwidth(req.min(80), eps),
-        "fig12" => fig12_lambda(req.min(60), eps),
-        "fig13" => fig13_eta(req.min(60), eps),
+        "fig11" => fig11_bandwidth(req.min(80), eps, threads),
+        "fig12" => fig12_lambda(req.min(60), eps, threads),
+        "fig13" => fig13_eta(req.min(60), eps, threads),
         "tab04" => tab04_fusion_accuracy(),
         "fig14" => fig14_fusion_overhead(),
         "fig15" => fig15_twm_convergence(if quick { 15 } else { 40 }),
@@ -939,10 +1022,10 @@ pub fn run_by_name(name: &str, quick: bool) -> Result<Table> {
         "tab05" => tab_scalability("cifar100", req.min(60), eps),
         "tab06" => tab_scalability("imagenet", req.min(60), eps),
         "ablation" => ablation_action_space(req.min(40)),
-        "load" => load_sweep(quick),
-        "fleet" => fleet_sweep(quick),
-        "cloudbatch" => cloudbatch_sweep(quick),
-        "rebalance" => rebalance_sweep(quick),
+        "load" => load_sweep(quick, threads),
+        "fleet" => fleet_sweep(quick, threads),
+        "cloudbatch" => cloudbatch_sweep(quick, threads),
+        "rebalance" => rebalance_sweep(quick, threads),
         other => anyhow::bail!("unknown experiment `{other}`"),
     }
 }
@@ -986,7 +1069,7 @@ mod tests {
 
     #[test]
     fn load_sweep_emits_latency_percentiles() {
-        let t = load_sweep(true).unwrap();
+        let t = load_sweep(true, 1).unwrap();
         let csv = t.to_csv();
         assert!(csv.lines().next().unwrap().contains("e2e p95 ms"));
         // one row per (streams, policy) cell
@@ -996,7 +1079,7 @@ mod tests {
 
     #[test]
     fn fleet_sweep_emits_goodput_columns() {
-        let t = fleet_sweep(true).unwrap();
+        let t = fleet_sweep(true, 1).unwrap();
         let csv = t.to_csv();
         let header = csv.lines().next().unwrap();
         assert!(header.contains("goodput") && header.contains("violations"));
@@ -1007,7 +1090,7 @@ mod tests {
 
     #[test]
     fn cloudbatch_sweep_emits_occupancy_columns() {
-        let t = cloudbatch_sweep(true).unwrap();
+        let t = cloudbatch_sweep(true, 1).unwrap();
         let csv = t.to_csv();
         let header = csv.lines().next().unwrap();
         assert!(header.contains("mean occupancy") && header.contains("dispatch saved ms"));
@@ -1025,7 +1108,7 @@ mod tests {
 
     #[test]
     fn rebalance_sweep_emits_rebalancing_columns() {
-        let t = rebalance_sweep(true).unwrap();
+        let t = rebalance_sweep(true, 1).unwrap();
         let csv = t.to_csv();
         let header = csv.lines().next().unwrap();
         assert!(header.contains("rerouted") && header.contains("migrated"));

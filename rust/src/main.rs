@@ -436,10 +436,19 @@ fn real_main() -> anyhow::Result<()> {
                      | rebalance | all",
                 )
                 .flag("full", "full-size sweep (slower)")
+                .opt("config", "JSON config file", None)
+                .opt(
+                    "threads",
+                    "worker threads for the grid sweeps (cells share nothing; any N \
+                     renders byte-identical tables to 1; overrides config `threads`)",
+                    None,
+                )
                 .opt("csv", "also write CSV to this directory", None);
             let a = parse(&cmd, rest)?;
+            let cfg = config_from(&a)?;
             let id = a.positional(0).unwrap_or("all").to_string();
             let quick = !a.flag("full");
+            let threads: usize = a.parse_or("threads", cfg.threads)?;
             let ids: Vec<&str> = if id == "all" {
                 dvfo::experiments::ALL.to_vec()
             } else {
@@ -447,7 +456,7 @@ fn real_main() -> anyhow::Result<()> {
             };
             for id in ids {
                 let t0 = std::time::Instant::now();
-                let table = dvfo::experiments::run_by_name(id, quick)?;
+                let table = dvfo::experiments::run_by_name(id, quick, threads)?;
                 println!("== {id} ==");
                 println!("{}", table.render());
                 if let Some(dir) = a.get("csv") {

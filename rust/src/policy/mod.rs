@@ -36,9 +36,12 @@ pub struct Obs {
 }
 
 impl Obs {
-    /// Fixed 8-dim featurization — must match python `DQN_STATE_DIM`.
-    pub fn features(&self) -> Vec<f32> {
-        vec![
+    /// Fixed 8-dim featurization written into a caller buffer — the
+    /// deployment path reuses one buffer per policy so featurizing a
+    /// decision allocates nothing.
+    pub fn features_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&[
             self.lambda as f32,
             self.eta as f32,
             (self.bandwidth_mbps / 10.0).min(2.0) as f32,
@@ -47,16 +50,29 @@ impl Obs {
             self.entropy_norm as f32,
             self.intensity_norm as f32,
             self.prev_xi as f32,
-        ]
+        ]);
+    }
+
+    /// Fixed 8-dim featurization — must match python `DQN_STATE_DIM`.
+    pub fn features(&self) -> Vec<f32> {
+        let mut f = Vec::with_capacity(8);
+        self.features_into(&mut f);
+        f
+    }
+
+    /// Queue-aware 10-dim featurization into a caller buffer.
+    pub fn features_ext_into(&self, out: &mut Vec<f32>) {
+        self.features_into(out);
+        out.push(self.queue_depth_norm.clamp(0.0, 2.0) as f32);
+        out.push(self.backlog_norm.clamp(0.0, 2.0) as f32);
     }
 
     /// Queue-aware 10-dim featurization for multi-stream serving: the
     /// base 8 features plus edge queue depth and backlog, so the policy
     /// can trade frequency/offloading against load.
     pub fn features_ext(&self) -> Vec<f32> {
-        let mut f = self.features();
-        f.push(self.queue_depth_norm.clamp(0.0, 2.0) as f32);
-        f.push(self.backlog_norm.clamp(0.0, 2.0) as f32);
+        let mut f = Vec::with_capacity(10);
+        self.features_ext_into(&mut f);
         f
     }
 }
@@ -111,6 +127,11 @@ pub struct DvfoPolicy {
     queue_aware: bool,
     /// measured DQN inference latency (updated by the coordinator)
     pub latency_s: f64,
+    /// reusable featurization buffer: the deployed decide() path is
+    /// allocation-free end-to-end (obs → features → Q → argmax)
+    feat: Vec<f32>,
+    /// reusable greedy-action buffer (same contract as `feat`)
+    act: Vec<usize>,
 }
 
 impl DvfoPolicy {
@@ -134,6 +155,8 @@ impl DvfoPolicy {
             concurrent,
             queue_aware,
             latency_s: 2e-5,
+            feat: Vec::with_capacity(10),
+            act: Vec::with_capacity(4),
         }
     }
 
@@ -170,13 +193,22 @@ impl Policy for DvfoPolicy {
     }
 
     fn decide(&mut self, obs: &Obs) -> Decision {
-        let s = self.obs_features(obs);
-        let a = if self.training {
-            self.agent.act(&s)
+        if self.queue_aware {
+            obs.features_ext_into(&mut self.feat);
         } else {
-            self.agent.greedy(&s)
-        };
-        self.to_decision(&a)
+            obs.features_into(&mut self.feat);
+        }
+        if self.training {
+            // the exploration path owns its action (it may feed a
+            // Transition later); allocation here is train-time only
+            let a = self.agent.act(&self.feat);
+            self.to_decision(&a)
+        } else {
+            // deployment: features, Q-row, and argmax all land in
+            // reusable buffers — no allocation per decision
+            self.agent.greedy_into(&self.feat, &mut self.act);
+            self.to_decision(&self.act)
+        }
     }
 
     fn feedback(&mut self, obs: &Obs, decision: &Decision, next_obs: &Obs, fb: Feedback) {
@@ -465,6 +497,19 @@ mod tests {
         let f = obs().features();
         assert_eq!(f.len(), 8);
         assert!(f.iter().all(|x| x.is_finite() && x.abs() <= 2.0));
+    }
+
+    #[test]
+    fn features_into_matches_the_allocating_variants() {
+        let o = obs();
+        let mut buf = Vec::new();
+        o.features_into(&mut buf);
+        assert_eq!(buf, o.features());
+        o.features_ext_into(&mut buf);
+        assert_eq!(buf, o.features_ext());
+        // the buffer is cleared and rewritten, never appended-to
+        o.features_into(&mut buf);
+        assert_eq!(buf, o.features());
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Small shared utilities: deterministic PRNGs, online statistics, a ring
-//! buffer, and formatting helpers. These stand in for `rand`/`statrs`
-//! which are unavailable in the offline crate set (DESIGN.md §Substitutions).
+//! buffer, formatting helpers, and the scoped-thread sweep runner. These
+//! stand in for `rand`/`statrs`/`rayon` which are unavailable in the
+//! offline crate set (DESIGN.md §Substitutions).
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 
+pub use parallel::sweep;
 pub use rng::{Pcg32, SplitMix64};
 pub use stats::{entropy, skewness, Ewma, Running, Samples};
 

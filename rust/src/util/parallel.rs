@@ -1,0 +1,98 @@
+//! Scoped-thread parallel sweep runner for the experiment harness.
+//!
+//! The paper sweeps are embarrassingly parallel: every cell of a
+//! (model × dataset × policy × knob) grid builds its own config,
+//! coordinator, and task generators from scratch, seeds every RNG from
+//! cell constants, and shares no mutable state with its siblings — so
+//! running cells on worker threads cannot change any cell's output,
+//! only the wall clock. `sweep` preserves that contract structurally:
+//! results come back in cell-index order (never completion order), so a
+//! `--threads N` sweep renders byte-identical tables to `--threads 1`
+//! (gated end-to-end by `rust/tests/sweep_determinism.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `f(0), f(1), …, f(n-1)` across up to `threads` scoped workers
+/// and return the results in index order.
+///
+/// * `threads <= 1` (or `n <= 1`) runs inline on the caller's thread —
+///   no pool, bit-for-bit the serial harness.
+/// * Workers pull the next cell index from a shared atomic counter
+///   (dynamic scheduling: cells have wildly different costs, e.g. a
+///   trained-DQN cell vs an `edge_only` cell), collect `(index,
+///   result)` pairs locally, and the caller reassembles them in order.
+/// * A worker panic propagates to the caller once the scope joins.
+pub fn sweep<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads.max(1).min(n);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut done: Vec<(usize, T)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            return out;
+                        }
+                        out.push((i, f(i)));
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+    done.sort_by_key(|&(i, _)| i);
+    debug_assert_eq!(done.len(), n, "every cell produced exactly one result");
+    done.into_iter().map(|(_, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_index_order() {
+        // stagger the cells so late indices finish first under threads
+        let out = sweep(4, 16, |i| {
+            std::thread::sleep(std::time::Duration::from_millis((16 - i as u64) % 5));
+            i * 10
+        });
+        assert_eq!(out, (0..16).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_threaded_agree() {
+        let f = |i: usize| (i * i) ^ 0x5a;
+        assert_eq!(sweep(1, 33, f), sweep(4, 33, f));
+        assert_eq!(sweep(64, 33, f), sweep(1, 33, f), "threads > cells");
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        assert!(sweep(8, 0, |i| i).is_empty());
+        assert_eq!(sweep(8, 1, |i| i + 1), vec![1]);
+        assert_eq!(sweep(0, 3, |i| i), vec![0, 1, 2], "threads 0 = inline");
+    }
+
+    #[test]
+    #[should_panic(expected = "sweep worker panicked")]
+    fn worker_panics_propagate() {
+        sweep(2, 8, |i| {
+            if i == 5 {
+                panic!("cell exploded");
+            }
+            i
+        });
+    }
+}

@@ -1,0 +1,39 @@
+//! Determinism gate for the parallel sweep runner: a `--threads 4`
+//! experiment sweep must render **byte-identical** tables (same rows,
+//! same ordering, same formatting) to `--threads 1`.
+//!
+//! The contract this gates: every sweep cell builds its own config,
+//! coordinator, and per-cell-seeded task generators, shares no mutable
+//! state with its siblings, and `util::parallel::sweep` reassembles
+//! results in cell-index order — so worker scheduling can never leak
+//! into the output. The two sweeps checked here cover both harness
+//! shapes named by the issue: `load` (single-edge multistream cells,
+//! including trained-DQN cells) and `rebalance` (fleet cells with
+//! re-routing and migration armed).
+
+use dvfo::experiments::run_by_name;
+
+fn assert_thread_invariant(id: &str) {
+    let serial = run_by_name(id, true, 1).unwrap();
+    let threaded = run_by_name(id, true, 4).unwrap();
+    assert_eq!(
+        serial.to_csv(),
+        threaded.to_csv(),
+        "experiment `{id}`: --threads 4 CSV differs from --threads 1"
+    );
+    assert_eq!(
+        serial.render(),
+        threaded.render(),
+        "experiment `{id}`: --threads 4 rendering differs from --threads 1"
+    );
+}
+
+#[test]
+fn load_sweep_is_byte_identical_across_thread_counts() {
+    assert_thread_invariant("load");
+}
+
+#[test]
+fn rebalance_sweep_is_byte_identical_across_thread_counts() {
+    assert_thread_invariant("rebalance");
+}
