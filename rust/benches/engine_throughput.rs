@@ -1,8 +1,8 @@
 //! §Perf — whole-engine throughput bench: drives the unified DES kernel
-//! (`src/coordinator/engine.rs`) end-to-end on two pinned reference
-//! configs and reports **events/sec** and wall-clock, recording the
-//! full per-iteration trajectory into `BENCH_5.json` (CI uploads it as
-//! an artifact; the numbers are recorded, never gated, so shared-runner
+//! (`src/coordinator/engine.rs`) end-to-end on pinned reference configs
+//! and reports **events/sec** and wall-clock, recording the full
+//! per-iteration trajectory into `BENCH_6.json` (CI uploads it as an
+//! artifact; the numbers are recorded, never gated, so shared-runner
 //! noise cannot break the build).
 //!
 //! Pinned configs:
@@ -12,14 +12,18 @@
 //!   * `ref-3dev`  — the paper's three edge boards under shed admission
 //!     with re-route-before-shed and mid-run migration armed (exercises
 //!     the O(1) backlog accumulators, sibling scans, and work stealing).
+//!   * `ref-4dev-s1` / `ref-4dev-s4` — the same four-board cloud-heavy
+//!     config through the unsharded kernel vs 4 share-nothing shards,
+//!     so every run records the scale-out speedup (or lack of it) on
+//!     this host.
 //!
 //! `DVFO_BENCH_FULL=1` scales the task counts up ~10×;
 //! `DVFO_BENCH_JSON=path` overrides the output path (default
-//! `BENCH_5.json` in the working directory).
+//! `BENCH_6.json` in the working directory).
 
 use dvfo::configx::Config;
 use dvfo::coordinator::des::DesOpts;
-use dvfo::coordinator::fleet::{serve_fleet, Admission, Fleet, FleetOpts};
+use dvfo::coordinator::fleet::{serve_fleet_sharded, Admission, Fleet, FleetOpts};
 use dvfo::workload::{Arrivals, SloClass, TaskGen};
 use std::time::Instant;
 
@@ -31,11 +35,20 @@ struct RefCase {
     per_stream: usize,
     rate: f64,
     slo: &'static str,
+    shards: usize,
     opts: FleetOpts,
 }
 
 fn cases(full: bool) -> Vec<RefCase> {
     let scale = if full { 10 } else { 1 };
+    let shard_opts = || FleetOpts {
+        des: DesOpts {
+            batch_window_s: 0.004,
+            cloud_batch_window_s: 0.005,
+            ..DesOpts::default()
+        },
+        ..FleetOpts::default()
+    };
     vec![
         RefCase {
             name: "ref-1dev",
@@ -45,6 +58,7 @@ fn cases(full: bool) -> Vec<RefCase> {
             per_stream: 25 * scale,
             rate: 40.0,
             slo: "none",
+            shards: 1,
             opts: FleetOpts {
                 des: DesOpts {
                     batch_window_s: 0.004,
@@ -63,6 +77,7 @@ fn cases(full: bool) -> Vec<RefCase> {
             per_stream: 20 * scale,
             rate: 10.0,
             slo: "250",
+            shards: 1,
             opts: FleetOpts {
                 admission: Admission::Shed,
                 reroute: true,
@@ -71,6 +86,28 @@ fn cases(full: bool) -> Vec<RefCase> {
                 migrate_penalty_s: 0.002,
                 ..FleetOpts::default()
             },
+        },
+        RefCase {
+            name: "ref-4dev-s1",
+            policy: "cloud_only",
+            fleet: "xavier-nx*2,jetson-tx2,jetson-nano",
+            streams: 8,
+            per_stream: 25 * scale,
+            rate: 40.0,
+            slo: "none",
+            shards: 1,
+            opts: shard_opts(),
+        },
+        RefCase {
+            name: "ref-4dev-s4",
+            policy: "cloud_only",
+            fleet: "xavier-nx*2,jetson-tx2,jetson-nano",
+            streams: 8,
+            per_stream: 25 * scale,
+            rate: 40.0,
+            slo: "none",
+            shards: 4,
+            opts: shard_opts(),
         },
     ]
 }
@@ -98,7 +135,7 @@ fn run_once(c: &RefCase) -> (usize, usize, f64) {
         })
         .collect();
     let t0 = Instant::now();
-    let s = serve_fleet(&mut fleet, &mut gens, c.per_stream, &c.opts);
+    let s = serve_fleet_sharded(&mut fleet, &mut gens, c.per_stream, &c.opts, c.shards);
     let wall = t0.elapsed().as_secs_f64();
     (s.events, s.completed, wall)
 }
@@ -115,7 +152,7 @@ fn main() {
     let full = std::env::var("DVFO_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
     let iters = if full { 10 } else { 5 };
     let out_path =
-        std::env::var("DVFO_BENCH_JSON").unwrap_or_else(|_| "BENCH_5.json".to_string());
+        std::env::var("DVFO_BENCH_JSON").unwrap_or_else(|_| "BENCH_6.json".to_string());
 
     let mut case_jsons = Vec::new();
     for c in cases(full) {
@@ -133,9 +170,10 @@ fn main() {
         let eps_mean = events as f64 / mean;
         let eps_best = events as f64 / best;
         println!(
-            "{:<10} events={events:<7} tasks={completed:<5} iters={iters} \
+            "{:<12} shards={} events={events:<7} tasks={completed:<5} iters={iters} \
              mean={:.3} ms  best={:.3} ms  events/sec mean={:.0} best={:.0}",
             c.name,
+            c.shards,
             mean * 1e3,
             best * 1e3,
             eps_mean,
@@ -143,11 +181,12 @@ fn main() {
         );
         let trajectory: Vec<String> = walls.iter().map(|&w| json_num(w)).collect();
         case_jsons.push(format!(
-            "{{\"name\":\"{}\",\"events\":{events},\"tasks\":{completed},\
+            "{{\"name\":\"{}\",\"shards\":{},\"events\":{events},\"tasks\":{completed},\
              \"iters\":{iters},\"mean_s\":{},\"best_s\":{},\
              \"events_per_sec_mean\":{},\"events_per_sec_best\":{},\
              \"wall_s_trajectory\":[{}]}}",
             c.name,
+            c.shards,
             json_num(mean),
             json_num(best),
             json_num(eps_mean),

@@ -94,6 +94,15 @@ pub struct Config {
     /// policy reacts to load (changes the network shape, so off by
     /// default to preserve the paper's 8-dim formulation).
     pub queue_aware: bool,
+    /// Share-nothing engine shards for fleet serving: each shard runs a
+    /// full event kernel on its own thread over a disjoint device
+    /// subset, synchronizing cloud-pool signals at epoch boundaries.
+    /// 1 = the unsharded (bit-exact replay) path.
+    pub shards: usize,
+    /// Stream telemetry through constant-memory sinks (quantile sketches
+    /// + counters) instead of collecting every per-task report —
+    /// bounded RSS for million-task runs.
+    pub stream_telemetry: bool,
     /// Worker threads for the experiment grid sweeps (1 = serial).
     /// Cells share nothing and seed their own RNGs, so any value
     /// renders byte-identical tables — only the wall clock changes.
@@ -136,6 +145,8 @@ impl Default for Config {
             migrate_penalty_ms: 5.0,
             arrivals: "sequential".into(),
             queue_aware: false,
+            shards: 1,
+            stream_telemetry: false,
             threads: 1,
             seed: 0,
             artifacts_dir: "artifacts".into(),
@@ -170,11 +181,12 @@ impl Config {
             "eta" | "lambda" | "batch_window_ms" | "cloud_batch_window_ms"
             | "freq_levels" | "xi_levels" | "requests" | "train_episodes"
             | "streams" | "seed" | "max_batch" | "cloud_slots" | "cloud_max_batch"
-            | "rebalance_window_ms" | "migrate_threshold_ms" | "migrate_penalty_ms" => {
-                Json::Num(value.parse::<f64>()?)
-            }
+            | "rebalance_window_ms" | "migrate_threshold_ms" | "migrate_penalty_ms"
+            | "shards" => Json::Num(value.parse::<f64>()?),
             "threads" => Json::Num(value.parse::<f64>()?),
-            "concurrent" | "queue_aware" | "reroute" => Json::Bool(value.parse::<bool>()?),
+            "concurrent" | "queue_aware" | "reroute" | "stream_telemetry" => {
+                Json::Bool(value.parse::<bool>()?)
+            }
             _ => Json::Str(value.to_string()),
         };
         self.apply(key, &j)?;
@@ -237,6 +249,10 @@ impl Config {
             }
             "arrivals" => str_field!(arrivals),
             "queue_aware" => self.queue_aware = v.as_bool().context("expected bool")?,
+            "shards" => self.shards = v.as_usize().context("expected int")?,
+            "stream_telemetry" => {
+                self.stream_telemetry = v.as_bool().context("expected bool")?
+            }
             "threads" => self.threads = v.as_usize().context("expected int")?,
             "seed" => self.seed = v.as_f64().context("expected number")? as u64,
             other => bail!("unknown config key `{other}`"),
@@ -270,6 +286,9 @@ impl Config {
         }
         if self.streams == 0 {
             bail!("streams must be >= 1");
+        }
+        if self.shards == 0 {
+            bail!("shards must be >= 1");
         }
         if self.threads == 0 {
             bail!("threads must be >= 1");
@@ -474,6 +493,23 @@ mod tests {
         assert!(c2.reroute);
         assert_eq!(c2.rebalance_window_ms, 8.0);
         assert_eq!(c2.migrate_penalty_ms, 1.0);
+    }
+
+    #[test]
+    fn scaleout_fields_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.shards, 1);
+        assert!(!c.stream_telemetry);
+        c.set("shards", "4").unwrap();
+        c.set("stream_telemetry", "true").unwrap();
+        assert_eq!(c.shards, 4);
+        assert!(c.stream_telemetry);
+        assert!(c.set("shards", "0").is_err());
+        assert!(c.set("stream_telemetry", "maybe").is_err());
+        let j = Json::parse(r#"{"shards": 2, "stream_telemetry": true}"#).unwrap();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c2.shards, 2);
+        assert!(c2.stream_telemetry);
     }
 
     #[test]

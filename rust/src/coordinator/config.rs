@@ -1,0 +1,253 @@
+//! `EngineConfig`: the one flat parameter surface of the serving engine.
+//!
+//! Five PRs of knob growth left the engine's tunables scattered across
+//! [`DesOpts`] (batching windows, cloud pool) and [`FleetOpts`]
+//! (routing, admission, reroute/rebalance/migrate) with the sharding
+//! and telemetry controls about to pile on top. This module flattens
+//! all of them into one builder-style struct: construct with
+//! [`EngineConfig::new`] (or [`EngineConfig::from_config`] for the CLI
+//! path), chain the setters you care about, and convert to the
+//! engine-internal blocks with [`EngineConfig::fleet_opts`] /
+//! [`EngineConfig::des_opts`] at the call boundary. The legacy types
+//! stay as the kernel's internal parameter blocks; the parity test in
+//! `rust/tests/engine_config_parity.rs` pins both construction paths to
+//! identical values so downstream callers can migrate incrementally.
+
+use super::des::DesOpts;
+use super::fleet::{Admission, FleetOpts, Router};
+use super::shard::SHARD_EPOCH_S;
+use crate::configx::Config;
+use anyhow::Result;
+
+/// Every engine tunable in one flat, builder-style block: uplink/cloud
+/// batching, the shared executor pool, routing, admission, the
+/// rebalancing knobs, and the scale-out (sharding + streaming
+/// telemetry) controls.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// uplink batching window in seconds; 0 disables batching
+    pub batch_window_s: f64,
+    /// maximum offloads per uplink batch (a full batch flushes early)
+    pub max_batch: usize,
+    /// concurrent cloud executors (beyond this, cloud work queues)
+    pub cloud_slots: usize,
+    /// cloud-side cross-device batching window in seconds; 0 disables
+    pub cloud_batch_window_s: f64,
+    /// maximum jobs per batched cloud invocation
+    pub cloud_max_batch: usize,
+    /// fleet dispatch policy
+    pub router: Router,
+    /// admission policy for deadline-doomed tasks
+    pub admission: Admission,
+    /// re-route-before-shed across sibling devices
+    pub reroute: bool,
+    /// cross-device rebalance tick period in seconds; 0 = no ticks
+    pub rebalance_window_s: f64,
+    /// backlog divergence (s) that triggers queued-task migration
+    pub migrate_threshold_s: f64,
+    /// latency penalty per migrated task in transit (s)
+    pub migrate_penalty_s: f64,
+    /// share-nothing engine shards; <= 1 runs the unsharded kernel
+    pub shards: usize,
+    /// epoch length (simulated s) for cross-shard cloud-signal sync
+    pub shard_epoch_s: f64,
+    /// constant-memory telemetry (streaming sinks) instead of collected
+    /// per-task reports
+    pub stream_telemetry: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        let des = DesOpts::default();
+        let fleet = FleetOpts::default();
+        Self {
+            batch_window_s: des.batch_window_s,
+            max_batch: des.max_batch,
+            cloud_slots: des.cloud_slots,
+            cloud_batch_window_s: des.cloud_batch_window_s,
+            cloud_max_batch: des.cloud_max_batch,
+            router: fleet.router,
+            admission: fleet.admission,
+            reroute: fleet.reroute,
+            rebalance_window_s: fleet.rebalance_window_s,
+            migrate_threshold_s: fleet.migrate_threshold_s,
+            migrate_penalty_s: fleet.migrate_penalty_s,
+            shards: 1,
+            shard_epoch_s: SHARD_EPOCH_S,
+            stream_telemetry: false,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from a run config: the same key set (and the same ms→s
+    /// conversions) as `DesOpts::from_config` + `FleetOpts::from_config`,
+    /// plus the `shards` / `stream_telemetry` scale-out keys.
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        Ok(Self {
+            batch_window_s: cfg.batch_window_ms / 1e3,
+            max_batch: cfg.max_batch,
+            cloud_slots: cfg.cloud_slots,
+            cloud_batch_window_s: cfg.cloud_batch_window_ms / 1e3,
+            cloud_max_batch: cfg.cloud_max_batch,
+            router: Router::parse(&cfg.router)?,
+            admission: Admission::parse(&cfg.admission)?,
+            reroute: cfg.reroute,
+            rebalance_window_s: cfg.rebalance_window_ms / 1e3,
+            migrate_threshold_s: cfg.migrate_threshold_ms / 1e3,
+            migrate_penalty_s: cfg.migrate_penalty_ms / 1e3,
+            shards: cfg.shards,
+            shard_epoch_s: SHARD_EPOCH_S,
+            stream_telemetry: cfg.stream_telemetry,
+        })
+    }
+
+    pub fn batch_window_s(mut self, v: f64) -> Self {
+        self.batch_window_s = v;
+        self
+    }
+
+    pub fn max_batch(mut self, v: usize) -> Self {
+        self.max_batch = v;
+        self
+    }
+
+    pub fn cloud_slots(mut self, v: usize) -> Self {
+        self.cloud_slots = v;
+        self
+    }
+
+    pub fn cloud_batch_window_s(mut self, v: f64) -> Self {
+        self.cloud_batch_window_s = v;
+        self
+    }
+
+    pub fn cloud_max_batch(mut self, v: usize) -> Self {
+        self.cloud_max_batch = v;
+        self
+    }
+
+    pub fn router(mut self, v: Router) -> Self {
+        self.router = v;
+        self
+    }
+
+    pub fn admission(mut self, v: Admission) -> Self {
+        self.admission = v;
+        self
+    }
+
+    pub fn reroute(mut self, v: bool) -> Self {
+        self.reroute = v;
+        self
+    }
+
+    pub fn rebalance_window_s(mut self, v: f64) -> Self {
+        self.rebalance_window_s = v;
+        self
+    }
+
+    pub fn migrate_threshold_s(mut self, v: f64) -> Self {
+        self.migrate_threshold_s = v;
+        self
+    }
+
+    pub fn migrate_penalty_s(mut self, v: f64) -> Self {
+        self.migrate_penalty_s = v;
+        self
+    }
+
+    pub fn shards(mut self, v: usize) -> Self {
+        self.shards = v;
+        self
+    }
+
+    pub fn shard_epoch_s(mut self, v: f64) -> Self {
+        self.shard_epoch_s = v;
+        self
+    }
+
+    pub fn stream_telemetry(mut self, v: bool) -> Self {
+        self.stream_telemetry = v;
+        self
+    }
+
+    /// The DES parameter block (uplink/cloud batching + executor pool).
+    pub fn des_opts(&self) -> DesOpts {
+        DesOpts {
+            batch_window_s: self.batch_window_s,
+            max_batch: self.max_batch,
+            cloud_slots: self.cloud_slots,
+            cloud_batch_window_s: self.cloud_batch_window_s,
+            cloud_max_batch: self.cloud_max_batch,
+        }
+    }
+
+    /// The fleet parameter block the engine entry points take.
+    pub fn fleet_opts(&self) -> FleetOpts {
+        FleetOpts {
+            des: self.des_opts(),
+            router: self.router,
+            admission: self.admission,
+            reroute: self.reroute,
+            rebalance_window_s: self.rebalance_window_s,
+            migrate_threshold_s: self.migrate_threshold_s,
+            migrate_penalty_s: self.migrate_penalty_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains_and_converts() {
+        let ec = EngineConfig::new()
+            .batch_window_s(0.004)
+            .cloud_slots(2)
+            .router(Router::LeastBacklog)
+            .admission(Admission::Shed)
+            .reroute(true)
+            .rebalance_window_s(0.01)
+            .migrate_threshold_s(0.05)
+            .migrate_penalty_s(0.002)
+            .shards(4)
+            .stream_telemetry(true);
+        let fo = ec.fleet_opts();
+        assert_eq!(fo.des.batch_window_s, 0.004);
+        assert_eq!(fo.des.cloud_slots, 2);
+        assert_eq!(fo.router, Router::LeastBacklog);
+        assert_eq!(fo.admission, Admission::Shed);
+        assert!(fo.reroute);
+        assert_eq!(fo.rebalance_window_s, 0.01);
+        assert_eq!(fo.migrate_threshold_s, 0.05);
+        assert_eq!(fo.migrate_penalty_s, 0.002);
+        assert_eq!(ec.shards, 4);
+        assert!(ec.stream_telemetry);
+    }
+
+    #[test]
+    fn default_matches_legacy_defaults() {
+        let ec = EngineConfig::default();
+        let fo = ec.fleet_opts();
+        let legacy = FleetOpts::default();
+        assert_eq!(fo.des.batch_window_s, legacy.des.batch_window_s);
+        assert_eq!(fo.des.max_batch, legacy.des.max_batch);
+        assert_eq!(fo.des.cloud_slots, legacy.des.cloud_slots);
+        assert_eq!(fo.des.cloud_batch_window_s, legacy.des.cloud_batch_window_s);
+        assert_eq!(fo.des.cloud_max_batch, legacy.des.cloud_max_batch);
+        assert_eq!(fo.router, legacy.router);
+        assert_eq!(fo.admission, legacy.admission);
+        assert_eq!(fo.reroute, legacy.reroute);
+        assert_eq!(fo.rebalance_window_s, legacy.rebalance_window_s);
+        assert_eq!(fo.migrate_threshold_s, legacy.migrate_threshold_s);
+        assert_eq!(fo.migrate_penalty_s, legacy.migrate_penalty_s);
+        assert_eq!(ec.shards, 1);
+        assert!(!ec.stream_telemetry);
+    }
+}

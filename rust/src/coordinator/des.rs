@@ -27,6 +27,13 @@ use super::{Coordinator, ServeSummary};
 use crate::workload::TaskGen;
 
 /// Tunables of the discrete-event serving core.
+///
+/// Deprecated as a construction surface: prefer
+/// [`EngineConfig`](super::EngineConfig) and convert with
+/// [`EngineConfig::des_opts`](super::EngineConfig::des_opts). This type
+/// remains the kernel-internal parameter block (the parity test in
+/// `rust/tests/engine_config_parity.rs` pins both paths to identical
+/// values).
 #[derive(Clone, Debug)]
 pub struct DesOpts {
     /// uplink batching window in seconds; 0 disables batching (every

@@ -54,12 +54,27 @@
 //! device, with its own env/DVFS/policy). Before each decision the
 //! kernel publishes the owning device's `LoadSignals` so queue-aware
 //! policies can react to backlog.
+//!
+//! **Report sinks and the resumable core.** Completed task reports no
+//! longer accumulate inside the kernel: every completion is delivered
+//! to a caller-supplied `telemetry::sink::ReportSink` the moment it is
+//! stamped, and the job's slot is recycled through a free list — live
+//! memory is bounded by the number of *in-flight* tasks, not the run
+//! length. [`CollectSink`] reassembles the reports in admission order
+//! (the pre-sink `Vec` behavior, bit-exact, still what `serve` uses);
+//! `telemetry::sink::StreamingSink` folds them into constant-memory
+//! sketches instead. The event loop itself lives in [`EngineCore`],
+//! which can run to completion (`run_until(f64::INFINITY, ..)` — the
+//! classic `serve`) or advance in bounded time epochs for the sharded
+//! fleet runner in `coordinator::shard`, pausing at an epoch boundary
+//! with all queues, windows, and EWMAs intact.
 
 use super::fleet::{Admission, FleetOpts, Router};
 use super::{Coordinator, LoadSignals};
 use crate::coordinator::env::TaskReport;
 use crate::perfmodel::CLOUD_DISPATCH_OVERHEAD_S;
-use crate::util::{Ewma, Samples};
+use crate::telemetry::sink::{JobMeta, ReportSink};
+use crate::util::{Ewma, Running, Samples};
 use crate::workload::{Task, TaskGen};
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -146,6 +161,13 @@ impl EventQueue {
         self.heap.pop()
     }
 
+    /// Timestamp of the next event without consuming it — the epoch
+    /// runner peeks before popping so an event at or past the epoch
+    /// boundary stays queued for the next epoch.
+    fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
     fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -210,6 +232,10 @@ struct Job {
     rerouted: bool,
     /// the rebalancer migrated this task across devices while queued
     migrated: bool,
+    /// admission-order index among accepted tasks. Job *slots* are
+    /// recycled once a task completes, so the slot id is not a stable
+    /// ordering — this is what sinks key report ordering on.
+    arrival_idx: usize,
     report: Option<TaskReport>,
 }
 
@@ -290,18 +316,31 @@ pub struct EngineJob {
 /// Raw outcome of one engine run, in job-creation (arrival) order.
 #[derive(Default)]
 pub struct EngineResult {
-    /// one entry per accepted job
+    /// one entry per accepted job, in admission order. Populated by
+    /// [`serve`] from its `CollectSink`; empty when the caller drove
+    /// [`EngineCore`] with a streaming sink (the sink holds the
+    /// telemetry instead).
     pub jobs: Vec<EngineJob>,
     /// tasks generated by the streams (accepted + shed)
     pub offered: usize,
+    /// accepted tasks, all of which completed by drain time (equals
+    /// `jobs.len()` on a collecting run; the only completion count when
+    /// a streaming sink consumed the reports)
+    pub completed: usize,
     /// tasks dropped by admission control
     pub shed: usize,
     /// tasks forced to edge-only by admission control
     pub downgraded: usize,
     /// cloud executor invocations (batched and singleton)
     pub cloud_invocations: usize,
-    /// jobs per cloud executor invocation (batch occupancy)
+    /// jobs per cloud executor invocation (batch occupancy). Collected
+    /// only when the sink keeps traces (`ReportSink::keep_trace`);
+    /// empty under a streaming sink
     pub cloud_occupancy: Samples,
+    /// running aggregate of batch occupancy (mean/min/max/sum) — always
+    /// maintained, so streaming runs keep the headline occupancy
+    /// figures without the per-invocation trace buffer
+    pub cloud_occupancy_run: Running,
     /// dispatch/runtime overhead amortized away by cloud batching (s)
     pub cloud_dispatch_saved_s: f64,
     /// tasks re-routed to a sibling device instead of shed/downgraded
@@ -330,6 +369,12 @@ enum Verdict {
 struct EngineState {
     q: EventQueue,
     jobs: Vec<Job>,
+    /// job slots retired by `finish` — recycled on the next admission,
+    /// so the table size tracks in-flight (not lifetime) task count
+    free_jobs: Vec<usize>,
+    /// accepted-task counter: the admission-order index stamped on each
+    /// job (what `jobs.len()` was before slot recycling)
+    accepted: usize,
     devs: Vec<DevState>,
     /// flushed uplink batches, addressed by UplinkDone payload (global
     /// ids; the owning device rides in the event). Slots are recycled
@@ -354,11 +399,23 @@ struct EngineState {
     /// jobs between uplink completion and cloud completion — the live
     /// pool pressure the admission estimator reads
     cloud_in_flight: usize,
+    /// cloud jobs in flight on OTHER shards of the same run, refreshed
+    /// at epoch boundaries by the sharded runner (0 unsharded) — added
+    /// to the local in-flight count by the admission estimator so every
+    /// shard prices the *shared* pool, not just its slice
+    ext_cloud_in_flight: usize,
+    /// executor-slot denominator for the admission estimate: the global
+    /// pool size under sharding, the local `cloud_slots` otherwise
+    est_cloud_slots: usize,
     /// EWMA of the solo cloud service time
     cloud_service: Ewma,
     cloud_invocations: usize,
     cloud_occupancy: Samples,
+    cloud_occupancy_run: Running,
     cloud_dispatch_saved_s: f64,
+    /// whether the active sink keeps unbounded trace buffers (set from
+    /// `ReportSink::keep_trace` on every `run_until` entry)
+    trace: bool,
     opts: FleetOpts,
     rr_next: usize,
     offered: usize,
@@ -377,7 +434,12 @@ impl EngineState {
     fn new(devices: usize, capacity: usize, opts: &FleetOpts) -> Self {
         Self {
             q: EventQueue::new(),
-            jobs: Vec::with_capacity(capacity),
+            // slots are recycled at completion, so the table only needs
+            // in-flight capacity; cap the reservation so a million-task
+            // run does not pre-commit a million slots
+            jobs: Vec::with_capacity(capacity.min(4096)),
+            free_jobs: Vec::new(),
+            accepted: 0,
             devs: (0..devices).map(|_| DevState::new()).collect(),
             batches: Vec::new(),
             free_batches: Vec::new(),
@@ -387,10 +449,14 @@ impl EngineState {
             cloud_ready: VecDeque::new(),
             cloud_active: 0,
             cloud_in_flight: 0,
+            ext_cloud_in_flight: 0,
+            est_cloud_slots: opts.des.cloud_slots,
             cloud_service: Ewma::new(0.2),
             cloud_invocations: 0,
             cloud_occupancy: Samples::new(),
+            cloud_occupancy_run: Running::new(),
             cloud_dispatch_saved_s: 0.0,
+            trace: true,
             opts: opts.clone(),
             rr_next: 0,
             offered: 0,
@@ -450,8 +516,12 @@ impl EngineState {
         }
         let tx = self.devs[dev].uplink_s.get().unwrap_or(0.0);
         let svc = self.cloud_service.get().unwrap_or(0.0);
-        let pool_wait =
-            svc * self.cloud_in_flight as f64 / self.opts.des.cloud_slots.max(1) as f64;
+        // under sharding the pool pressure is the epoch-synced global
+        // view (local + other shards) over the global slot count; in an
+        // unsharded run both extensions are identities (ext = 0,
+        // est_cloud_slots = cloud_slots), so the estimate is unchanged
+        let in_flight = self.cloud_in_flight + self.ext_cloud_in_flight;
+        let pool_wait = svc * in_flight as f64 / self.est_cloud_slots.max(1) as f64;
         Some(edge + xi * (tx + svc + pool_wait))
     }
 
@@ -829,19 +899,380 @@ impl EngineState {
             }
             self.cloud_batches[b] = members;
             self.cloud_invocations += 1;
-            self.cloud_occupancy.push(n as f64);
+            // the per-invocation trace buffer only grows for collecting
+            // sinks; the running aggregate is always maintained
+            if self.trace {
+                self.cloud_occupancy.push(n as f64);
+            }
+            self.cloud_occupancy_run.push(n as f64);
             self.cloud_active += 1;
             self.q.push(now + svc, Ev::CloudDone { batch: b });
         }
     }
 
-    /// Stamp the queueing-aware fields on the job's report.
-    fn finish(&mut self, id: usize, now: f64) {
+    /// Stamp the queueing-aware fields on the job's report, deliver it
+    /// to the sink, and retire the job slot to the free list (no event,
+    /// queue, or batch references the id past this point).
+    fn finish<S: ReportSink>(&mut self, id: usize, now: f64, sink: &mut S) {
         let job = &mut self.jobs[id];
         if let Some(r) = job.report.as_mut() {
             r.queue_wait_s = job.queue_wait_s;
             r.e2e_s = (now - job.arrival_s).max(0.0);
             r.stream = job.stream;
+        }
+        let meta = JobMeta {
+            dev: job.dev,
+            deadline_s: job.task.deadline_s,
+            priority: job.task.priority,
+            arrival_idx: job.arrival_idx,
+        };
+        if let Some(r) = job.report.take() {
+            sink.push(&meta, r);
+        }
+        self.free_jobs.push(id);
+    }
+}
+
+/// The collecting sink: every report retained, reassembled in
+/// admission order — exactly the `Vec<EngineJob>` the engine built
+/// before sinks existed, and still the default behavior of [`serve`].
+pub struct CollectSink {
+    jobs: Vec<Option<EngineJob>>,
+}
+
+impl CollectSink {
+    pub fn new() -> Self {
+        Self { jobs: Vec::new() }
+    }
+
+    /// The completed jobs in admission order. Every accepted job
+    /// completes before the engine drains, so every slot is filled.
+    pub fn into_jobs(self) -> Vec<EngineJob> {
+        self.jobs
+            .into_iter()
+            .map(|j| j.expect("every accepted job completes before the engine drains"))
+            .collect()
+    }
+}
+
+impl ReportSink for CollectSink {
+    fn push(&mut self, meta: &JobMeta, report: TaskReport) {
+        if self.jobs.len() <= meta.arrival_idx {
+            self.jobs.resize_with(meta.arrival_idx + 1, || None);
+        }
+        debug_assert!(
+            self.jobs[meta.arrival_idx].is_none(),
+            "a job completed twice"
+        );
+        self.jobs[meta.arrival_idx] = Some(EngineJob {
+            report: Some(report),
+            dev: meta.dev,
+            deadline_s: meta.deadline_s,
+        });
+    }
+}
+
+/// The resumable event loop: the kernel's state machine plus its task
+/// streams, runnable to completion in one call or in bounded time
+/// epochs.
+///
+/// `serve` drives a core with `run_until(f64::INFINITY, ..)` — one
+/// uninterrupted run, event-for-event identical to the historical
+/// monolithic loop. The sharded fleet runner (`coordinator::shard`)
+/// instead advances every shard's core epoch by epoch, reconciling the
+/// shared-cloud signals between epochs through the `cloud_*` accessors
+/// below.
+pub struct EngineCore<'a> {
+    devices: &'a mut [Coordinator],
+    gens: &'a mut [TaskGen],
+    state: EngineState,
+    next_task: Vec<Option<Task>>,
+    remaining: Vec<usize>,
+    clock: f64,
+}
+
+impl<'a> EngineCore<'a> {
+    /// Build a core over the devices and streams: primes every stream's
+    /// first arrival and arms the rebalance tick chain. Streams may be
+    /// empty (the core is then born drained); `devices` must be
+    /// non-empty if any stream has tasks to route.
+    pub fn new(
+        devices: &'a mut [Coordinator],
+        gens: &'a mut [TaskGen],
+        per_stream: usize,
+        opts: &FleetOpts,
+    ) -> Self {
+        for coord in devices.iter_mut() {
+            coord.policy.set_training(false);
+        }
+        let streams = gens.len();
+        let mut state = EngineState::new(devices.len(), streams * per_stream, opts);
+
+        // prime every stream with its first arrival
+        let mut next_task: Vec<Option<Task>> = Vec::with_capacity(streams);
+        let mut remaining: Vec<usize> = vec![per_stream; streams];
+        if per_stream > 0 {
+            for (s, gen) in gens.iter_mut().enumerate() {
+                let t = gen.next_task();
+                remaining[s] -= 1;
+                state.q.push(t.arrival_s, Ev::Arrival { stream: s });
+                next_task.push(Some(t));
+            }
+        }
+
+        // arm the rebalance tick chain; with the window at 0 no tick is
+        // ever scheduled and the event trace is bit-identical to the
+        // non-rebalancing kernel
+        if opts.rebalance_window_s > 0.0 && !state.q.is_empty() {
+            state.q.push(opts.rebalance_window_s, Ev::Rebalance);
+        }
+
+        Self {
+            devices,
+            gens,
+            state,
+            next_task,
+            remaining,
+            clock: f64::NEG_INFINITY,
+        }
+    }
+
+    /// True once every event has been consumed (all streams exhausted,
+    /// all in-flight work completed).
+    pub fn drained(&self) -> bool {
+        self.state.q.is_empty()
+    }
+
+    /// Local cloud jobs currently between uplink completion and cloud
+    /// completion — published to sibling shards at epoch boundaries.
+    pub fn cloud_in_flight(&self) -> usize {
+        self.state.cloud_in_flight
+    }
+
+    /// Current value of the local cloud-service EWMA (`None` before the
+    /// first cloud job).
+    pub fn cloud_service(&self) -> Option<f64> {
+        self.state.cloud_service.get()
+    }
+
+    /// Adopt the epoch-synced cross-shard view of the shared cloud
+    /// pool: jobs in flight on *other* shards and the global executor
+    /// slot count the admission estimator should price against.
+    pub fn set_cloud_signals(&mut self, ext_in_flight: usize, est_slots: usize) {
+        self.state.ext_cloud_in_flight = ext_in_flight;
+        self.state.est_cloud_slots = est_slots;
+    }
+
+    /// Adopt a blended global cloud-service estimate (every shard sets
+    /// the same value, then keeps smoothing locally until the next
+    /// epoch).
+    pub fn set_cloud_service(&mut self, v: Option<f64>) {
+        self.state.cloud_service.set(v);
+    }
+
+    /// Process events strictly before `t_stop` (an infinite `t_stop`
+    /// runs to drain). Completed reports are delivered to `sink` as
+    /// they finish. Returns `true` when the core drained, `false` when
+    /// it paused at the epoch boundary with events still queued.
+    pub fn run_until<S: ReportSink>(&mut self, t_stop: f64, sink: &mut S) -> bool {
+        self.state.trace = sink.keep_trace();
+        let devices = &mut *self.devices;
+        let gens = &mut *self.gens;
+        let state = &mut self.state;
+        let next_task = &mut self.next_task;
+        let remaining = &mut self.remaining;
+        loop {
+            let Some(t_next) = state.q.peek_time() else {
+                break;
+            };
+            if t_stop.is_finite() && t_next >= t_stop {
+                return false;
+            }
+            let ev = state.q.pop().expect("peeked event vanished");
+            let now = ev.time;
+            // the kernel invariant the heap ordering guarantees: events
+            // pop in nondecreasing time order across every device and
+            // stage (and across epoch pauses)
+            debug_assert!(
+                now >= self.clock,
+                "event clock went backwards: {now} < {}",
+                self.clock
+            );
+            self.clock = now;
+            state.events += 1;
+            match ev.ev {
+                Ev::Arrival { stream } => {
+                    let task = next_task[stream]
+                        .take()
+                        .expect("arrival without pending task");
+                    if remaining[stream] > 0 {
+                        remaining[stream] -= 1;
+                        let t = gens[stream].next_task();
+                        state.q.push(t.arrival_s, Ev::Arrival { stream });
+                        next_task[stream] = Some(t);
+                    }
+                    state.offered += 1;
+                    let mut dev = state.route(devices);
+                    let mut verdict = state.admit(dev, &task);
+                    let mut rerouted = false;
+                    // re-route-before-shed: when the routed device would
+                    // blow the deadline, try the cheapest feasible
+                    // sibling; only give up (shed/downgrade) when no
+                    // device can make the deadline
+                    if state.opts.reroute && !matches!(verdict, Verdict::Accept) {
+                        if let Some(alt) =
+                            state.cheapest_feasible_sibling(dev, task.deadline_s)
+                        {
+                            dev = alt;
+                            verdict = Verdict::Accept;
+                            rerouted = true;
+                            state.rerouted += 1;
+                            state.per_dev_rerouted[alt] += 1;
+                        }
+                    }
+                    let downgraded = match verdict {
+                        Verdict::Shed => {
+                            state.shed += 1;
+                            continue;
+                        }
+                        Verdict::Downgrade => {
+                            state.downgraded += 1;
+                            true
+                        }
+                        Verdict::Accept => false,
+                    };
+                    let arrival_idx = state.accepted;
+                    state.accepted += 1;
+                    let job = Job {
+                        task,
+                        stream,
+                        dev,
+                        arrival_s: now,
+                        queue_wait_s: 0.0,
+                        solo_off_s: 0.0,
+                        cloud_s: 0.0,
+                        payload_bytes: 0.0,
+                        downgraded,
+                        rerouted,
+                        migrated: false,
+                        arrival_idx,
+                        report: None,
+                    };
+                    // reuse a retired slot when one is free; ids are
+                    // opaque handles, so recycling never reorders
+                    // anything (ordering keys off `arrival_idx`)
+                    let id = match state.free_jobs.pop() {
+                        Some(slot) => {
+                            state.jobs[slot] = job;
+                            slot
+                        }
+                        None => {
+                            state.jobs.push(job);
+                            state.jobs.len() - 1
+                        }
+                    };
+                    state.enqueue_edge(id);
+                    state.maybe_start_edge(devices, dev, now);
+                }
+                Ev::EdgeDone { dev, job: id } => {
+                    state.devs[dev].edge_busy = false;
+                    let offloads = state.jobs[id]
+                        .report
+                        .as_ref()
+                        .map(|r| r.xi > 0.0)
+                        .unwrap_or(false);
+                    if offloads {
+                        state.enqueue_uplink(devices, dev, id, now);
+                    } else {
+                        state.finish(id, now, sink);
+                    }
+                    state.maybe_start_edge(devices, dev, now);
+                }
+                Ev::BatchClose { dev, generation } => {
+                    if generation == state.devs[dev].open_batch.generation {
+                        state.flush_open_batch(devices, dev, now);
+                    }
+                }
+                Ev::UplinkDone { dev, batch } => {
+                    state.devs[dev].uplink_busy = false;
+                    // final use of this batch slot: drain it, then hand
+                    // the emptied member list back to the free list
+                    let members = std::mem::take(&mut state.batches[batch]);
+                    for &id in &members {
+                        state.enqueue_cloud(id, now);
+                    }
+                    state.release_batch_slot(batch, members);
+                    state.maybe_start_uplink(devices, dev, now);
+                }
+                Ev::CloudBatchClose { generation } => {
+                    if generation == state.cloud_open.generation {
+                        state.flush_cloud_batch(now);
+                    }
+                }
+                Ev::CloudDone { batch } => {
+                    state.cloud_active -= 1;
+                    // final use of this invocation's slot — recycle it
+                    let members = std::mem::take(&mut state.cloud_batches[batch]);
+                    for &id in &members {
+                        state.cloud_in_flight -= 1;
+                        state.finish(id, now, sink);
+                    }
+                    state.release_cloud_slot(batch, members);
+                    state.maybe_start_cloud(now);
+                }
+                Ev::Rebalance => {
+                    state.rebalance(now);
+                    // keep ticking while any other event is pending;
+                    // when this tick was the last event the system is
+                    // fully drained (queued work always has a completion
+                    // or window-close event in flight) and the chain ends
+                    if !state.q.is_empty() {
+                        state
+                            .q
+                            .push(now + state.opts.rebalance_window_s, Ev::Rebalance);
+                    }
+                }
+                Ev::Migrate { dev, job } => {
+                    debug_assert_eq!(state.jobs[job].dev, dev);
+                    state.devs[dev].migrating_in -= 1;
+                    // the job kept its original arrival_s across the
+                    // transfer: queue wait and deadline math never reset
+                    // (enqueue_edge re-syncs the backlog accumulator
+                    // after the in-transit decrement above)
+                    state.enqueue_edge(job);
+                    state.maybe_start_edge(devices, dev, now);
+                }
+            }
+        }
+        true
+    }
+
+    /// Tear the core down into its counters. Reports live in whatever
+    /// sink the caller drove `run_until` with (`jobs` stays empty here;
+    /// [`serve`] refills it from its `CollectSink`).
+    pub fn into_result(self) -> EngineResult {
+        // reset load signals so later synchronous use observes idle edges
+        for coord in self.devices.iter_mut() {
+            coord.load = LoadSignals::default();
+        }
+        let state = self.state;
+        EngineResult {
+            jobs: Vec::new(),
+            offered: state.offered,
+            completed: state.accepted,
+            shed: state.shed,
+            downgraded: state.downgraded,
+            cloud_invocations: state.cloud_invocations,
+            cloud_occupancy: state.cloud_occupancy,
+            cloud_occupancy_run: state.cloud_occupancy_run,
+            cloud_dispatch_saved_s: state.cloud_dispatch_saved_s,
+            rerouted: state.rerouted,
+            migrated: state.migrated,
+            migration_latency_s: state.migration_latency_s,
+            per_dev_rerouted: state.per_dev_rerouted,
+            per_dev_migrated_in: state.per_dev_migrated_in,
+            per_dev_migrated_out: state.per_dev_migrated_out,
+            events: state.events,
         }
     }
 }
@@ -863,193 +1294,12 @@ pub fn serve(
     if gens.is_empty() || per_stream == 0 || devices.is_empty() {
         return EngineResult::default();
     }
-    let streams = gens.len();
-    let mut state = EngineState::new(devices.len(), streams * per_stream, opts);
-
-    // prime every stream with its first arrival
-    let mut next_task: Vec<Option<Task>> = Vec::with_capacity(streams);
-    let mut remaining: Vec<usize> = vec![per_stream; streams];
-    for (s, gen) in gens.iter_mut().enumerate() {
-        let t = gen.next_task();
-        remaining[s] -= 1;
-        state.q.push(t.arrival_s, Ev::Arrival { stream: s });
-        next_task.push(Some(t));
-    }
-
-    // arm the rebalance tick chain; with the window at 0 no tick is
-    // ever scheduled and the event trace is bit-identical to the
-    // non-rebalancing kernel
-    if opts.rebalance_window_s > 0.0 {
-        state.q.push(opts.rebalance_window_s, Ev::Rebalance);
-    }
-
-    let mut clock = f64::NEG_INFINITY;
-    while let Some(ev) = state.q.pop() {
-        let now = ev.time;
-        // the kernel invariant the heap ordering guarantees: events pop
-        // in nondecreasing time order across every device and stage
-        debug_assert!(now >= clock, "event clock went backwards: {now} < {clock}");
-        clock = now;
-        state.events += 1;
-        match ev.ev {
-            Ev::Arrival { stream } => {
-                let task = next_task[stream]
-                    .take()
-                    .expect("arrival without pending task");
-                if remaining[stream] > 0 {
-                    remaining[stream] -= 1;
-                    let t = gens[stream].next_task();
-                    state.q.push(t.arrival_s, Ev::Arrival { stream });
-                    next_task[stream] = Some(t);
-                }
-                state.offered += 1;
-                let mut dev = state.route(devices);
-                let mut verdict = state.admit(dev, &task);
-                let mut rerouted = false;
-                // re-route-before-shed: when the routed device would
-                // blow the deadline, try the cheapest feasible sibling;
-                // only give up (shed/downgrade) when no device can make
-                // the deadline
-                if state.opts.reroute && !matches!(verdict, Verdict::Accept) {
-                    if let Some(alt) =
-                        state.cheapest_feasible_sibling(dev, task.deadline_s)
-                    {
-                        dev = alt;
-                        verdict = Verdict::Accept;
-                        rerouted = true;
-                        state.rerouted += 1;
-                        state.per_dev_rerouted[alt] += 1;
-                    }
-                }
-                let downgraded = match verdict {
-                    Verdict::Shed => {
-                        state.shed += 1;
-                        continue;
-                    }
-                    Verdict::Downgrade => {
-                        state.downgraded += 1;
-                        true
-                    }
-                    Verdict::Accept => false,
-                };
-                let id = state.jobs.len();
-                state.jobs.push(Job {
-                    task,
-                    stream,
-                    dev,
-                    arrival_s: now,
-                    queue_wait_s: 0.0,
-                    solo_off_s: 0.0,
-                    cloud_s: 0.0,
-                    payload_bytes: 0.0,
-                    downgraded,
-                    rerouted,
-                    migrated: false,
-                    report: None,
-                });
-                state.enqueue_edge(id);
-                state.maybe_start_edge(devices, dev, now);
-            }
-            Ev::EdgeDone { dev, job: id } => {
-                state.devs[dev].edge_busy = false;
-                let offloads = state.jobs[id]
-                    .report
-                    .as_ref()
-                    .map(|r| r.xi > 0.0)
-                    .unwrap_or(false);
-                if offloads {
-                    state.enqueue_uplink(devices, dev, id, now);
-                } else {
-                    state.finish(id, now);
-                }
-                state.maybe_start_edge(devices, dev, now);
-            }
-            Ev::BatchClose { dev, generation } => {
-                if generation == state.devs[dev].open_batch.generation {
-                    state.flush_open_batch(devices, dev, now);
-                }
-            }
-            Ev::UplinkDone { dev, batch } => {
-                state.devs[dev].uplink_busy = false;
-                // final use of this batch slot: drain it, then hand the
-                // emptied member list back to the free list for reuse
-                let members = std::mem::take(&mut state.batches[batch]);
-                for &id in &members {
-                    state.enqueue_cloud(id, now);
-                }
-                state.release_batch_slot(batch, members);
-                state.maybe_start_uplink(devices, dev, now);
-            }
-            Ev::CloudBatchClose { generation } => {
-                if generation == state.cloud_open.generation {
-                    state.flush_cloud_batch(now);
-                }
-            }
-            Ev::CloudDone { batch } => {
-                state.cloud_active -= 1;
-                // final use of this invocation's slot — recycle it
-                let members = std::mem::take(&mut state.cloud_batches[batch]);
-                for &id in &members {
-                    state.cloud_in_flight -= 1;
-                    state.finish(id, now);
-                }
-                state.release_cloud_slot(batch, members);
-                state.maybe_start_cloud(now);
-            }
-            Ev::Rebalance => {
-                state.rebalance(now);
-                // keep ticking while any other event is pending; when
-                // this tick was the last event the system is fully
-                // drained (queued work always has a completion or
-                // window-close event in flight) and the chain ends
-                if !state.q.is_empty() {
-                    state
-                        .q
-                        .push(now + state.opts.rebalance_window_s, Ev::Rebalance);
-                }
-            }
-            Ev::Migrate { dev, job } => {
-                debug_assert_eq!(state.jobs[job].dev, dev);
-                state.devs[dev].migrating_in -= 1;
-                // the job kept its original arrival_s across the
-                // transfer: queue wait and deadline math never reset
-                // (enqueue_edge re-syncs the backlog accumulator after
-                // the in-transit decrement above)
-                state.enqueue_edge(job);
-                state.maybe_start_edge(devices, dev, now);
-            }
-        }
-    }
-
-    // reset load signals so later synchronous use observes idle edges
-    for coord in devices.iter_mut() {
-        coord.load = LoadSignals::default();
-    }
-
-    EngineResult {
-        jobs: state
-            .jobs
-            .into_iter()
-            .map(|j| EngineJob {
-                report: j.report,
-                dev: j.dev,
-                deadline_s: j.task.deadline_s,
-            })
-            .collect(),
-        offered: state.offered,
-        shed: state.shed,
-        downgraded: state.downgraded,
-        cloud_invocations: state.cloud_invocations,
-        cloud_occupancy: state.cloud_occupancy,
-        cloud_dispatch_saved_s: state.cloud_dispatch_saved_s,
-        rerouted: state.rerouted,
-        migrated: state.migrated,
-        migration_latency_s: state.migration_latency_s,
-        per_dev_rerouted: state.per_dev_rerouted,
-        per_dev_migrated_in: state.per_dev_migrated_in,
-        per_dev_migrated_out: state.per_dev_migrated_out,
-        events: state.events,
-    }
+    let mut core = EngineCore::new(devices, gens, per_stream, opts);
+    let mut sink = CollectSink::new();
+    core.run_until(f64::INFINITY, &mut sink);
+    let mut result = core.into_result();
+    result.jobs = sink.into_jobs();
+    result
 }
 
 #[cfg(test)]
@@ -1326,6 +1576,7 @@ mod tests {
                 downgraded: false,
                 rerouted: false,
                 migrated: false,
+                arrival_idx: i,
                 report: None,
             });
             st.devs[0].edge_queue.push_back(i);
@@ -1397,6 +1648,98 @@ mod tests {
         let m = std::mem::take(&mut st.cloud_batches[ca]);
         st.release_cloud_slot(ca, m);
         assert_eq!(st.acquire_cloud_slot(), ca);
+    }
+
+    #[test]
+    fn job_slots_recycle_across_a_paced_run() {
+        // Paced arrivals let earlier tasks retire their slots before
+        // later ones are admitted: the job table must stay far smaller
+        // than the run while the sink still sees every report.
+        let mut cfg = Config::default();
+        cfg.policy = "edge_only".into();
+        cfg.seed = 11;
+        let mut fleet = Fleet::from_config(&cfg).unwrap();
+        let mut gens = vec![TaskGen::new(
+            &cfg.model,
+            fleet.devices[0].env.dataset,
+            Arrivals::Poisson { rate: 2.0 },
+            77,
+        )
+        .unwrap()];
+        let opts = FleetOpts::default();
+        let mut core = EngineCore::new(&mut fleet.devices, &mut gens, 20, &opts);
+        let mut sink = CollectSink::new();
+        assert!(core.run_until(f64::INFINITY, &mut sink));
+        assert_eq!(core.state.accepted, 20);
+        assert!(
+            core.state.jobs.len() < 20,
+            "job table never recycled: {} slots",
+            core.state.jobs.len()
+        );
+        // every slot is back on the free list once the run drains
+        assert_eq!(core.state.free_jobs.len(), core.state.jobs.len());
+        let jobs = sink.into_jobs();
+        assert_eq!(jobs.len(), 20);
+        assert!(jobs.iter().all(|j| j.report.is_some()));
+    }
+
+    #[test]
+    fn epoch_stepped_core_is_bit_exact_with_one_shot_serve() {
+        // The sharded runner drives the core in bounded time epochs;
+        // stepping run_until through finite horizons must replay the
+        // exact event sequence of a single infinite-horizon call.
+        let mk = || {
+            let mut cfg = Config::default();
+            cfg.policy = "cloud_only".into();
+            cfg.fleet = "xavier-nx,jetson-nano".into();
+            cfg.seed = 23;
+            let fleet = Fleet::from_config(&cfg).unwrap();
+            let gens: Vec<TaskGen> = (0..3)
+                .map(|s| {
+                    TaskGen::new(
+                        &cfg.model,
+                        fleet.devices[0].env.dataset,
+                        Arrivals::Poisson { rate: 25.0 },
+                        900 + s,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            (fleet, gens)
+        };
+        let opts = FleetOpts {
+            des: DesOpts {
+                batch_window_s: 0.004,
+                cloud_batch_window_s: 0.004,
+                cloud_slots: 2,
+                ..DesOpts::default()
+            },
+            ..FleetOpts::default()
+        };
+        let (mut f1, mut g1) = mk();
+        let oneshot = serve(&mut f1.devices, &mut g1, 6, &opts);
+        let (mut f2, mut g2) = mk();
+        let mut core = EngineCore::new(&mut f2.devices, &mut g2, 6, &opts);
+        let mut sink = CollectSink::new();
+        let mut t = 0.01;
+        let mut epochs = 0usize;
+        while !core.run_until(t, &mut sink) {
+            t += 0.01;
+            epochs += 1;
+        }
+        assert!(epochs > 1, "run never actually spanned multiple epochs");
+        let stepped = core.into_result();
+        let jobs = sink.into_jobs();
+        assert_eq!(oneshot.offered, stepped.offered);
+        assert_eq!(oneshot.completed, stepped.completed);
+        assert_eq!(oneshot.events, stepped.events);
+        assert_eq!(oneshot.jobs.len(), jobs.len());
+        for (a, b) in oneshot.jobs.iter().zip(&jobs) {
+            let (ra, rb) = (a.report.as_ref().unwrap(), b.report.as_ref().unwrap());
+            assert_eq!(ra.e2e_s.to_bits(), rb.e2e_s.to_bits());
+            assert_eq!(ra.queue_wait_s.to_bits(), rb.queue_wait_s.to_bits());
+            assert_eq!(ra.eti_total_j.to_bits(), rb.eti_total_j.to_bits());
+        }
     }
 
     #[test]
@@ -1476,6 +1819,7 @@ mod tests {
                                 downgraded: false,
                                 rerouted: false,
                                 migrated: false,
+                                arrival_idx: id,
                                 report: None,
                             });
                             st.devs[dev].residency.push(0.01 + op as f64 * 1e-3);

@@ -31,12 +31,14 @@
 //! reproduces it task-for-task (the parity gate in
 //! `rust/tests/fleet_serving.rs`).
 
-use super::engine;
+use super::engine::{self, CollectSink, EngineJob};
+use super::shard::{serve_sharded, SHARD_EPOCH_S};
 use super::{Coordinator, ServeSummary};
 use crate::configx::Config;
 use crate::coordinator::des::DesOpts;
 use crate::device::spec::find_device;
-use crate::util::Samples;
+use crate::telemetry::sink::StreamingSink;
+use crate::util::{Running, Samples};
 use crate::workload::{Arrivals, TaskGen};
 use anyhow::{bail, Context, Result};
 
@@ -99,6 +101,14 @@ impl Admission {
 }
 
 /// Tunables of a fleet serving run.
+///
+/// Deprecated as a construction surface: prefer
+/// [`EngineConfig`](super::EngineConfig), the flat builder that subsumes
+/// these knobs plus [`DesOpts`] and the sharding controls, and convert
+/// with [`EngineConfig::fleet_opts`](super::EngineConfig::fleet_opts).
+/// This type remains the engine-internal parameter block (a parity test
+/// in `rust/tests/engine_config_parity.rs` pins the two construction
+/// paths to identical values).
 #[derive(Clone, Debug)]
 pub struct FleetOpts {
     /// per-device DES tunables (uplink batch window + cap), the size of
@@ -287,53 +297,29 @@ pub struct FleetSummary {
     pub events: usize,
 }
 
-/// Serve `per_stream` tasks from each stream through the fleet via the
-/// unified kernel. Streams are routed per task by the configured
-/// router; reports accumulate in job-creation (arrival) order so a
-/// 1-device round-robin fleet is report-ordered exactly like
-/// `serve_multistream`.
-pub fn serve_fleet(
-    fleet: &mut Fleet,
-    gens: &mut [TaskGen],
-    per_stream: usize,
-    opts: &FleetOpts,
-) -> FleetSummary {
-    let mut summary = FleetSummary {
-        per_device: fleet
-            .names
-            .iter()
-            .map(|n| DeviceTelemetry {
-                name: n.clone(),
-                served: 0,
-                energy_j: 0.0,
-                violations: 0,
-                rerouted_in: 0,
-                migrated_in: 0,
-                migrated_out: 0,
-            })
-            .collect(),
-        ..FleetSummary::default()
-    };
-    let result = engine::serve(&mut fleet.devices, gens, per_stream, opts);
-    summary.offered = result.offered;
-    summary.shed = result.shed;
-    summary.downgraded = result.downgraded;
-    summary.cloud_invocations = result.cloud_invocations;
-    summary.cloud_occupancy = result.cloud_occupancy;
-    summary.cloud_dispatch_saved_s = result.cloud_dispatch_saved_s;
-    summary.rerouted = result.rerouted;
-    summary.migrated = result.migrated;
-    summary.migration_latency_s = result.migration_latency_s;
-    summary.events = result.events;
-    for (i, d) in summary.per_device.iter_mut().enumerate() {
-        // EngineResult::default() (empty run) carries empty vectors
-        d.rerouted_in = result.per_dev_rerouted.get(i).copied().unwrap_or(0);
-        d.migrated_in = result.per_dev_migrated_in.get(i).copied().unwrap_or(0);
-        d.migrated_out = result.per_dev_migrated_out.get(i).copied().unwrap_or(0);
-    }
-    // consume the jobs so each report MOVES into the summary — the fold
-    // stays string- and clone-free per task
-    for job in result.jobs {
+/// Empty per-device telemetry rows, one per fleet device in order.
+fn device_rows(fleet: &Fleet) -> Vec<DeviceTelemetry> {
+    fleet
+        .names
+        .iter()
+        .map(|n| DeviceTelemetry {
+            name: n.clone(),
+            served: 0,
+            energy_j: 0.0,
+            violations: 0,
+            rerouted_in: 0,
+            migrated_in: 0,
+            migrated_out: 0,
+        })
+        .collect()
+}
+
+/// Fold completed jobs into the summary: SLO accounting, per-device
+/// served/energy/violation rows, and the full `ServeSummary` telemetry.
+/// Consumes the jobs so each report MOVES into the summary — the fold
+/// stays string- and clone-free per task.
+fn fold_jobs(summary: &mut FleetSummary, jobs: Vec<EngineJob>) {
+    for job in jobs {
         let Some(r) = job.report else { continue };
         summary.completed += 1;
         let e2e = if r.e2e_s > 0.0 {
@@ -355,7 +341,223 @@ pub fn serve_fleet(
         }
         summary.serve.push(r);
     }
+}
+
+/// Serve `per_stream` tasks from each stream through the fleet via the
+/// unified kernel. Streams are routed per task by the configured
+/// router; reports accumulate in job-creation (arrival) order so a
+/// 1-device round-robin fleet is report-ordered exactly like
+/// `serve_multistream`.
+pub fn serve_fleet(
+    fleet: &mut Fleet,
+    gens: &mut [TaskGen],
+    per_stream: usize,
+    opts: &FleetOpts,
+) -> FleetSummary {
+    let mut summary = FleetSummary {
+        per_device: device_rows(fleet),
+        ..FleetSummary::default()
+    };
+    let result = engine::serve(&mut fleet.devices, gens, per_stream, opts);
+    summary.offered = result.offered;
+    summary.shed = result.shed;
+    summary.downgraded = result.downgraded;
+    summary.cloud_invocations = result.cloud_invocations;
+    summary.cloud_occupancy = result.cloud_occupancy;
+    summary.cloud_dispatch_saved_s = result.cloud_dispatch_saved_s;
+    summary.rerouted = result.rerouted;
+    summary.migrated = result.migrated;
+    summary.migration_latency_s = result.migration_latency_s;
+    summary.events = result.events;
+    for (i, d) in summary.per_device.iter_mut().enumerate() {
+        // EngineResult::default() (empty run) carries empty vectors
+        d.rerouted_in = result.per_dev_rerouted.get(i).copied().unwrap_or(0);
+        d.migrated_in = result.per_dev_migrated_in.get(i).copied().unwrap_or(0);
+        d.migrated_out = result.per_dev_migrated_out.get(i).copied().unwrap_or(0);
+    }
+    fold_jobs(&mut summary, result.jobs);
     summary
+}
+
+/// Sharded fleet serving with collected reports: the fleet splits into
+/// `shards` share-nothing engine shards (see `coordinator::shard`),
+/// every shard's collected jobs are remapped into fleet-global device
+/// and stream indices, and the usual [`FleetSummary`] folds over the
+/// concatenation in shard order. `shards <= 1` delegates to
+/// [`serve_fleet`] — bit-exact with the unsharded path.
+pub fn serve_fleet_sharded(
+    fleet: &mut Fleet,
+    gens: &mut [TaskGen],
+    per_stream: usize,
+    opts: &FleetOpts,
+    shards: usize,
+) -> FleetSummary {
+    if shards <= 1 {
+        return serve_fleet(fleet, gens, per_stream, opts);
+    }
+    let mut summary = FleetSummary {
+        per_device: device_rows(fleet),
+        ..FleetSummary::default()
+    };
+    let outcomes = serve_sharded(
+        &mut fleet.devices,
+        gens,
+        per_stream,
+        opts,
+        shards,
+        SHARD_EPOCH_S,
+        |_| CollectSink::new(),
+    );
+    for o in outcomes {
+        let result = o.result;
+        summary.offered += result.offered;
+        summary.shed += result.shed;
+        summary.downgraded += result.downgraded;
+        summary.cloud_invocations += result.cloud_invocations;
+        for &occ in result.cloud_occupancy.values() {
+            summary.cloud_occupancy.push(occ);
+        }
+        summary.cloud_dispatch_saved_s += result.cloud_dispatch_saved_s;
+        summary.rerouted += result.rerouted;
+        summary.migrated += result.migrated;
+        summary.migration_latency_s += result.migration_latency_s;
+        summary.events += result.events;
+        for i in 0..o.devices {
+            let d = &mut summary.per_device[o.dev_base + i];
+            d.rerouted_in += result.per_dev_rerouted.get(i).copied().unwrap_or(0);
+            d.migrated_in += result.per_dev_migrated_in.get(i).copied().unwrap_or(0);
+            d.migrated_out += result.per_dev_migrated_out.get(i).copied().unwrap_or(0);
+        }
+        let mut jobs = o.sink.into_jobs();
+        for job in jobs.iter_mut() {
+            job.dev += o.dev_base;
+            if let Some(r) = job.report.as_mut() {
+                r.stream += o.stream_base;
+            }
+        }
+        fold_jobs(&mut summary, jobs);
+    }
+    summary
+}
+
+/// Aggregated outcome of a **streaming** fleet run: constant-memory
+/// telemetry (quantile sketches + counters, no per-task reports) plus
+/// the same SLO/admission/cloud accounting as [`FleetSummary`]. This is
+/// what a million-task run returns without holding a million reports.
+pub struct StreamSummary {
+    /// merged streaming telemetry across all shards (sketches in
+    /// fleet-global device indices)
+    pub telemetry: StreamingSink,
+    /// tasks generated by the streams
+    pub offered: usize,
+    /// tasks that ran to completion
+    pub completed: usize,
+    /// tasks dropped by admission control
+    pub shed: usize,
+    /// tasks forced to edge-only by admission control
+    pub downgraded: usize,
+    /// completed tasks whose end-to-end latency missed their deadline
+    pub slo_violations: usize,
+    /// completed tasks that met their deadline
+    pub goodput: usize,
+    pub per_device: Vec<DeviceTelemetry>,
+    /// cloud executor invocations (batched and singleton)
+    pub cloud_invocations: usize,
+    /// batch-occupancy aggregate (running mean/min/max — the streaming
+    /// replacement for the exact per-invocation sample buffer)
+    pub cloud_occupancy: Running,
+    /// dispatch/runtime overhead amortized away by cloud batching (s)
+    pub cloud_dispatch_saved_s: f64,
+    /// tasks re-routed to a sibling device instead of shed/downgraded
+    pub rerouted: usize,
+    /// queued tasks migrated between devices by the rebalancer
+    pub migrated: usize,
+    /// total migration latency penalty paid by migrated tasks (s)
+    pub migration_latency_s: f64,
+    /// discrete events processed across all shards
+    pub events: usize,
+    /// engine shards the run actually used (after clamping)
+    pub shards: usize,
+}
+
+/// Sharded fleet serving with **streaming** telemetry: every shard
+/// folds its completions into a [`StreamingSink`] the moment they
+/// finish, and the per-shard sinks merge (device-offset) into one.
+/// Memory stays bounded by the sketch spans and the device count — a
+/// 1M-task, 100-device run never materializes a report vector.
+/// `shards <= 1` still streams (one shard, same constant-memory
+/// property, identical event trace to the unsharded kernel).
+pub fn serve_fleet_streaming(
+    fleet: &mut Fleet,
+    gens: &mut [TaskGen],
+    per_stream: usize,
+    opts: &FleetOpts,
+    shards: usize,
+) -> StreamSummary {
+    let outcomes = serve_sharded(
+        &mut fleet.devices,
+        gens,
+        per_stream,
+        opts,
+        shards,
+        SHARD_EPOCH_S,
+        |_| StreamingSink::new(),
+    );
+    let mut telemetry = StreamingSink::new();
+    let mut per_device = device_rows(fleet);
+    let shards_used = outcomes.len();
+    let (mut offered, mut completed, mut shed, mut downgraded) = (0, 0, 0, 0);
+    let mut cloud_invocations = 0;
+    let mut cloud_occupancy = Running::new();
+    let mut cloud_dispatch_saved_s = 0.0;
+    let (mut rerouted, mut migrated) = (0, 0);
+    let mut migration_latency_s = 0.0;
+    let mut events = 0;
+    for o in outcomes {
+        telemetry.merge_offset(&o.sink, o.dev_base);
+        let result = o.result;
+        offered += result.offered;
+        completed += result.completed;
+        shed += result.shed;
+        downgraded += result.downgraded;
+        cloud_invocations += result.cloud_invocations;
+        cloud_occupancy.merge(&result.cloud_occupancy_run);
+        cloud_dispatch_saved_s += result.cloud_dispatch_saved_s;
+        rerouted += result.rerouted;
+        migrated += result.migrated;
+        migration_latency_s += result.migration_latency_s;
+        events += result.events;
+        for i in 0..o.devices {
+            let d = &mut per_device[o.dev_base + i];
+            d.rerouted_in += result.per_dev_rerouted.get(i).copied().unwrap_or(0);
+            d.migrated_in += result.per_dev_migrated_in.get(i).copied().unwrap_or(0);
+            d.migrated_out += result.per_dev_migrated_out.get(i).copied().unwrap_or(0);
+        }
+    }
+    for (i, d) in per_device.iter_mut().enumerate() {
+        d.served = telemetry.dev_served.get(i).copied().unwrap_or(0);
+        d.energy_j = telemetry.dev_energy_j.get(i).copied().unwrap_or(0.0);
+        d.violations = telemetry.dev_violations.get(i).copied().unwrap_or(0);
+    }
+    let (slo_violations, goodput) = (telemetry.violations, telemetry.goodput);
+    StreamSummary {
+        telemetry,
+        offered,
+        completed,
+        shed,
+        downgraded,
+        slo_violations,
+        goodput,
+        per_device,
+        cloud_invocations,
+        cloud_occupancy,
+        cloud_dispatch_saved_s,
+        rerouted,
+        migrated,
+        migration_latency_s,
+        events,
+        shards: shards_used,
+    }
 }
 
 #[cfg(test)]

@@ -3,15 +3,22 @@
 //! offline"), and serves task streams, producing the telemetry every
 //! experiment consumes.
 
+pub mod config;
 pub mod des;
 pub mod engine;
 pub mod env;
 pub mod fleet;
 pub mod pipeline;
+pub mod shard;
 
+pub use config::EngineConfig;
 pub use des::{serve_multistream, DesOpts};
 pub use env::{Decision, EdgeCloudEnv, TaskReport, EXTRACTOR_FRAC};
-pub use fleet::{serve_fleet, Admission, Fleet, FleetOpts, FleetSummary, Router};
+pub use fleet::{
+    serve_fleet, serve_fleet_sharded, serve_fleet_streaming, Admission, Fleet, FleetOpts,
+    FleetSummary, Router, StreamSummary,
+};
+pub use shard::{serve_sharded, ShardOutcome, SHARD_EPOCH_S};
 
 use crate::configx::Config;
 use crate::device::spec::find_device;

@@ -1,0 +1,337 @@
+//! Sharded fleet serving: share-nothing engine shards in bounded time
+//! epochs.
+//!
+//! One `engine.rs` kernel on one core drives today's whole fleet. This
+//! module splits the fleet into `N` **shards** — contiguous, disjoint
+//! device and stream ranges — and runs a full [`EngineCore`] per shard
+//! on its own scoped thread (the same scoped-thread shape as
+//! `util::parallel::sweep`, but long-lived workers instead of a work
+//! queue, because shards must advance in lockstep). Inside an epoch a
+//! shard is completely independent: its own event heap, edge queues,
+//! batching windows, and a *local* slice of the cloud executor pool, so
+//! no lock is ever taken on the event path.
+//!
+//! **Epoch semantics.** All shards advance simulated time in lockstep
+//! windows of `epoch_s` seconds: shard k processes every event with
+//! `t < epoch * epoch_s`, then meets the others at a barrier. At the
+//! boundary each shard publishes its cloud-pool occupancy and its
+//! cloud-service EWMA; after the barrier every shard adopts the summed
+//! *external* occupancy and the blended (mean) service estimate via
+//! [`EngineCore::set_cloud_signals`] / [`EngineCore::set_cloud_service`],
+//! then runs the next epoch. Admission estimates therefore price the
+//! **shared** pool with at most one epoch of staleness, which is the
+//! quantified (and tested) deviation of a sharded run from the
+//! unsharded trace. The run ends when every shard reports drained.
+//!
+//! **Cloud-slot partitioning.** The executor pool is divided across
+//! shards (`cloud_slots / N` each, remainder to the first shards, floor
+//! of one slot so no shard can deadlock on cloud work). When
+//! `cloud_slots >= N` the partition is exact; otherwise the effective
+//! global pool grows to `N` — the documented cost of share-nothing
+//! shards. Admission estimators on every shard price the *global*
+//! (post-partition) slot count.
+//!
+//! With `shards <= 1` the runner degenerates to a single
+//! `run_until(∞)` call — the exact unsharded kernel, bit-for-bit.
+
+use super::engine::{EngineCore, EngineResult};
+use super::fleet::FleetOpts;
+use super::Coordinator;
+use crate::telemetry::sink::ReportSink;
+use crate::workload::TaskGen;
+use std::sync::{Barrier, Mutex};
+
+/// Default epoch length (simulated seconds) for sharded runs: long
+/// enough to amortize the barrier, short enough that cross-shard cloud
+/// signals stay fresh relative to typical task service times.
+pub const SHARD_EPOCH_S: f64 = 0.05;
+
+/// What one shard hands back: its kernel counters, its sink (whatever
+/// telemetry the caller's sink type retained), and the device/stream
+/// ranges it owned (bases into the fleet-global index spaces).
+pub struct ShardOutcome<S> {
+    pub result: EngineResult,
+    pub sink: S,
+    /// fleet-global index of this shard's first device
+    pub dev_base: usize,
+    /// number of devices this shard owned
+    pub devices: usize,
+    /// fleet-global index of this shard's first stream
+    pub stream_base: usize,
+}
+
+/// Boundary snapshot one shard publishes for the others.
+#[derive(Clone, Copy, Default)]
+struct CloudSignal {
+    in_flight: usize,
+    service: Option<f64>,
+    drained: bool,
+}
+
+/// Serve the fleet on `shards` share-nothing engine shards advancing in
+/// `epoch_s` time epochs. `make_sink(k)` builds shard k's report sink;
+/// outcomes return in shard order. The shard count is clamped to the
+/// device and stream counts (every shard needs at least one of each);
+/// `shards <= 1` runs the plain unsharded kernel.
+///
+/// Deterministic for a fixed shard count: each shard's trace is a
+/// deterministic DES, and the boundary exchange folds the published
+/// signals in shard-index order at a barrier, so thread scheduling
+/// cannot leak into results.
+pub fn serve_sharded<S, F>(
+    devices: &mut [Coordinator],
+    gens: &mut [TaskGen],
+    per_stream: usize,
+    opts: &FleetOpts,
+    shards: usize,
+    epoch_s: f64,
+    make_sink: F,
+) -> Vec<ShardOutcome<S>>
+where
+    S: ReportSink + Send,
+    F: Fn(usize) -> S + Sync,
+{
+    let n_dev = devices.len();
+    let n_gen = gens.len();
+    let shards = shards.clamp(1, n_dev.max(1)).min(n_gen.max(1));
+    if shards <= 1 {
+        let mut sink = make_sink(0);
+        let mut core = EngineCore::new(devices, gens, per_stream, opts);
+        core.run_until(f64::INFINITY, &mut sink);
+        return vec![ShardOutcome {
+            result: core.into_result(),
+            sink,
+            dev_base: 0,
+            devices: n_dev,
+            stream_base: 0,
+        }];
+    }
+    assert!(epoch_s > 0.0, "sharded runs need a positive epoch");
+
+    // contiguous partition: shard k owns devices [n_dev*k/N, n_dev*(k+1)/N)
+    // and streams [n_gen*k/N, n_gen*(k+1)/N); with N <= min(n_dev, n_gen)
+    // every shard gets at least one of each
+    let mut parts: Vec<(usize, &mut [Coordinator], usize, &mut [TaskGen])> = Vec::new();
+    {
+        let mut dev_rest = devices;
+        let mut gen_rest = gens;
+        let (mut dev_base, mut stream_base) = (0usize, 0usize);
+        for k in 0..shards {
+            let dev_end = n_dev * (k + 1) / shards;
+            let gen_end = n_gen * (k + 1) / shards;
+            let (d, dr) = dev_rest.split_at_mut(dev_end - dev_base);
+            let (g, gr) = gen_rest.split_at_mut(gen_end - stream_base);
+            dev_rest = dr;
+            gen_rest = gr;
+            parts.push((dev_base, d, stream_base, g));
+            dev_base = dev_end;
+            stream_base = gen_end;
+        }
+    }
+
+    // local slice of the executor pool per shard (remainder to the first
+    // shards, floor one so cloud work can always run somewhere)
+    let slots = opts.des.cloud_slots;
+    let local_slots: Vec<usize> = (0..shards)
+        .map(|k| (slots / shards + usize::from(k < slots % shards)).max(1))
+        .collect();
+    let est_slots_global: usize = local_slots.iter().sum();
+
+    let barrier = Barrier::new(shards);
+    let signals: Vec<Mutex<CloudSignal>> =
+        (0..shards).map(|_| Mutex::new(CloudSignal::default())).collect();
+    let barrier = &barrier;
+    let signals = &signals;
+    let make_sink = &make_sink;
+    let local_slots = &local_slots;
+
+    let mut outcomes: Vec<ShardOutcome<S>> = Vec::with_capacity(shards);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(shards);
+        for (k, (dev_base, devs, stream_base, gs)) in parts.into_iter().enumerate() {
+            let mut shard_opts = opts.clone();
+            shard_opts.des.cloud_slots = local_slots[k];
+            handles.push(scope.spawn(move || {
+                let mut sink = make_sink(k);
+                let n_local_dev = devs.len();
+                let mut core = EngineCore::new(devs, gs, per_stream, &shard_opts);
+                core.set_cloud_signals(0, est_slots_global);
+                let mut epoch: u64 = 1;
+                loop {
+                    let drained = core.run_until(epoch as f64 * epoch_s, &mut sink);
+                    {
+                        let mut sig = signals[k].lock().unwrap();
+                        sig.in_flight = core.cloud_in_flight();
+                        sig.service = core.cloud_service();
+                        sig.drained = drained;
+                    }
+                    // publish barrier: every shard's boundary snapshot is
+                    // visible before anyone reads
+                    barrier.wait();
+                    let mut all_drained = true;
+                    let mut ext = 0usize;
+                    let (mut svc_sum, mut svc_n) = (0.0f64, 0usize);
+                    for (i, slot) in signals.iter().enumerate() {
+                        let sig = slot.lock().unwrap();
+                        all_drained &= sig.drained;
+                        if i != k {
+                            ext += sig.in_flight;
+                        }
+                        if let Some(v) = sig.service {
+                            svc_sum += v;
+                            svc_n += 1;
+                        }
+                    }
+                    // read barrier: nobody re-publishes until everyone has
+                    // consumed this epoch's snapshots
+                    barrier.wait();
+                    if all_drained {
+                        break;
+                    }
+                    core.set_cloud_signals(ext, est_slots_global);
+                    core.set_cloud_service(if svc_n > 0 {
+                        Some(svc_sum / svc_n as f64)
+                    } else {
+                        None
+                    });
+                    epoch += 1;
+                }
+                ShardOutcome {
+                    result: core.into_result(),
+                    sink,
+                    dev_base,
+                    devices: n_local_dev,
+                    stream_base,
+                }
+            }));
+        }
+        for h in handles {
+            outcomes.push(h.join().expect("shard worker panicked"));
+        }
+    });
+    outcomes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::Config;
+    use crate::coordinator::engine::CollectSink;
+    use crate::coordinator::fleet::Fleet;
+    use crate::workload::{Arrivals, SloClass};
+
+    fn fleet(spec: &str) -> Fleet {
+        let mut c = Config::default();
+        c.policy = "cloud_only".into();
+        c.fleet = spec.into();
+        c.seed = 23;
+        Fleet::from_config(&c).unwrap()
+    }
+
+    fn gens(fleet: &Fleet, n: usize, seed: u64, slo: SloClass) -> Vec<TaskGen> {
+        (0..n)
+            .map(|s| {
+                TaskGen::new(
+                    fleet.devices[0].env.profile.name,
+                    fleet.devices[0].env.dataset,
+                    Arrivals::Poisson { rate: 20.0 },
+                    seed + s as u64,
+                )
+                .unwrap()
+                .with_slo(slo)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shard_count_clamps_to_devices_and_streams() {
+        let mut f = fleet("xavier-nx,jetson-nano");
+        let mut g = gens(&f, 2, 50, SloClass::default());
+        // 8 requested shards, 2 devices -> 2 shards
+        let out = serve_sharded(
+            &mut f.devices,
+            &mut g,
+            3,
+            &FleetOpts::default(),
+            8,
+            SHARD_EPOCH_S,
+            |_| CollectSink::new(),
+        );
+        assert_eq!(out.len(), 2);
+        assert_eq!((out[0].dev_base, out[0].devices), (0, 1));
+        assert_eq!((out[1].dev_base, out[1].devices), (1, 1));
+        assert_eq!(out[1].stream_base, 1);
+        let completed: usize = out.iter().map(|o| o.result.completed).sum();
+        let offered: usize = out.iter().map(|o| o.result.offered).sum();
+        assert_eq!(offered, 6);
+        assert_eq!(completed, 6);
+        // the collected jobs agree with the counter shard by shard
+        for o in out {
+            let n = o.result.completed;
+            assert_eq!(o.sink.into_jobs().len(), n);
+        }
+    }
+
+    #[test]
+    fn single_shard_is_bit_exact_with_serve() {
+        let run_serve = || {
+            let mut f = fleet("xavier-nx,jetson-tx2");
+            let mut g = gens(&f, 4, 70, SloClass::parse("200").unwrap());
+            super::super::engine::serve(&mut f.devices, &mut g, 5, &FleetOpts::default())
+        };
+        let run_sharded = || {
+            let mut f = fleet("xavier-nx,jetson-tx2");
+            let mut g = gens(&f, 4, 70, SloClass::parse("200").unwrap());
+            let mut out = serve_sharded(
+                &mut f.devices,
+                &mut g,
+                5,
+                &FleetOpts::default(),
+                1,
+                SHARD_EPOCH_S,
+                |_| CollectSink::new(),
+            );
+            let mut o = out.pop().unwrap();
+            o.result.jobs = o.sink.into_jobs();
+            o.result
+        };
+        let a = run_serve();
+        let b = run_sharded();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            let (rx, ry) = (x.report.as_ref().unwrap(), y.report.as_ref().unwrap());
+            assert_eq!(rx.e2e_s.to_bits(), ry.e2e_s.to_bits());
+            assert_eq!(rx.eti_total_j.to_bits(), ry.eti_total_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn sharded_run_is_deterministic_and_conserves_tasks() {
+        let run = || {
+            let mut f = fleet("xavier-nx,jetson-tx2,jetson-nano,xavier-nx");
+            let mut g = gens(&f, 8, 90, SloClass::parse("150").unwrap());
+            let opts = FleetOpts {
+                admission: super::super::fleet::Admission::Shed,
+                ..FleetOpts::default()
+            };
+            serve_sharded(&mut f.devices, &mut g, 6, &opts, 4, 0.02, |_| {
+                CollectSink::new()
+            })
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.len(), 4);
+        let offered: usize = a.iter().map(|o| o.result.offered).sum();
+        let shed: usize = a.iter().map(|o| o.result.shed).sum();
+        let completed: usize = a.iter().map(|o| o.result.completed).sum();
+        assert_eq!(offered, 48);
+        assert_eq!(offered, completed + shed, "conservation across shards");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.result.offered, y.result.offered);
+            assert_eq!(x.result.shed, y.result.shed);
+            assert_eq!(x.result.events, y.result.events);
+            assert_eq!(x.result.completed, y.result.completed);
+        }
+    }
+}

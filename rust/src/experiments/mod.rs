@@ -19,7 +19,7 @@ use crate::device::spec::find_device;
 use crate::device::{EnergyMeter, FreqVector};
 use crate::perfmodel::{edge_compute, find_model, latency_per_mj, Dataset};
 use crate::scam::ImportanceDist;
-use crate::telemetry::Table;
+use crate::telemetry::{render, Table};
 use crate::util::Pcg32;
 use crate::workload::{Arrivals, TaskGen};
 use anyhow::Result;
@@ -624,7 +624,8 @@ pub fn tab_scalability(dataset: &str, requests: usize, train_eps: usize) -> Resu
 // uplink batch size, per-stream energy).
 // ======================================================================
 pub fn load_sweep(quick: bool, threads: usize) -> Result<Table> {
-    use crate::coordinator::des::{serve_multistream, DesOpts};
+    use crate::coordinator::des::serve_multistream;
+    use crate::coordinator::EngineConfig;
     let mut t = Table::new(vec![
         "streams",
         "offered req/s",
@@ -665,10 +666,7 @@ pub fn load_sweep(quick: bool, threads: usize) -> Result<Table> {
                 )
             })
             .collect::<Result<Vec<_>>>()?;
-        let opts = DesOpts {
-            batch_window_s: 0.004,
-            ..DesOpts::default()
-        };
+        let opts = EngineConfig::new().batch_window_s(0.004).des_opts();
         let s = serve_multistream(&mut coord, &mut gens, per_stream, &opts);
         let offloaded: Vec<f64> = s
             .batch_size
@@ -684,17 +682,16 @@ pub fn load_sweep(quick: bool, threads: usize) -> Result<Table> {
         };
         let stream_mj =
             1e3 * s.per_stream_j.iter().sum::<f64>() / s.per_stream_j.len().max(1) as f64;
-        Ok(vec![vec![
+        let mut row = vec![
             n.to_string(),
             format!("{:.0}", rate * n as f64),
             policy.to_string(),
-            format!("{:.1}", s.e2e_ms.p50()),
-            format!("{:.1}", s.e2e_ms.p95()),
-            format!("{:.1}", s.e2e_ms.p99()),
-            format!("{:.1}", s.queue_wait_ms.p95()),
-            format!("{mean_batch:.2}"),
-            format!("{stream_mj:.0}"),
-        ]])
+        ];
+        row.extend(render::quantile_cells(&s.e2e_ms, &[50.0, 95.0, 99.0]));
+        row.extend(render::quantile_cells(&s.queue_wait_ms, &[95.0]));
+        row.push(format!("{mean_batch:.2}"));
+        row.push(format!("{stream_mj:.0}"));
+        Ok(vec![row])
     })?;
     for r in rows {
         t.row(r);
@@ -711,8 +708,8 @@ pub fn load_sweep(quick: bool, threads: usize) -> Result<Table> {
 // path is exercised on every regeneration (and in the CI smoke run).
 // ======================================================================
 pub fn fleet_sweep(quick: bool, threads: usize) -> Result<Table> {
-    use crate::coordinator::des::DesOpts;
-    use crate::coordinator::fleet::{serve_fleet, Fleet, FleetOpts, Router};
+    use crate::coordinator::fleet::{serve_fleet, Admission, Fleet, Router};
+    use crate::coordinator::EngineConfig;
     use crate::workload::SloClass;
     let mut t = Table::new(vec![
         "streams",
@@ -757,23 +754,19 @@ pub fn fleet_sweep(quick: bool, threads: usize) -> Result<Table> {
                 .with_slo(slo))
             })
             .collect::<Result<Vec<_>>>()?;
-        let opts = FleetOpts {
-            des: DesOpts {
-                batch_window_s: 0.004,
-                cloud_batch_window_s: 0.004,
-                ..DesOpts::default()
-            },
-            router: Router::parse(&cfg.router)?,
-            admission: crate::coordinator::fleet::Admission::parse(admission)?,
-            ..FleetOpts::default()
-        };
+        let opts = EngineConfig::new()
+            .batch_window_s(0.004)
+            .cloud_batch_window_s(0.004)
+            .router(Router::parse(&cfg.router)?)
+            .admission(Admission::parse(admission)?)
+            .fleet_opts();
         let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
         let mj_per_task = if s.completed > 0 {
             1e3 * s.per_device.iter().map(|d| d.energy_j).sum::<f64>() / s.completed as f64
         } else {
             0.0
         };
-        Ok(vec![vec![
+        let mut row = vec![
             n.to_string(),
             format!("{:.0}", rate * n as f64),
             admission.to_string(),
@@ -782,10 +775,10 @@ pub fn fleet_sweep(quick: bool, threads: usize) -> Result<Table> {
             s.shed.to_string(),
             s.goodput.to_string(),
             s.slo_violations.to_string(),
-            format!("{:.1}", s.serve.e2e_ms.p50()),
-            format!("{:.1}", s.serve.e2e_ms.p99()),
-            format!("{mj_per_task:.0}"),
-        ]])
+        ];
+        row.extend(render::quantile_cells(&s.serve.e2e_ms, &[50.0, 99.0]));
+        row.push(format!("{mj_per_task:.0}"));
+        Ok(vec![row])
     })?;
     for r in rows {
         t.row(r);
@@ -806,8 +799,8 @@ pub fn fleet_sweep(quick: bool, threads: usize) -> Result<Table> {
 // completion timing and executor occupancy, not edge energy.
 // ======================================================================
 pub fn cloudbatch_sweep(quick: bool, threads: usize) -> Result<Table> {
-    use crate::coordinator::des::DesOpts;
-    use crate::coordinator::fleet::{serve_fleet, Fleet, FleetOpts};
+    use crate::coordinator::fleet::{serve_fleet, Fleet};
+    use crate::coordinator::EngineConfig;
     use crate::workload::SloClass;
     let mut t = Table::new(vec![
         "cloud window ms",
@@ -848,15 +841,11 @@ pub fn cloudbatch_sweep(quick: bool, threads: usize) -> Result<Table> {
                 .with_slo(slo))
             })
             .collect::<Result<Vec<_>>>()?;
-        let opts = FleetOpts {
-            des: DesOpts {
-                batch_window_s: 0.004,
-                cloud_batch_window_s: window_ms / 1e3,
-                cloud_slots: 2,
-                ..DesOpts::default()
-            },
-            ..FleetOpts::default()
-        };
+        let opts = EngineConfig::new()
+            .batch_window_s(0.004)
+            .cloud_batch_window_s(window_ms / 1e3)
+            .cloud_slots(2)
+            .fleet_opts();
         let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
         let mj_per_task = if s.completed > 0 {
             1e3 * s.per_device.iter().map(|d| d.energy_j).sum::<f64>() / s.completed as f64
@@ -867,7 +856,7 @@ pub fn cloudbatch_sweep(quick: bool, threads: usize) -> Result<Table> {
         // dispatch: the exact server-side work batching eliminates
         let cloud_busy_ms =
             s.serve.tti_cloud_ms.values().iter().sum::<f64>() - s.cloud_dispatch_saved_s * 1e3;
-        Ok(vec![vec![
+        let mut row = vec![
             format!("{window_ms}"),
             s.cloud_invocations.to_string(),
             format!("{:.2}", s.cloud_occupancy.mean()),
@@ -876,10 +865,10 @@ pub fn cloudbatch_sweep(quick: bool, threads: usize) -> Result<Table> {
             s.completed.to_string(),
             s.goodput.to_string(),
             s.slo_violations.to_string(),
-            format!("{:.1}", s.serve.e2e_ms.p50()),
-            format!("{:.1}", s.serve.e2e_ms.p99()),
-            format!("{mj_per_task:.0}"),
-        ]])
+        ];
+        row.extend(render::quantile_cells(&s.serve.e2e_ms, &[50.0, 99.0]));
+        row.push(format!("{mj_per_task:.0}"));
+        Ok(vec![row])
     })?;
     for r in rows {
         t.row(r);
@@ -897,7 +886,8 @@ pub fn cloudbatch_sweep(quick: bool, threads: usize) -> Result<Table> {
 // and + mid-run migration (work stealing) on top.
 // ======================================================================
 pub fn rebalance_sweep(quick: bool, threads: usize) -> Result<Table> {
-    use crate::coordinator::fleet::{serve_fleet, Admission, Fleet, FleetOpts};
+    use crate::coordinator::fleet::{serve_fleet, Admission, Fleet};
+    use crate::coordinator::EngineConfig;
     use crate::workload::SloClass;
     let mut t = Table::new(vec![
         "fleet",
@@ -944,16 +934,15 @@ pub fn rebalance_sweep(quick: bool, threads: usize) -> Result<Table> {
                 .with_slo(slo))
             })
             .collect::<Result<Vec<_>>>()?;
-        let opts = FleetOpts {
-            admission: Admission::Shed,
-            reroute: mode != "rr",
-            rebalance_window_s: if mode == "rr+reroute+migrate" { 0.01 } else { 0.0 },
-            migrate_threshold_s: 0.05,
-            migrate_penalty_s: 0.002,
-            ..FleetOpts::default()
-        };
+        let opts = EngineConfig::new()
+            .admission(Admission::Shed)
+            .reroute(mode != "rr")
+            .rebalance_window_s(if mode == "rr+reroute+migrate" { 0.01 } else { 0.0 })
+            .migrate_threshold_s(0.05)
+            .migrate_penalty_s(0.002)
+            .fleet_opts();
         let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
-        Ok(vec![vec![
+        let mut row = vec![
             fleet_spec.to_string(),
             mode.to_string(),
             s.offered.to_string(),
@@ -963,9 +952,9 @@ pub fn rebalance_sweep(quick: bool, threads: usize) -> Result<Table> {
             s.slo_violations.to_string(),
             s.rerouted.to_string(),
             s.migrated.to_string(),
-            format!("{:.1}", s.serve.e2e_ms.p50()),
-            format!("{:.1}", s.serve.e2e_ms.p99()),
-        ]])
+        ];
+        row.extend(render::quantile_cells(&s.serve.e2e_ms, &[50.0, 99.0]));
+        Ok(vec![row])
     })?;
     for r in rows {
         t.row(r);

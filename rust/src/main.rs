@@ -12,9 +12,10 @@ use dvfo::cli::{parse, Cmd};
 use dvfo::configx::Config;
 use dvfo::coordinator::pipeline::{Pipeline, PipelineRequest};
 use dvfo::coordinator::{
-    serve_fleet, serve_multistream, Admission, Coordinator, DesOpts, Fleet, FleetOpts, Router,
+    serve_fleet_sharded, serve_fleet_streaming, serve_multistream, Admission, Coordinator,
+    DesOpts, Fleet, FleetOpts, Router,
 };
-use dvfo::telemetry::Table;
+use dvfo::telemetry::{render, Table};
 use dvfo::workload::{Arrivals, SloClass, TaskGen};
 use std::path::Path;
 
@@ -80,28 +81,6 @@ fn print_reports(reports: &[dvfo::coordinator::TaskReport]) {
     }
 }
 
-fn print_summary_table(s: &dvfo::coordinator::ServeSummary) {
-    let mut t = Table::new(vec!["metric", "mean", "p50", "p95", "p99"]);
-    for (name, s) in [
-        ("tti ms", &s.tti_ms),
-        ("queue ms", &s.queue_wait_ms),
-        ("e2e ms", &s.e2e_ms),
-        ("eti mJ", &s.eti_mj),
-        ("accuracy %", &s.accuracy_pct),
-        ("xi", &s.xi),
-        ("payload KB", &s.payload_kb),
-    ] {
-        t.row(vec![
-            name.to_string(),
-            format!("{:.2}", s.mean()),
-            format!("{:.2}", s.p50()),
-            format!("{:.2}", s.p95()),
-            format!("{:.2}", s.p99()),
-        ]);
-    }
-    println!("{}", t.render());
-}
-
 fn real_main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(sub) = argv.first().cloned() else {
@@ -164,6 +143,17 @@ fn real_main() -> anyhow::Result<()> {
                     None,
                 )
                 .opt(
+                    "shards",
+                    "share-nothing engine shards over disjoint device subsets \
+                     (fleet path; 1 = the unsharded bit-exact kernel)",
+                    None,
+                )
+                .flag(
+                    "stream-telemetry",
+                    "constant-memory telemetry: online quantile sketches + counters \
+                     instead of collected per-task reports",
+                )
+                .opt(
                     "arrivals",
                     "per-stream arrival process: sequential | poisson:<r> | \
                      bursty:<r>,<every_s>,<len> | mmpp:<lo>,<hi>,<dlo>,<dhi> | \
@@ -186,8 +176,12 @@ fn real_main() -> anyhow::Result<()> {
             cfg.migrate_threshold_ms =
                 a.parse_or("migrate-threshold", cfg.migrate_threshold_ms)?;
             cfg.migrate_penalty_ms = a.parse_or("migrate-penalty", cfg.migrate_penalty_ms)?;
+            cfg.shards = a.parse_or("shards", cfg.shards)?;
             if a.flag("reroute") {
                 cfg.reroute = true;
+            }
+            if a.flag("stream-telemetry") {
+                cfg.stream_telemetry = true;
             }
             for (key, flag) in [
                 ("arrivals", "arrivals"),
@@ -214,7 +208,9 @@ fn real_main() -> anyhow::Result<()> {
                 || !slo.is_none()
                 || admission != Admission::Off
                 || cfg.reroute
-                || cfg.rebalance_window_ms > 0.0;
+                || cfg.rebalance_window_ms > 0.0
+                || cfg.shards > 1
+                || cfg.stream_telemetry;
             let per_stream = (cfg.requests / cfg.streams).max(1);
             if per_stream * cfg.streams != cfg.requests {
                 eprintln!(
@@ -251,14 +247,10 @@ fn real_main() -> anyhow::Result<()> {
                 }
                 let mut gens = mk_gens(fleet.devices[0].env.dataset)?;
                 let opts = FleetOpts::from_config(&cfg)?;
-                let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
-                if a.flag("verbose") {
-                    print_reports(&s.serve.reports);
-                }
                 println!(
                     "policy={} model={} dataset={} fleet=[{}] router={} slo={} admission={} \
                      bw={} streams={} arrivals={} batch-window={}ms cloud-slots={} \
-                     cloud-batch-window={}ms",
+                     cloud-batch-window={}ms shards={}",
                     cfg.policy,
                     cfg.model,
                     cfg.dataset,
@@ -271,48 +263,120 @@ fn real_main() -> anyhow::Result<()> {
                     cfg.arrivals,
                     cfg.batch_window_ms,
                     cfg.cloud_slots,
-                    cfg.cloud_batch_window_ms
+                    cfg.cloud_batch_window_ms,
+                    cfg.shards
                 );
-                print_summary_table(&s.serve);
-                println!(
-                    "offered={} completed={} shed={} downgraded={} violations={} goodput={}",
-                    s.offered, s.completed, s.shed, s.downgraded, s.slo_violations, s.goodput
-                );
-                // gate on the knobs (like the cloud-batching line): with
-                // rebalancing off, zero counts are implied, not news
-                if cfg.reroute || cfg.rebalance_window_ms > 0.0 {
-                    println!(
-                        "rebalance: rerouted={} migrated={} migration-latency={:.1}ms",
-                        s.rerouted,
-                        s.migrated,
-                        s.migration_latency_s * 1e3
+                // the rebalance/cloud lines gate on their knobs: with the
+                // feature off, zero counts are implied, not news
+                let rebalancing = cfg.reroute || cfg.rebalance_window_ms > 0.0;
+                if cfg.stream_telemetry {
+                    // constant-memory path: per-task reports are folded
+                    // into sketches/counters as they complete and never
+                    // collected, so --verbose has nothing to print
+                    if a.flag("verbose") {
+                        eprintln!(
+                            "[serve] --verbose has no per-request reports under \
+                             --stream-telemetry"
+                        );
+                    }
+                    let s = serve_fleet_streaming(
+                        &mut fleet,
+                        &mut gens,
+                        per_stream,
+                        &opts,
+                        cfg.shards,
                     );
-                }
-                // gate on the knob (like the single-edge path): with
-                // batching off, invocations==jobs is implied, not news
-                if cfg.cloud_batch_window_ms > 0.0 && s.cloud_invocations > 0 {
+                    println!("{}", render::streaming_table(&s.telemetry).render());
                     println!(
-                        "cloud: invocations={} mean-occupancy={:.2} max-occupancy={:.0} \
-                         dispatch-saved={:.1}ms",
-                        s.cloud_invocations,
-                        s.cloud_occupancy.mean(),
-                        s.cloud_occupancy.percentile(100.0),
-                        s.cloud_dispatch_saved_s * 1e3
-                    );
-                }
-                for d in &s.per_device {
-                    let rebalance_cols = if cfg.reroute || cfg.rebalance_window_ms > 0.0 {
-                        format!(
-                            " rerouted-in={} migrated-in={} migrated-out={}",
-                            d.rerouted_in, d.migrated_in, d.migrated_out
+                        "{}",
+                        render::counters_line(
+                            s.offered,
+                            s.completed,
+                            s.shed,
+                            s.downgraded,
+                            s.slo_violations,
+                            s.goodput
                         )
-                    } else {
-                        String::new()
-                    };
-                    println!(
-                        "  device {:<12} served={:<5} energy={:.1} J violations={}{}",
-                        d.name, d.served, d.energy_j, d.violations, rebalance_cols
                     );
+                    if rebalancing {
+                        println!(
+                            "{}",
+                            render::rebalance_line(
+                                s.rerouted,
+                                s.migrated,
+                                s.migration_latency_s
+                            )
+                        );
+                    }
+                    if cfg.cloud_batch_window_ms > 0.0 && s.cloud_invocations > 0 {
+                        println!(
+                            "{}",
+                            render::cloud_line(
+                                s.cloud_invocations,
+                                s.cloud_occupancy.mean(),
+                                s.cloud_occupancy.max(),
+                                s.cloud_dispatch_saved_s
+                            )
+                        );
+                    }
+                    for d in &s.per_device {
+                        let rb = rebalancing
+                            .then_some((d.rerouted_in, d.migrated_in, d.migrated_out));
+                        println!(
+                            "{}",
+                            render::device_line(&d.name, d.served, d.energy_j, d.violations, rb)
+                        );
+                    }
+                    for line in render::class_lines(&s.telemetry) {
+                        println!("{line}");
+                    }
+                } else {
+                    let s =
+                        serve_fleet_sharded(&mut fleet, &mut gens, per_stream, &opts, cfg.shards);
+                    if a.flag("verbose") {
+                        print_reports(&s.serve.reports);
+                    }
+                    println!("{}", render::summary_table(&s.serve).render());
+                    println!(
+                        "{}",
+                        render::counters_line(
+                            s.offered,
+                            s.completed,
+                            s.shed,
+                            s.downgraded,
+                            s.slo_violations,
+                            s.goodput
+                        )
+                    );
+                    if rebalancing {
+                        println!(
+                            "{}",
+                            render::rebalance_line(
+                                s.rerouted,
+                                s.migrated,
+                                s.migration_latency_s
+                            )
+                        );
+                    }
+                    if cfg.cloud_batch_window_ms > 0.0 && s.cloud_invocations > 0 {
+                        println!(
+                            "{}",
+                            render::cloud_line(
+                                s.cloud_invocations,
+                                s.cloud_occupancy.mean(),
+                                s.cloud_occupancy.percentile(100.0),
+                                s.cloud_dispatch_saved_s
+                            )
+                        );
+                    }
+                    for d in &s.per_device {
+                        let rb = rebalancing
+                            .then_some((d.rerouted_in, d.migrated_in, d.migrated_out));
+                        println!(
+                            "{}",
+                            render::device_line(&d.name, d.served, d.energy_j, d.violations, rb)
+                        );
+                    }
                 }
             } else {
                 let mut coord = Coordinator::from_config(&cfg)?;
@@ -347,7 +411,7 @@ fn real_main() -> anyhow::Result<()> {
                     cfg.batch_window_ms,
                     cfg.cloud_batch_window_ms
                 );
-                print_summary_table(&s);
+                println!("{}", render::summary_table(&s).render());
                 if cfg.streams > 1 {
                     let mean_mj = 1e3 * s.per_stream_j.iter().sum::<f64>()
                         / s.per_stream_j.len().max(1) as f64;

@@ -1,5 +1,13 @@
 //! Telemetry: counters, histograms, per-phase timelines, and text-table
 //! rendering for experiment reports (the benches print paper-style rows).
+//!
+//! Submodules: [`sink`] holds the streaming report sinks (the
+//! `ReportSink` trait, the quantile sketch, and `StreamingSink`);
+//! [`render`] holds the shared summary renderers used by every serve
+//! path in `main.rs`.
+
+pub mod render;
+pub mod sink;
 
 use crate::util::{Running, Samples};
 use std::collections::BTreeMap;

@@ -1,0 +1,248 @@
+//! Shared summary renderers.
+//!
+//! `main.rs` historically carried its own copies of the summary-table
+//! and counter-line formatting for the single-edge and fleet serve
+//! paths, and the experiment sweeps re-derived the same percentile
+//! cells inline — three slowly-drifting copies of one format. This
+//! module is the single source: both serve paths, the streaming
+//! (sharded) path, and the experiment tables all render through the
+//! helpers here. `rust/tests/render_golden.rs` pins the output
+//! byte-for-byte against the historical `main.rs` formatting.
+
+use crate::coordinator::ServeSummary;
+use crate::telemetry::sink::StreamingSink;
+use crate::telemetry::Table;
+use crate::util::Samples;
+
+/// The headline metric table of a serving run: mean/p50/p95/p99 for
+/// latency, queueing, energy, accuracy, offload proportion, and
+/// payload. Exactly the table `dvfo serve` prints.
+pub fn summary_table(s: &ServeSummary) -> Table {
+    let mut t = Table::new(vec!["metric", "mean", "p50", "p95", "p99"]);
+    for (name, s) in [
+        ("tti ms", &s.tti_ms),
+        ("queue ms", &s.queue_wait_ms),
+        ("e2e ms", &s.e2e_ms),
+        ("eti mJ", &s.eti_mj),
+        ("accuracy %", &s.accuracy_pct),
+        ("xi", &s.xi),
+        ("payload KB", &s.payload_kb),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", s.mean()),
+            format!("{:.2}", s.p50()),
+            format!("{:.2}", s.p95()),
+            format!("{:.2}", s.p99()),
+        ]);
+    }
+    t
+}
+
+/// The same headline table from a constant-memory [`StreamingSink`]:
+/// identical shape, sketch-estimated percentiles, and only the metrics
+/// the sink tracks (the per-report-field trace buffers behind
+/// accuracy/ξ/payload are exactly what streaming telemetry drops).
+pub fn streaming_table(s: &StreamingSink) -> Table {
+    let mut t = Table::new(vec!["metric", "mean", "p50", "p95", "p99"]);
+    for (name, q) in [
+        ("tti ms", &s.tti_ms),
+        ("queue ms", &s.queue_wait_ms),
+        ("e2e ms", &s.e2e_ms),
+        ("eti mJ", &s.eti_mj),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", q.mean()),
+            format!("{:.2}", q.p50()),
+            format!("{:.2}", q.p95()),
+            format!("{:.2}", q.p99()),
+        ]);
+    }
+    t
+}
+
+/// The fleet accounting line: `offered=.. completed=.. shed=..
+/// downgraded=.. violations=.. goodput=..`.
+pub fn counters_line(
+    offered: usize,
+    completed: usize,
+    shed: usize,
+    downgraded: usize,
+    violations: usize,
+    goodput: usize,
+) -> String {
+    format!(
+        "offered={offered} completed={completed} shed={shed} downgraded={downgraded} \
+         violations={violations} goodput={goodput}"
+    )
+}
+
+/// The rebalancing accounting line (callers gate it on the rebalance
+/// knobs being enabled, like the cloud line).
+pub fn rebalance_line(rerouted: usize, migrated: usize, migration_latency_s: f64) -> String {
+    format!(
+        "rebalance: rerouted={} migrated={} migration-latency={:.1}ms",
+        rerouted,
+        migrated,
+        migration_latency_s * 1e3
+    )
+}
+
+/// The cloud-batching accounting line (callers gate it on the window
+/// being open and at least one invocation happening).
+pub fn cloud_line(
+    invocations: usize,
+    mean_occupancy: f64,
+    max_occupancy: f64,
+    dispatch_saved_s: f64,
+) -> String {
+    format!(
+        "cloud: invocations={} mean-occupancy={:.2} max-occupancy={:.0} \
+         dispatch-saved={:.1}ms",
+        invocations,
+        mean_occupancy,
+        max_occupancy,
+        dispatch_saved_s * 1e3
+    )
+}
+
+/// One per-device telemetry line. `rebalance` carries the
+/// (rerouted-in, migrated-in, migrated-out) triple when the rebalance
+/// columns are enabled, `None` otherwise.
+pub fn device_line(
+    name: &str,
+    served: usize,
+    energy_j: f64,
+    violations: usize,
+    rebalance: Option<(usize, usize, usize)>,
+) -> String {
+    let rebalance_cols = match rebalance {
+        Some((rerouted_in, migrated_in, migrated_out)) => format!(
+            " rerouted-in={rerouted_in} migrated-in={migrated_in} migrated-out={migrated_out}"
+        ),
+        None => String::new(),
+    };
+    format!(
+        "  device {name:<12} served={served:<5} energy={energy_j:.1} J \
+         violations={violations}{rebalance_cols}"
+    )
+}
+
+/// Per-SLO-class accounting lines of a streaming run, one per class in
+/// ascending priority order.
+pub fn class_lines(s: &StreamingSink) -> Vec<String> {
+    s.per_class
+        .iter()
+        .map(|(class, c)| {
+            format!(
+                "  class {class}: completed={} violations={}",
+                c.completed, c.violations
+            )
+        })
+        .collect()
+}
+
+/// `{:.1}`-formatted percentile cells — the convention every experiment
+/// sweep table uses for its latency columns.
+pub fn quantile_cells(s: &Samples, percentiles: &[f64]) -> Vec<String> {
+    percentiles
+        .iter()
+        .map(|&p| format!("{:.1}", s.percentile(p)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_lines_match_the_historical_format() {
+        assert_eq!(
+            counters_line(10, 8, 2, 1, 3, 5),
+            "offered=10 completed=8 shed=2 downgraded=1 violations=3 goodput=5"
+        );
+        assert_eq!(
+            rebalance_line(4, 2, 0.0123),
+            "rebalance: rerouted=4 migrated=2 migration-latency=12.3ms"
+        );
+        assert_eq!(
+            cloud_line(7, 1.5, 3.0, 0.004),
+            "cloud: invocations=7 mean-occupancy=1.50 max-occupancy=3 dispatch-saved=4.0ms"
+        );
+        assert_eq!(
+            device_line("xavier-nx", 12, 3.14159, 2, None),
+            "  device xavier-nx    served=12    energy=3.1 J violations=2"
+        );
+        assert_eq!(
+            device_line("jetson-nano", 5, 0.5, 0, Some((1, 2, 3))),
+            "  device jetson-nano  served=5     energy=0.5 J violations=0 \
+             rerouted-in=1 migrated-in=2 migrated-out=3"
+        );
+    }
+
+    #[test]
+    fn quantile_cells_format_like_the_sweeps() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert_eq!(
+            quantile_cells(&s, &[50.0, 90.0, 99.0]),
+            vec!["50.5", "90.1", "99.0"]
+        );
+    }
+
+    #[test]
+    fn streaming_table_mirrors_the_summary_shape() {
+        use crate::coordinator::TaskReport;
+        use crate::telemetry::sink::{JobMeta, ReportSink};
+        let mut sink = StreamingSink::new();
+        let mut r = TaskReport::default();
+        r.e2e_s = 0.25;
+        r.tti_total_s = 0.2;
+        r.queue_wait_s = 0.05;
+        r.eti_total_j = 0.003;
+        sink.push(
+            &JobMeta {
+                dev: 0,
+                deadline_s: f64::INFINITY,
+                priority: 0,
+                arrival_idx: 0,
+            },
+            r,
+        );
+        let rendered = streaming_table(&sink).render();
+        let lines: Vec<&str> = rendered.lines().collect();
+        // header + rule + 4 metric rows
+        assert_eq!(lines.len(), 6);
+        assert!(lines[0].contains("p95"));
+        assert!(rendered.contains("tti ms"));
+        assert!(rendered.contains("eti mJ"));
+    }
+
+    #[test]
+    fn class_lines_order_by_priority() {
+        use crate::coordinator::TaskReport;
+        use crate::telemetry::sink::{JobMeta, ReportSink};
+        let mut sink = StreamingSink::new();
+        for (prio, ddl) in [(2usize, f64::INFINITY), (0, -1.0), (2, f64::INFINITY)] {
+            sink.push(
+                &JobMeta {
+                    dev: 0,
+                    deadline_s: ddl,
+                    priority: prio,
+                    arrival_idx: 0,
+                },
+                TaskReport::default(),
+            );
+        }
+        assert_eq!(
+            class_lines(&sink),
+            vec![
+                "  class 0: completed=1 violations=1",
+                "  class 2: completed=2 violations=0",
+            ]
+        );
+    }
+}

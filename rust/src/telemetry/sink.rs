@@ -1,0 +1,502 @@
+//! Streaming report sinks: constant-memory telemetry for million-task
+//! serving runs.
+//!
+//! The engine kernel historically collected every completed
+//! [`TaskReport`] into a `Vec`, so run size was capped by RAM (a report
+//! plus its job bookkeeping is on the order of a kilobyte). This module
+//! splits report *consumption* out of the kernel behind the
+//! [`ReportSink`] trait:
+//!
+//! * `CollectSink` (in `coordinator::engine`) keeps today's behavior —
+//!   every report retained, in arrival order, bit-exact with the
+//!   pre-sink engine — and stays the default.
+//! * [`StreamingSink`] (here) folds each report into mergeable
+//!   quantile sketches and per-device / per-SLO-class counters the
+//!   moment it completes, then drops it. Memory is bounded by the
+//!   sketch bucket span and the device count, never by task count.
+//!
+//! The sketch is a DDSketch-style log-bucketed quantile estimator with
+//! a guaranteed *relative* error bound: every estimate is within
+//! `relative_error()` of some true sample at the queried rank. The
+//! property gate in `rust/tests/streaming_sink.rs` checks that bound
+//! against the exact `util::stats::Samples` percentiles on randomized
+//! workloads.
+
+use crate::coordinator::TaskReport;
+use crate::util::stats::Running;
+use std::collections::BTreeMap;
+
+/// Default relative-error target for [`QuantileSketch`]: estimates are
+/// within 1% of a true sample at the queried rank.
+pub const SKETCH_RELATIVE_ERROR: f64 = 0.01;
+
+/// Values with magnitude at or below this land in the exact zero
+/// bucket (log-bucketing cannot represent 0).
+const ZERO_EPS: f64 = 1e-12;
+
+/// Log-bucketed (DDSketch-style) streaming quantile estimator.
+///
+/// A value `x > 0` lands in bucket `ceil(ln(x) / ln(gamma))` with
+/// `gamma = (1 + a) / (1 - a)`; the bucket midpoint estimate
+/// `2 * gamma^k / (gamma + 1)` is then within relative error `a` of
+/// every value the bucket can hold. Negative values mirror into their
+/// own bucket map, near-zero values into an exact zero bucket, and NaN
+/// samples count into a trailing slot (mirroring how
+/// `Samples::percentile` sorts NaN after `+inf` via `total_cmp`).
+///
+/// Memory is proportional to the number of *occupied* buckets — for
+/// `a = 0.01` the entire positive f64 range spans ~36k buckets and a
+/// realistic latency/energy range (say 1e-6 .. 1e6) about 1400, no
+/// matter how many samples stream through.
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    alpha: f64,
+    ln_gamma: f64,
+    /// estimate multiplier: 2 / (gamma + 1), so `value(k) = mult * gamma^k`
+    mult: f64,
+    /// buckets for positive values, key = ceil(ln(x)/ln(gamma))
+    pos: BTreeMap<i32, u64>,
+    /// buckets for negative values, key from ln(-x)
+    neg: BTreeMap<i32, u64>,
+    zero: u64,
+    nan: u64,
+    count: u64,
+    run: Running,
+}
+
+impl QuantileSketch {
+    /// Sketch with relative-error target `alpha` in (0, 1).
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha < 1.0, "alpha must be in (0, 1)");
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        Self {
+            alpha,
+            ln_gamma: gamma.ln(),
+            mult: 2.0 / (gamma + 1.0),
+            pos: BTreeMap::new(),
+            neg: BTreeMap::new(),
+            zero: 0,
+            nan: 0,
+            count: 0,
+            run: Running::new(),
+        }
+    }
+
+    /// The guaranteed relative error bound `alpha`.
+    pub fn relative_error(&self) -> f64 {
+        self.alpha
+    }
+
+    fn key(&self, magnitude: f64) -> i32 {
+        // clamp into i32: |ln(x)/ln(gamma)| for finite f64 stays far
+        // below i32::MAX for any practical alpha
+        (magnitude.ln() / self.ln_gamma).ceil() as i32
+    }
+
+    fn value(&self, key: i32) -> f64 {
+        self.mult * (key as f64 * self.ln_gamma).exp()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        self.run.push(x);
+        if x.is_nan() {
+            self.nan += 1;
+        } else if x.abs() <= ZERO_EPS {
+            self.zero += 1;
+        } else if x > 0.0 {
+            *self.pos.entry(self.key(x)).or_insert(0) += 1;
+        } else {
+            *self.neg.entry(self.key(-x)).or_insert(0) += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact running mean over everything pushed (not sketched).
+    pub fn mean(&self) -> f64 {
+        self.run.mean()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.run.min()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.run.max()
+    }
+
+    /// Number of occupied buckets — the memory footprint driver.
+    pub fn buckets(&self) -> usize {
+        self.neg.len() + self.pos.len()
+    }
+
+    /// Percentile estimate in `[0, 100]`.
+    ///
+    /// The estimate is within `relative_error()` of the true sample at
+    /// rank `round(p/100 * (n-1))` — i.e. within the rounding slack of
+    /// the linearly-interpolated `Samples::percentile(p)`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut cum: u64 = 0;
+        // ascending value order: most-negative first (largest |x| key),
+        // then zero, then positives, then NaN (total_cmp order)
+        for (&k, &c) in self.neg.iter().rev() {
+            cum += c;
+            if cum > rank {
+                return -self.value(k);
+            }
+        }
+        cum += self.zero;
+        if cum > rank {
+            return 0.0;
+        }
+        for (&k, &c) in self.pos.iter() {
+            cum += c;
+            if cum > rank {
+                return self.value(k);
+            }
+        }
+        f64::NAN
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Fold another sketch of the same `alpha` into this one. Bucket
+    /// counts add, so a merged sketch answers queries exactly as if it
+    /// had seen both streams.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert!(
+            (self.alpha - other.alpha).abs() < 1e-15,
+            "cannot merge sketches with different error targets"
+        );
+        for (&k, &c) in &other.pos {
+            *self.pos.entry(k).or_insert(0) += c;
+        }
+        for (&k, &c) in &other.neg {
+            *self.neg.entry(k).or_insert(0) += c;
+        }
+        self.zero += other.zero;
+        self.nan += other.nan;
+        self.count += other.count;
+        self.run.merge(&other.run);
+    }
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new(SKETCH_RELATIVE_ERROR)
+    }
+}
+
+/// Completion-time context the engine hands a sink alongside the
+/// report: which device served the task, the SLO deadline and priority
+/// class it carried, and its global arrival index (admission order).
+#[derive(Clone, Copy, Debug)]
+pub struct JobMeta {
+    /// index of the device that served the task
+    pub dev: usize,
+    /// absolute SLO deadline (`f64::INFINITY` = no deadline)
+    pub deadline_s: f64,
+    /// SLO priority class (0 = best-effort)
+    pub priority: usize,
+    /// admission-order index among accepted tasks
+    pub arrival_idx: usize,
+}
+
+/// Where the engine delivers each completed task report.
+///
+/// Implementations decide what to retain: `CollectSink` keeps every
+/// report (the pre-sink behavior, still the default), `StreamingSink`
+/// folds each into constant-memory sketches and counters.
+pub trait ReportSink {
+    /// Consume one completed task's report.
+    fn push(&mut self, meta: &JobMeta, report: TaskReport);
+
+    /// Whether the engine should also retain unbounded per-event traces
+    /// (e.g. the exact cloud-occupancy sample buffer). Collecting sinks
+    /// keep them for bit-exact replay; streaming sinks drop them and
+    /// rely on the running aggregates instead.
+    fn keep_trace(&self) -> bool {
+        true
+    }
+}
+
+/// Per-SLO-class streaming counters.
+#[derive(Clone, Debug, Default)]
+pub struct ClassCounters {
+    pub completed: usize,
+    pub violations: usize,
+}
+
+/// Constant-memory telemetry sink: online quantile sketches for the
+/// headline latency/energy distributions plus per-device and
+/// per-SLO-class counters. Mergeable across engine shards.
+#[derive(Clone, Debug, Default)]
+pub struct StreamingSink {
+    /// end-to-end latency sketch (ms)
+    pub e2e_ms: QuantileSketch,
+    /// total inference latency sketch (ms)
+    pub tti_ms: QuantileSketch,
+    /// queue-wait sketch (ms)
+    pub queue_wait_ms: QuantileSketch,
+    /// per-task energy sketch (mJ)
+    pub eti_mj: QuantileSketch,
+    /// completed-task count
+    pub completed: usize,
+    /// completed tasks that missed their deadline
+    pub violations: usize,
+    /// completed tasks inside their deadline
+    pub goodput: usize,
+    /// tasks served per device (index = device)
+    pub dev_served: Vec<usize>,
+    /// energy per device in joules (index = device)
+    pub dev_energy_j: Vec<f64>,
+    /// deadline misses per device (index = device)
+    pub dev_violations: Vec<usize>,
+    /// counters keyed by SLO priority class
+    pub per_class: BTreeMap<usize, ClassCounters>,
+}
+
+impl StreamingSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure_dev(&mut self, dev: usize) {
+        if self.dev_served.len() <= dev {
+            self.dev_served.resize(dev + 1, 0);
+            self.dev_energy_j.resize(dev + 1, 0.0);
+            self.dev_violations.resize(dev + 1, 0);
+        }
+    }
+
+    /// Fold another sink into this one, offsetting its device indices
+    /// by `dev_base` (shard k owns a contiguous device range starting
+    /// at its base).
+    pub fn merge_offset(&mut self, other: &StreamingSink, dev_base: usize) {
+        self.e2e_ms.merge(&other.e2e_ms);
+        self.tti_ms.merge(&other.tti_ms);
+        self.queue_wait_ms.merge(&other.queue_wait_ms);
+        self.eti_mj.merge(&other.eti_mj);
+        self.completed += other.completed;
+        self.violations += other.violations;
+        self.goodput += other.goodput;
+        if !other.dev_served.is_empty() {
+            self.ensure_dev(dev_base + other.dev_served.len() - 1);
+            for (i, &n) in other.dev_served.iter().enumerate() {
+                self.dev_served[dev_base + i] += n;
+            }
+            for (i, &e) in other.dev_energy_j.iter().enumerate() {
+                self.dev_energy_j[dev_base + i] += e;
+            }
+            for (i, &v) in other.dev_violations.iter().enumerate() {
+                self.dev_violations[dev_base + i] += v;
+            }
+        }
+        for (&class, c) in &other.per_class {
+            let e = self.per_class.entry(class).or_default();
+            e.completed += c.completed;
+            e.violations += c.violations;
+        }
+    }
+}
+
+impl ReportSink for StreamingSink {
+    fn push(&mut self, meta: &JobMeta, r: TaskReport) {
+        // identical end-to-end fallback and violation test to the
+        // collecting fleet fold, so counters agree *exactly* between
+        // sinks on the same trace (gated by tests/streaming_sink.rs)
+        let e2e_s = if r.e2e_s > 0.0 {
+            r.e2e_s
+        } else {
+            r.queue_wait_s + r.tti_total_s
+        };
+        let violated = meta.deadline_s.is_finite() && e2e_s > meta.deadline_s;
+        self.completed += 1;
+        if violated {
+            self.violations += 1;
+        } else {
+            self.goodput += 1;
+        }
+        self.e2e_ms.push(e2e_s * 1e3);
+        self.tti_ms.push(r.tti_total_s * 1e3);
+        self.queue_wait_ms.push(r.queue_wait_s * 1e3);
+        self.eti_mj.push(r.eti_total_j * 1e3);
+        self.ensure_dev(meta.dev);
+        self.dev_served[meta.dev] += 1;
+        self.dev_energy_j[meta.dev] += r.eti_total_j;
+        if violated {
+            self.dev_violations[meta.dev] += 1;
+        }
+        let c = self.per_class.entry(meta.priority).or_default();
+        c.completed += 1;
+        if violated {
+            c.violations += 1;
+        }
+    }
+
+    fn keep_trace(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Samples;
+
+    fn bound_holds(xs: &[f64], sk: &QuantileSketch, p: f64) -> Result<(), String> {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let lo = sorted[rank.floor() as usize];
+        let hi = sorted[rank.ceil() as usize];
+        let a = sk.relative_error();
+        let est = sk.percentile(p);
+        // est is within `a` (relative) of the sample at the rounded
+        // rank, which is one of the two interpolation endpoints
+        let lo_b = lo.min(hi) * (1.0 - a) - 1e-9;
+        let hi_b = lo.max(hi) * (1.0 + a) + 1e-9;
+        if est >= lo_b && est <= hi_b {
+            Ok(())
+        } else {
+            Err(format!("p{p}: est {est} outside [{lo_b}, {hi_b}]"))
+        }
+    }
+
+    #[test]
+    fn sketch_tracks_exact_percentiles() {
+        let mut sk = QuantileSketch::default();
+        let mut s = Samples::new();
+        let mut xs = Vec::new();
+        // deterministic scramble spanning five orders of magnitude
+        for i in 0u64..4096 {
+            let x = (((i * 2654435761) % 100_000) as f64) / 10.0 + 0.05;
+            sk.push(x);
+            s.push(x);
+            xs.push(x);
+        }
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            bound_holds(&xs, &sk, p).unwrap();
+            // and the sketch stays close to the interpolated exact value
+            let exact = s.percentile(p);
+            assert!(
+                (sk.percentile(p) - exact).abs() <= 0.02 * exact.abs() + 1e-6,
+                "p{p}: {} vs exact {exact}",
+                sk.percentile(p)
+            );
+        }
+        assert!((sk.mean() - s.mean()).abs() < 1e-9, "mean is exact");
+        assert!(sk.buckets() < 2500, "bucket count bounded by value span");
+    }
+
+    #[test]
+    fn sketch_handles_zero_negative_and_nan() {
+        let mut sk = QuantileSketch::default();
+        for x in [-4.0, -2.0, 0.0, 0.0, 1.0, 8.0, f64::NAN] {
+            sk.push(x);
+        }
+        assert_eq!(sk.count(), 7);
+        assert!((sk.percentile(0.0) + 4.0).abs() <= 4.0 * 0.01 + 1e-9);
+        // rank 3 of 7 is the second zero
+        assert_eq!(sk.p50(), 0.0);
+        assert!(sk.percentile(100.0).is_nan(), "NaN sorts last");
+    }
+
+    #[test]
+    fn empty_sketch_is_nan() {
+        let sk = QuantileSketch::default();
+        assert!(sk.percentile(50.0).is_nan());
+        assert!(sk.is_empty());
+    }
+
+    #[test]
+    fn merge_equals_concat() {
+        let xs: Vec<f64> = (0..500).map(|i| ((i * 37) % 211) as f64 + 0.5).collect();
+        let (a, b) = xs.split_at(180);
+        let mut sa = QuantileSketch::default();
+        let mut sb = QuantileSketch::default();
+        let mut sc = QuantileSketch::default();
+        a.iter().for_each(|&x| sa.push(x));
+        b.iter().for_each(|&x| sb.push(x));
+        xs.iter().for_each(|&x| sc.push(x));
+        sa.merge(&sb);
+        assert_eq!(sa.count(), sc.count());
+        for p in [1.0, 50.0, 95.0, 99.9] {
+            assert_eq!(
+                sa.percentile(p).to_bits(),
+                sc.percentile(p).to_bits(),
+                "merged sketch answers exactly like the concatenated one"
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_sink_counts_violations_per_device_and_class() {
+        let mut sink = StreamingSink::new();
+        let mut r = TaskReport::default();
+        r.e2e_s = 0.1;
+        r.eti_total_j = 0.2;
+        sink.push(
+            &JobMeta { dev: 1, deadline_s: 0.05, priority: 1, arrival_idx: 0 },
+            r.clone(),
+        );
+        sink.push(
+            &JobMeta { dev: 0, deadline_s: f64::INFINITY, priority: 0, arrival_idx: 1 },
+            r.clone(),
+        );
+        // e2e_s == 0 falls back to queue + tti (both 0 here): no violation
+        r.e2e_s = 0.0;
+        sink.push(
+            &JobMeta { dev: 1, deadline_s: 0.05, priority: 1, arrival_idx: 2 },
+            r,
+        );
+        assert_eq!((sink.completed, sink.violations, sink.goodput), (3, 1, 2));
+        assert_eq!(sink.dev_served, vec![1, 2]);
+        assert_eq!(sink.dev_violations, vec![0, 1]);
+        assert!((sink.dev_energy_j[1] - 0.4).abs() < 1e-12);
+        assert_eq!(sink.per_class[&1].completed, 2);
+        assert_eq!(sink.per_class[&1].violations, 1);
+        assert_eq!(sink.per_class[&0].violations, 0);
+        assert!(!sink.keep_trace());
+    }
+
+    #[test]
+    fn sink_merge_offsets_devices() {
+        let mut a = StreamingSink::new();
+        let mut b = StreamingSink::new();
+        let r = TaskReport::default();
+        let meta = |dev: usize, priority: usize| JobMeta {
+            dev,
+            deadline_s: f64::INFINITY,
+            priority,
+            arrival_idx: 0,
+        };
+        a.push(&meta(0, 0), r.clone());
+        b.push(&meta(1, 2), r);
+        a.merge_offset(&b, 3);
+        assert_eq!(a.dev_served, vec![1, 0, 0, 0, 1]);
+        assert_eq!(a.completed, 2);
+        assert_eq!(a.per_class[&2].completed, 1);
+    }
+}

@@ -213,6 +213,14 @@ impl Ewma {
     pub fn get(&self) -> Option<f64> {
         self.value
     }
+
+    /// Overwrite the smoothed value directly. Used by the sharded engine
+    /// runner: at epoch boundaries every shard adopts the same blended
+    /// global estimate, then keeps smoothing locally from that point.
+    /// `None` resets the filter to its cold state.
+    pub fn set(&mut self, v: Option<f64>) {
+        self.value = v;
+    }
 }
 
 #[cfg(test)]
@@ -359,5 +367,18 @@ mod tests {
             e.push(10.0);
         }
         assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ewma_set_seeds_the_filter() {
+        let mut e = Ewma::new(0.5);
+        e.set(Some(4.0));
+        assert_eq!(e.get(), Some(4.0));
+        // a push after set() smooths from the injected value, exactly as
+        // if 4.0 had been the accumulated history
+        assert!((e.push(8.0) - 6.0).abs() < 1e-12);
+        e.set(None);
+        assert_eq!(e.get(), None);
+        assert_eq!(e.push(3.0), 3.0, "None resets to cold start");
     }
 }

@@ -1,0 +1,102 @@
+//! Parity gate for the `EngineConfig` consolidation: the one flat
+//! builder (`rust/src/coordinator/config.rs`) must produce
+//! **bit-identical** parameter blocks to the legacy
+//! `DesOpts::from_config` + `FleetOpts::from_config` pair, on default
+//! and non-default configs alike, so callers can migrate to the builder
+//! without any behavioural drift. The legacy types stay valid as the
+//! kernel's internal parameter blocks; this gate is what lets them be
+//! documented as superseded.
+
+use dvfo::configx::Config;
+use dvfo::coordinator::{Admission, DesOpts, EngineConfig, FleetOpts, Router};
+
+/// Every `DesOpts` field, floats as raw bits, for exact comparison.
+fn des_bits(o: &DesOpts) -> (u64, usize, usize, u64, usize) {
+    (
+        o.batch_window_s.to_bits(),
+        o.max_batch,
+        o.cloud_slots,
+        o.cloud_batch_window_s.to_bits(),
+        o.cloud_max_batch,
+    )
+}
+
+/// Every non-`des` `FleetOpts` field, floats as raw bits.
+fn fleet_bits(o: &FleetOpts) -> (Router, Admission, bool, u64, u64, u64) {
+    (
+        o.router,
+        o.admission,
+        o.reroute,
+        o.rebalance_window_s.to_bits(),
+        o.migrate_threshold_s.to_bits(),
+        o.migrate_penalty_s.to_bits(),
+    )
+}
+
+#[test]
+fn from_config_matches_the_legacy_constructors_on_a_non_default_config() {
+    let mut cfg = Config::default();
+    cfg.batch_window_ms = 7.5;
+    cfg.max_batch = 5;
+    cfg.cloud_slots = 3;
+    cfg.cloud_batch_window_ms = 6.25;
+    cfg.cloud_max_batch = 9;
+    cfg.router = "least_backlog".into();
+    cfg.admission = "shed".into();
+    cfg.reroute = true;
+    cfg.rebalance_window_ms = 12.0;
+    cfg.migrate_threshold_ms = 40.0;
+    cfg.migrate_penalty_ms = 2.5;
+    cfg.shards = 4;
+    cfg.stream_telemetry = true;
+
+    let ec = EngineConfig::from_config(&cfg).unwrap();
+    let legacy_fleet = FleetOpts::from_config(&cfg).unwrap();
+    assert_eq!(des_bits(&ec.des_opts()), des_bits(&DesOpts::from_config(&cfg)));
+    assert_eq!(des_bits(&ec.fleet_opts().des), des_bits(&legacy_fleet.des));
+    assert_eq!(fleet_bits(&ec.fleet_opts()), fleet_bits(&legacy_fleet));
+
+    // the scale-out keys only the builder carries
+    assert_eq!(ec.shards, 4);
+    assert!(ec.stream_telemetry);
+    // spot-check the ms→s conversions landed (not just matched)
+    assert_eq!(ec.batch_window_s, 0.0075);
+    assert_eq!(ec.migrate_penalty_s, 0.0025);
+    assert_eq!(ec.router, Router::LeastBacklog);
+    assert_eq!(ec.admission, Admission::Shed);
+}
+
+#[test]
+fn from_config_matches_the_legacy_constructors_on_the_default_config() {
+    let cfg = Config::default();
+    let ec = EngineConfig::from_config(&cfg).unwrap();
+    let legacy_fleet = FleetOpts::from_config(&cfg).unwrap();
+    assert_eq!(des_bits(&ec.des_opts()), des_bits(&DesOpts::from_config(&cfg)));
+    assert_eq!(fleet_bits(&ec.fleet_opts()), fleet_bits(&legacy_fleet));
+    assert_eq!(ec.shards, 1);
+    assert!(!ec.stream_telemetry);
+}
+
+#[test]
+fn builder_defaults_equal_default_config_conversion() {
+    // `EngineConfig::new()` and `EngineConfig::from_config(&default)`
+    // must be two spellings of the same configuration
+    let from_cfg = EngineConfig::from_config(&Config::default()).unwrap();
+    let built = EngineConfig::new();
+    assert_eq!(des_bits(&from_cfg.des_opts()), des_bits(&built.des_opts()));
+    assert_eq!(fleet_bits(&from_cfg.fleet_opts()), fleet_bits(&built.fleet_opts()));
+    assert_eq!(from_cfg.shards, built.shards);
+    assert_eq!(from_cfg.shard_epoch_s.to_bits(), built.shard_epoch_s.to_bits());
+    assert_eq!(from_cfg.stream_telemetry, built.stream_telemetry);
+}
+
+#[test]
+fn infinite_migrate_threshold_survives_the_conversion() {
+    // the "never migrate" sentinel must not be destroyed by the ms→s
+    // division (inf / 1e3 == inf)
+    let cfg = Config::default();
+    assert!(cfg.migrate_threshold_ms.is_infinite());
+    let ec = EngineConfig::from_config(&cfg).unwrap();
+    assert!(ec.migrate_threshold_s.is_infinite());
+    assert!(ec.fleet_opts().migrate_threshold_s.is_infinite());
+}

@@ -1,0 +1,134 @@
+//! Byte-identity gate for the shared telemetry renderers
+//! (`rust/src/telemetry/render.rs`): `main.rs` and the experiment
+//! sweeps used to carry their own copies of the summary-table and
+//! accounting-line formatting; this file freezes those historical
+//! format strings verbatim and pins the shared helpers against them
+//! byte-for-byte — on a real serving run for the table, and on awkward
+//! rounding inputs for the one-line formats.
+
+use dvfo::configx::Config;
+use dvfo::coordinator::des::{serve_multistream, DesOpts};
+use dvfo::coordinator::{Coordinator, ServeSummary};
+use dvfo::telemetry::{render, Table};
+use dvfo::util::Samples;
+use dvfo::workload::{Arrivals, TaskGen};
+
+/// Verbatim copy of the `print_summary_table` body `main.rs` carried
+/// before the renderers moved into `telemetry::render`. Do not edit —
+/// it IS the golden.
+fn frozen_summary_table(s: &ServeSummary) -> Table {
+    let mut t = Table::new(vec!["metric", "mean", "p50", "p95", "p99"]);
+    for (name, s) in [
+        ("tti ms", &s.tti_ms),
+        ("queue ms", &s.queue_wait_ms),
+        ("e2e ms", &s.e2e_ms),
+        ("eti mJ", &s.eti_mj),
+        ("accuracy %", &s.accuracy_pct),
+        ("xi", &s.xi),
+        ("payload KB", &s.payload_kb),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", s.mean()),
+            format!("{:.2}", s.p50()),
+            format!("{:.2}", s.p95()),
+            format!("{:.2}", s.p99()),
+        ]);
+    }
+    t
+}
+
+fn real_run() -> ServeSummary {
+    let mut cfg = Config::default();
+    cfg.policy = "cloud_only".into();
+    cfg.seed = 9;
+    let mut des = Coordinator::from_config(&cfg).unwrap();
+    let mut gens: Vec<TaskGen> = (0..3)
+        .map(|s| {
+            TaskGen::new(
+                &cfg.model,
+                des.env.dataset,
+                Arrivals::Poisson { rate: 20.0 },
+                40 + s as u64,
+            )
+            .unwrap()
+        })
+        .collect();
+    let opts = DesOpts {
+        batch_window_s: 0.004,
+        ..DesOpts::default()
+    };
+    serve_multistream(&mut des, &mut gens, 10, &opts)
+}
+
+#[test]
+fn summary_table_matches_the_frozen_cli_format() {
+    let s = real_run();
+    assert!(s.count() > 0);
+    assert_eq!(render::summary_table(&s).render(), frozen_summary_table(&s).render());
+}
+
+#[test]
+fn accounting_lines_match_the_frozen_cli_formats() {
+    // each right-hand side is the literal `println!` format string the
+    // fleet path in `main.rs` used, applied via `format!`
+    assert_eq!(
+        render::counters_line(271, 250, 21, 4, 17, 233),
+        format!(
+            "offered={} completed={} shed={} downgraded={} violations={} goodput={}",
+            271, 250, 21, 4, 17, 233
+        )
+    );
+    assert_eq!(
+        render::rebalance_line(5, 3, 0.0275),
+        format!(
+            "rebalance: rerouted={} migrated={} migration-latency={:.1}ms",
+            5,
+            3,
+            0.0275 * 1e3
+        )
+    );
+    assert_eq!(
+        render::cloud_line(12, 2.25, 4.0, 0.0061),
+        format!(
+            "cloud: invocations={} mean-occupancy={:.2} max-occupancy={:.0} \
+             dispatch-saved={:.1}ms",
+            12,
+            2.25,
+            4.0,
+            0.0061 * 1e3
+        )
+    );
+    assert_eq!(
+        render::device_line("jetson-tx2", 88, 12.345, 6, None),
+        format!(
+            "  device {:<12} served={:<5} energy={:.1} J violations={}{}",
+            "jetson-tx2", 88, 12.345, 6, ""
+        )
+    );
+    // the historical fleet path computed the rebalance columns first,
+    // then spliced them into the device line — reproduced verbatim
+    let rebalance_cols = format!(" rerouted-in={} migrated-in={} migrated-out={}", 4, 2, 9);
+    assert_eq!(
+        render::device_line("jetson-nano", 7, 0.25, 1, Some((4, 2, 9))),
+        format!(
+            "  device {:<12} served={:<5} energy={:.1} J violations={}{}",
+            "jetson-nano", 7, 0.25, 1, rebalance_cols
+        )
+    );
+}
+
+#[test]
+fn quantile_cells_match_the_frozen_sweep_format() {
+    // the experiment sweeps formatted every latency column as
+    // `format!("{:.1}", samples.percentile(p))` — frozen here so the
+    // sweep goldens in `sweep_determinism.rs` can never drift silently
+    let mut s = Samples::new();
+    for i in 0..250 {
+        s.push((i as f64) * 0.731 + 3.0);
+    }
+    for p in [50.0, 95.0, 99.0] {
+        assert_eq!(render::quantile_cells(&s, &[p]), vec![format!("{:.1}", s.percentile(p))]);
+    }
+    assert_eq!(render::quantile_cells(&s, &[50.0, 95.0, 99.0]).len(), 3);
+}

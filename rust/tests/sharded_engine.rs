@@ -1,0 +1,250 @@
+//! Tentpole gates for the share-nothing sharded engine
+//! (`rust/src/coordinator/shard.rs` + the `serve_fleet_sharded` /
+//! `serve_fleet_streaming` entry points):
+//!
+//! * one shard IS the unsharded kernel — `serve_fleet_sharded(.., 1)`
+//!   reproduces `serve_fleet` report-for-report, bit-for-bit
+//! * task conservation — `offered == completed + shed` holds exactly
+//!   for every shard count, and the per-device ledgers sum to it
+//! * goodput equivalence — exact under a slack SLO (everything
+//!   completes on time regardless of sharding), and within a stated
+//!   tolerance on a genuinely loaded configuration where per-shard
+//!   routing scopes and epoch-stale cloud signals may drift outcomes
+//! * determinism — a fixed shard count over the epoch-sync protocol
+//!   gives bit-identical results run-to-run despite the threads
+//! * the `#[ignore]`d headline: 1,000,000 tasks over a 100-device
+//!   fleet through 4 shards with streaming telemetry, in memory bounded
+//!   by sketch spans and device counters rather than task count
+
+use dvfo::configx::Config;
+use dvfo::coordinator::fleet::{
+    serve_fleet, serve_fleet_sharded, serve_fleet_streaming, Admission, Fleet, FleetOpts,
+};
+use dvfo::coordinator::{DesOpts, FleetSummary};
+use dvfo::workload::{Arrivals, SloClass, TaskGen};
+
+fn cfg(policy: &str, fleet: &str, seed: u64) -> Config {
+    let mut c = Config::default();
+    c.policy = policy.into();
+    c.fleet = fleet.into();
+    c.seed = seed;
+    c
+}
+
+fn gens(c: &Config, fleet: &Fleet, n: usize, rate: f64, slo: &str, base: u64) -> Vec<TaskGen> {
+    let slo = SloClass::parse(slo).unwrap();
+    (0..n)
+        .map(|s| {
+            TaskGen::new(
+                &c.model,
+                fleet.devices[0].env.dataset,
+                Arrivals::Poisson { rate },
+                base + s as u64,
+            )
+            .unwrap()
+            .with_slo(slo)
+        })
+        .collect()
+}
+
+/// A genuinely loaded run: shed admission + a tight SLO push four
+/// identical boards well past capacity. The homogeneous fleet and the
+/// 12-streams-over-4-devices split keep per-shard load balanced for
+/// shard counts 1/2/4, so goodput differences isolate the sharding
+/// itself rather than an unlucky partition.
+fn loaded_run(shards: usize) -> FleetSummary {
+    let c = cfg("edge_only", "jetson-nano*4", 77);
+    let mut fleet = Fleet::from_config(&c).unwrap();
+    let mut g = gens(&c, &fleet, 12, 15.0, "200", 3000);
+    let opts = FleetOpts {
+        admission: Admission::Shed,
+        ..FleetOpts::default()
+    };
+    serve_fleet_sharded(&mut fleet, &mut g, 15, &opts, shards)
+}
+
+#[test]
+fn one_shard_is_the_unsharded_kernel_bit_for_bit() {
+    let opts = FleetOpts {
+        des: DesOpts {
+            batch_window_s: 0.004,
+            cloud_batch_window_s: 0.005,
+            cloud_slots: 2,
+            ..DesOpts::default()
+        },
+        ..FleetOpts::default()
+    };
+
+    let c = cfg("cloud_only", "xavier-nx,jetson-nano", 23);
+    let mut fleet = Fleet::from_config(&c).unwrap();
+    let mut g = gens(&c, &fleet, 6, 25.0, "none", 900);
+    let a = serve_fleet(&mut fleet, &mut g, 12, &opts);
+
+    let c = cfg("cloud_only", "xavier-nx,jetson-nano", 23);
+    let mut fleet = Fleet::from_config(&c).unwrap();
+    let mut g = gens(&c, &fleet, 6, 25.0, "none", 900);
+    let b = serve_fleet_sharded(&mut fleet, &mut g, 12, &opts, 1);
+
+    assert_eq!(a.offered, b.offered);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.serve.reports.len(), b.serve.reports.len());
+    for (x, y) in a.serve.reports.iter().zip(&b.serve.reports) {
+        assert_eq!(x.e2e_s.to_bits(), y.e2e_s.to_bits());
+        assert_eq!(x.queue_wait_s.to_bits(), y.queue_wait_s.to_bits());
+        assert_eq!(x.eti_total_j.to_bits(), y.eti_total_j.to_bits());
+        assert_eq!(x.stream, y.stream);
+    }
+}
+
+#[test]
+fn counters_are_conserved_for_every_shard_count() {
+    for shards in [1, 2, 3, 4] {
+        let s = loaded_run(shards);
+        assert_eq!(s.offered, 12 * 15, "shards={shards}");
+        assert_eq!(s.offered, s.completed + s.shed, "shards={shards}: conservation");
+        assert_eq!(s.serve.reports.len(), s.completed, "shards={shards}");
+        let dev_served: usize = s.per_device.iter().map(|d| d.served).sum();
+        assert_eq!(dev_served, s.completed, "shards={shards}: device ledger");
+        let dev_violations: usize = s.per_device.iter().map(|d| d.violations).sum();
+        assert_eq!(dev_violations, s.slo_violations, "shards={shards}: violations");
+        assert_eq!(s.goodput, s.completed - s.slo_violations, "shards={shards}: goodput");
+    }
+}
+
+#[test]
+fn shard_count_clamps_to_the_fleet() {
+    // more shards than devices cannot be honored; the streaming summary
+    // reports the count the run actually used
+    let c = cfg("edge_only", "xavier-nx,jetson-nano", 5);
+    let mut fleet = Fleet::from_config(&c).unwrap();
+    let mut g = gens(&c, &fleet, 4, 10.0, "none", 100);
+    let s = serve_fleet_streaming(&mut fleet, &mut g, 5, &FleetOpts::default(), 16);
+    assert_eq!(s.shards, 2);
+    assert_eq!(s.offered, s.completed + s.shed);
+}
+
+#[test]
+fn slack_slo_goodput_is_identical_sharded_and_unsharded() {
+    // a 10-second deadline nothing in this workload can miss: every
+    // task completes on time under any shard count, so goodput is
+    // exactly offered on every path
+    for shards in [1, 2, 4] {
+        let c = cfg("edge_only", "xavier-nx*2,jetson-tx2,jetson-nano", 42);
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(&c, &fleet, 8, 5.0, "10000", 500);
+        let s = serve_fleet_sharded(&mut fleet, &mut g, 15, &FleetOpts::default(), shards);
+        assert_eq!(s.shed, 0, "shards={shards}");
+        assert_eq!(s.slo_violations, 0, "shards={shards}");
+        assert_eq!(s.goodput, s.offered, "shards={shards}");
+    }
+}
+
+/// Stated tolerance for sharded-vs-unsharded goodput on a loaded
+/// configuration: shards route within their own device subset and see
+/// epoch-stale cloud signals, so admission decisions (and therefore
+/// goodput) may drift from the unsharded run — but by no more than
+/// this fraction of the offered load.
+const GOODPUT_TOLERANCE: f64 = 0.15;
+
+#[test]
+fn loaded_goodput_matches_unsharded_within_the_stated_tolerance() {
+    let base = loaded_run(1);
+    assert!(base.goodput > 0);
+    assert!(base.shed > 0, "the reference run must actually be loaded");
+    for shards in [2, 4] {
+        let s = loaded_run(shards);
+        assert_eq!(s.offered, base.offered);
+        let drift = (s.goodput as f64 - base.goodput as f64).abs();
+        assert!(
+            drift <= GOODPUT_TOLERANCE * base.offered as f64,
+            "shards={shards}: goodput {} vs unsharded {} drifts {} > {}% of offered {}",
+            s.goodput,
+            base.goodput,
+            drift,
+            GOODPUT_TOLERANCE * 100.0,
+            base.offered
+        );
+    }
+}
+
+#[test]
+fn sharded_runs_are_deterministic_for_a_fixed_shard_count() {
+    // the epoch-sync protocol reads cross-shard signals in shard-index
+    // order at barriers, so thread scheduling must never leak into the
+    // results — including through the shared cloud pool
+    let run = || {
+        let c = cfg("cloud_only", "xavier-nx*2,jetson-tx2,jetson-nano", 4242);
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let mut g = gens(&c, &fleet, 8, 25.0, "none", 5000);
+        let opts = FleetOpts {
+            des: DesOpts {
+                batch_window_s: 0.004,
+                cloud_batch_window_s: 0.005,
+                ..DesOpts::default()
+            },
+            ..FleetOpts::default()
+        };
+        serve_fleet_sharded(&mut fleet, &mut g, 20, &opts, 3)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.offered, b.offered);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.goodput, b.goodput);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.cloud_invocations, b.cloud_invocations);
+    assert_eq!(a.serve.e2e_ms.mean().to_bits(), b.serve.e2e_ms.mean().to_bits());
+    assert_eq!(a.serve.eti_mj.mean().to_bits(), b.serve.eti_mj.mean().to_bits());
+    for (x, y) in a.per_device.iter().zip(&b.per_device) {
+        assert_eq!(x.served, y.served, "{}", x.name);
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{}", x.name);
+    }
+}
+
+/// The headline scale demonstration: 1,000,000 tasks over a 100-device
+/// fleet through 4 shards with streaming telemetry. The run never
+/// materializes a report vector — telemetry lives in four quantile
+/// sketches (a few hundred buckets each) plus per-device and per-class
+/// counters, so resident memory is bounded by the fleet size, not the
+/// task count. Run it manually:
+///
+/// ```text
+/// cargo test --release --test sharded_engine million_tasks -- --ignored --nocapture
+/// ```
+#[test]
+#[ignore = "minutes-long scale demonstration; run with --release -- --ignored"]
+fn million_tasks_on_a_hundred_devices_in_bounded_memory() {
+    let c = cfg("edge_only", "xavier-nx*34,jetson-tx2*33,jetson-nano*33", 1);
+    let mut fleet = Fleet::from_config(&c).unwrap();
+    assert_eq!(fleet.len(), 100);
+    let streams = 200;
+    let per_stream = 5_000; // 200 streams × 5k tasks = 1M offered
+    let mut g = gens(&c, &fleet, streams, 20.0, "250", 9000);
+    let opts = FleetOpts {
+        admission: Admission::Shed,
+        ..FleetOpts::default()
+    };
+    let s = serve_fleet_streaming(&mut fleet, &mut g, per_stream, &opts, 4);
+
+    assert_eq!(s.shards, 4);
+    assert_eq!(s.offered, 1_000_000);
+    assert_eq!(s.offered, s.completed + s.shed);
+    assert_eq!(s.telemetry.e2e_ms.count() as usize, s.completed);
+    assert_eq!(s.per_device.len(), 100);
+    let dev_served: usize = s.per_device.iter().map(|d| d.served).sum();
+    assert_eq!(dev_served, s.completed);
+
+    // the bounded-memory claim, stated as a bound: all four sketches
+    // together hold a few thousand buckets regardless of task count
+    let buckets = s.telemetry.e2e_ms.buckets()
+        + s.telemetry.tti_ms.buckets()
+        + s.telemetry.queue_wait_ms.buckets()
+        + s.telemetry.eti_mj.buckets();
+    assert!(
+        buckets < 8_192,
+        "sketch footprint must stay bounded, got {buckets} buckets for {} tasks",
+        s.completed
+    );
+}

@@ -1,0 +1,179 @@
+//! Streaming-telemetry gates for the constant-memory `StreamingSink`
+//! (`rust/src/telemetry/sink.rs`):
+//!
+//! * a property check that the DDSketch-style quantile estimates stay
+//!   inside the sketch's relative-error bound of the exact `Samples`
+//!   percentiles on randomized workloads
+//! * exact counter equality between `serve_fleet` (collected reports)
+//!   and `serve_fleet_streaming` at `shards = 1` — both drive the
+//!   identical unsharded kernel trace, so every integer counter must
+//!   agree exactly and every sketch must bracket the exact percentiles
+
+use dvfo::configx::Config;
+use dvfo::coordinator::fleet::{serve_fleet, serve_fleet_streaming, Admission, Fleet, FleetOpts};
+use dvfo::coordinator::{FleetSummary, StreamSummary};
+use dvfo::proptest_mini::{check, f64_in, vec_of};
+use dvfo::telemetry::sink::QuantileSketch;
+use dvfo::util::Samples;
+use dvfo::workload::{Arrivals, SloClass, TaskGen};
+
+/// Error-envelope check for a sketch estimate of percentile `p`: the
+/// estimate must land within the sketch's relative error of the two
+/// order statistics bracketing the rank (which covers both the
+/// nearest-rank and interpolating percentile conventions).
+fn sketch_brackets_exact(xs: &[f64], sk: &QuantileSketch, p: f64) -> Result<(), String> {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let a = sorted[rank.floor() as usize];
+    let b = sorted[rank.ceil() as usize];
+    let (lo, hi) = (a.min(b), a.max(b));
+    let err = sk.relative_error();
+    let est = sk.percentile(p);
+    let lo_bound = lo * (1.0 - err) - 1e-9;
+    let hi_bound = hi * (1.0 + err) + 1e-9;
+    if est >= lo_bound && est <= hi_bound {
+        Ok(())
+    } else {
+        Err(format!(
+            "p{p}: sketch estimate {est} outside [{lo_bound}, {hi_bound}] \
+             (exact bracket [{lo}, {hi}])"
+        ))
+    }
+}
+
+#[test]
+fn sketch_percentiles_stay_inside_the_error_bound_on_random_workloads() {
+    check("sketch vs exact", 0xD05E, 60, vec_of(f64_in(0.0, 5000.0), 2, 400), |xs| {
+        let mut sk = QuantileSketch::default();
+        let mut exact = Samples::new();
+        for &x in xs {
+            sk.push(x);
+            exact.push(x);
+        }
+        if sk.count() as usize != exact.len() {
+            return Err("sketch lost samples".into());
+        }
+        // exact moments ride alongside the sketch
+        if (sk.mean() - exact.mean()).abs() > 1e-9 * (1.0 + exact.mean().abs()) {
+            return Err(format!("mean drifted: {} vs {}", sk.mean(), exact.mean()));
+        }
+        for p in [0.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            sketch_brackets_exact(xs, &sk, p)?;
+        }
+        Ok(())
+    });
+}
+
+fn overload_cfg() -> Config {
+    let mut c = Config::default();
+    c.policy = "edge_only".into();
+    c.fleet = "jetson-nano*2".into();
+    c.seed = 11;
+    c
+}
+
+fn overload_gens(c: &Config, fleet: &Fleet) -> Vec<TaskGen> {
+    let slo = SloClass::parse("200").unwrap();
+    (0..16)
+        .map(|s| {
+            TaskGen::new(
+                &c.model,
+                fleet.devices[0].env.dataset,
+                Arrivals::Poisson { rate: 10.0 },
+                3000 + s as u64,
+            )
+            .unwrap()
+            .with_slo(slo)
+        })
+        .collect()
+}
+
+/// Run the identical overloaded workload through the collected and the
+/// streaming (shards = 1) paths and pin every shared counter.
+fn run_pair(admission: Admission) -> (FleetSummary, StreamSummary) {
+    let opts = FleetOpts {
+        admission,
+        ..FleetOpts::default()
+    };
+
+    let c = overload_cfg();
+    let mut fleet = Fleet::from_config(&c).unwrap();
+    let mut g = overload_gens(&c, &fleet);
+    let collected = serve_fleet(&mut fleet, &mut g, 6, &opts);
+
+    let c = overload_cfg();
+    let mut fleet = Fleet::from_config(&c).unwrap();
+    let mut g = overload_gens(&c, &fleet);
+    let streamed = serve_fleet_streaming(&mut fleet, &mut g, 6, &opts, 1);
+
+    assert_eq!(streamed.shards, 1);
+    assert_eq!(collected.offered, streamed.offered);
+    assert_eq!(collected.completed, streamed.completed);
+    assert_eq!(collected.shed, streamed.shed);
+    assert_eq!(collected.downgraded, streamed.downgraded);
+    assert_eq!(collected.slo_violations, streamed.slo_violations);
+    assert_eq!(collected.goodput, streamed.goodput);
+    assert_eq!(collected.rerouted, streamed.rerouted);
+    assert_eq!(collected.migrated, streamed.migrated);
+    assert_eq!(collected.cloud_invocations, streamed.cloud_invocations);
+    assert_eq!(collected.events, streamed.events);
+    assert_eq!(collected.offered, collected.completed + collected.shed);
+
+    // the sink's own counters agree with the fleet fold
+    let t = &streamed.telemetry;
+    assert_eq!(t.completed, collected.completed);
+    assert_eq!(t.violations, collected.slo_violations);
+    assert_eq!(t.goodput, collected.goodput);
+    assert_eq!(t.e2e_ms.count() as usize, collected.completed);
+    let class_completed: usize = t.per_class.values().map(|c| c.completed).sum();
+    assert_eq!(class_completed, collected.completed);
+
+    // per-device: integer counters exact; energy is the same f64 set
+    // summed in completion order instead of arrival order, so compare
+    // to addition-reordering slop only
+    assert_eq!(collected.per_device.len(), streamed.per_device.len());
+    for (a, b) in collected.per_device.iter().zip(&streamed.per_device) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.served, b.served, "{}", a.name);
+        assert_eq!(a.violations, b.violations, "{}", a.name);
+        assert!(
+            (a.energy_j - b.energy_j).abs() <= 1e-9 * (1.0 + a.energy_j.abs()),
+            "{}: energy {} vs {}",
+            a.name,
+            a.energy_j,
+            b.energy_j
+        );
+    }
+
+    (collected, streamed)
+}
+
+#[test]
+fn streaming_counters_match_collected_counters_on_the_identical_trace() {
+    // without admission the overload drives real deadline misses; with
+    // shed admission it drives real sheds — both paths must agree on
+    // every counter either way
+    let (no_admission, _) = run_pair(Admission::Off);
+    assert!(no_admission.slo_violations > 0, "overload must produce violations");
+    let (shed, _) = run_pair(Admission::Shed);
+    assert!(shed.shed > 0, "overload must produce sheds");
+}
+
+#[test]
+fn streaming_sketches_bracket_the_exact_percentiles_of_a_real_run() {
+    let (collected, streamed) = run_pair(Admission::Shed);
+    let t = &streamed.telemetry;
+    for (name, samples, sketch) in [
+        ("e2e", &collected.serve.e2e_ms, &t.e2e_ms),
+        ("tti", &collected.serve.tti_ms, &t.tti_ms),
+        ("queue", &collected.serve.queue_wait_ms, &t.queue_wait_ms),
+        ("eti", &collected.serve.eti_mj, &t.eti_mj),
+    ] {
+        assert_eq!(sketch.count() as usize, samples.len(), "{name}");
+        for p in [50.0, 95.0, 99.0] {
+            sketch_brackets_exact(samples.values(), sketch, p)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+}
