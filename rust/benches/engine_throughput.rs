@@ -1,9 +1,16 @@
 //! §Perf — whole-engine throughput bench: drives the unified DES kernel
 //! (`src/coordinator/engine.rs`) end-to-end on pinned reference configs
 //! and reports **events/sec** and wall-clock, recording the full
-//! per-iteration trajectory into `BENCH_6.json` (CI uploads it as an
+//! per-iteration trajectory into `BENCH_7.json` (CI uploads it as an
 //! artifact; the numbers are recorded, never gated, so shared-runner
 //! noise cannot break the build).
+//!
+//! Every pinned config runs as a **heap-vs-calendar pair** (suffixes
+//! `-heap` / `-calendar`): same fleet, streams, and seeds, differing
+//! only in the event-scheduler backend, so the artifact directly
+//! records the calendar queue's speedup (or lack of it) on this host.
+//! The two backends must process the identical event count — asserted
+//! per pair, the same contract `rust/tests/sched_parity.rs` gates.
 //!
 //! Pinned configs:
 //!   * `ref-1dev`  — one xavier-nx, cloud-heavy traffic through batched
@@ -19,16 +26,18 @@
 //!
 //! `DVFO_BENCH_FULL=1` scales the task counts up ~10×;
 //! `DVFO_BENCH_JSON=path` overrides the output path (default
-//! `BENCH_6.json` in the working directory).
+//! `BENCH_7.json` in the working directory).
 
 use dvfo::configx::Config;
 use dvfo::coordinator::des::DesOpts;
 use dvfo::coordinator::fleet::{serve_fleet_sharded, Admission, Fleet, FleetOpts};
+use dvfo::coordinator::SchedKind;
 use dvfo::workload::{Arrivals, SloClass, TaskGen};
 use std::time::Instant;
 
+#[derive(Clone)]
 struct RefCase {
-    name: &'static str,
+    name: String,
     policy: &'static str,
     fleet: &'static str,
     streams: usize,
@@ -51,7 +60,7 @@ fn cases(full: bool) -> Vec<RefCase> {
     };
     vec![
         RefCase {
-            name: "ref-1dev",
+            name: "ref-1dev".into(),
             policy: "cloud_only",
             fleet: "xavier-nx",
             streams: 8,
@@ -70,7 +79,7 @@ fn cases(full: bool) -> Vec<RefCase> {
             },
         },
         RefCase {
-            name: "ref-3dev",
+            name: "ref-3dev".into(),
             policy: "edge_only",
             fleet: "xavier-nx,jetson-tx2,jetson-nano",
             streams: 9,
@@ -88,7 +97,7 @@ fn cases(full: bool) -> Vec<RefCase> {
             },
         },
         RefCase {
-            name: "ref-4dev-s1",
+            name: "ref-4dev-s1".into(),
             policy: "cloud_only",
             fleet: "xavier-nx*2,jetson-tx2,jetson-nano",
             streams: 8,
@@ -99,7 +108,7 @@ fn cases(full: bool) -> Vec<RefCase> {
             opts: shard_opts(),
         },
         RefCase {
-            name: "ref-4dev-s4",
+            name: "ref-4dev-s4".into(),
             policy: "cloud_only",
             fleet: "xavier-nx*2,jetson-tx2,jetson-nano",
             streams: 8,
@@ -152,47 +161,64 @@ fn main() {
     let full = std::env::var("DVFO_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
     let iters = if full { 10 } else { 5 };
     let out_path =
-        std::env::var("DVFO_BENCH_JSON").unwrap_or_else(|_| "BENCH_6.json".to_string());
+        std::env::var("DVFO_BENCH_JSON").unwrap_or_else(|_| "BENCH_7.json".to_string());
 
     let mut case_jsons = Vec::new();
-    for c in cases(full) {
-        // warmup (allocator, page cache, branch predictors)
-        let (events, completed, _) = run_once(&c);
-        let mut walls = Vec::with_capacity(iters);
-        for _ in 0..iters {
-            let (e, done, wall) = run_once(&c);
-            assert_eq!(e, events, "pinned config must be deterministic");
-            assert_eq!(done, completed, "pinned config must be deterministic");
-            walls.push(wall);
+    for base in cases(full) {
+        // heap-vs-calendar pair: same config, same seeds, only the
+        // scheduler backend differs — and the event count must not
+        let mut pair_events: Option<usize> = None;
+        for kind in [SchedKind::Heap, SchedKind::Calendar] {
+            let mut c = base.clone();
+            c.name = format!("{}-{}", base.name, kind.as_str());
+            c.opts.des.sched = kind;
+            // warmup (allocator, page cache, branch predictors)
+            let (events, completed, _) = run_once(&c);
+            match pair_events {
+                None => pair_events = Some(events),
+                Some(he) => assert_eq!(
+                    he, events,
+                    "heap and calendar must process identical event counts"
+                ),
+            }
+            let mut walls = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let (e, done, wall) = run_once(&c);
+                assert_eq!(e, events, "pinned config must be deterministic");
+                assert_eq!(done, completed, "pinned config must be deterministic");
+                walls.push(wall);
+            }
+            let mean = walls.iter().sum::<f64>() / walls.len() as f64;
+            let best = walls.iter().cloned().fold(f64::INFINITY, f64::min);
+            let eps_mean = events as f64 / mean;
+            let eps_best = events as f64 / best;
+            println!(
+                "{:<21} shards={} events={events:<7} tasks={completed:<5} iters={iters} \
+                 mean={:.3} ms  best={:.3} ms  events/sec mean={:.0} best={:.0}",
+                c.name,
+                c.shards,
+                mean * 1e3,
+                best * 1e3,
+                eps_mean,
+                eps_best,
+            );
+            let trajectory: Vec<String> = walls.iter().map(|&w| json_num(w)).collect();
+            case_jsons.push(format!(
+                "{{\"name\":\"{}\",\"sched\":\"{}\",\"shards\":{},\"events\":{events},\
+                 \"tasks\":{completed},\
+                 \"iters\":{iters},\"mean_s\":{},\"best_s\":{},\
+                 \"events_per_sec_mean\":{},\"events_per_sec_best\":{},\
+                 \"wall_s_trajectory\":[{}]}}",
+                c.name,
+                kind.as_str(),
+                c.shards,
+                json_num(mean),
+                json_num(best),
+                json_num(eps_mean),
+                json_num(eps_best),
+                trajectory.join(","),
+            ));
         }
-        let mean = walls.iter().sum::<f64>() / walls.len() as f64;
-        let best = walls.iter().cloned().fold(f64::INFINITY, f64::min);
-        let eps_mean = events as f64 / mean;
-        let eps_best = events as f64 / best;
-        println!(
-            "{:<12} shards={} events={events:<7} tasks={completed:<5} iters={iters} \
-             mean={:.3} ms  best={:.3} ms  events/sec mean={:.0} best={:.0}",
-            c.name,
-            c.shards,
-            mean * 1e3,
-            best * 1e3,
-            eps_mean,
-            eps_best,
-        );
-        let trajectory: Vec<String> = walls.iter().map(|&w| json_num(w)).collect();
-        case_jsons.push(format!(
-            "{{\"name\":\"{}\",\"shards\":{},\"events\":{events},\"tasks\":{completed},\
-             \"iters\":{iters},\"mean_s\":{},\"best_s\":{},\
-             \"events_per_sec_mean\":{},\"events_per_sec_best\":{},\
-             \"wall_s_trajectory\":[{}]}}",
-            c.name,
-            c.shards,
-            json_num(mean),
-            json_num(best),
-            json_num(eps_mean),
-            json_num(eps_best),
-            trajectory.join(","),
-        ));
     }
 
     let json = format!(

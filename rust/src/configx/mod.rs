@@ -103,6 +103,11 @@ pub struct Config {
     /// + counters) instead of collecting every per-task report —
     /// bounded RSS for million-task runs.
     pub stream_telemetry: bool,
+    /// Event-scheduler backend for the discrete-event kernel:
+    /// "calendar" (bucketed calendar queue, amortized O(1)) | "heap"
+    /// (binary heap, O(log n)). Both pop events in the identical
+    /// (time, seq) total order, so this is purely a performance knob.
+    pub scheduler: String,
     /// Worker threads for the experiment grid sweeps (1 = serial).
     /// Cells share nothing and seed their own RNGs, so any value
     /// renders byte-identical tables — only the wall clock changes.
@@ -147,6 +152,7 @@ impl Default for Config {
             queue_aware: false,
             shards: 1,
             stream_telemetry: false,
+            scheduler: "calendar".into(),
             threads: 1,
             seed: 0,
             artifacts_dir: "artifacts".into(),
@@ -253,6 +259,7 @@ impl Config {
             "stream_telemetry" => {
                 self.stream_telemetry = v.as_bool().context("expected bool")?
             }
+            "scheduler" => str_field!(scheduler),
             "threads" => self.threads = v.as_usize().context("expected int")?,
             "seed" => self.seed = v.as_f64().context("expected number")? as u64,
             other => bail!("unknown config key `{other}`"),
@@ -333,6 +340,7 @@ impl Config {
                 self.migrate_penalty_ms
             );
         }
+        crate::coordinator::SchedKind::parse(&self.scheduler).context("scheduler spec")?;
         crate::workload::Arrivals::parse(&self.arrivals).context("arrivals spec")?;
         crate::workload::SloClass::parse(&self.slo).context("slo spec")?;
         crate::coordinator::fleet::Router::parse(&self.router).context("router spec")?;
@@ -510,6 +518,19 @@ mod tests {
         let c2 = Config::from_json(&j).unwrap();
         assert_eq!(c2.shards, 2);
         assert!(c2.stream_telemetry);
+    }
+
+    #[test]
+    fn scheduler_field_parses_and_validates() {
+        let mut c = Config::default();
+        assert_eq!(c.scheduler, "calendar");
+        c.set("scheduler", "heap").unwrap();
+        assert_eq!(c.scheduler, "heap");
+        c.set("scheduler", "calendar").unwrap();
+        assert_eq!(c.scheduler, "calendar");
+        assert!(c.set("scheduler", "fibonacci").is_err());
+        let j = Json::parse(r#"{"scheduler": "heap"}"#).unwrap();
+        assert_eq!(Config::from_json(&j).unwrap().scheduler, "heap");
     }
 
     #[test]

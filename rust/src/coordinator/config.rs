@@ -15,6 +15,7 @@
 
 use super::des::DesOpts;
 use super::fleet::{Admission, FleetOpts, Router};
+use super::sched::SchedKind;
 use super::shard::SHARD_EPOCH_S;
 use crate::configx::Config;
 use anyhow::Result;
@@ -35,6 +36,9 @@ pub struct EngineConfig {
     pub cloud_batch_window_s: f64,
     /// maximum jobs per batched cloud invocation
     pub cloud_max_batch: usize,
+    /// event-scheduler backend (heap or calendar queue); both pop in
+    /// the identical (time, seq) order — purely a performance knob
+    pub sched: SchedKind,
     /// fleet dispatch policy
     pub router: Router,
     /// admission policy for deadline-doomed tasks
@@ -66,6 +70,7 @@ impl Default for EngineConfig {
             cloud_slots: des.cloud_slots,
             cloud_batch_window_s: des.cloud_batch_window_s,
             cloud_max_batch: des.cloud_max_batch,
+            sched: des.sched,
             router: fleet.router,
             admission: fleet.admission,
             reroute: fleet.reroute,
@@ -94,6 +99,7 @@ impl EngineConfig {
             cloud_slots: cfg.cloud_slots,
             cloud_batch_window_s: cfg.cloud_batch_window_ms / 1e3,
             cloud_max_batch: cfg.cloud_max_batch,
+            sched: SchedKind::parse(&cfg.scheduler)?,
             router: Router::parse(&cfg.router)?,
             admission: Admission::parse(&cfg.admission)?,
             reroute: cfg.reroute,
@@ -128,6 +134,11 @@ impl EngineConfig {
 
     pub fn cloud_max_batch(mut self, v: usize) -> Self {
         self.cloud_max_batch = v;
+        self
+    }
+
+    pub fn sched(mut self, v: SchedKind) -> Self {
+        self.sched = v;
         self
     }
 
@@ -184,6 +195,7 @@ impl EngineConfig {
             cloud_slots: self.cloud_slots,
             cloud_batch_window_s: self.cloud_batch_window_s,
             cloud_max_batch: self.cloud_max_batch,
+            sched: self.sched,
         }
     }
 
@@ -210,6 +222,7 @@ mod tests {
         let ec = EngineConfig::new()
             .batch_window_s(0.004)
             .cloud_slots(2)
+            .sched(SchedKind::Heap)
             .router(Router::LeastBacklog)
             .admission(Admission::Shed)
             .reroute(true)
@@ -221,6 +234,7 @@ mod tests {
         let fo = ec.fleet_opts();
         assert_eq!(fo.des.batch_window_s, 0.004);
         assert_eq!(fo.des.cloud_slots, 2);
+        assert_eq!(fo.des.sched, SchedKind::Heap);
         assert_eq!(fo.router, Router::LeastBacklog);
         assert_eq!(fo.admission, Admission::Shed);
         assert!(fo.reroute);
@@ -241,6 +255,7 @@ mod tests {
         assert_eq!(fo.des.cloud_slots, legacy.des.cloud_slots);
         assert_eq!(fo.des.cloud_batch_window_s, legacy.des.cloud_batch_window_s);
         assert_eq!(fo.des.cloud_max_batch, legacy.des.cloud_max_batch);
+        assert_eq!(fo.des.sched, legacy.des.sched);
         assert_eq!(fo.router, legacy.router);
         assert_eq!(fo.admission, legacy.admission);
         assert_eq!(fo.reroute, legacy.reroute);

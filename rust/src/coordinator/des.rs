@@ -23,6 +23,7 @@
 
 use super::engine;
 use super::fleet::FleetOpts;
+use super::sched::SchedKind;
 use super::{Coordinator, ServeSummary};
 use crate::workload::TaskGen;
 
@@ -51,6 +52,9 @@ pub struct DesOpts {
     /// maximum jobs per batched cloud invocation (a full batch flushes
     /// before the window closes)
     pub cloud_max_batch: usize,
+    /// event-scheduler backend (`heap` or `calendar`); both produce the
+    /// identical event order, so this is purely a performance knob
+    pub sched: SchedKind,
 }
 
 impl Default for DesOpts {
@@ -61,14 +65,15 @@ impl Default for DesOpts {
             cloud_slots: 4,
             cloud_batch_window_s: 0.0,
             cloud_max_batch: 16,
+            sched: SchedKind::default(),
         }
     }
 }
 
 impl DesOpts {
     /// Build from a run config (`batch_window_ms`, `max_batch`,
-    /// `cloud_slots`, `cloud_batch_window_ms`, `cloud_max_batch` config
-    /// keys / CLI flags).
+    /// `cloud_slots`, `cloud_batch_window_ms`, `cloud_max_batch`,
+    /// `scheduler` config keys / CLI flags).
     pub fn from_config(cfg: &crate::configx::Config) -> Self {
         Self {
             batch_window_s: cfg.batch_window_ms / 1e3,
@@ -76,6 +81,10 @@ impl DesOpts {
             cloud_slots: cfg.cloud_slots,
             cloud_batch_window_s: cfg.cloud_batch_window_ms / 1e3,
             cloud_max_batch: cfg.cloud_max_batch,
+            // `Config::validate` rejects unknown schedulers before any
+            // serving path reaches this conversion; fall back to the
+            // default rather than panicking on an unvalidated config
+            sched: SchedKind::parse(&cfg.scheduler).unwrap_or_default(),
         }
     }
 }
@@ -126,12 +135,15 @@ mod tests {
         cfg.cloud_slots = 2;
         cfg.cloud_batch_window_ms = 6.0;
         cfg.cloud_max_batch = 7;
+        cfg.scheduler = "heap".into();
         let o = DesOpts::from_config(&cfg);
         assert_eq!(o.batch_window_s, 0.008);
         assert_eq!(o.max_batch, 5);
         assert_eq!(o.cloud_slots, 2);
         assert_eq!(o.cloud_batch_window_s, 0.006);
         assert_eq!(o.cloud_max_batch, 7);
+        assert_eq!(o.sched, SchedKind::Heap);
+        assert_eq!(DesOpts::default().sched, SchedKind::Calendar);
     }
 
     #[test]

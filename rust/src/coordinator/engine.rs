@@ -5,7 +5,8 @@
 //! (N edges, shared cloud pool) each carried their own copy of the
 //! event machinery — two heaps, two `Job` structs, two state machines
 //! that had to evolve in lockstep. This module is the merge: it owns
-//! the time-ordered event heap with FIFO `seq` tiebreaks, the
+//! the time-ordered event scheduler (`coordinator::sched` — heap or
+//! calendar queue, identical `(time, seq)` pop order either way), the
 //! per-device edge queues (priority-aware), the per-device uplink
 //! batching windows, and the bounded **shared** cloud executor pool,
 //! parameterized over N devices. `serve_multistream` delegates here
@@ -70,14 +71,14 @@
 //! with all queues, windows, and EWMAs intact.
 
 use super::fleet::{Admission, FleetOpts, Router};
+use super::sched::Sched;
 use super::{Coordinator, LoadSignals};
 use crate::coordinator::env::TaskReport;
 use crate::perfmodel::CLOUD_DISPATCH_OVERHEAD_S;
 use crate::telemetry::sink::{JobMeta, ReportSink};
 use crate::util::{Ewma, Running, Samples};
 use crate::workload::{Task, TaskGen};
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Ev {
@@ -97,80 +98,6 @@ enum Ev {
     /// a migrated task finished its transfer and re-enqueues on the
     /// destination device's edge queue
     Migrate { dev: usize, job: usize },
-}
-
-/// Heap entry; the `seq` tiebreak makes simultaneous events FIFO and the
-/// whole simulation deterministic.
-#[derive(Clone, Debug)]
-struct Event {
-    time: f64,
-    seq: u64,
-    ev: Ev,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest first.
-        // total_cmp gives NaN a fixed place in the order instead of
-        // silently collapsing it to Equal, so a NaN time can never
-        // reorder the heap nondeterministically.
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-struct EventQueue {
-    heap: BinaryHeap<Event>,
-    seq: u64,
-}
-
-impl EventQueue {
-    fn new() -> Self {
-        Self {
-            heap: BinaryHeap::new(),
-            seq: 0,
-        }
-    }
-
-    fn push(&mut self, time: f64, ev: Ev) {
-        self.heap.push(Event {
-            time,
-            seq: self.seq,
-            ev,
-        });
-        self.seq += 1;
-    }
-
-    fn pop(&mut self) -> Option<Event> {
-        self.heap.pop()
-    }
-
-    /// Timestamp of the next event without consuming it — the epoch
-    /// runner peeks before popping so an event at or past the epoch
-    /// boundary stays queued for the next epoch.
-    fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.time)
-    }
-
-    fn is_empty(&self) -> bool {
-        self.heap.is_empty()
-    }
 }
 
 /// One open batching window — the uplink windows (one per device) and
@@ -358,6 +285,14 @@ pub struct EngineResult {
     /// discrete events processed by the kernel loop (the denominator of
     /// the `engine_throughput` bench's events/sec figure)
     pub events: usize,
+    /// generation-stale `BatchClose`/`CloudBatchClose` events popped and
+    /// discarded (their window already cap-flushed) — tombstone traffic
+    /// the scheduler carried for nothing
+    pub stale_closes: usize,
+    /// batching windows actually frozen (uplink + cloud); every stale
+    /// close was scheduled by some flushed window, so
+    /// `stale_closes <= window_flushes` always
+    pub window_flushes: usize,
 }
 
 enum Verdict {
@@ -367,7 +302,7 @@ enum Verdict {
 }
 
 struct EngineState {
-    q: EventQueue,
+    q: Sched<Ev>,
     jobs: Vec<Job>,
     /// job slots retired by `finish` — recycled on the next admission,
     /// so the table size tracks in-flight (not lifetime) task count
@@ -428,12 +363,18 @@ struct EngineState {
     per_dev_migrated_in: Vec<usize>,
     per_dev_migrated_out: Vec<usize>,
     events: usize,
+    stale_closes: usize,
+    window_flushes: usize,
 }
 
 impl EngineState {
-    fn new(devices: usize, capacity: usize, opts: &FleetOpts) -> Self {
+    /// `sched_capacity` seeds the event scheduler for its steady-state
+    /// population (one pending arrival per stream plus per-device and
+    /// cloud-slot completion timers), mirroring the `jobs` reservation
+    /// below — neither structure should realloc through warmup.
+    fn new(devices: usize, capacity: usize, sched_capacity: usize, opts: &FleetOpts) -> Self {
         Self {
-            q: EventQueue::new(),
+            q: Sched::with_capacity(opts.des.sched, sched_capacity),
             // slots are recycled at completion, so the table only needs
             // in-flight capacity; cap the reservation so a million-task
             // run does not pre-commit a million slots
@@ -469,6 +410,8 @@ impl EngineState {
             per_dev_migrated_in: vec![0; devices],
             per_dev_migrated_out: vec![0; devices],
             events: 0,
+            stale_closes: 0,
+            window_flushes: 0,
         }
     }
 
@@ -737,6 +680,7 @@ impl EngineState {
         if self.devs[dev].open_batch.is_empty() {
             return;
         }
+        self.window_flushes += 1;
         let b = self.acquire_batch_slot();
         // swap the window's members into the recycled slot; the window
         // inherits the slot's cleared allocation for its next batch
@@ -859,6 +803,7 @@ impl EngineState {
         if self.cloud_open.is_empty() {
             return;
         }
+        self.window_flushes += 1;
         let b = self.acquire_cloud_slot();
         let mut slot = std::mem::take(&mut self.cloud_batches[b]);
         self.cloud_open.freeze_into(&mut slot);
@@ -1006,7 +951,11 @@ impl<'a> EngineCore<'a> {
             coord.policy.set_training(false);
         }
         let streams = gens.len();
-        let mut state = EngineState::new(devices.len(), streams * per_stream, opts);
+        // steady-state scheduler population: one pending arrival per
+        // stream, a completion/window timer or two per device, one
+        // CloudDone per busy executor slot
+        let sched_capacity = streams + devices.len() + opts.des.cloud_slots;
+        let mut state = EngineState::new(devices.len(), streams * per_stream, sched_capacity, opts);
 
         // prime every stream with its first arrival
         let mut next_task: Vec<Option<Task>> = Vec::with_capacity(streams);
@@ -1082,13 +1031,15 @@ impl<'a> EngineCore<'a> {
         let next_task = &mut self.next_task;
         let remaining = &mut self.remaining;
         loop {
-            let Some(t_next) = state.q.peek_time() else {
-                break;
-            };
-            if t_stop.is_finite() && t_next >= t_stop {
+            // fused peek+pop: one scheduler traversal either yields the
+            // next event (strictly before the boundary), pauses at the
+            // epoch boundary, or observes the drained queue
+            let Some(ev) = state.q.pop_before(t_stop) else {
+                if state.q.is_empty() {
+                    break;
+                }
                 return false;
-            }
-            let ev = state.q.pop().expect("peeked event vanished");
+            };
             let now = ev.time;
             // the kernel invariant the heap ordering guarantees: events
             // pop in nondecreasing time order across every device and
@@ -1191,6 +1142,10 @@ impl<'a> EngineCore<'a> {
                 Ev::BatchClose { dev, generation } => {
                     if generation == state.devs[dev].open_batch.generation {
                         state.flush_open_batch(devices, dev, now);
+                    } else {
+                        // tombstone: the window this close was armed for
+                        // already cap-flushed
+                        state.stale_closes += 1;
                     }
                 }
                 Ev::UplinkDone { dev, batch } => {
@@ -1207,6 +1162,8 @@ impl<'a> EngineCore<'a> {
                 Ev::CloudBatchClose { generation } => {
                     if generation == state.cloud_open.generation {
                         state.flush_cloud_batch(now);
+                    } else {
+                        state.stale_closes += 1;
                     }
                 }
                 Ev::CloudDone { batch } => {
@@ -1273,6 +1230,8 @@ impl<'a> EngineCore<'a> {
             per_dev_migrated_in: state.per_dev_migrated_in,
             per_dev_migrated_out: state.per_dev_migrated_out,
             events: state.events,
+            stale_closes: state.stale_closes,
+            window_flushes: state.window_flushes,
         }
     }
 }
@@ -1308,23 +1267,26 @@ mod tests {
     use crate::configx::Config;
     use crate::coordinator::des::DesOpts;
     use crate::coordinator::fleet::{serve_fleet, Fleet};
+    use crate::coordinator::sched::{Event, SchedKind};
     use crate::workload::Arrivals;
 
     #[test]
-    fn event_heap_orders_by_time_then_seq() {
-        let mut q = EventQueue::new();
-        q.push(2.0, Ev::Arrival { stream: 0 });
-        q.push(1.0, Ev::Arrival { stream: 1 });
-        q.push(1.0, Ev::Arrival { stream: 2 });
-        q.push(0.5, Ev::Arrival { stream: 3 });
-        let order: Vec<usize> = std::iter::from_fn(|| {
-            q.pop().map(|e| match e.ev {
-                Ev::Arrival { stream } => stream,
-                _ => unreachable!(),
+    fn event_queue_orders_by_time_then_seq() {
+        for kind in [SchedKind::Heap, SchedKind::Calendar] {
+            let mut q: Sched<Ev> = Sched::new(kind);
+            q.push(2.0, Ev::Arrival { stream: 0 });
+            q.push(1.0, Ev::Arrival { stream: 1 });
+            q.push(1.0, Ev::Arrival { stream: 2 });
+            q.push(0.5, Ev::Arrival { stream: 3 });
+            let order: Vec<usize> = std::iter::from_fn(|| {
+                q.pop().map(|e| match e.ev {
+                    Ev::Arrival { stream } => stream,
+                    _ => unreachable!(),
+                })
             })
-        })
-        .collect();
-        assert_eq!(order, vec![3, 1, 2, 0]);
+            .collect();
+            assert_eq!(order, vec![3, 1, 2, 0], "{kind:?}");
+        }
     }
 
     #[test]
@@ -1341,35 +1303,40 @@ mod tests {
             300,
             vec_of(f64_in(0.0, 4.0), 1, 64),
             |times| {
-                let mut q = EventQueue::new();
-                let quantized: Vec<f64> =
-                    times.iter().map(|t| (t * 4.0).floor() / 4.0).collect();
-                for (i, &t) in quantized.iter().enumerate() {
-                    let ev = match i % 4 {
-                        0 => Ev::Arrival { stream: i },
-                        1 => Ev::EdgeDone { dev: i % 3, job: i },
-                        2 => Ev::UplinkDone {
-                            dev: i % 3,
-                            batch: i,
-                        },
-                        _ => Ev::CloudDone { batch: i },
-                    };
-                    q.push(t, ev);
-                }
-                let mut prev: Option<Event> = None;
-                while let Some(ev) = q.pop() {
-                    if let Some(p) = prev {
-                        if ev.time < p.time {
-                            return Err(format!("time went backwards: {} < {}", ev.time, p.time));
-                        }
-                        if ev.time == p.time && ev.seq < p.seq {
-                            return Err(format!(
-                                "FIFO tiebreak violated at t={}: seq {} before {}",
-                                ev.time, p.seq, ev.seq
-                            ));
-                        }
+                for kind in [SchedKind::Heap, SchedKind::Calendar] {
+                    let mut q: Sched<Ev> = Sched::new(kind);
+                    let quantized: Vec<f64> =
+                        times.iter().map(|t| (t * 4.0).floor() / 4.0).collect();
+                    for (i, &t) in quantized.iter().enumerate() {
+                        let ev = match i % 4 {
+                            0 => Ev::Arrival { stream: i },
+                            1 => Ev::EdgeDone { dev: i % 3, job: i },
+                            2 => Ev::UplinkDone {
+                                dev: i % 3,
+                                batch: i,
+                            },
+                            _ => Ev::CloudDone { batch: i },
+                        };
+                        q.push(t, ev);
                     }
-                    prev = Some(ev);
+                    let mut prev: Option<Event<Ev>> = None;
+                    while let Some(ev) = q.pop() {
+                        if let Some(p) = prev {
+                            if ev.time < p.time {
+                                return Err(format!(
+                                    "{kind:?}: time went backwards: {} < {}",
+                                    ev.time, p.time
+                                ));
+                            }
+                            if ev.time == p.time && ev.seq < p.seq {
+                                return Err(format!(
+                                    "{kind:?}: FIFO tiebreak violated at t={}: seq {} before {}",
+                                    ev.time, p.seq, ev.seq
+                                ));
+                            }
+                        }
+                        prev = Some(ev);
+                    }
                 }
                 Ok(())
             },
@@ -1379,20 +1346,22 @@ mod tests {
     #[test]
     fn nan_event_time_cannot_reorder_real_events() {
         // total_cmp gives NaN a fixed slot (after +inf in ascending order,
-        // i.e. popped last from the min-ordered heap) instead of making
-        // comparisons against it nondeterministic.
-        let mut q = EventQueue::new();
-        q.push(f64::NAN, Ev::Arrival { stream: 0 });
-        q.push(1.0, Ev::Arrival { stream: 1 });
-        q.push(2.0, Ev::Arrival { stream: 2 });
-        let order: Vec<usize> = std::iter::from_fn(|| {
-            q.pop().map(|e| match e.ev {
-                Ev::Arrival { stream } => stream,
-                _ => unreachable!(),
+        // i.e. popped last from the min-ordered scheduler) instead of
+        // making comparisons against it nondeterministic.
+        for kind in [SchedKind::Heap, SchedKind::Calendar] {
+            let mut q: Sched<Ev> = Sched::new(kind);
+            q.push(f64::NAN, Ev::Arrival { stream: 0 });
+            q.push(1.0, Ev::Arrival { stream: 1 });
+            q.push(2.0, Ev::Arrival { stream: 2 });
+            let order: Vec<usize> = std::iter::from_fn(|| {
+                q.pop().map(|e| match e.ev {
+                    Ev::Arrival { stream } => stream,
+                    _ => unreachable!(),
+                })
             })
-        })
-        .collect();
-        assert_eq!(order, vec![1, 2, 0]);
+            .collect();
+            assert_eq!(order, vec![1, 2, 0], "{kind:?}");
+        }
     }
 
     #[test]
@@ -1492,7 +1461,7 @@ mod tests {
         // device is known to offload and the shared pool is saturated,
         // the completion estimate must exceed the pure edge backlog.
         let opts = FleetOpts::default();
-        let mut st = EngineState::new(1, 4, &opts);
+        let mut st = EngineState::new(1, 4, 8, &opts);
         st.devs[0].residency.push(0.1);
         let edge_only = st.est_completion_s(0).unwrap();
         st.devs[0].xi.push(1.0);
@@ -1510,7 +1479,7 @@ mod tests {
 
     #[test]
     fn cold_start_estimate_is_none() {
-        let st = EngineState::new(2, 4, &FleetOpts::default());
+        let st = EngineState::new(2, 4, 8, &FleetOpts::default());
         assert!(st.est_completion_s(0).is_none());
         assert!(st.est_completion_s(1).is_none());
     }
@@ -1519,7 +1488,7 @@ mod tests {
     fn sibling_scan_picks_the_cheapest_feasible_device() {
         // dev0 is the (overloaded) routed device; dev1 and dev2 are
         // feasible with different estimates; dev3 blows the deadline.
-        let mut st = EngineState::new(4, 4, &FleetOpts::default());
+        let mut st = EngineState::new(4, 4, 8, &FleetOpts::default());
         st.devs[0].residency.push(1.0);
         st.devs[1].residency.push(0.2);
         st.devs[2].residency.push(0.05);
@@ -1537,7 +1506,7 @@ mod tests {
 
     #[test]
     fn cold_sibling_counts_as_feasible_with_zero_estimate() {
-        let mut st = EngineState::new(3, 4, &FleetOpts::default());
+        let mut st = EngineState::new(3, 4, 8, &FleetOpts::default());
         st.devs[0].residency.push(1.0);
         st.devs[1].residency.push(0.2);
         // dev2 never started a task: est None -> treated as 0, wins
@@ -1551,7 +1520,7 @@ mod tests {
             migrate_penalty_s: 0.002,
             ..FleetOpts::default()
         };
-        let mut st = EngineState::new(2, 8, &opts);
+        let mut st = EngineState::new(2, 8, 8, &opts);
         st.devs[0].residency.push(0.1);
         st.devs[1].residency.push(0.02);
         // six jobs queued on dev0 (jobs carry no reports yet — only the
@@ -1619,7 +1588,7 @@ mod tests {
             migrate_threshold_s: f64::INFINITY,
             ..FleetOpts::default()
         };
-        let mut st = EngineState::new(2, 4, &opts);
+        let mut st = EngineState::new(2, 4, 8, &opts);
         st.devs[0].residency.push(10.0);
         st.rebalance(0.5);
         assert_eq!(st.migrated, 0);
@@ -1628,7 +1597,7 @@ mod tests {
 
     #[test]
     fn batch_slots_are_recycled_through_the_free_list() {
-        let mut st = EngineState::new(1, 4, &FleetOpts::default());
+        let mut st = EngineState::new(1, 4, 8, &FleetOpts::default());
         let a = st.acquire_batch_slot();
         st.batches[a].push(7);
         let members = std::mem::take(&mut st.batches[a]);
@@ -1743,6 +1712,60 @@ mod tests {
     }
 
     #[test]
+    fn stale_closes_are_counted_and_bounded_by_flushes() {
+        // Long windows with tiny size caps make nearly every window
+        // cap-flush before its close timer fires, stranding the timer
+        // as a tombstone. Every stale close was armed by some window
+        // that eventually flushed, so the count is bounded by the flush
+        // count — and both counters must agree across schedulers.
+        let run = |kind: SchedKind| {
+            let mut cfg = Config::default();
+            cfg.policy = "cloud_only".into();
+            cfg.seed = 99;
+            let mut fleet = Fleet::from_config(&cfg).unwrap();
+            let mut gens: Vec<TaskGen> = (0..4)
+                .map(|s| {
+                    TaskGen::new(
+                        &cfg.model,
+                        fleet.devices[0].env.dataset,
+                        Arrivals::Poisson { rate: 60.0 },
+                        300 + s as u64,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let opts = FleetOpts {
+                des: DesOpts {
+                    batch_window_s: 0.5,
+                    max_batch: 2,
+                    cloud_batch_window_s: 0.5,
+                    cloud_max_batch: 2,
+                    cloud_slots: 2,
+                    sched: kind,
+                    ..DesOpts::default()
+                },
+                ..FleetOpts::default()
+            };
+            serve(&mut fleet.devices, &mut gens, 10, &opts)
+        };
+        let heap = run(SchedKind::Heap);
+        let calendar = run(SchedKind::Calendar);
+        for r in [&heap, &calendar] {
+            assert!(r.window_flushes > 0, "batched run must flush windows");
+            assert!(r.stale_closes > 0, "cap flushes must strand close timers");
+            assert!(
+                r.stale_closes <= r.window_flushes,
+                "stale {} > flushes {}",
+                r.stale_closes,
+                r.window_flushes
+            );
+        }
+        assert_eq!(heap.stale_closes, calendar.stale_closes);
+        assert_eq!(heap.window_flushes, calendar.window_flushes);
+        assert_eq!(heap.events, calendar.events);
+    }
+
+    #[test]
     fn window_freeze_swaps_allocations_and_bumps_generation() {
         let mut w = BatchWindow::default();
         assert!(w.join(1));
@@ -1794,7 +1817,7 @@ mod tests {
                     migrate_penalty_s: 0.001,
                     ..FleetOpts::default()
                 };
-                let mut st = EngineState::new(devs, 64, &opts);
+                let mut st = EngineState::new(devs, 64, 8, &opts);
                 let scan = |st: &EngineState, d: usize| {
                     st.devs[d].residency.get().unwrap_or(0.0)
                         * (st.devs[d].edge_queue.len() + st.devs[d].migrating_in) as f64

@@ -295,6 +295,12 @@ pub struct FleetSummary {
     /// discrete events the kernel processed for this run (the
     /// `engine_throughput` bench divides these by wall-clock)
     pub events: usize,
+    /// generation-stale batch-close timers popped and discarded
+    /// (tombstones left behind by size-cap flushes; always ≤
+    /// `window_flushes`)
+    pub stale_closes: usize,
+    /// uplink + cloud batch windows flushed with at least one job
+    pub window_flushes: usize,
 }
 
 /// Empty per-device telemetry rows, one per fleet device in order.
@@ -369,6 +375,8 @@ pub fn serve_fleet(
     summary.migrated = result.migrated;
     summary.migration_latency_s = result.migration_latency_s;
     summary.events = result.events;
+    summary.stale_closes = result.stale_closes;
+    summary.window_flushes = result.window_flushes;
     for (i, d) in summary.per_device.iter_mut().enumerate() {
         // EngineResult::default() (empty run) carries empty vectors
         d.rerouted_in = result.per_dev_rerouted.get(i).copied().unwrap_or(0);
@@ -422,6 +430,8 @@ pub fn serve_fleet_sharded(
         summary.migrated += result.migrated;
         summary.migration_latency_s += result.migration_latency_s;
         summary.events += result.events;
+        summary.stale_closes += result.stale_closes;
+        summary.window_flushes += result.window_flushes;
         for i in 0..o.devices {
             let d = &mut summary.per_device[o.dev_base + i];
             d.rerouted_in += result.per_dev_rerouted.get(i).copied().unwrap_or(0);
@@ -476,6 +486,11 @@ pub struct StreamSummary {
     pub migration_latency_s: f64,
     /// discrete events processed across all shards
     pub events: usize,
+    /// generation-stale batch-close timers popped and discarded across
+    /// all shards (always ≤ `window_flushes`)
+    pub stale_closes: usize,
+    /// uplink + cloud batch windows flushed with at least one job
+    pub window_flushes: usize,
     /// engine shards the run actually used (after clamping)
     pub shards: usize,
 }
@@ -513,6 +528,7 @@ pub fn serve_fleet_streaming(
     let (mut rerouted, mut migrated) = (0, 0);
     let mut migration_latency_s = 0.0;
     let mut events = 0;
+    let (mut stale_closes, mut window_flushes) = (0, 0);
     for o in outcomes {
         telemetry.merge_offset(&o.sink, o.dev_base);
         let result = o.result;
@@ -527,6 +543,8 @@ pub fn serve_fleet_streaming(
         migrated += result.migrated;
         migration_latency_s += result.migration_latency_s;
         events += result.events;
+        stale_closes += result.stale_closes;
+        window_flushes += result.window_flushes;
         for i in 0..o.devices {
             let d = &mut per_device[o.dev_base + i];
             d.rerouted_in += result.per_dev_rerouted.get(i).copied().unwrap_or(0);
@@ -556,6 +574,8 @@ pub fn serve_fleet_streaming(
         migrated,
         migration_latency_s,
         events,
+        stale_closes,
+        window_flushes,
         shards: shards_used,
     }
 }

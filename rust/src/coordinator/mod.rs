@@ -9,10 +9,12 @@ pub mod engine;
 pub mod env;
 pub mod fleet;
 pub mod pipeline;
+pub mod sched;
 pub mod shard;
 
 pub use config::EngineConfig;
 pub use des::{serve_multistream, DesOpts};
+pub use sched::{Sched, SchedKind};
 pub use env::{Decision, EdgeCloudEnv, TaskReport, EXTRACTOR_FRAC};
 pub use fleet::{
     serve_fleet, serve_fleet_sharded, serve_fleet_streaming, Admission, Fleet, FleetOpts,

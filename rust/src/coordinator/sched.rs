@@ -1,0 +1,675 @@
+//! §Perf — pluggable event scheduler for the unified DES engine.
+//!
+//! The engine's future-event set was historically a `BinaryHeap`:
+//! every push/pop is O(log n) with `(f64::total_cmp, seq)` comparator
+//! calls, and the batching-window design (uplink + cloud close timers
+//! after arXiv:2504.14611) plus `Rebalance` ticks floods the queue with
+//! short-horizon timer events — exactly the workload a **calendar
+//! queue** (Brown 1988) turns into amortized O(1). This module makes
+//! the scheduler pluggable behind a sealed [`Sched`] front (enum
+//! dispatch, no dyn): [`SchedKind::Heap`] is the bit-exact historical
+//! scheduler, [`SchedKind::Calendar`] the bucketed one.
+//!
+//! The non-negotiable contract shared by both backends: **identical
+//! pop order for any push sequence** — events pop in ascending
+//! `(time, seq)` order where time compares by `f64::total_cmp` (so
+//! `-NaN < -inf < finite < +inf < +NaN`) and `seq` is the push stamp
+//! that breaks ties FIFO. `rust/tests/sched_parity.rs` drives both
+//! backends with identical randomized interleavings and asserts
+//! bit-identical pop sequences; every golden/parity/determinism gate
+//! therefore passes unchanged under either scheduler.
+//!
+//! Calendar model: a rotating day-array of `n_buckets` buckets keyed
+//! by `floor(time / width) % n_buckets`. A cursor (`cur_day`) walks
+//! the days; buckets sort lazily (first access after a push), and
+//! events more than one bucket-year (`n_buckets × width`) past the
+//! promotion horizon — plus every non-finite timestamp — live in an
+//! overflow list that each pop compares against the bucket candidate
+//! by the exact `(time, seq)` key, so correctness never depends on
+//! promotion timing. Occupancy drift (> 2 events/bucket, or < 1/4)
+//! doubles/halves the bucket count and recomputes the width from the
+//! observed event span. In steady state nothing resizes and bucket
+//! `Vec`s recycle their capacity: pushes and pops are allocation-free.
+
+use anyhow::{bail, Result};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Which backend schedules the engine's future events.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedKind {
+    /// Binary heap — O(log n) push/pop, the historical scheduler.
+    Heap,
+    /// Calendar queue — amortized O(1), the default.
+    #[default]
+    Calendar,
+}
+
+impl SchedKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "heap" => SchedKind::Heap,
+            "calendar" => SchedKind::Calendar,
+            other => bail!("unknown scheduler `{other}` (expected `heap` or `calendar`)"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SchedKind::Heap => "heap",
+            SchedKind::Calendar => "calendar",
+        }
+    }
+}
+
+/// A scheduled event: payload `ev` due at `time`, with the push-order
+/// stamp `seq` breaking ties FIFO.
+#[derive(Clone, Copy, Debug)]
+pub struct Event<T> {
+    pub time: f64,
+    pub seq: u64,
+    pub ev: T,
+}
+
+/// The pop order: ascending `(total_cmp(time), seq)`.
+fn cmp_pop<T>(a: &Event<T>, b: &Event<T>) -> Ordering {
+    a.time.total_cmp(&b.time).then_with(|| a.seq.cmp(&b.seq))
+}
+
+impl<T> PartialEq for Event<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl<T> Eq for Event<T> {}
+impl<T> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Event<T> {
+    /// Reversed pop order so `BinaryHeap` (a max-heap) yields the
+    /// earliest event first — `total_cmp` gives NaN timestamps a fixed
+    /// slot instead of poisoning the ordering.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Floor of the calendar bucket count (and the floor a shrink stops at).
+const MIN_BUCKETS: usize = 16;
+/// Bucket width before the first resize observes a real event span.
+const INITIAL_WIDTH: f64 = 1e-3;
+/// Width floor — keeps `time / width` finite for any finite time that
+/// the engine's second-denominated clocks actually reach.
+const MIN_WIDTH: f64 = 1e-9;
+
+/// One calendar day (also the overflow list): events kept sorted
+/// **descending** by pop order, lazily, so the back is the pop-min and
+/// `Vec::pop` serves it in O(1) without shifting.
+struct Slot<T> {
+    items: Vec<Event<T>>,
+    sorted: bool,
+}
+
+impl<T> Default for Slot<T> {
+    fn default() -> Self {
+        Self { items: Vec::new(), sorted: true }
+    }
+}
+
+impl<T> Slot<T> {
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.items.sort_unstable_by(|a, b| cmp_pop(b, a));
+            self.sorted = true;
+        }
+    }
+
+    /// Append, tracking whether the descending invariant survived (it
+    /// does iff the new event is the new pop-min).
+    fn push(&mut self, e: Event<T>) {
+        if let Some(back) = self.items.last() {
+            if self.sorted && cmp_pop(&e, back) == Ordering::Greater {
+                self.sorted = false;
+            }
+        }
+        self.items.push(e);
+    }
+}
+
+/// Where the current pop-min lives.
+#[derive(Clone, Copy)]
+enum MinLoc {
+    Bucket(usize),
+    Overflow,
+}
+
+struct Calendar<T> {
+    /// Seconds per day; strictly positive and finite.
+    width: f64,
+    /// Power of two ≥ [`MIN_BUCKETS`].
+    n_buckets: usize,
+    buckets: Vec<Slot<T>>,
+    /// Non-finite timestamps and events at/past the promotion horizon.
+    overflow: Slot<T>,
+    /// Events currently in `buckets` (excludes overflow).
+    bucketed_len: usize,
+    /// The day the cursor is serving; no bucketed event has a smaller
+    /// day (pushes into the past rewind the cursor).
+    cur_day: i64,
+    /// First day outside the current bucket-year: finite pushes at or
+    /// past it go to overflow until a promotion pass moves them in.
+    next_promote_day: i64,
+    /// Scratch for resize rebuilds (kept to recycle its capacity).
+    spill: Vec<Event<T>>,
+}
+
+impl<T> Calendar<T> {
+    fn with_capacity(capacity: usize) -> Self {
+        let n_buckets = capacity.max(MIN_BUCKETS).next_power_of_two();
+        let mut buckets = Vec::with_capacity(n_buckets);
+        buckets.resize_with(n_buckets, Slot::default);
+        Self {
+            width: INITIAL_WIDTH,
+            n_buckets,
+            buckets,
+            overflow: Slot::default(),
+            bucketed_len: 0,
+            cur_day: 0,
+            next_promote_day: n_buckets as i64,
+            spill: Vec::new(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.bucketed_len + self.overflow.items.len()
+    }
+
+    /// `floor(t / width)` for finite `t`; the `as` cast saturates for
+    /// astronomically large quotients, which is safe because saturated
+    /// days always classify as past the promotion horizon.
+    fn day_of(&self, t: f64) -> i64 {
+        (t / self.width).floor() as i64
+    }
+
+    /// Point the wheel at `t` (callers do this when the queue is empty
+    /// or after the cursor lost track of the population).
+    fn anchor(&mut self, t: f64) {
+        if t.is_finite() {
+            self.cur_day = self.day_of(t);
+            self.next_promote_day = self.cur_day.saturating_add(self.n_buckets as i64);
+        }
+    }
+
+    /// Place an event without seq-stamping or resize checks (shared by
+    /// push, promotion, and rebuild).
+    fn insert(&mut self, e: Event<T>) {
+        if !e.time.is_finite() {
+            self.overflow.push(e);
+            return;
+        }
+        let day = self.day_of(e.time);
+        if day >= self.next_promote_day {
+            self.overflow.push(e);
+        } else {
+            self.place_bucket(e, day);
+        }
+    }
+
+    fn place_bucket(&mut self, e: Event<T>, day: i64) {
+        if day < self.cur_day {
+            self.cur_day = day;
+        }
+        let idx = day.rem_euclid(self.n_buckets as i64) as usize;
+        self.buckets[idx].push(e);
+        self.bucketed_len += 1;
+    }
+
+    fn push(&mut self, e: Event<T>) {
+        if self.len() == 0 {
+            self.anchor(e.time);
+        }
+        self.insert(e);
+        if self.len() > 2 * self.n_buckets {
+            self.rebuild(self.n_buckets * 2);
+        }
+    }
+
+    /// Move overflow events whose day now falls inside the bucket-year
+    /// starting at the cursor into the wheel.
+    fn promote(&mut self) {
+        self.next_promote_day = self.cur_day.saturating_add(self.n_buckets as i64);
+        let limit = self.next_promote_day;
+        let mut i = 0;
+        let mut moved = false;
+        while i < self.overflow.items.len() {
+            let t = self.overflow.items[i].time;
+            if t.is_finite() && self.day_of(t) < limit {
+                let e = self.overflow.items.swap_remove(i);
+                let day = self.day_of(e.time);
+                self.place_bucket(e, day);
+                moved = true;
+            } else {
+                i += 1;
+            }
+        }
+        if moved && self.overflow.items.len() > 1 {
+            self.overflow.sorted = false;
+        }
+    }
+
+    /// The bucket holding the bucketed pop-min, advancing the cursor
+    /// (and promoting at year boundaries) along the way. Walks at most
+    /// one full rotation; past that it direct-searches every bucket
+    /// head and jumps the cursor to the winner, so sparse populations
+    /// cannot spin the wheel.
+    fn bucket_candidate(&mut self) -> Option<usize> {
+        if self.bucketed_len == 0 {
+            return None;
+        }
+        let n = self.n_buckets as i64;
+        let mut scanned = 0usize;
+        loop {
+            if self.cur_day >= self.next_promote_day {
+                self.promote();
+            }
+            let idx = self.cur_day.rem_euclid(n) as usize;
+            if !self.buckets[idx].items.is_empty() {
+                self.buckets[idx].ensure_sorted();
+                let head = self.buckets[idx].items.last().expect("non-empty bucket");
+                if self.day_of(head.time) == self.cur_day {
+                    return Some(idx);
+                }
+            }
+            self.cur_day = self.cur_day.saturating_add(1);
+            scanned += 1;
+            if scanned >= self.n_buckets {
+                let mut best: Option<usize> = None;
+                for i in 0..self.n_buckets {
+                    if self.buckets[i].items.is_empty() {
+                        continue;
+                    }
+                    self.buckets[i].ensure_sorted();
+                    let better = match best {
+                        None => true,
+                        Some(b) => {
+                            let (hi, hb) = (
+                                self.buckets[i].items.last().expect("non-empty"),
+                                self.buckets[b].items.last().expect("non-empty"),
+                            );
+                            cmp_pop(hi, hb) == Ordering::Less
+                        }
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+                let b = best.expect("bucketed_len > 0 implies a non-empty bucket");
+                let t = self.buckets[b].items.last().expect("non-empty").time;
+                self.cur_day = self.day_of(t);
+                return Some(b);
+            }
+        }
+    }
+
+    /// Locate the global pop-min: the bucket candidate raced against
+    /// the overflow min by the exact `(time, seq)` key. This per-pop
+    /// comparison is what makes pop order independent of promotion and
+    /// anchoring heuristics.
+    fn min_loc(&mut self) -> Option<MinLoc> {
+        let bucket = self.bucket_candidate();
+        if !self.overflow.items.is_empty() {
+            self.overflow.ensure_sorted();
+        }
+        match (bucket, self.overflow.items.last()) {
+            (None, None) => None,
+            (Some(i), None) => Some(MinLoc::Bucket(i)),
+            (None, Some(_)) => Some(MinLoc::Overflow),
+            (Some(i), Some(of_min)) => {
+                let b_min = self.buckets[i].items.last().expect("non-empty bucket");
+                if cmp_pop(b_min, of_min) == Ordering::Less {
+                    Some(MinLoc::Bucket(i))
+                } else {
+                    Some(MinLoc::Overflow)
+                }
+            }
+        }
+    }
+
+    fn time_at(&self, loc: MinLoc) -> f64 {
+        match loc {
+            MinLoc::Bucket(i) => self.buckets[i].items.last().expect("non-empty").time,
+            MinLoc::Overflow => self.overflow.items.last().expect("non-empty").time,
+        }
+    }
+
+    fn take(&mut self, loc: MinLoc) -> Event<T> {
+        let e = match loc {
+            MinLoc::Bucket(i) => {
+                self.bucketed_len -= 1;
+                self.buckets[i].items.pop().expect("non-empty bucket")
+            }
+            MinLoc::Overflow => {
+                let e = self.overflow.items.pop().expect("non-empty overflow");
+                if self.bucketed_len == 0 && e.time.is_finite() {
+                    // the wheel went dark while overflow served — drag
+                    // the cursor to now and pull siblings back in
+                    self.anchor(e.time);
+                    self.promote();
+                }
+                e
+            }
+        };
+        if self.n_buckets > MIN_BUCKETS && self.len() < self.n_buckets / 4 {
+            self.rebuild(self.n_buckets / 2);
+        }
+        e
+    }
+
+    fn peek_time(&mut self) -> Option<f64> {
+        self.min_loc().map(|loc| self.time_at(loc))
+    }
+
+    fn pop(&mut self) -> Option<Event<T>> {
+        let loc = self.min_loc()?;
+        Some(self.take(loc))
+    }
+
+    /// Pop the min unless a finite `t_stop` bounds it: events at or
+    /// past the boundary stay queued. NaN timestamps pop even under a
+    /// finite boundary (`NaN >= t` is false) — exactly the engine's
+    /// historical `peek_time`-then-`pop` epoch predicate.
+    fn pop_before(&mut self, t_stop: f64) -> Option<Event<T>> {
+        let loc = self.min_loc()?;
+        if t_stop.is_finite() && self.time_at(loc) >= t_stop {
+            return None;
+        }
+        Some(self.take(loc))
+    }
+
+    /// Re-bucket everything into `new_n` buckets, re-deriving the
+    /// width from the observed span (targets ~3 events per day) and
+    /// re-anchoring at the earliest finite event. `(time, seq)` stamps
+    /// ride along untouched, so pop order is unaffected.
+    fn rebuild(&mut self, new_n: usize) {
+        let new_n = new_n.max(MIN_BUCKETS);
+        let mut spill = std::mem::take(&mut self.spill);
+        for b in &mut self.buckets {
+            spill.append(&mut b.items);
+            b.sorted = true;
+        }
+        spill.append(&mut self.overflow.items);
+        self.overflow.sorted = true;
+        self.bucketed_len = 0;
+
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        let mut finite = 0usize;
+        for e in &spill {
+            if e.time.is_finite() {
+                lo = lo.min(e.time);
+                hi = hi.max(e.time);
+                finite += 1;
+            }
+        }
+        if finite >= 2 && hi > lo {
+            let w = 3.0 * (hi - lo) / finite as f64;
+            if w.is_finite() {
+                self.width = w.max(MIN_WIDTH);
+            }
+        }
+
+        self.buckets.resize_with(new_n, Slot::default);
+        self.n_buckets = new_n;
+        if lo.is_finite() {
+            self.cur_day = self.day_of(lo);
+            self.next_promote_day = self.cur_day.saturating_add(new_n as i64);
+        }
+        for e in spill.drain(..) {
+            self.insert(e);
+        }
+        self.spill = spill;
+    }
+}
+
+enum Backend<T> {
+    Heap(BinaryHeap<Event<T>>),
+    Calendar(Calendar<T>),
+}
+
+/// The engine's future-event set: push events with a due time, pop
+/// them in ascending `(total_cmp(time), seq)` order. Sealed — the two
+/// backends dispatch through this enum-backed front, and both honor
+/// the identical-total-order contract (see the module docs).
+pub struct Sched<T> {
+    seq: u64,
+    q: Backend<T>,
+}
+
+impl<T> Sched<T> {
+    pub fn new(kind: SchedKind) -> Self {
+        Self::with_capacity(kind, 0)
+    }
+
+    /// Pre-size for an expected concurrent event population (the
+    /// engine seeds this with `streams + devices + cloud_slots`).
+    pub fn with_capacity(kind: SchedKind, capacity: usize) -> Self {
+        let q = match kind {
+            SchedKind::Heap => Backend::Heap(BinaryHeap::with_capacity(capacity)),
+            SchedKind::Calendar => Backend::Calendar(Calendar::with_capacity(capacity)),
+        };
+        Self { seq: 0, q }
+    }
+
+    pub fn kind(&self) -> SchedKind {
+        match &self.q {
+            Backend::Heap(_) => SchedKind::Heap,
+            Backend::Calendar(_) => SchedKind::Calendar,
+        }
+    }
+
+    /// Schedule `ev` at `time`; the monotone seq stamp makes same-time
+    /// pops FIFO in push order.
+    pub fn push(&mut self, time: f64, ev: T) {
+        let e = Event { time, seq: self.seq, ev };
+        self.seq += 1;
+        match &mut self.q {
+            Backend::Heap(h) => h.push(e),
+            Backend::Calendar(c) => c.push(e),
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        match &mut self.q {
+            Backend::Heap(h) => h.pop(),
+            Backend::Calendar(c) => c.pop(),
+        }
+    }
+
+    /// Fused peek+pop for epoch loops: one traversal pops the min
+    /// unless a finite `t_stop` bounds it, leaving at-or-past-boundary
+    /// events queued. NaN times pop even under a finite `t_stop`,
+    /// matching the engine's historical boundary predicate.
+    pub fn pop_before(&mut self, t_stop: f64) -> Option<Event<T>> {
+        match &mut self.q {
+            Backend::Heap(h) => {
+                let t = h.peek()?.time;
+                if t_stop.is_finite() && t >= t_stop {
+                    return None;
+                }
+                h.pop()
+            }
+            Backend::Calendar(c) => c.pop_before(t_stop),
+        }
+    }
+
+    /// Due time of the next pop (`&mut` because the calendar sorts its
+    /// current bucket lazily and may advance its cursor).
+    pub fn peek_time(&mut self) -> Option<f64> {
+        match &mut self.q {
+            Backend::Heap(h) => h.peek().map(|e| e.time),
+            Backend::Calendar(c) => c.peek_time(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.q {
+            Backend::Heap(h) => h.len(),
+            Backend::Calendar(c) => c.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current calendar bucket count (`None` on the heap) — exposed so
+    /// resize tests can watch the grow/shrink paths fire.
+    pub fn bucket_count(&self) -> Option<usize> {
+        match &self.q {
+            Backend::Heap(_) => None,
+            Backend::Calendar(c) => Some(c.n_buckets),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(s: &mut Sched<usize>) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        while let Some(e) = s.pop() {
+            out.push((e.time.to_bits(), e.seq));
+        }
+        out
+    }
+
+    fn both(times: &[f64]) -> (Vec<(u64, u64)>, Vec<(u64, u64)>) {
+        let mut h = Sched::new(SchedKind::Heap);
+        let mut c = Sched::new(SchedKind::Calendar);
+        for (i, &t) in times.iter().enumerate() {
+            h.push(t, i);
+            c.push(t, i);
+        }
+        (drain(&mut h), drain(&mut c))
+    }
+
+    #[test]
+    fn kind_parse_round_trips() {
+        for k in [SchedKind::Heap, SchedKind::Calendar] {
+            assert_eq!(SchedKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(SchedKind::parse("fifo").is_err());
+        assert_eq!(SchedKind::default(), SchedKind::Calendar);
+    }
+
+    #[test]
+    fn ties_pop_fifo_and_orders_match_the_heap() {
+        let (h, c) = both(&[0.5, 0.1, 0.5, 0.1, 0.3, 0.5]);
+        assert_eq!(h, c);
+        // ties resolve in push order
+        assert_eq!(h[0].1, 1);
+        assert_eq!(h[1].1, 3);
+    }
+
+    #[test]
+    fn non_finite_times_take_their_total_cmp_slots() {
+        let times = [
+            1.0,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            -f64::NAN,
+            0.0,
+            -0.0,
+        ];
+        let (h, c) = both(&times);
+        assert_eq!(h, c);
+        // total_cmp order: -NaN < -inf < -0.0 < 0.0 < 1.0 < +inf < +NaN
+        let seqs: Vec<u64> = h.iter().map(|&(_, s)| s).collect();
+        assert_eq!(seqs, vec![4, 3, 6, 5, 0, 2, 1]);
+    }
+
+    #[test]
+    fn pop_before_leaves_boundary_events_queued() {
+        for kind in [SchedKind::Heap, SchedKind::Calendar] {
+            let mut s = Sched::new(kind);
+            s.push(0.10, 0usize);
+            s.push(0.05, 1);
+            s.push(0.05, 2);
+            assert_eq!(s.pop_before(0.10).map(|e| e.ev), Some(1));
+            assert_eq!(s.pop_before(0.10).map(|e| e.ev), Some(2));
+            assert!(s.pop_before(0.10).is_none(), "{kind:?}");
+            assert_eq!(s.len(), 1);
+            // an infinite boundary pops everything; a NaN event time
+            // pops even under a finite boundary (NaN >= t is false)
+            s.push(f64::NAN, 3);
+            assert_eq!(s.pop_before(0.0).map(|e| e.ev), Some(3));
+            assert_eq!(s.pop_before(f64::INFINITY).map(|e| e.ev), Some(0));
+            assert!(s.pop_before(f64::INFINITY).is_none());
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_matches_heap_with_clustered_times() {
+        let mut h = Sched::new(SchedKind::Heap);
+        let mut c = Sched::new(SchedKind::Calendar);
+        let mut x = 0x9E3779B97F4A7C15u64;
+        let mut step = || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            x >> 33
+        };
+        for round in 0..2000u64 {
+            let r = step();
+            let t = (r % 97) as f64 * 1e-3 + (round as f64) * 1e-4;
+            h.push(t, round as usize);
+            c.push(t, round as usize);
+            if r % 3 == 0 {
+                let eh = h.pop().expect("heap non-empty");
+                let ec = c.pop().expect("calendar non-empty");
+                assert_eq!((eh.time.to_bits(), eh.seq), (ec.time.to_bits(), ec.seq));
+            }
+        }
+        assert_eq!(drain(&mut h), drain(&mut c));
+    }
+
+    #[test]
+    fn calendar_grows_under_burst_and_shrinks_on_drain() {
+        let mut c = Sched::new(SchedKind::Calendar);
+        let n0 = c.bucket_count().unwrap();
+        for i in 0..4096 {
+            c.push(i as f64 * 1e-3, i);
+        }
+        let grown = c.bucket_count().unwrap();
+        assert!(grown > n0, "burst must grow buckets ({n0} -> {grown})");
+        let mut prev = f64::NEG_INFINITY;
+        while let Some(e) = c.pop() {
+            assert!(e.time >= prev);
+            prev = e.time;
+        }
+        let shrunk = c.bucket_count().unwrap();
+        assert!(shrunk < grown, "drain must shrink buckets ({grown} -> {shrunk})");
+    }
+
+    #[test]
+    fn far_future_outliers_ride_the_overflow_list() {
+        let mut h = Sched::new(SchedKind::Heap);
+        let mut c = Sched::new(SchedKind::Calendar);
+        let times = [0.001, 1e12, 0.002, 9e307, 0.0015, 1e12];
+        for (i, &t) in times.iter().enumerate() {
+            h.push(t, i);
+            c.push(t, i);
+        }
+        for _ in 0..times.len() {
+            let eh = h.pop().unwrap();
+            let ec = c.pop().unwrap();
+            assert_eq!((eh.time.to_bits(), eh.seq), (ec.time.to_bits(), ec.seq));
+        }
+        assert!(c.pop().is_none());
+    }
+}

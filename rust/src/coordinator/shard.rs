@@ -307,6 +307,47 @@ mod tests {
     }
 
     #[test]
+    fn sharded_epochs_are_bit_exact_across_schedulers() {
+        // the epoch loop leans on `pop_before` leaving boundary events
+        // queued; heap and calendar must agree shard by shard, task by
+        // task — same epochs, same event counts, same bit patterns
+        use crate::coordinator::des::DesOpts;
+        use crate::coordinator::sched::SchedKind;
+        let run = |kind: SchedKind| {
+            let mut f = fleet("xavier-nx,jetson-tx2,jetson-nano");
+            let mut g = gens(&f, 6, 110, SloClass::parse("200").unwrap());
+            let opts = FleetOpts {
+                des: DesOpts {
+                    sched: kind,
+                    cloud_batch_window_s: 0.005,
+                    ..DesOpts::default()
+                },
+                ..FleetOpts::default()
+            };
+            serve_sharded(&mut f.devices, &mut g, 5, &opts, 3, 0.02, |_| {
+                CollectSink::new()
+            })
+        };
+        let heap = run(SchedKind::Heap);
+        let cal = run(SchedKind::Calendar);
+        assert_eq!(heap.len(), cal.len());
+        for (h, c) in heap.iter().zip(&cal) {
+            assert_eq!(h.result.events, c.result.events);
+            assert_eq!(h.result.completed, c.result.completed);
+            assert_eq!(h.result.stale_closes, c.result.stale_closes);
+        }
+        for (h, c) in heap.into_iter().zip(cal) {
+            let (hj, cj) = (h.sink.into_jobs(), c.sink.into_jobs());
+            assert_eq!(hj.len(), cj.len());
+            for (x, y) in hj.iter().zip(&cj) {
+                let (rx, ry) = (x.report.as_ref().unwrap(), y.report.as_ref().unwrap());
+                assert_eq!(rx.e2e_s.to_bits(), ry.e2e_s.to_bits());
+                assert_eq!(rx.eti_total_j.to_bits(), ry.eti_total_j.to_bits());
+            }
+        }
+    }
+
+    #[test]
     fn sharded_run_is_deterministic_and_conserves_tasks() {
         let run = || {
             let mut f = fleet("xavier-nx,jetson-tx2,jetson-nano,xavier-nx");

@@ -154,6 +154,12 @@ fn real_main() -> anyhow::Result<()> {
                      instead of collected per-task reports",
                 )
                 .opt(
+                    "scheduler",
+                    "event-scheduler backend: calendar (bucketed, amortized O(1)) | \
+                     heap (binary heap); identical event order either way",
+                    None,
+                )
+                .opt(
                     "arrivals",
                     "per-stream arrival process: sequential | poisson:<r> | \
                      bursty:<r>,<every_s>,<len> | mmpp:<lo>,<hi>,<dlo>,<dhi> | \
@@ -189,6 +195,7 @@ fn real_main() -> anyhow::Result<()> {
                 ("router", "router"),
                 ("slo", "slo"),
                 ("admission", "admission"),
+                ("scheduler", "scheduler"),
             ] {
                 if let Some(spec) = a.get(flag) {
                     cfg.set(key, spec)?;
@@ -319,6 +326,9 @@ fn real_main() -> anyhow::Result<()> {
                             )
                         );
                     }
+                    if s.window_flushes > 0 {
+                        println!("{}", render::stale_line(s.window_flushes, s.stale_closes));
+                    }
                     for d in &s.per_device {
                         let rb = rebalancing
                             .then_some((d.rerouted_in, d.migrated_in, d.migrated_out));
@@ -368,6 +378,9 @@ fn real_main() -> anyhow::Result<()> {
                                 s.cloud_dispatch_saved_s
                             )
                         );
+                    }
+                    if s.window_flushes > 0 {
+                        println!("{}", render::stale_line(s.window_flushes, s.stale_closes));
                     }
                     for d in &s.per_device {
                         let rb = rebalancing

@@ -107,6 +107,14 @@ pub fn cloud_line(
     )
 }
 
+/// The batching-window accounting line: windows flushed with at least
+/// one job, and the generation-stale close timers (tombstones left by
+/// size-cap flushes) the kernel popped and discarded. Callers gate it
+/// on at least one window having flushed.
+pub fn stale_line(window_flushes: usize, stale_closes: usize) -> String {
+    format!("batching: window-flushes={window_flushes} stale-closes={stale_closes}")
+}
+
 /// One per-device telemetry line. `rebalance` carries the
 /// (rerouted-in, migrated-in, migrated-out) triple when the rebalance
 /// columns are enabled, `None` otherwise.
@@ -169,6 +177,10 @@ mod tests {
         assert_eq!(
             cloud_line(7, 1.5, 3.0, 0.004),
             "cloud: invocations=7 mean-occupancy=1.50 max-occupancy=3 dispatch-saved=4.0ms"
+        );
+        assert_eq!(
+            stale_line(9, 4),
+            "batching: window-flushes=9 stale-closes=4"
         );
         assert_eq!(
             device_line("xavier-nx", 12, 3.14159, 2, None),

@@ -8,16 +8,17 @@
 //! documented as superseded.
 
 use dvfo::configx::Config;
-use dvfo::coordinator::{Admission, DesOpts, EngineConfig, FleetOpts, Router};
+use dvfo::coordinator::{Admission, DesOpts, EngineConfig, FleetOpts, Router, SchedKind};
 
 /// Every `DesOpts` field, floats as raw bits, for exact comparison.
-fn des_bits(o: &DesOpts) -> (u64, usize, usize, u64, usize) {
+fn des_bits(o: &DesOpts) -> (u64, usize, usize, u64, usize, SchedKind) {
     (
         o.batch_window_s.to_bits(),
         o.max_batch,
         o.cloud_slots,
         o.cloud_batch_window_s.to_bits(),
         o.cloud_max_batch,
+        o.sched,
     )
 }
 
@@ -49,6 +50,7 @@ fn from_config_matches_the_legacy_constructors_on_a_non_default_config() {
     cfg.migrate_penalty_ms = 2.5;
     cfg.shards = 4;
     cfg.stream_telemetry = true;
+    cfg.scheduler = "heap".into();
 
     let ec = EngineConfig::from_config(&cfg).unwrap();
     let legacy_fleet = FleetOpts::from_config(&cfg).unwrap();
@@ -64,6 +66,7 @@ fn from_config_matches_the_legacy_constructors_on_a_non_default_config() {
     assert_eq!(ec.migrate_penalty_s, 0.0025);
     assert_eq!(ec.router, Router::LeastBacklog);
     assert_eq!(ec.admission, Admission::Shed);
+    assert_eq!(ec.sched, SchedKind::Heap);
 }
 
 #[test]

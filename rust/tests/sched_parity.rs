@@ -1,0 +1,160 @@
+//! Heap-vs-calendar scheduler parity gate.
+//!
+//! The calendar queue (`rust/src/coordinator/sched.rs`) is only allowed
+//! to exist because it pops in the **identical** `(f64::total_cmp(time),
+//! seq)` total order as the binary heap for any push sequence — that
+//! contract is what lets every golden/parity/determinism gate run
+//! unchanged under either backend. This test drives both backends with
+//! the same randomized push/pop/pop_before interleavings — clustered
+//! short-horizon timers, exact ties, far-future outliers, negative
+//! times, and NaN/±inf injection — and asserts the popped `(time-bits,
+//! seq, payload)` sequences are bit-identical, plus a deterministic
+//! burst→drain case that forces both the bucket-grow and bucket-shrink
+//! resize paths.
+
+use dvfo::coordinator::sched::SchedKind;
+use dvfo::coordinator::Sched;
+use dvfo::proptest_mini::{check, vec_of};
+use dvfo::util::Pcg32;
+
+/// Derive an adversarial push time from one raw `(selector, unit)`
+/// pair: the categories the calendar queue has to get right.
+fn time_from(sel: usize, u: f64) -> f64 {
+    match sel % 8 {
+        // clustered short-horizon timers (the batching-window workload)
+        0 | 1 | 2 => u * 0.01,
+        // quantized times -> exact ties, resolved by seq alone
+        3 => (u * 4.0).floor() * 0.25,
+        // spread across many bucket-years
+        4 => u * 1e4,
+        // far-future outliers that must ride the overflow list
+        5 => 1e9 + u * 1e12,
+        // negative times (day arithmetic must floor, not truncate)
+        6 => -u,
+        // non-finite injection: total_cmp slots them deterministically
+        _ => {
+            if u < 0.25 {
+                f64::NAN
+            } else if u < 0.5 {
+                f64::INFINITY
+            } else if u < 0.75 {
+                f64::NEG_INFINITY
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// Exact-equality check of one popped observation: `(time, seq,
+/// payload)` with the time compared by raw bits (NaN included).
+fn compare(
+    h: Option<(f64, u64, usize)>,
+    c: Option<(f64, u64, usize)>,
+    what: &str,
+) -> Result<(), String> {
+    match (h, c) {
+        (None, None) => Ok(()),
+        (Some(h), Some(c)) => {
+            if h.0.to_bits() != c.0.to_bits() || h.1 != c.1 || h.2 != c.2 {
+                Err(format!("{what}: heap {h:?} vs calendar {c:?}"))
+            } else {
+                Ok(())
+            }
+        }
+        (h, c) => Err(format!("{what}: heap {h:?} vs calendar {c:?}")),
+    }
+}
+
+/// Replay one op sequence against both backends; every observable —
+/// pop/pop_before results (time bits, seq, payload), peek_time bits,
+/// and len — must agree exactly.
+fn replay(ops: &[(usize, f64)]) -> Result<(), String> {
+    let mut heap: Sched<usize> = Sched::new(SchedKind::Heap);
+    let mut cal: Sched<usize> = Sched::new(SchedKind::Calendar);
+    let mut pushes = 0usize;
+    for &(sel, u) in ops {
+        match sel % 10 {
+            0 | 1 | 2 => {
+                let h = heap.pop().map(|e| (e.time, e.seq, e.ev));
+                let c = cal.pop().map(|e| (e.time, e.seq, e.ev));
+                compare(h, c, "pop")?;
+            }
+            3 => {
+                // the epoch-boundary op: pops only strictly-before t
+                let t = time_from(sel.wrapping_add(1), u);
+                let h = heap.pop_before(t).map(|e| (e.time, e.seq, e.ev));
+                let c = cal.pop_before(t).map(|e| (e.time, e.seq, e.ev));
+                compare(h, c, "pop_before")?;
+            }
+            _ => {
+                let t = time_from(sel, u);
+                heap.push(t, pushes);
+                cal.push(t, pushes);
+                pushes += 1;
+            }
+        }
+        let (ph, pc) = (heap.peek_time(), cal.peek_time());
+        if ph.map(f64::to_bits) != pc.map(f64::to_bits) {
+            return Err(format!("peek_time: heap {ph:?} vs calendar {pc:?}"));
+        }
+        if heap.len() != cal.len() {
+            return Err(format!("len: heap {} vs calendar {}", heap.len(), cal.len()));
+        }
+    }
+    // full drain: the tail must agree too
+    loop {
+        let h = heap.pop().map(|e| (e.time, e.seq, e.ev));
+        let c = cal.pop().map(|e| (e.time, e.seq, e.ev));
+        let done = h.is_none();
+        compare(h, c, "drain")?;
+        if done {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn randomized_interleavings_pop_bit_identically() {
+    let op = |r: &mut Pcg32| (r.below(1000) as usize, r.range_f64(0.0, 1.0));
+    check("sched parity", 0xCA1E17DA, 300, vec_of(op, 0, 240), |ops| {
+        replay(ops)
+    });
+}
+
+#[test]
+fn burst_then_drain_forces_grow_and_shrink_with_parity() {
+    // arrival burst of clustered timers (plus a sprinkle of far-future
+    // outliers) blows past the grow threshold; the drain then crosses
+    // the shrink threshold. Pop order must track the heap throughout.
+    let mut heap: Sched<usize> = Sched::new(SchedKind::Heap);
+    let mut cal: Sched<usize> = Sched::new(SchedKind::Calendar);
+    let n0 = cal.bucket_count().unwrap();
+    let mut rng = Pcg32::seeded(77);
+    for i in 0..4096 {
+        let t = if i % 97 == 0 {
+            1e9 + i as f64
+        } else {
+            rng.range_f64(0.0, 0.5)
+        };
+        heap.push(t, i);
+        cal.push(t, i);
+    }
+    let grown = cal.bucket_count().unwrap();
+    assert!(grown > n0, "burst must grow the day array: {grown} vs {n0}");
+    let mut min_after_growth = grown;
+    for _ in 0..4096 {
+        let h = heap.pop().expect("heap drained early");
+        let c = cal.pop().expect("calendar drained early");
+        assert_eq!(h.time.to_bits(), c.time.to_bits());
+        assert_eq!(h.seq, c.seq);
+        assert_eq!(h.ev, c.ev);
+        min_after_growth = min_after_growth.min(cal.bucket_count().unwrap());
+    }
+    assert!(cal.pop().is_none());
+    assert!(
+        min_after_growth < grown,
+        "drain must shrink the day array: stayed at {grown}"
+    );
+}
