@@ -1,0 +1,343 @@
+//! §Perf — DQN training-path bench: packed GEMM kernels vs the frozen
+//! naive loops on learn-shaped matrices, raw `learn()` steps/sec, and
+//! the decide-path cost of inline vs background gradient placement.
+//! Results land in `BENCH_8.json` (CI uploads it as an artifact; the
+//! numbers are recorded, never gated, so shared-runner noise cannot
+//! break the build).
+//!
+//! Sections:
+//!   * `kernels` — the minibatch forward/backward matmul shapes of the
+//!     default DQN (batch 128 through 10→128→64→32→41), timed through
+//!     the frozen pre-refactor loops and through `Tensor2`'s packed
+//!     kernels, with the A operand ~50% zeros (post-relu activations).
+//!     Bit-equality naive-vs-packed is asserted per shape — the same
+//!     contract `rust/tests/gemm_parity.rs` gates.
+//!   * `learn` — gradient steps/sec of `DqnAgent::learn()` on a
+//!     pre-filled replay buffer (the whole-path number: sampling,
+//!     forward, batched target forward, backward, Adam).
+//!   * `policy` — an inline-vs-bg `DvfoPolicy` pair driving identical
+//!     decide→feedback cycles, recording per-decision latency and the
+//!     `set_training(false)` drain cost of the background learner.
+//!
+//! `DVFO_BENCH_FULL=1` scales reps/cycles up; `DVFO_BENCH_JSON=path`
+//! overrides the output path (default `BENCH_8.json`).
+
+use dvfo::dqn::{ActionSpace, DqnAgent, DqnConfig, LearnerMode, LearnerOpts, Transition};
+use dvfo::policy::{DvfoPolicy, Feedback, Obs, Policy};
+use dvfo::util::Pcg32;
+use std::time::Instant;
+
+// ---- frozen pre-refactor loops (same references as gemm_parity.rs) ----
+
+fn naive_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+fn naive_tn(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    out.fill(0.0);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+fn naive_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+// ---- kernel micro-bench ----------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Op {
+    Nn,
+    Tn,
+    Nt,
+}
+
+impl Op {
+    fn as_str(self) -> &'static str {
+        match self {
+            Op::Nn => "nn",
+            Op::Tn => "tn",
+            Op::Nt => "nt",
+        }
+    }
+}
+
+/// Learn-shaped cases: the default agent's minibatch forward (nn) and
+/// backward (tn for dW, nt for dx) shapes through 10→128→64→32→41.
+/// (op, m, k, n) in the kernel's own convention; `sparse_a` marks the
+/// operand the historical skip fired on (post-relu activations).
+fn kernel_cases() -> Vec<(Op, usize, usize, usize, bool)> {
+    vec![
+        (Op::Nn, 128, 10, 128, false), // x @ W1 (input layer, dense x)
+        (Op::Nn, 128, 128, 64, true),  // a1 @ W2 (relu-sparse a1)
+        (Op::Nn, 128, 64, 32, true),   // a2 @ W3
+        (Op::Nn, 128, 32, 41, true),   // a3 @ W4 (Q head)
+        (Op::Tn, 128, 128, 64, true),  // a1^T @ dz2 (dW2)
+        (Op::Tn, 128, 32, 41, true),   // a3^T @ dout (dW4)
+        (Op::Nt, 128, 64, 128, false), // dz2 @ W2^T (dx, dense grads)
+    ]
+}
+
+/// ~50% exact zeros when sparse (post-relu statistics), else dense.
+fn fill(rng: &mut Pcg32, xs: &mut [f32], sparse: bool) {
+    for x in xs.iter_mut() {
+        *x = if sparse && rng.chance(0.5) {
+            0.0
+        } else {
+            2.0 * rng.next_f32() - 1.0
+        };
+    }
+}
+
+fn bench_kernels(reps: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    for (op, d0, d1, d2, sparse_a) in kernel_cases() {
+        // shapes per op convention: nn (m,k,n); tn (k,m,n); nt (m,k,n)
+        let (m, k, n, a_len, b_len) = match op {
+            Op::Nn => (d0, d1, d2, d0 * d1, d1 * d2),
+            Op::Tn => (d1, d0, d2, d0 * d1, d0 * d2),
+            Op::Nt => (d0, d1, d2, d0 * d1, d2 * d1),
+        };
+        let mut rng = Pcg32::seeded(0x8E88 ^ ((a_len as u64) << 16) ^ (b_len as u64));
+        let mut a = vec![0.0f32; a_len];
+        let mut b = vec![0.0f32; b_len];
+        fill(&mut rng, &mut a, sparse_a);
+        fill(&mut rng, &mut b, false);
+        let mut naive = vec![0.0f32; m * n];
+        let mut packed = vec![0.0f32; m * n];
+
+        let run_naive = |dst: &mut [f32]| match op {
+            Op::Nn => naive_nn(d0, d1, d2, &a, &b, dst),
+            Op::Tn => naive_tn(d0, d1, d2, &a, &b, dst),
+            Op::Nt => naive_nt(d0, d1, d2, &a, &b, dst),
+        };
+        let run_packed = |dst: &mut [f32]| match op {
+            Op::Nn => dvfo::dqn::gemm::gemm_nn(d0, d1, d2, &a, &b, dst),
+            Op::Tn => dvfo::dqn::gemm::gemm_tn(d0, d1, d2, &a, &b, dst),
+            Op::Nt => dvfo::dqn::gemm::gemm_nt(d0, d1, d2, &a, &b, dst),
+        };
+
+        // warmup + the bit-equality contract (finite data, B finite)
+        run_naive(&mut naive);
+        run_packed(&mut packed);
+        assert_eq!(
+            naive.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            packed.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "packed {} kernel must be bit-identical to the naive loop",
+            op.as_str()
+        );
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            run_naive(&mut naive);
+        }
+        let naive_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            run_packed(&mut packed);
+        }
+        let packed_s = t0.elapsed().as_secs_f64();
+        std::hint::black_box((&naive, &packed));
+
+        let flops = 2.0 * (m * k * n) as f64 * reps as f64;
+        let speedup = naive_s / packed_s;
+        println!(
+            "kernel {}  {}x{}x{}  sparse_a={}  reps={reps}  naive={:.3} ms  \
+             packed={:.3} ms  speedup={speedup:.2}x  {:.0} mflop/s",
+            op.as_str(),
+            m,
+            k,
+            n,
+            sparse_a,
+            naive_s * 1e3,
+            packed_s * 1e3,
+            flops / packed_s / 1e6,
+        );
+        out.push(format!(
+            "{{\"op\":\"{}\",\"m\":{m},\"k\":{k},\"n\":{n},\"sparse_a\":{sparse_a},\
+             \"reps\":{reps},\"naive_s\":{},\"packed_s\":{},\"speedup\":{},\
+             \"packed_mflops\":{}}}",
+            op.as_str(),
+            json_num(naive_s),
+            json_num(packed_s),
+            json_num(speedup),
+            json_num(flops / packed_s / 1e6),
+        ));
+    }
+    out
+}
+
+// ---- learn-steps/sec --------------------------------------------------
+
+fn bench_learn(steps: usize) -> String {
+    let cfg = DqnConfig {
+        state_dim: 10,
+        ..DqnConfig::default()
+    };
+    let space = ActionSpace::new(vec![10, 10, 10, 11]);
+    let mut agent = DqnAgent::new(cfg, space, 4242);
+    let mut rng = Pcg32::seeded(0x1EA2);
+    for i in 0..4096usize {
+        let state: Vec<f32> = (0..10).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        let next_state: Vec<f32> = (0..10).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        let action = agent.space.random(&mut rng);
+        agent.remember(Transition {
+            state,
+            action,
+            reward: rng.next_f64() - 0.5,
+            next_state,
+            done: i % 24 == 23,
+            gamma_pow: 1.0,
+        });
+    }
+    for _ in 0..10 {
+        agent.learn(); // warmup (arena + scratch sizing, target syncs)
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        std::hint::black_box(agent.learn());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let sps = steps as f64 / wall;
+    println!(
+        "learn  batch=128 net=10-128-64-32-41  steps={steps}  wall={:.3} s  \
+         {:.0} steps/sec  {:.3} ms/step",
+        wall,
+        sps,
+        wall / steps as f64 * 1e3,
+    );
+    format!(
+        "{{\"batch\":128,\"steps\":{steps},\"wall_s\":{},\"steps_per_sec\":{},\
+         \"ms_per_step\":{}}}",
+        json_num(wall),
+        json_num(sps),
+        json_num(wall / steps as f64 * 1e3),
+    )
+}
+
+// ---- inline vs background policy loop ---------------------------------
+
+fn obs_i(i: usize) -> Obs {
+    let x = (i % 17) as f64 / 17.0;
+    Obs {
+        lambda: 0.5,
+        eta: 0.5,
+        bandwidth_mbps: 2.0 + 6.0 * x,
+        top_quarter_mass: 0.3 + 0.4 * x,
+        skewness: 1.0 - 2.0 * x,
+        entropy_norm: 0.5,
+        intensity_norm: 0.4 + 0.2 * x,
+        prev_xi: x,
+        queue_depth_norm: 0.0,
+        backlog_norm: 0.0,
+    }
+}
+
+fn bench_policy(mode: LearnerMode, cycles: usize) -> String {
+    let mut p = DvfoPolicy::new(5, 5, true, false, 4242).with_learner(LearnerOpts {
+        mode,
+        publish_every: 32,
+        ..LearnerOpts::default()
+    });
+    let t0 = Instant::now();
+    for i in 0..cycles {
+        let obs = obs_i(i);
+        let next = obs_i(i + 1);
+        let d = p.decide(&obs);
+        let fb = Feedback {
+            reward: -(0.1 + 0.05 * (i % 7) as f64),
+            gamma_pow: 1.0,
+            done: i % 24 == 23,
+        };
+        p.feedback(&obs, &d, &next, fb);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    p.set_training(false); // bg: drain the queue + join; inline: no-op
+    let drain_s = t0.elapsed().as_secs_f64();
+    let per_us = wall / cycles as f64 * 1e6;
+    println!(
+        "policy mode={:<6} cycles={cycles}  wall={:.3} s  {per_us:.1} us/decision  \
+         drain={:.3} ms",
+        mode.as_str(),
+        wall,
+        drain_s * 1e3,
+    );
+    format!(
+        "{{\"mode\":\"{}\",\"publish_every\":32,\"cycles\":{cycles},\"wall_s\":{},\
+         \"per_decision_us\":{},\"drain_s\":{}}}",
+        mode.as_str(),
+        json_num(wall),
+        json_num(per_us),
+        json_num(drain_s),
+    )
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.9}")
+    } else {
+        "null".into()
+    }
+}
+
+fn main() {
+    let full = std::env::var("DVFO_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let out_path =
+        std::env::var("DVFO_BENCH_JSON").unwrap_or_else(|_| "BENCH_8.json".to_string());
+    let (kernel_reps, learn_steps, cycles) =
+        if full { (2000, 1000, 3000) } else { (400, 200, 600) };
+
+    let kernels = bench_kernels(kernel_reps);
+    let learn = bench_learn(learn_steps);
+    let policy: Vec<String> = [LearnerMode::Inline, LearnerMode::Background]
+        .into_iter()
+        .map(|m| bench_policy(m, cycles))
+        .collect();
+
+    let json = format!(
+        "{{\"bench\":\"learner_throughput\",\"full\":{full},\"kernels\":[{}],\
+         \"learn\":{learn},\"policy\":[{}]}}\n",
+        kernels.join(","),
+        policy.join(",")
+    );
+    if let Err(e) = std::fs::write(&out_path, &json) {
+        eprintln!("[learner_throughput] could not write {out_path}: {e}");
+        std::process::exit(1);
+    }
+    println!("[learner_throughput] wrote {out_path}");
+}

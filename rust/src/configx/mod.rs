@@ -108,6 +108,15 @@ pub struct Config {
     /// (binary heap, O(log n)). Both pop events in the identical
     /// (time, seq) total order, so this is purely a performance knob.
     pub scheduler: String,
+    /// DQN gradient-step placement for the training policies
+    /// (dvfo/drldo): "inline" (feedback blocks on the gradient step —
+    /// the historical, bit-exact behavior) | "bg" (gradient steps on a
+    /// background learner thread; the decide path pushes transitions
+    /// and adopts weight snapshots at a fixed cadence).
+    pub learner: String,
+    /// Background learner snapshot cadence: adopt fresh weights every
+    /// this-many transitions (ignored by "inline").
+    pub learner_publish_every: usize,
     /// Worker threads for the experiment grid sweeps (1 = serial).
     /// Cells share nothing and seed their own RNGs, so any value
     /// renders byte-identical tables — only the wall clock changes.
@@ -153,6 +162,8 @@ impl Default for Config {
             shards: 1,
             stream_telemetry: false,
             scheduler: "calendar".into(),
+            learner: "inline".into(),
+            learner_publish_every: 32,
             threads: 1,
             seed: 0,
             artifacts_dir: "artifacts".into(),
@@ -189,7 +200,7 @@ impl Config {
             | "streams" | "seed" | "max_batch" | "cloud_slots" | "cloud_max_batch"
             | "rebalance_window_ms" | "migrate_threshold_ms" | "migrate_penalty_ms"
             | "shards" => Json::Num(value.parse::<f64>()?),
-            "threads" => Json::Num(value.parse::<f64>()?),
+            "threads" | "learner_publish_every" => Json::Num(value.parse::<f64>()?),
             "concurrent" | "queue_aware" | "reroute" | "stream_telemetry" => {
                 Json::Bool(value.parse::<bool>()?)
             }
@@ -260,6 +271,10 @@ impl Config {
                 self.stream_telemetry = v.as_bool().context("expected bool")?
             }
             "scheduler" => str_field!(scheduler),
+            "learner" => str_field!(learner),
+            "learner_publish_every" => {
+                self.learner_publish_every = v.as_usize().context("expected int")?
+            }
             "threads" => self.threads = v.as_usize().context("expected int")?,
             "seed" => self.seed = v.as_f64().context("expected number")? as u64,
             other => bail!("unknown config key `{other}`"),
@@ -341,6 +356,10 @@ impl Config {
             );
         }
         crate::coordinator::SchedKind::parse(&self.scheduler).context("scheduler spec")?;
+        crate::dqn::LearnerMode::parse(&self.learner).context("learner spec")?;
+        if self.learner_publish_every == 0 {
+            bail!("learner_publish_every must be >= 1");
+        }
         crate::workload::Arrivals::parse(&self.arrivals).context("arrivals spec")?;
         crate::workload::SloClass::parse(&self.slo).context("slo spec")?;
         crate::coordinator::fleet::Router::parse(&self.router).context("router spec")?;
@@ -531,6 +550,25 @@ mod tests {
         assert!(c.set("scheduler", "fibonacci").is_err());
         let j = Json::parse(r#"{"scheduler": "heap"}"#).unwrap();
         assert_eq!(Config::from_json(&j).unwrap().scheduler, "heap");
+    }
+
+    #[test]
+    fn learner_fields_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.learner, "inline");
+        assert_eq!(c.learner_publish_every, 32);
+        c.set("learner", "bg").unwrap();
+        c.set("learner_publish_every", "16").unwrap();
+        assert_eq!(c.learner, "bg");
+        assert_eq!(c.learner_publish_every, 16);
+        c.set("learner", "background").unwrap();
+        c.set("learner", "inline").unwrap();
+        assert!(c.set("learner", "turbo").is_err());
+        assert!(c.set("learner_publish_every", "0").is_err());
+        let j = Json::parse(r#"{"learner": "bg", "learner_publish_every": 8}"#).unwrap();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c2.learner, "bg");
+        assert_eq!(c2.learner_publish_every, 8);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use super::fleet::{Admission, FleetOpts, Router};
 use super::sched::SchedKind;
 use super::shard::SHARD_EPOCH_S;
 use crate::configx::Config;
+use crate::dqn::LearnerMode;
 use anyhow::Result;
 
 /// Every engine tunable in one flat, builder-style block: uplink/cloud
@@ -58,6 +59,13 @@ pub struct EngineConfig {
     /// constant-memory telemetry (streaming sinks) instead of collected
     /// per-task reports
     pub stream_telemetry: bool,
+    /// DQN gradient-step placement for training policies (dvfo/drldo):
+    /// consumed at policy construction (`build_policy`), not by
+    /// `des_opts()`/`fleet_opts()`
+    pub learner: LearnerMode,
+    /// background-learner snapshot cadence (transitions per publish);
+    /// same consumption point as `learner`
+    pub learner_publish_every: usize,
 }
 
 impl Default for EngineConfig {
@@ -80,6 +88,8 @@ impl Default for EngineConfig {
             shards: 1,
             shard_epoch_s: SHARD_EPOCH_S,
             stream_telemetry: false,
+            learner: LearnerMode::Inline,
+            learner_publish_every: 32,
         }
     }
 }
@@ -109,6 +119,8 @@ impl EngineConfig {
             shards: cfg.shards,
             shard_epoch_s: SHARD_EPOCH_S,
             stream_telemetry: cfg.stream_telemetry,
+            learner: LearnerMode::parse(&cfg.learner)?,
+            learner_publish_every: cfg.learner_publish_every,
         })
     }
 
@@ -187,6 +199,16 @@ impl EngineConfig {
         self
     }
 
+    pub fn learner(mut self, v: LearnerMode) -> Self {
+        self.learner = v;
+        self
+    }
+
+    pub fn learner_publish_every(mut self, v: usize) -> Self {
+        self.learner_publish_every = v;
+        self
+    }
+
     /// The DES parameter block (uplink/cloud batching + executor pool).
     pub fn des_opts(&self) -> DesOpts {
         DesOpts {
@@ -230,7 +252,9 @@ mod tests {
             .migrate_threshold_s(0.05)
             .migrate_penalty_s(0.002)
             .shards(4)
-            .stream_telemetry(true);
+            .stream_telemetry(true)
+            .learner(LearnerMode::Background)
+            .learner_publish_every(16);
         let fo = ec.fleet_opts();
         assert_eq!(fo.des.batch_window_s, 0.004);
         assert_eq!(fo.des.cloud_slots, 2);
@@ -243,6 +267,8 @@ mod tests {
         assert_eq!(fo.migrate_penalty_s, 0.002);
         assert_eq!(ec.shards, 4);
         assert!(ec.stream_telemetry);
+        assert_eq!(ec.learner, LearnerMode::Background);
+        assert_eq!(ec.learner_publish_every, 16);
     }
 
     #[test]
@@ -264,5 +290,7 @@ mod tests {
         assert_eq!(fo.migrate_penalty_s, legacy.migrate_penalty_s);
         assert_eq!(ec.shards, 1);
         assert!(!ec.stream_telemetry);
+        assert_eq!(ec.learner, LearnerMode::Inline);
+        assert_eq!(ec.learner_publish_every, 32);
     }
 }

@@ -50,15 +50,21 @@ pub fn build_env(cfg: &Config) -> Result<EdgeCloudEnv> {
 /// environment to grid-search against.
 pub fn build_policy(cfg: &Config, env: &EdgeCloudEnv) -> Result<Box<dyn Policy>> {
     let l = cfg.freq_levels;
+    // gradient-step placement for the training policies; "inline" (the
+    // default) leaves the historical blocking behavior untouched
+    let lopts = crate::dqn::LearnerOpts {
+        mode: crate::dqn::LearnerMode::parse(&cfg.learner)?,
+        publish_every: cfg.learner_publish_every,
+        ..crate::dqn::LearnerOpts::default()
+    };
     Ok(match cfg.policy.as_str() {
-        "dvfo" => Box::new(DvfoPolicy::new(
-            l,
-            cfg.xi_levels,
-            cfg.concurrent,
-            cfg.queue_aware,
-            cfg.seed,
-        )),
-        "drldo" => Box::new(DrldoPolicy::new(l, cfg.xi_levels, cfg.seed)),
+        "dvfo" => Box::new(
+            DvfoPolicy::new(l, cfg.xi_levels, cfg.concurrent, cfg.queue_aware, cfg.seed)
+                .with_learner(lopts),
+        ),
+        "drldo" => {
+            Box::new(DrldoPolicy::new(l, cfg.xi_levels, cfg.seed).with_learner(lopts))
+        }
         "appealnet" => Box::new(AppealNetPolicy::new(l, cfg.seed)),
         "cloud_only" => Box::new(CloudOnlyPolicy::new(l)),
         "edge_only" => Box::new(EdgeOnlyPolicy::new(l)),
@@ -373,6 +379,26 @@ mod tests {
             dvfo.cost.mean(),
             edge.cost.mean()
         );
+    }
+
+    #[test]
+    fn bg_learner_trains_and_serves_through_the_coordinator() {
+        // --learner bg end-to-end: train() spawns the background
+        // learner on the first decide, set_training(false) drains it,
+        // and deployment serves greedily off the trained agent
+        let mut c = cfg("dvfo");
+        c.learner = "bg".into();
+        c.learner_publish_every = 8;
+        let mut coord = Coordinator::from_config(&c).unwrap();
+        let mut gen =
+            TaskGen::new(&c.model, coord.env.dataset, Arrivals::Sequential, 3).unwrap();
+        let curve = coord.train(&mut gen, 2, 16);
+        assert_eq!(curve.len(), 2);
+        assert!(curve.iter().all(|r| r.is_finite()));
+        let tasks = gen.take(10);
+        let s = coord.serve(&tasks);
+        assert_eq!(s.count(), 10);
+        assert!(s.tti_ms.mean() > 0.0);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! * ε-greedy exploration with linear decay, target network, Adam, Huber
 //!   TD gradients, prioritized replay.
 
-use super::mlp::{huber_grad, Adam, InferScratch, Mlp};
+use super::mlp::{huber_grad, Adam, BatchScratch, InferScratch, Mlp};
 use super::replay::{ReplayBuffer, Transition};
 use super::tensor::Tensor2;
 use crate::util::Pcg32;
@@ -154,6 +154,8 @@ struct LearnArena {
     nxs: Vec<f32>,
     tds: Vec<f64>,
     dout: Option<Tensor2>,
+    /// ping-pong tensors for the target net's batched forward
+    batch: BatchScratch,
 }
 
 impl DqnAgent {
@@ -178,6 +180,17 @@ impl DqnAgent {
             scratch: InferScratch::default(),
             arena: LearnArena::default(),
         }
+    }
+
+    /// The agent's hyperparameters (read-only — the background learner
+    /// mirrors the ε schedule from these).
+    pub fn config(&self) -> &DqnConfig {
+        &self.cfg
+    }
+
+    /// Environment steps taken so far (drives the ε schedule).
+    pub fn steps(&self) -> usize {
+        self.steps
     }
 
     pub fn epsilon(&self) -> f64 {
@@ -245,7 +258,10 @@ impl DqnAgent {
         let xs = Tensor2::from_vec(batch, sd, xs);
         let nxs = Tensor2::from_vec(batch, sd, nxs);
         let cache = self.online.forward(&xs);
-        let q_next = self.target.forward(&nxs).output;
+        // target side needs only Q-values, not backprop caches: batched
+        // inference through the arena's ping-pong scratch, bit-identical
+        // to the historical `forward(&nxs).output`
+        let q_next = self.target.infer_batch(&nxs, &mut self.arena.batch);
 
         // TD targets with the thinking-while-moving fractional discount;
         // dout is the arena tensor zeroed in place when the shape holds

@@ -1,0 +1,300 @@
+//! §Perf — packed, register-blocked GEMM kernels for the DQN hot path.
+//!
+//! The three tensor contractions the trainer lives on (`matmul`,
+//! `matmul_tn`, `matmul_nt` in `tensor.rs`) all route through one
+//! BLIS-style driver here: pack a block of A into MR-wide row panels
+//! and a block of B into NR-wide column panels, then run an MR×NR
+//! register-tile microkernel over the packed panels. Cache tiling runs
+//! over **M and N only — never K**: each output element is still one
+//! sequential accumulation over the full K extent, products added in
+//! ascending-k order from a +0.0 accumulator, exactly like the naive
+//! triple loop. That keeps every result **bit-identical** to the
+//! straight-line reference (`rust/tests/gemm_parity.rs` gates this with
+//! `to_bits()` equality), so the golden/parity suites — including the
+//! PJRT-artifact comparison in `runtime_parity.rs` — run unchanged.
+//!
+//! The old per-element `a == 0.0` skip is gone from these kernels: in
+//! packed panels the branch defeats vectorization, and skipping is
+//! bit-neutral anyway whenever the B operand is finite (`±0.0 · b`
+//! rounds to `±0.0`, and adding `±0.0` to a +0.0-seeded accumulator
+//! never changes its bits under round-to-nearest — see the README
+//! "Learner performance" section for the full argument). The skip
+//! survives only in `Mlp::infer`'s matrix-vector path, where a zero
+//! ReLU activation provably saves an entire weight-row load.
+//!
+//! Packing buffers are thread-local (the background learner and the
+//! sweep workers each get their own), so the public entry points keep
+//! the existing allocation-free `matmul_into` contract after warmup.
+
+use std::cell::RefCell;
+
+/// Microkernel register-tile height (rows of A per panel).
+pub const MR: usize = 4;
+/// Microkernel register-tile width (columns of B per panel).
+pub const NR: usize = 8;
+/// Cache-block height over M.
+const MC: usize = 64;
+/// Cache-block width over N.
+const NC: usize = 64;
+/// Below this many multiply-adds the plain triple loop beats the cost
+/// of packing (the DQN's per-decision 1×K vectors land here).
+const SMALL_FLOPS: usize = 8 * 1024;
+
+thread_local! {
+    static PACK: RefCell<PackBufs> = RefCell::new(PackBufs::default());
+}
+
+/// Reusable packing buffers: grown once to the largest block seen on
+/// this thread, then reused for every subsequent call.
+#[derive(Default)]
+struct PackBufs {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+/// out = A (m,k) @ B (k,n), all row-major; `out` is fully overwritten.
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    gemm_driver(m, k, n, |i, p| a[i * k + p], |p, j| b[p * n + j], out);
+}
+
+/// out = Aᵀ @ B with A stored (k,m): the backward-pass `input.T @ grad`
+/// contraction. A's column i is read as `a[p*m + i]`.
+pub fn gemm_tn(k: usize, m: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    gemm_driver(m, k, n, |i, p| a[p * m + i], |p, j| b[p * n + j], out);
+}
+
+/// out = A @ Bᵀ with B stored (n,k): the backward-pass `grad @ W.T`
+/// contraction. B's row j is read as `b[j*k + p]`.
+pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    gemm_driver(m, k, n, |i, p| a[i * k + p], |p, j| b[j * k + p], out);
+}
+
+/// One driver for all three layouts: the indexers abstract A/B element
+/// access and monomorphize per call site, packing normalizes the layout
+/// so the microkernel only ever sees contiguous panels.
+fn gemm_driver<FA, FB>(m: usize, k: usize, n: usize, a_at: FA, b_at: FB, out: &mut [f32])
+where
+    FA: Fn(usize, usize) -> f32,
+    FB: Fn(usize, usize) -> f32,
+{
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if m * n * k.max(1) <= SMALL_FLOPS {
+        small_gemm(m, k, n, &a_at, &b_at, out);
+        return;
+    }
+    PACK.with(|bufs| {
+        let bufs = &mut *bufs.borrow_mut();
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            let jpanels = nc.div_ceil(NR);
+            pack_b(k, jc, nc, jpanels, &b_at, &mut bufs.b);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                let ipanels = mc.div_ceil(MR);
+                pack_a(k, ic, mc, ipanels, &a_at, &mut bufs.a);
+                for ip in 0..ipanels {
+                    let i0 = ic + ip * MR;
+                    let mr = MR.min(mc - ip * MR);
+                    let apan = &bufs.a[ip * k * MR..(ip + 1) * k * MR];
+                    for jp in 0..jpanels {
+                        let j0 = jc + jp * NR;
+                        let nr = NR.min(nc - jp * NR);
+                        let bpan = &bufs.b[jp * k * NR..(jp + 1) * k * NR];
+                        // MR×NR register tile: each acc element is one
+                        // independent full-K accumulation in ascending-k
+                        // order from +0.0 — the bit-exactness invariant.
+                        // Padded lanes (r >= mr, c >= nr) compute garbage
+                        // against the zero-padded panels and are never
+                        // written back.
+                        let mut acc = [[0.0f32; NR]; MR];
+                        for (arow, brow) in
+                            apan.chunks_exact(MR).zip(bpan.chunks_exact(NR))
+                        {
+                            for r in 0..MR {
+                                let av = arow[r];
+                                for c in 0..NR {
+                                    acc[r][c] += av * brow[c];
+                                }
+                            }
+                        }
+                        for r in 0..mr {
+                            let o0 = (i0 + r) * n + j0;
+                            out[o0..o0 + nr].copy_from_slice(&acc[r][..nr]);
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Pack a (mc,k) block of A into `ipanels` MR-row panels, column-major
+/// within each panel (panel p-step is MR floats). Short tail panels are
+/// zero-padded — the pad rows feed the microkernel but never reach
+/// `out`.
+fn pack_a<FA: Fn(usize, usize) -> f32>(
+    k: usize,
+    ic: usize,
+    mc: usize,
+    ipanels: usize,
+    a_at: &FA,
+    buf: &mut Vec<f32>,
+) {
+    buf.clear();
+    buf.resize(ipanels * k * MR, 0.0);
+    for ip in 0..ipanels {
+        let base = ip * k * MR;
+        let mr = MR.min(mc - ip * MR);
+        for p in 0..k {
+            let dst = &mut buf[base + p * MR..base + (p + 1) * MR];
+            for (r, d) in dst.iter_mut().enumerate().take(mr) {
+                *d = a_at(ic + ip * MR + r, p);
+            }
+        }
+    }
+}
+
+/// Pack a (k,nc) block of B into `jpanels` NR-column panels, row-major
+/// within each panel (panel p-step is NR floats); zero-padded tails.
+fn pack_b<FB: Fn(usize, usize) -> f32>(
+    k: usize,
+    jc: usize,
+    nc: usize,
+    jpanels: usize,
+    b_at: &FB,
+    buf: &mut Vec<f32>,
+) {
+    buf.clear();
+    buf.resize(jpanels * k * NR, 0.0);
+    for jp in 0..jpanels {
+        let base = jp * k * NR;
+        let nr = NR.min(nc - jp * NR);
+        for p in 0..k {
+            let dst = &mut buf[base + p * NR..base + (p + 1) * NR];
+            for (c, d) in dst.iter_mut().enumerate().take(nr) {
+                *d = b_at(p, jc + jp * NR + c);
+            }
+        }
+    }
+}
+
+/// Plain triple loop for shapes too small to amortize packing — same
+/// per-element accumulation order as the tiled path (ascending k from a
+/// +0.0 local accumulator), so the two paths are bit-interchangeable.
+fn small_gemm<FA, FB>(m: usize, k: usize, n: usize, a_at: &FA, b_at: &FB, out: &mut [f32])
+where
+    FA: Fn(usize, usize) -> f32,
+    FB: Fn(usize, usize) -> f32,
+{
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += a_at(i, p) * b_at(p, j);
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Straight-line reference with the same accumulation order.
+    fn reference(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn seq(len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|i| ((i * 7 + 3) % 11) as f32 * scale - 1.5).collect()
+    }
+
+    #[test]
+    fn nn_matches_reference_across_tile_boundaries() {
+        // shapes straddling MR/NR/MC/NC boundaries, incl. degenerate dims
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, 9, 8),
+            (5, 16, 9),
+            (63, 10, 65),
+            (64, 33, 64),
+            (65, 12, 63),
+            (70, 40, 70),
+            (0, 4, 4),
+            (4, 0, 4),
+            (4, 4, 0),
+            (1, 70, 1),
+        ] {
+            let a = seq(m * k, 0.25);
+            let b = seq(k * n, 0.5);
+            let mut out = vec![f32::NAN; m * n];
+            gemm_nn(m, k, n, &a, &b, &mut out);
+            let want = reference(m, k, n, &a, &b);
+            for (i, (&x, &y)) in out.iter().zip(want.iter()).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n}) elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn tn_and_nt_match_explicit_transposes() {
+        let (m, k, n) = (66, 21, 67);
+        let a = seq(m * k, 0.2); // logical A (m,k)
+        let b = seq(k * n, 0.3);
+        let want = reference(m, k, n, &a, &b);
+        // tn: store A as (k,m)
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut out = vec![0.0f32; m * n];
+        gemm_tn(k, m, n, &at, &b, &mut out);
+        for (x, y) in out.iter().zip(want.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // nt: store B as (n,k)
+        let mut bt = vec![0.0f32; n * k];
+        for p in 0..k {
+            for j in 0..n {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        gemm_nt(m, k, n, &a, &bt, &mut out);
+        for (x, y) in out.iter().zip(want.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn output_fully_overwritten_even_for_empty_k() {
+        // k = 0 ⇒ every element is the empty sum = +0.0; stale sentinel
+        // values must not survive
+        let (m, n) = (65, 65);
+        let mut out = vec![7.5f32; m * n];
+        gemm_nn(m, 0, n, &[], &[], &mut out);
+        assert!(out.iter().all(|&x| x.to_bits() == 0.0f32.to_bits()));
+    }
+}

@@ -1,0 +1,374 @@
+//! §Perf — background learner: gradient steps off the decide path.
+//!
+//! The paper's "thinking-while-moving" mechanism (§5.1) is concurrent
+//! action selection — the fractional `gamma_pow` discount models the
+//! staleness, but until now every `Policy::feedback()` still *blocked*
+//! on a full inline gradient step. `BgLearner` moves the
+//! remember+learn work onto a dedicated thread and leaves the decide
+//! path with one queue push and an occasional snapshot adoption.
+//!
+//! Determinism contract (mirrors the shard-engine publish→barrier→adopt
+//! idiom):
+//!
+//! * The actor sends every transition over a **bounded** channel
+//!   (backpressure, never loss) and, every `publish_every`-th push,
+//!   sends a `Publish` marker and **blocks** until the snapshot comes
+//!   back. The worker drains messages FIFO, so the adopted weights are
+//!   exactly `f(all transitions pushed so far)` — a fixed cadence is
+//!   bit-reproducible run-to-run regardless of thread scheduling.
+//! * Snapshots are double-buffered: two `Mlp`s cycle between actor and
+//!   worker over dedicated channels, so steady-state publication
+//!   allocates nothing (`Mlp::copy_from` reuses the buffers).
+//! * `finish()` hangs up the queue, which makes the worker drain every
+//!   queued transition before returning the agent — the final weights
+//!   are a deterministic function of the full transition sequence.
+//!
+//! The actor's exploration RNG is its own `Pcg32` stream, decoupled
+//! from the agent's replay-sampling stream, so bg mode is *internally*
+//! deterministic but not bit-identical to inline mode (inline keeps the
+//! historical single-stream behavior exactly — `--learner inline`
+//! changes nothing).
+
+use super::agent::{ActionSpace, DqnAgent};
+use super::mlp::{InferScratch, Mlp};
+use super::replay::Transition;
+use crate::util::Pcg32;
+use anyhow::{bail, Result};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::thread::JoinHandle;
+
+/// Where gradient steps run relative to the decide path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LearnerMode {
+    /// Historical behavior: `feedback()` blocks on the gradient step.
+    Inline,
+    /// Gradient steps on a background thread; decide path pushes to a
+    /// bounded queue and adopts weight snapshots at a fixed cadence.
+    Background,
+}
+
+impl LearnerMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "inline" => Ok(Self::Inline),
+            "bg" | "background" => Ok(Self::Background),
+            other => bail!("unknown learner mode '{other}' (expected inline | bg)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Inline => "inline",
+            Self::Background => "bg",
+        }
+    }
+}
+
+/// Learner placement + cadence knobs, threaded from configx/CLI into
+/// the training policies.
+#[derive(Clone, Debug)]
+pub struct LearnerOpts {
+    pub mode: LearnerMode,
+    /// Adopt a fresh weight snapshot every this-many pushed transitions
+    /// (background mode only).
+    pub publish_every: usize,
+    /// Bound of the transition queue: a slow learner back-pressures the
+    /// actor instead of dropping experience.
+    pub queue_cap: usize,
+}
+
+impl Default for LearnerOpts {
+    fn default() -> Self {
+        Self {
+            mode: LearnerMode::Inline,
+            publish_every: 32,
+            queue_cap: 256,
+        }
+    }
+}
+
+enum Msg {
+    Step(Transition),
+    Publish,
+}
+
+/// Actor-side handle: owns a read-only weight snapshot for greedy
+/// decisions and the channels to the learner thread. `finish()` joins
+/// and returns the (fully trained) agent for deployment.
+pub struct BgLearner {
+    tx: SyncSender<Msg>,
+    snap_rx: Receiver<Mlp>,
+    ret_tx: Sender<Mlp>,
+    handle: JoinHandle<DqnAgent>,
+    space: ActionSpace,
+    net: Mlp,
+    scratch: InferScratch,
+    rng: Pcg32,
+    steps: usize,
+    eps_start: f64,
+    eps_end: f64,
+    eps_decay_steps: usize,
+    publish_every: usize,
+    since_publish: usize,
+}
+
+impl BgLearner {
+    /// Move `agent` onto a learner thread. The actor keeps a clone of
+    /// the online net as its decision snapshot and mirrors the agent's
+    /// ε schedule (continuing from its current step count); exploration
+    /// uses a dedicated RNG stream derived from `seed`.
+    pub fn spawn(agent: DqnAgent, opts: &LearnerOpts, seed: u64) -> Self {
+        let cfg = agent.config();
+        let (eps_start, eps_end, eps_decay_steps) =
+            (cfg.eps_start, cfg.eps_end, cfg.eps_decay_steps);
+        let steps = agent.steps();
+        let space = agent.space.clone();
+        let net = agent.online.clone();
+        let spare = agent.online.clone();
+
+        let (tx, rx) = sync_channel::<Msg>(opts.queue_cap.max(1));
+        let (snap_tx, snap_rx) = sync_channel::<Mlp>(1);
+        let (ret_tx, ret_rx) = channel::<Mlp>();
+
+        let handle = std::thread::Builder::new()
+            .name("dqn-learner".into())
+            .spawn(move || {
+                let mut agent = agent;
+                let mut spare = Some(spare);
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Step(t) => {
+                            agent.remember(t);
+                            agent.learn();
+                        }
+                        Msg::Publish => {
+                            let mut buf = match spare.take() {
+                                Some(b) => b,
+                                None => match ret_rx.recv() {
+                                    Ok(b) => b,
+                                    Err(_) => break, // actor gone
+                                },
+                            };
+                            buf.copy_from(&agent.online);
+                            if snap_tx.send(buf).is_err() {
+                                break; // actor gone
+                            }
+                        }
+                    }
+                }
+                agent
+            })
+            .expect("spawn dqn-learner thread");
+
+        Self {
+            tx,
+            snap_rx,
+            ret_tx,
+            handle,
+            space,
+            net,
+            scratch: InferScratch::default(),
+            rng: Pcg32::new(seed, 0xAC7),
+            steps,
+            eps_start,
+            eps_end,
+            eps_decay_steps,
+            publish_every: opts.publish_every.max(1),
+            since_publish: 0,
+        }
+    }
+
+    fn epsilon(&self) -> f64 {
+        let t = (self.steps as f64 / self.eps_decay_steps as f64).min(1.0);
+        self.eps_start + (self.eps_end - self.eps_start) * t
+    }
+
+    /// ε-greedy action off the current snapshot — never blocks on the
+    /// learner (the "thinking" happens on the other thread).
+    pub fn act(&mut self, state: &[f32]) -> Vec<usize> {
+        self.steps += 1;
+        if self.rng.chance(self.epsilon()) {
+            return self.space.random(&mut self.rng);
+        }
+        let q = self.net.infer(state, &mut self.scratch);
+        self.space.argmax(q)
+    }
+
+    /// Greedy action off the current snapshot (no exploration).
+    pub fn greedy_into(&mut self, state: &[f32], out: &mut Vec<usize>) {
+        let q = self.net.infer(state, &mut self.scratch);
+        self.space.argmax_into(q, out);
+    }
+
+    /// Hand a transition to the learner. Every `publish_every`-th push
+    /// also requests a snapshot and blocks until it arrives, so the
+    /// adopted weights are a deterministic function of the pushed
+    /// transition prefix.
+    pub fn push(&mut self, t: Transition) {
+        if self.tx.send(Msg::Step(t)).is_err() {
+            return; // learner thread died; finish() will surface it
+        }
+        self.since_publish += 1;
+        if self.since_publish >= self.publish_every {
+            self.since_publish = 0;
+            if self.tx.send(Msg::Publish).is_err() {
+                return;
+            }
+            if let Ok(fresh) = self.snap_rx.recv() {
+                let old = std::mem::replace(&mut self.net, fresh);
+                let _ = self.ret_tx.send(old); // worker may already be gone
+            }
+        }
+    }
+
+    /// Hang up, drain, join: the worker processes every queued
+    /// transition before returning the agent, so the result is exactly
+    /// what an inline learner fed the same sequence would hold (modulo
+    /// the actor-side exploration stream, which lives here, not there).
+    pub fn finish(self) -> DqnAgent {
+        let BgLearner {
+            tx, ret_tx, handle, ..
+        } = self;
+        drop(tx);
+        drop(ret_tx);
+        handle.join().expect("dqn-learner thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dqn::agent::DqnConfig;
+
+    fn mk_agent(seed: u64) -> DqnAgent {
+        DqnAgent::new(
+            DqnConfig {
+                state_dim: 2,
+                hidden: vec![8],
+                batch: 8,
+                ..Default::default()
+            },
+            ActionSpace::new(vec![2, 3]),
+            seed,
+        )
+    }
+
+    fn weights_bits(mlp: &Mlp) -> Vec<u32> {
+        let mut out = Vec::new();
+        for w in &mlp.ws {
+            out.extend(w.data.iter().map(|x| x.to_bits()));
+        }
+        for b in &mlp.bs {
+            out.extend(b.iter().map(|x| x.to_bits()));
+        }
+        out
+    }
+
+    fn tr(i: usize) -> Transition {
+        Transition {
+            state: vec![(i % 5) as f32 * 0.2, 1.0],
+            action: vec![i % 2, i % 3],
+            reward: (i % 3) as f64 * 0.1,
+            next_state: vec![1.0, (i % 7) as f32 * 0.1],
+            done: i % 11 == 0,
+            gamma_pow: 1.0,
+        }
+    }
+
+    #[test]
+    fn mode_parse_roundtrip_and_errors() {
+        assert_eq!(LearnerMode::parse("inline").unwrap(), LearnerMode::Inline);
+        assert_eq!(LearnerMode::parse("bg").unwrap(), LearnerMode::Background);
+        assert_eq!(
+            LearnerMode::parse("background").unwrap(),
+            LearnerMode::Background
+        );
+        assert!(LearnerMode::parse("turbo").is_err());
+        assert_eq!(LearnerMode::Inline.as_str(), "inline");
+        assert_eq!(LearnerMode::Background.as_str(), "bg");
+    }
+
+    #[test]
+    fn bg_run_is_bit_reproducible() {
+        // identical seeds + fixed cadence ⇒ identical action sequences
+        // and identical final weights, run-to-run
+        let run = || {
+            let opts = LearnerOpts {
+                mode: LearnerMode::Background,
+                publish_every: 4,
+                queue_cap: 16,
+            };
+            let mut learner = BgLearner::spawn(mk_agent(77), &opts, 77);
+            let mut actions = Vec::new();
+            let mut state = vec![0.1f32, 0.9];
+            for i in 0..48 {
+                let a = learner.act(&state);
+                let next = vec![a[0] as f32 * 0.5, a[1] as f32 * 0.25];
+                learner.push(Transition {
+                    state: state.clone(),
+                    action: a.clone(),
+                    reward: (a[0] + a[1]) as f64 * 0.1,
+                    next_state: next.clone(),
+                    done: i % 10 == 9,
+                    gamma_pow: 1.0,
+                });
+                actions.push(a);
+                state = next;
+            }
+            let agent = learner.finish();
+            (actions, weights_bits(&agent.online))
+        };
+        let (a1, w1) = run();
+        let (a2, w2) = run();
+        assert_eq!(a1, a2, "action sequences must match run-to-run");
+        assert_eq!(w1, w2, "final weights must match run-to-run");
+    }
+
+    #[test]
+    fn publish_cadence_one_matches_synchronous_twin() {
+        // at K=1 every adopted snapshot must equal a synchronous agent
+        // fed the identical transition sequence, step for step
+        let opts = LearnerOpts {
+            mode: LearnerMode::Background,
+            publish_every: 1,
+            queue_cap: 4,
+        };
+        let mut learner = BgLearner::spawn(mk_agent(5), &opts, 5);
+        let mut twin = mk_agent(5);
+        for i in 0..24 {
+            let t = tr(i);
+            twin.remember(t.clone());
+            twin.learn();
+            learner.push(t);
+            assert_eq!(
+                weights_bits(&learner.net),
+                weights_bits(&twin.online),
+                "snapshot after push {i} must equal the synchronous twin"
+            );
+        }
+        let agent = learner.finish();
+        assert_eq!(weights_bits(&agent.online), weights_bits(&twin.online));
+    }
+
+    #[test]
+    fn finish_drains_queued_transitions() {
+        // no publish ever happens (cadence > pushes); finish() must
+        // still process every queued transition before returning
+        let opts = LearnerOpts {
+            mode: LearnerMode::Background,
+            publish_every: 1000,
+            queue_cap: 64,
+        };
+        let mut learner = BgLearner::spawn(mk_agent(3), &opts, 3);
+        let mut twin = mk_agent(3);
+        for i in 0..20 {
+            let t = tr(i);
+            twin.remember(t.clone());
+            twin.learn();
+            learner.push(t);
+        }
+        let agent = learner.finish();
+        assert_eq!(agent.replay.len(), 20, "all transitions drained");
+        assert_eq!(weights_bits(&agent.online), weights_bits(&twin.online));
+    }
+}

@@ -99,6 +99,41 @@ impl Mlp {
         &scratch.a
     }
 
+    /// Batched inference without activation caching — the target-net
+    /// side of `learn()` needs only the Q-values, not the per-layer
+    /// caches `forward` keeps for backprop. Ping-pongs between the two
+    /// scratch tensors, so a warm scratch makes the whole pass
+    /// allocation-free.
+    ///
+    /// Accumulation order is pinned to `forward`'s (matmul from a +0.0
+    /// accumulator, then `add_row_bias`), NOT to `infer`'s bias-first
+    /// order — `learn()` historically used `forward` for the target
+    /// pass, and this keeps the result bit-identical to
+    /// `forward(x).output` (gated in `rust/tests/gemm_parity.rs`).
+    pub fn infer_batch<'s>(&self, x: &Tensor2, scratch: &'s mut BatchScratch) -> &'s Tensor2 {
+        debug_assert_eq!(x.cols, self.ws[0].rows);
+        let n = self.ws.len();
+        let BatchScratch { a, b } = scratch;
+        self.layer_into(x, 0, a);
+        let (mut src, mut dst) = (a, b);
+        for i in 1..n {
+            self.layer_into(src, i, dst);
+            std::mem::swap(&mut src, &mut dst);
+        }
+        src
+    }
+
+    /// One linear layer into a reusable output tensor: z = x@W + b,
+    /// relu unless it is the final layer.
+    fn layer_into(&self, x: &Tensor2, i: usize, out: &mut Tensor2) {
+        out.resize(x.rows, self.ws[i].cols);
+        x.matmul_into(&self.ws[i], out);
+        out.add_row_bias(&self.bs[i]);
+        if i + 1 < self.ws.len() {
+            out.relu_inplace();
+        }
+    }
+
     /// Backprop from dL/d(output); returns gradients aligned with (ws, bs).
     pub fn backward(
         &self,
@@ -122,10 +157,26 @@ impl Mlp {
         (dws, dbs)
     }
 
-    /// Hard copy (target-network sync).
+    /// Hard copy (target-network sync). When the architectures match —
+    /// the every-`target_sync_every`-steps case — this copies element-
+    /// wise into the existing buffers and performs no allocation; it
+    /// falls back to a clone only on a shape mismatch.
     pub fn copy_from(&mut self, other: &Mlp) {
-        self.ws = other.ws.clone();
-        self.bs = other.bs.clone();
+        let same_shape = self.ws.len() == other.ws.len()
+            && self.bs.len() == other.bs.len()
+            && self.ws.iter().zip(&other.ws).all(|(a, b)| a.shape() == b.shape())
+            && self.bs.iter().zip(&other.bs).all(|(a, b)| a.len() == b.len());
+        if same_shape {
+            for (dst, src) in self.ws.iter_mut().zip(&other.ws) {
+                dst.data.copy_from_slice(&src.data);
+            }
+            for (dst, src) in self.bs.iter_mut().zip(&other.bs) {
+                dst.copy_from_slice(src);
+            }
+        } else {
+            self.ws = other.ws.clone();
+            self.bs = other.bs.clone();
+        }
     }
 
     /// Flattened weights in the artifact's argument order
@@ -210,6 +261,23 @@ impl InferScratch {
         }
         if self.b.capacity() < cap {
             self.b.reserve(cap - self.b.capacity());
+        }
+    }
+}
+
+/// Reusable ping-pong tensors for `Mlp::infer_batch` — after warming to
+/// the batch's widest layer the batched target forward is
+/// allocation-free.
+pub struct BatchScratch {
+    a: Tensor2,
+    b: Tensor2,
+}
+
+impl Default for BatchScratch {
+    fn default() -> Self {
+        Self {
+            a: Tensor2::zeros(0, 0),
+            b: Tensor2::zeros(0, 0),
         }
     }
 }
@@ -315,6 +383,83 @@ mod tests {
             cap_before,
             "warm infer must not grow the scratch"
         );
+    }
+
+    #[test]
+    fn infer_batch_matches_forward_bitwise() {
+        let mut rng = Pcg32::seeded(7);
+        let mlp = tiny(&mut rng);
+        let x = Tensor2::from_vec(
+            5,
+            3,
+            (0..15).map(|_| rng.next_f32() * 2.0 - 1.0).collect(),
+        );
+        let want = mlp.forward(&x).output;
+        let mut scratch = BatchScratch::default();
+        {
+            let got = mlp.infer_batch(&x, &mut scratch);
+            assert_eq!(got.shape(), want.shape());
+            for (a, b) in got.data.iter().zip(want.data.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+            }
+        }
+        // warm second pass: same bits, no scratch growth
+        let cap_before = (scratch.a.data.capacity(), scratch.b.data.capacity());
+        let got2 = mlp.infer_batch(&x, &mut scratch);
+        for (a, b) in got2.data.iter().zip(want.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(
+            (scratch.a.data.capacity(), scratch.b.data.capacity()),
+            cap_before,
+            "warm infer_batch must not grow the scratch"
+        );
+    }
+
+    #[test]
+    fn copy_from_is_allocation_free_and_exact() {
+        let mut rng = Pcg32::seeded(8);
+        let mut src = tiny(&mut rng);
+        let mut dst = tiny(&mut rng);
+        // make biases nonzero so the bs copy is actually exercised
+        for b in src.bs.iter_mut() {
+            for (j, x) in b.iter_mut().enumerate() {
+                *x = 0.125 * (j as f32 + 1.0);
+            }
+        }
+        let caps: Vec<(usize, usize, *const f32, *const f32)> = dst
+            .ws
+            .iter()
+            .zip(dst.bs.iter())
+            .map(|(w, b)| (w.data.capacity(), b.capacity(), w.data.as_ptr(), b.as_ptr()))
+            .collect();
+        dst.copy_from(&src);
+        for ((w, b), (sw, sb)) in dst
+            .ws
+            .iter()
+            .zip(dst.bs.iter())
+            .zip(src.ws.iter().zip(src.bs.iter()))
+        {
+            for (x, y) in w.data.iter().zip(sw.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in b.iter().zip(sb.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // same-architecture sync reuses every buffer: capacity AND base
+        // pointer are untouched
+        for ((w, b), &(wc, bc, wp, bp)) in dst.ws.iter().zip(dst.bs.iter()).zip(caps.iter()) {
+            assert_eq!(w.data.capacity(), wc);
+            assert_eq!(b.capacity(), bc);
+            assert_eq!(w.data.as_ptr(), wp);
+            assert_eq!(b.as_ptr(), bp);
+        }
+        // shape mismatch still works via the clone fallback
+        let mut rng2 = Pcg32::seeded(9);
+        let other = Mlp::new(&[5, 4, 2], &mut rng2);
+        dst.copy_from(&other);
+        assert_eq!(dst.dims(), other.dims());
     }
 
     #[test]

@@ -1,14 +1,19 @@
-//! From-scratch DQN stack (paper §5.1): tensor ops, MLP with Adam,
-//! prioritized replay, and the agent with the thinking-while-moving
-//! concurrent backup (Eq. 15). PyTorch substitute per DESIGN.md
-//! §Substitutions — training is offline in the paper too, so the rust
-//! trainer runs inside the simulator before deployment.
+//! From-scratch DQN stack (paper §5.1): tensor ops, packed GEMM
+//! kernels, MLP with Adam, prioritized replay, the agent with the
+//! thinking-while-moving concurrent backup (Eq. 15), and a background
+//! learner that takes gradient steps off the decide path. PyTorch
+//! substitute per DESIGN.md §Substitutions — training is offline in the
+//! paper too, so the rust trainer runs inside the simulator before
+//! deployment.
 pub mod agent;
+pub mod gemm;
+pub mod learner;
 pub mod mlp;
 pub mod replay;
 pub mod tensor;
 
 pub use agent::{ActionSpace, DqnAgent, DqnConfig};
-pub use mlp::{Adam, InferScratch, Mlp};
+pub use learner::{BgLearner, LearnerMode, LearnerOpts};
+pub use mlp::{Adam, BatchScratch, InferScratch, Mlp};
 pub use replay::{ReplayBuffer, SumTree, Transition};
 pub use tensor::Tensor2;

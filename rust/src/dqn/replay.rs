@@ -12,8 +12,16 @@ pub struct SumTree {
 }
 
 impl SumTree {
+    /// Capacity is rounded up to the next power of two: `find`'s
+    /// `while i < cap` descent assumes a perfect binary tree (every
+    /// internal node has two children at `2i`/`2i+1`), which only holds
+    /// for power-of-two leaf counts — a raw cap like 50_000 would
+    /// mis-index leaves. The extra tail leaves stay at priority 0 and
+    /// are never returned for in-range targets (a descent only enters a
+    /// subtree with positive mass).
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0);
+        let cap = cap.next_power_of_two();
         Self {
             cap,
             tree: vec![0.0; 2 * cap],
@@ -207,7 +215,8 @@ mod tests {
             200,
             pt::vec_of(pt::f64_in(0.0, 5.0), 1, 32),
             |ps| {
-                let mut st = SumTree::new(ps.len().next_power_of_two());
+                // constructor rounds to the next power of two itself
+                let mut st = SumTree::new(ps.len());
                 for (i, &p) in ps.iter().enumerate() {
                     st.set(i, p);
                 }
@@ -235,6 +244,45 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn sumtree_non_power_of_two_capacity_rounds_up() {
+        // regression: before the constructor rounded up, a cap like 50
+        // broke the perfect-binary-tree assumption in `find` and leaves
+        // were silently mis-indexed
+        let mut st = SumTree::new(50);
+        for i in 0..50 {
+            st.set(i, 1.0);
+        }
+        assert!((st.total() - 50.0).abs() < 1e-12);
+        for i in 0..50 {
+            assert_eq!(st.find(i as f64 + 0.5), i, "unit-priority leaf {i}");
+        }
+    }
+
+    #[test]
+    fn buffer_with_non_power_of_two_cap_samples_correctly() {
+        // regression companion: a 50-cap buffer (rounded to 64 leaves
+        // internally) must still concentrate samples on the high-
+        // priority index, and never return an out-of-range index
+        let mut rb = ReplayBuffer::new(50);
+        for i in 0..50 {
+            rb.push(t(i as f64));
+        }
+        let idxs: Vec<usize> = (0..50).collect();
+        let mut tds = vec![0.001; 50];
+        tds[37] = 100.0;
+        rb.update_priorities(&idxs, &tds);
+        let mut rng = Pcg32::seeded(21);
+        let mut hits = 0;
+        for _ in 0..100 {
+            let (is, _) = rb.sample(4, &mut rng);
+            assert!(is.iter().all(|&i| i < 50), "index out of range: {is:?}");
+            hits += is.iter().filter(|&&i| i == 37).count();
+        }
+        // p37 holds ~95% of the total mass after the α=0.6 power law
+        assert!(hits > 330, "index 37 sampled {hits}/400 times");
     }
 
     #[test]

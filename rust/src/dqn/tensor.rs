@@ -1,9 +1,12 @@
 //! Minimal dense 2-D tensor for the from-scratch DQN (row-major f32).
 //!
-//! The hot path is `matmul` / `matmul_tn` / `matmul_nt` — written with a
-//! k-inner accumulation order that the compiler auto-vectorizes; see
-//! EXPERIMENTS.md §Perf for the measured numbers.
+//! The hot path is `matmul` / `matmul_tn` / `matmul_nt` — these delegate
+//! to the packed register-blocked kernels in `gemm.rs`, which keep the
+//! historical per-element accumulation order (full-K sequential,
+//! ascending k from +0.0) so results stay bit-identical to the old
+//! naive triple loops; `rust/tests/gemm_parity.rs` gates this.
 
+use super::gemm;
 use crate::util::Pcg32;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -54,26 +57,14 @@ impl Tensor2 {
         (self.rows, self.cols)
     }
 
-    /// out = self (m,k) @ other (k,n); accumulates into a caller-provided
-    /// buffer to keep the agent's act() allocation-free.
+    /// out = self (m,k) @ other (k,n); writes into a caller-provided
+    /// buffer (fully overwritten) to keep the agent's act() and the
+    /// batched target forward allocation-free.
     pub fn matmul_into(&self, other: &Tensor2, out: &mut Tensor2) {
         assert_eq!(self.cols, other.rows);
         assert_eq!((out.rows, out.cols), (self.rows, other.cols));
         let (m, k, n) = (self.rows, self.cols, other.cols);
-        out.data.fill(0.0);
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (p, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue; // relu activations are ~50% zero
-                }
-                let brow = &other.data[p * n..(p + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
+        gemm::gemm_nn(m, k, n, &self.data, &other.data, &mut out.data);
     }
 
     pub fn matmul(&self, other: &Tensor2) -> Tensor2 {
@@ -87,19 +78,7 @@ impl Tensor2 {
         assert_eq!(self.rows, other.rows);
         let (k, m, n) = (self.rows, self.cols, other.cols);
         let mut out = Tensor2::zeros(m, n);
-        for p in 0..k {
-            let arow = &self.data[p * m..(p + 1) * m];
-            let brow = &other.data[p * n..(p + 1) * n];
-            for (i, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
+        gemm::gemm_tn(k, m, n, &self.data, &other.data, &mut out.data);
         out
     }
 
@@ -108,18 +87,18 @@ impl Tensor2 {
         assert_eq!(self.cols, other.cols);
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let mut out = Tensor2::zeros(m, n);
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &other.data[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for (&a, &b) in arow.iter().zip(brow.iter()) {
-                    acc += a * b;
-                }
-                *out.at_mut(i, j) = acc;
-            }
-        }
+        gemm::gemm_nt(m, k, n, &self.data, &other.data, &mut out.data);
         out
+    }
+
+    /// Reshape in place, reusing the existing allocation where possible
+    /// (new elements, if any, are zero; existing data is NOT preserved
+    /// in any meaningful layout). Scratch-buffer helper for the batched
+    /// inference path.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
     }
 
     pub fn add_row_bias(&mut self, bias: &[f32]) {

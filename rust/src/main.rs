@@ -166,6 +166,19 @@ fn real_main() -> anyhow::Result<()> {
                      diurnal:<base>,<amp>,<period_s>",
                     None,
                 )
+                .opt(
+                    "learner",
+                    "DQN gradient-step placement for training policies: \
+                     inline (historical, bit-identical) | bg (background \
+                     learner thread, deterministic at fixed cadence)",
+                    None,
+                )
+                .opt(
+                    "learner-publish",
+                    "background-learner snapshot cadence (transitions per \
+                     weight publish; only with --learner bg)",
+                    None,
+                )
                 .flag("verbose", "per-request reports");
             let a = parse(&cmd, rest)?;
             let mut cfg = config_from(&a)?;
@@ -183,6 +196,8 @@ fn real_main() -> anyhow::Result<()> {
                 a.parse_or("migrate-threshold", cfg.migrate_threshold_ms)?;
             cfg.migrate_penalty_ms = a.parse_or("migrate-penalty", cfg.migrate_penalty_ms)?;
             cfg.shards = a.parse_or("shards", cfg.shards)?;
+            cfg.learner_publish_every =
+                a.parse_or("learner-publish", cfg.learner_publish_every)?;
             if a.flag("reroute") {
                 cfg.reroute = true;
             }
@@ -196,6 +211,7 @@ fn real_main() -> anyhow::Result<()> {
                 ("slo", "slo"),
                 ("admission", "admission"),
                 ("scheduler", "scheduler"),
+                ("learner", "learner"),
             ] {
                 if let Some(spec) = a.get(flag) {
                     cfg.set(key, spec)?;
@@ -545,10 +561,28 @@ fn real_main() -> anyhow::Result<()> {
         "train" => {
             let cmd = Cmd::new("dvfo train", "offline DQN training with learning curve")
                 .opt("config", "JSON config file", None)
-                .opt("episodes", "training episodes", Some("40"));
+                .opt("episodes", "training episodes", Some("40"))
+                .opt(
+                    "learner",
+                    "DQN gradient-step placement: inline | bg (background \
+                     learner thread, deterministic at fixed cadence)",
+                    None,
+                )
+                .opt(
+                    "learner-publish",
+                    "background-learner snapshot cadence (transitions per \
+                     weight publish; only with --learner bg)",
+                    None,
+                );
             let a = parse(&cmd, rest)?;
             let mut cfg = config_from(&a)?;
             cfg.train_episodes = a.parse_or("episodes", cfg.train_episodes)?;
+            if let Some(spec) = a.get("learner") {
+                cfg.set("learner", spec)?;
+            }
+            cfg.learner_publish_every =
+                a.parse_or("learner-publish", cfg.learner_publish_every)?;
+            cfg.validate()?;
             let mut coord = Coordinator::from_config(&cfg)?;
             let mut gen = TaskGen::new(
                 &cfg.model,

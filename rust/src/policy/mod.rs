@@ -3,7 +3,9 @@
 
 use crate::accuracy::Fusion;
 use crate::coordinator::env::Decision;
-use crate::dqn::{ActionSpace, DqnAgent, DqnConfig, Transition};
+use crate::dqn::{
+    ActionSpace, BgLearner, DqnAgent, DqnConfig, LearnerMode, LearnerOpts, Transition,
+};
 use crate::offload::Compression;
 use crate::util::Pcg32;
 
@@ -119,7 +121,12 @@ fn xi_of_level(lvl: usize, xi_levels: usize) -> f64 {
 // summation fusion, thinking-while-moving policy inference.
 // ======================================================================
 pub struct DvfoPolicy {
-    pub agent: DqnAgent,
+    /// `None` only while a background learner owns the agent
+    agent: Option<DqnAgent>,
+    /// live background learner (training + `LearnerMode::Background`)
+    learner: Option<BgLearner>,
+    learner_opts: LearnerOpts,
+    seed: u64,
     xi_levels: usize,
     training: bool,
     concurrent: bool,
@@ -149,7 +156,10 @@ impl DvfoPolicy {
         };
         let agent = DqnAgent::new(cfg, space, seed);
         Self {
-            agent,
+            agent: Some(agent),
+            learner: None,
+            learner_opts: LearnerOpts::default(),
+            seed,
             xi_levels,
             training: true,
             concurrent,
@@ -157,6 +167,46 @@ impl DvfoPolicy {
             latency_s: 2e-5,
             feat: Vec::with_capacity(10),
             act: Vec::with_capacity(4),
+        }
+    }
+
+    /// Builder: choose inline vs background gradient-step placement and
+    /// the snapshot cadence. Default (`LearnerMode::Inline`) reproduces
+    /// the historical blocking behavior exactly.
+    pub fn with_learner(mut self, opts: LearnerOpts) -> Self {
+        self.learner_opts = opts;
+        self
+    }
+
+    /// The resident agent (panics while a background learner owns it —
+    /// call `set_training(false)` first to drain and reclaim).
+    pub fn agent(&self) -> &DqnAgent {
+        self.agent
+            .as_ref()
+            .expect("agent is owned by the background learner; set_training(false) reclaims it")
+    }
+
+    pub fn agent_mut(&mut self) -> &mut DqnAgent {
+        self.agent
+            .as_mut()
+            .expect("agent is owned by the background learner; set_training(false) reclaims it")
+    }
+
+    /// Move the agent onto the learner thread (idempotent).
+    fn ensure_bg_learner(&mut self) {
+        if self.learner.is_none() {
+            let agent = self
+                .agent
+                .take()
+                .expect("agent resident before learner spawn");
+            self.learner = Some(BgLearner::spawn(agent, &self.learner_opts, self.seed));
+        }
+    }
+
+    /// Drain the learner queue and take the trained agent back.
+    fn reclaim_agent(&mut self) {
+        if let Some(l) = self.learner.take() {
+            self.agent = Some(l.finish());
         }
     }
 
@@ -199,29 +249,47 @@ impl Policy for DvfoPolicy {
             obs.features_into(&mut self.feat);
         }
         if self.training {
+            if self.learner_opts.mode == LearnerMode::Background {
+                // concurrent path: ε-greedy off the learner's snapshot
+                self.ensure_bg_learner();
+                let a = self.learner.as_mut().expect("just ensured").act(&self.feat);
+                return self.to_decision(&a);
+            }
             // the exploration path owns its action (it may feed a
             // Transition later); allocation here is train-time only
-            let a = self.agent.act(&self.feat);
+            let a = self.agent_mut().act(&self.feat);
             self.to_decision(&a)
         } else {
             // deployment: features, Q-row, and argmax all land in
             // reusable buffers — no allocation per decision
-            self.agent.greedy_into(&self.feat, &mut self.act);
+            self.reclaim_agent();
+            let DvfoPolicy { agent, feat, act, .. } = self;
+            agent
+                .as_mut()
+                .expect("agent reclaimed for deployment")
+                .greedy_into(feat, act);
             self.to_decision(&self.act)
         }
     }
 
     fn feedback(&mut self, obs: &Obs, decision: &Decision, next_obs: &Obs, fb: Feedback) {
-        self.agent.remember(Transition {
+        let t = Transition {
             state: self.obs_features(obs),
             action: self.to_action(decision),
             reward: fb.reward,
             next_state: self.obs_features(next_obs),
             done: fb.done,
             gamma_pow: fb.gamma_pow,
-        });
+        };
+        if self.training && self.learner_opts.mode == LearnerMode::Background {
+            self.ensure_bg_learner();
+            self.learner.as_mut().expect("just ensured").push(t);
+            return;
+        }
+        let agent = self.agent_mut();
+        agent.remember(t);
         if self.training {
-            self.agent.learn();
+            agent.learn();
         }
     }
 
@@ -235,6 +303,11 @@ impl Policy for DvfoPolicy {
 
     fn set_training(&mut self, on: bool) {
         self.training = on;
+        if !on {
+            // leaving training: drain the learner queue so deployment
+            // sees the fully trained weights
+            self.reclaim_agent();
+        }
     }
 }
 
@@ -244,7 +317,11 @@ impl Policy for DvfoPolicy {
 // importance guidance; conventional blocking policy inference.
 // ======================================================================
 pub struct DrldoPolicy {
-    pub agent: DqnAgent,
+    /// `None` only while a background learner owns the agent
+    agent: Option<DqnAgent>,
+    learner: Option<BgLearner>,
+    learner_opts: LearnerOpts,
+    seed: u64,
     freq_levels: usize,
     xi_levels: usize,
     training: bool,
@@ -255,10 +332,48 @@ impl DrldoPolicy {
         let space = ActionSpace::new(vec![freq_levels, xi_levels]);
         let agent = DqnAgent::new(DqnConfig::default(), space, seed);
         Self {
-            agent,
+            agent: Some(agent),
+            learner: None,
+            learner_opts: LearnerOpts::default(),
+            seed,
             freq_levels,
             xi_levels,
             training: true,
+        }
+    }
+
+    /// Builder: gradient-step placement (see `DvfoPolicy::with_learner`).
+    pub fn with_learner(mut self, opts: LearnerOpts) -> Self {
+        self.learner_opts = opts;
+        self
+    }
+
+    /// The resident agent (panics while a background learner owns it).
+    pub fn agent(&self) -> &DqnAgent {
+        self.agent
+            .as_ref()
+            .expect("agent is owned by the background learner; set_training(false) reclaims it")
+    }
+
+    fn agent_mut(&mut self) -> &mut DqnAgent {
+        self.agent
+            .as_mut()
+            .expect("agent is owned by the background learner; set_training(false) reclaims it")
+    }
+
+    fn ensure_bg_learner(&mut self) {
+        if self.learner.is_none() {
+            let agent = self
+                .agent
+                .take()
+                .expect("agent resident before learner spawn");
+            self.learner = Some(BgLearner::spawn(agent, &self.learner_opts, self.seed));
+        }
+    }
+
+    fn reclaim_agent(&mut self) {
+        if let Some(l) = self.learner.take() {
+            self.agent = Some(l.finish());
         }
     }
 }
@@ -271,9 +386,15 @@ impl Policy for DrldoPolicy {
     fn decide(&mut self, obs: &Obs) -> Decision {
         let s = obs.features();
         let a = if self.training {
-            self.agent.act(&s)
+            if self.learner_opts.mode == LearnerMode::Background {
+                self.ensure_bg_learner();
+                self.learner.as_mut().expect("just ensured").act(&s)
+            } else {
+                self.agent_mut().act(&s)
+            }
         } else {
-            self.agent.greedy(&s)
+            self.reclaim_agent();
+            self.agent_mut().greedy(&s)
         };
         Decision {
             cpu_lvl: a[0],
@@ -289,7 +410,7 @@ impl Policy for DrldoPolicy {
 
     fn feedback(&mut self, obs: &Obs, decision: &Decision, next_obs: &Obs, fb: Feedback) {
         let xi_lvl = (decision.xi * (self.xi_levels - 1) as f64).round() as usize;
-        self.agent.remember(Transition {
+        let t = Transition {
             state: obs.features(),
             action: vec![decision.cpu_lvl, xi_lvl],
             reward: fb.reward,
@@ -297,9 +418,16 @@ impl Policy for DrldoPolicy {
             done: fb.done,
             // DRLDO uses the standard blocking DQN formulation
             gamma_pow: 1.0,
-        });
+        };
+        if self.training && self.learner_opts.mode == LearnerMode::Background {
+            self.ensure_bg_learner();
+            self.learner.as_mut().expect("just ensured").push(t);
+            return;
+        }
+        let agent = self.agent_mut();
+        agent.remember(t);
         if self.training {
-            self.agent.learn();
+            agent.learn();
         }
     }
 
@@ -311,6 +439,9 @@ impl Policy for DrldoPolicy {
 
     fn set_training(&mut self, on: bool) {
         self.training = on;
+        if !on {
+            self.reclaim_agent();
+        }
     }
 }
 
@@ -575,6 +706,136 @@ mod tests {
             assert_eq!(d.compression, Compression::None);
             assert!(!d.importance_guided);
         }
+    }
+
+    fn obs_i(i: usize) -> Obs {
+        let mut o = obs();
+        o.lambda = (i % 7) as f64 / 7.0;
+        o.eta = 1.0 - o.lambda;
+        o.prev_xi = (i % 5) as f64 / 4.0;
+        o
+    }
+
+    fn weights_bits(mlp: &crate::dqn::Mlp) -> Vec<u32> {
+        let mut out = Vec::new();
+        for w in &mlp.ws {
+            out.extend(w.data.iter().map(|x| x.to_bits()));
+        }
+        for b in &mlp.bs {
+            out.extend(b.iter().map(|x| x.to_bits()));
+        }
+        out
+    }
+
+    #[test]
+    fn inline_learner_is_bit_identical_to_legacy_agent_loop() {
+        // default (inline) mode must reproduce the historical behavior
+        // exactly: a bare DqnAgent driven with the same feature/reward
+        // sequence lands on bit-identical weights and actions
+        let mut p = DvfoPolicy::new(4, 5, true, false, 31);
+        let mut twin = DqnAgent::new(
+            DqnConfig {
+                state_dim: 8,
+                ..DqnConfig::default()
+            },
+            ActionSpace::new(vec![4, 4, 4, 5]),
+            31,
+        );
+        for i in 0..40 {
+            let o = obs_i(i);
+            let no = obs_i(i + 1);
+            let d = p.decide(&o);
+            let ta = twin.act(&o.features());
+            assert_eq!(
+                (d.cpu_lvl, d.gpu_lvl, d.mem_lvl),
+                (ta[0], ta[1], ta[2]),
+                "step {i}: policy and twin diverged"
+            );
+            let fb = Feedback {
+                reward: -0.1 * (i % 3) as f64,
+                gamma_pow: 1.0,
+                done: i % 10 == 9,
+            };
+            p.feedback(&o, &d, &no, fb);
+            twin.remember(Transition {
+                state: o.features(),
+                action: ta,
+                reward: fb.reward,
+                next_state: no.features(),
+                done: fb.done,
+                gamma_pow: fb.gamma_pow,
+            });
+            twin.learn();
+        }
+        assert_eq!(
+            weights_bits(&p.agent().online),
+            weights_bits(&twin.online),
+            "inline learner must stay bit-identical to the legacy loop"
+        );
+    }
+
+    #[test]
+    fn bg_learner_policy_runs_are_reproducible() {
+        // fixed cadence ⇒ two identical runs make identical decisions
+        // and land on identical weights, despite the worker thread
+        let run = || {
+            let mut p = DvfoPolicy::new(4, 5, true, false, 17).with_learner(LearnerOpts {
+                mode: LearnerMode::Background,
+                publish_every: 8,
+                queue_cap: 32,
+            });
+            let mut decisions = Vec::new();
+            for i in 0..48 {
+                let o = obs_i(i);
+                let d = p.decide(&o);
+                decisions.push(format!("{d:?}"));
+                p.feedback(
+                    &o,
+                    &d,
+                    &obs_i(i + 1),
+                    Feedback {
+                        reward: -0.2 * (i % 4) as f64,
+                        gamma_pow: 1.0,
+                        done: i % 12 == 11,
+                    },
+                );
+            }
+            p.set_training(false);
+            decisions.push(format!("{:?}", p.decide(&obs_i(99))));
+            (decisions, weights_bits(&p.agent().online))
+        };
+        let (d1, w1) = run();
+        let (d2, w2) = run();
+        assert_eq!(d1, d2, "decision sequences must match run-to-run");
+        assert_eq!(w1, w2, "final weights must match run-to-run");
+    }
+
+    #[test]
+    fn bg_learner_trains_and_deploys() {
+        let mut p = DrldoPolicy::new(4, 5, 23).with_learner(LearnerOpts {
+            mode: LearnerMode::Background,
+            publish_every: 4,
+            queue_cap: 16,
+        });
+        for i in 0..30 {
+            let o = obs_i(i);
+            let d = p.decide(&o);
+            p.feedback(
+                &o,
+                &d,
+                &obs_i(i + 1),
+                Feedback {
+                    reward: -0.1,
+                    gamma_pow: 1.0,
+                    done: false,
+                },
+            );
+        }
+        // leaving training drains the queue and reclaims the agent
+        p.set_training(false);
+        assert_eq!(p.agent().replay.len(), 30, "every transition retained");
+        let d = p.decide(&obs_i(0));
+        assert!(d.cpu_lvl < 4 && (0.0..=1.0).contains(&d.xi));
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Bit-exactness gate for the packed GEMM kernels (`dqn::gemm`).
+//!
+//! The references below are VERBATIM copies of the pre-refactor naive
+//! loops from `tensor.rs` (frozen here so they can never drift with the
+//! kernel). The tiled kernels promise per-element full-K sequential
+//! accumulation from +0.0, so:
+//!
+//!  * against the no-skip references they are bit-identical for ANY
+//!    input, including NaN / ±inf / −0.0 anywhere (identical f32 op
+//!    sequence per output element);
+//!  * against the HISTORICAL skip references (`if a == 0.0 {continue}`)
+//!    they are bit-identical whenever the non-skipped operand is
+//!    finite: a ±0.0 · finite product is ±0.0, and adding ±0.0 never
+//!    changes the accumulator's bits when it starts at +0.0 under
+//!    round-to-nearest;
+//!  * `matmul_into` fully overwrites its destination, even at k = 0;
+//!  * `Mlp::infer_batch` is bit-identical to `Mlp::forward` (whose
+//!    accumulation order it pins) and agrees with per-row `infer`
+//!    within tolerance (`infer` adds the bias before accumulation, a
+//!    different but equally valid order).
+
+use dvfo::dqn::{BatchScratch, InferScratch, Mlp, Tensor2};
+use dvfo::proptest_mini as pt;
+use dvfo::util::Pcg32;
+
+// ---- frozen pre-refactor references (do not modernize) ----------------
+
+/// `Tensor2::matmul_into` as it stood before the packed kernels,
+/// including the relu-sparsity skip.
+fn ref_matmul_skip(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Same loop with the skip removed: the unconditional bit-reference.
+fn ref_matmul_noskip(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Pre-refactor `matmul_tn` (A stored (k,m), skip included).
+fn ref_matmul_tn_skip(k: usize, m: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+fn ref_matmul_tn_noskip(k: usize, m: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Pre-refactor `matmul_nt` (B stored (n,k)); it never had a skip.
+fn ref_matmul_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+// ---- generators -------------------------------------------------------
+
+/// A dimension biased toward edge sizes: 0, 1, tiny, around the MR/NR
+/// register tiles, and straddling the 64-wide cache blocks.
+fn dim(r: &mut Pcg32) -> usize {
+    match r.below(10) {
+        0 => 0,
+        1 => 1,
+        2 | 3 => 2 + r.below(7) as usize,  // 2..=8
+        4..=6 => 8 + r.below(40) as usize, // 8..=47
+        _ => 60 + r.below(16) as usize,    // 60..=75 (straddles MC/NC=64)
+    }
+}
+
+/// One matrix entry. ~25% +0.0 / ~5% −0.0 so the historical skip path
+/// is exercised hard; `wild` additionally injects NaN and ±inf.
+fn entry(r: &mut Pcg32, wild: bool) -> f32 {
+    let roll = r.below(100);
+    if roll < 25 {
+        return 0.0;
+    }
+    if roll < 30 {
+        return -0.0;
+    }
+    if wild {
+        if roll < 33 {
+            return f32::NAN;
+        }
+        if roll < 36 {
+            return f32::INFINITY;
+        }
+        if roll < 39 {
+            return f32::NEG_INFINITY;
+        }
+    }
+    4.0 * r.next_f32() - 2.0
+}
+
+fn mat(r: &mut Pcg32, len: usize, wild: bool) -> Vec<f32> {
+    (0..len).map(|_| entry(r, wild)).collect()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Shapes + a data seed; matrices are rebuilt deterministically inside
+/// the property so the failure report stays small.
+fn case_gen(r: &mut Pcg32) -> (usize, usize, usize, u64) {
+    (dim(r), dim(r), dim(r), r.next_u64())
+}
+
+// ---- gate 1: packed == no-skip reference, any data --------------------
+
+#[test]
+fn packed_kernels_match_noskip_reference_bitwise_on_wild_data() {
+    pt::check("gemm wild-data bit parity", 0xB17, 300, case_gen, |&(m, k, n, ds)| {
+        let mut dr = Pcg32::seeded(ds);
+        let a = mat(&mut dr, m * k, true);
+        let b = mat(&mut dr, k * n, true);
+        let at = mat(&mut dr, k * m, true); // (k,m) for the tn kernel
+        let bt = mat(&mut dr, n * k, true); // (n,k) for the nt kernel
+
+        let ta = Tensor2::from_vec(m, k, a.clone());
+        let tb = Tensor2::from_vec(k, n, b.clone());
+        let got_nn = ta.matmul(&tb);
+        if bits(&got_nn.data) != bits(&ref_matmul_noskip(m, k, n, &a, &b)) {
+            return Err("nn kernel diverged from no-skip reference".into());
+        }
+
+        let tat = Tensor2::from_vec(k, m, at.clone());
+        let got_tn = tat.matmul_tn(&tb);
+        if bits(&got_tn.data) != bits(&ref_matmul_tn_noskip(k, m, n, &at, &b)) {
+            return Err("tn kernel diverged from no-skip reference".into());
+        }
+
+        let tbt = Tensor2::from_vec(n, k, bt.clone());
+        let got_nt = ta.matmul_nt(&tbt);
+        if bits(&got_nt.data) != bits(&ref_matmul_nt(m, k, n, &a, &bt)) {
+            return Err("nt kernel diverged from reference".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- gate 2: packed == historical skip reference when B is finite -----
+
+#[test]
+fn packed_kernels_match_historical_skip_reference_when_b_finite() {
+    pt::check("gemm skip-drop neutrality", 0x5C1F, 300, case_gen, |&(m, k, n, ds)| {
+        let mut dr = Pcg32::seeded(ds);
+        // A may carry NaN/inf (the skip only ever fired on a == 0.0);
+        // B finite is the precondition for dropping the skip bit-neutrally
+        // — and is what trained weights always satisfy.
+        let a = mat(&mut dr, m * k, true);
+        let b = mat(&mut dr, k * n, false);
+        let at = mat(&mut dr, k * m, true);
+
+        let ta = Tensor2::from_vec(m, k, a.clone());
+        let tb = Tensor2::from_vec(k, n, b.clone());
+        if bits(&ta.matmul(&tb).data) != bits(&ref_matmul_skip(m, k, n, &a, &b)) {
+            return Err("nn kernel diverged from historical skip reference".into());
+        }
+
+        let tat = Tensor2::from_vec(k, m, at.clone());
+        if bits(&tat.matmul_tn(&tb).data) != bits(&ref_matmul_tn_skip(k, m, n, &at, &b)) {
+            return Err("tn kernel diverged from historical skip reference".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- gate 3: matmul_into overwrites every destination element ---------
+
+#[test]
+fn matmul_into_fully_overwrites_output_including_empty_k() {
+    pt::check("matmul_into overwrite", 0x0E77, 200, case_gen, |&(m, k, n, ds)| {
+        let mut dr = Pcg32::seeded(ds);
+        let a = mat(&mut dr, m * k, false);
+        let b = mat(&mut dr, k * n, false);
+        let ta = Tensor2::from_vec(m, k, a.clone());
+        let tb = Tensor2::from_vec(k, n, b.clone());
+        let mut out = Tensor2::from_vec(m, n, vec![7.5f32; m * n]);
+        ta.matmul_into(&tb, &mut out);
+        if bits(&out.data) != bits(&ref_matmul_noskip(m, k, n, &a, &b)) {
+            return Err("stale sentinel survived matmul_into".into());
+        }
+        Ok(())
+    });
+}
+
+// ---- gate 4: infer_batch vs forward (bitwise) and infer (tolerance) ---
+
+#[test]
+fn infer_batch_is_bitwise_forward_and_close_to_per_row_infer() {
+    let gen = |r: &mut Pcg32| {
+        let mut dims = vec![1 + r.below(5) as usize];
+        for _ in 0..=r.below(2) {
+            dims.push(1 + r.below(20) as usize);
+        }
+        dims.push(1 + r.below(8) as usize);
+        (dims, 1 + r.below(20) as usize, r.next_u64())
+    };
+    pt::check("infer_batch parity", 0xBA7C4, 120, gen, |case: &(Vec<usize>, usize, u64)| {
+        let (dims, batch, ds) = case;
+        let mut dr = Pcg32::seeded(*ds);
+        let mlp = Mlp::new(dims, &mut dr);
+        let x = Tensor2::from_vec(
+            *batch,
+            dims[0],
+            (0..batch * dims[0]).map(|_| 4.0 * dr.next_f32() - 2.0).collect(),
+        );
+
+        let mut scratch = BatchScratch::default();
+        let got = mlp.infer_batch(&x, &mut scratch);
+        let want = mlp.forward(&x).output;
+        if (got.rows, got.cols) != (want.rows, want.cols) {
+            return Err(format!(
+                "shape mismatch: got {:?}, want {:?}",
+                got.shape(),
+                want.shape()
+            ));
+        }
+        if bits(&got.data) != bits(&want.data) {
+            return Err("infer_batch diverged bitwise from forward".into());
+        }
+
+        let mut inf = InferScratch::default();
+        for r in 0..*batch {
+            let qrow = mlp.infer(x.row(r), &mut inf);
+            for (c, (&g, &q)) in got.row(r).iter().zip(qrow.iter()).enumerate() {
+                if (g - q).abs() > 1e-5 * (1.0 + q.abs()) {
+                    return Err(format!(
+                        "row {r} col {c}: infer_batch {g} vs infer {q}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
