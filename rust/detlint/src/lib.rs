@@ -1,0 +1,873 @@
+//! detlint — a determinism-contract analyzer for the dvfo workspace.
+//!
+//! The engine's golden/parity/sweep gates only stay byte-identical if no
+//! decision path ever consults an unordered container, ambient
+//! wall-clock, or NaN-unsafe float comparator. `detlint` enforces that
+//! contract lexically, with zero dependencies (the offline crate policy
+//! rules out `syn`), so it runs as a plain workspace binary:
+//!
+//! ```text
+//! cargo run --release -p detlint -- rust/src
+//! ```
+//!
+//! Rules:
+//!
+//! - **R1** — float orderings must be total: no `.partial_cmp(..)`
+//!   chased by `.unwrap()`, no `.sort_by(..)` over `partial_cmp`; use
+//!   `total_cmp`. Applies everywhere, *including* `#[cfg(test)]` code —
+//!   a NaN panic inside a gate test is still a flake.
+//! - **R2** — no `HashMap`/`HashSet` under `coordinator/`, `telemetry/`,
+//!   `dqn/`, or `util/` (iteration order feeds decisions and telemetry);
+//!   use `BTreeMap`/`BTreeSet` or dense `Vec` indexing. Also applies in
+//!   tests: a test that iterates a `HashMap` asserts on lucky ordering.
+//! - **R3** — no `Instant::now` / `SystemTime` / `thread_rng` /
+//!   `rand::random` in simulation code; thread virtual time and seeded
+//!   PRNGs through the engine instead. Harness entry points
+//!   (`bench_harness.rs`, `main.rs`, `cli.rs`) are exempt by file name,
+//!   and the walker skips `benches/` and `examples/` trees.
+//! - **R4** — float `.sum()` / `.fold(..)` reductions in `coordinator/`
+//!   and `dqn/` need an inline waiver pinning the accumulation order
+//!   (float addition is non-associative; a reordered reduction silently
+//!   shifts every downstream decision).
+//! - **R5** — `BinaryHeap` (unstable ordering among equal keys) only
+//!   inside `coordinator/sched.rs`, which wraps it with a deterministic
+//!   sequence-number tie-break.
+//!
+//! Waivers are plain `//` line comments (doc comments do not count) that
+//! *must* carry a reason:
+//!
+//! ```text
+//! // detlint: allow(R4, summed in fixed index order; replay-gated)
+//! // detlint: allow-file(R3, times a real PJRT pipeline, not sim time)
+//! ```
+//!
+//! An inline waiver covers its own line; a standalone waiver comment
+//! covers the next code line; `allow-file` covers the whole file. A
+//! waiver that suppresses nothing, or a comment starting with `detlint:`
+//! that does not parse, is itself a finding — waivers cannot rot
+//! silently.
+//!
+//! The analysis is lexical: a comment/string-aware masking pass, brace
+//! matching for `#[cfg(test)]` regions, then per-line pattern rules with
+//! short (3-line) windows for multi-line chains. That keeps the linter
+//! dependency-free at the cost of heuristics; the fixture suite under
+//! `tests/fixtures/` pins both the hits and the deliberate non-hits.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The five determinism rules. See the crate docs for definitions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+}
+
+impl Rule {
+    pub fn parse(s: &str) -> Option<Rule> {
+        match s {
+            "R1" => Some(Rule::R1),
+            "R2" => Some(Rule::R2),
+            "R3" => Some(Rule::R3),
+            "R4" => Some(Rule::R4),
+            "R5" => Some(Rule::R5),
+            _ => None,
+        }
+    }
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::R1 => "R1",
+            Rule::R2 => "R2",
+            Rule::R3 => "R3",
+            Rule::R4 => "R4",
+            Rule::R5 => "R5",
+        }
+    }
+
+    pub fn summary(self) -> &'static str {
+        match self {
+            Rule::R1 => {
+                "NaN-unsafe float ordering: use total_cmp instead of \
+                 partial_cmp().unwrap() / sort_by over partial_cmp"
+            }
+            Rule::R2 => {
+                "HashMap/HashSet iteration order is nondeterministic in this \
+                 module tree: use BTreeMap/BTreeSet or Vec indexing"
+            }
+            Rule::R3 => {
+                "wall-clock / ambient randomness in simulation code: thread \
+                 virtual time and seeded PRNGs through the engine"
+            }
+            Rule::R4 => {
+                "float reduction on a decision path: waive with the \
+                 accumulation-order rationale or restructure"
+            }
+            Rule::R5 => {
+                "BinaryHeap has unstable tie ordering: only \
+                 coordinator/sched.rs wraps it deterministically"
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FindingKind {
+    Violation(Rule),
+    MalformedWaiver,
+    UnusedWaiver(Rule),
+}
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub kind: FindingKind,
+    pub message: String,
+    pub excerpt: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        let tag = match &self.kind {
+            FindingKind::Violation(r) => r.id(),
+            FindingKind::MalformedWaiver | FindingKind::UnusedWaiver(_) => "waiver",
+        };
+        format!("{}:{}: [{}] {}\n    {}", self.path, self.line, tag, self.message, self.excerpt)
+    }
+}
+
+/// Result of analyzing a single file.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub waivers_used: usize,
+}
+
+/// Result of scanning a tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files: usize,
+    pub waivers_used: usize,
+}
+
+/// Directories never scanned: build output, fixture corpora, and the
+/// test/bench/example trees (those run wall-clock harness code by
+/// design; the contract covers the library and binary sources).
+const SKIP_DIRS: [&str; 6] = ["target", "fixtures", ".git", "tests", "benches", "examples"];
+
+const R3_TOKENS: [&str; 4] = ["Instant::now", "SystemTime", "thread_rng", "rand::random"];
+
+/// Harness entry points where wall-clock use is the whole point.
+const R3_EXEMPT_FILES: [&str; 3] = ["bench_harness.rs", "main.rs", "cli.rs"];
+
+/// Integer type ascriptions that mark a `.sum()` / `.fold(..)` on the
+/// same line as a non-float reduction.
+const INT_HINTS: [&str; 10] = [
+    ": usize", ": u8", ": u16", ": u32", ": u64", ": i8", ": i16", ": i32", ": i64", "-> usize",
+];
+
+/// Scan a file or directory tree rooted at `root`. Files are visited in
+/// sorted order so output is stable; directories named in [`SKIP_DIRS`]
+/// are pruned at every depth.
+pub fn scan_path(root: &Path) -> io::Result<Report> {
+    let mut paths = Vec::new();
+    collect(root, &mut paths)?;
+    paths.sort();
+    let mut report = Report::default();
+    for p in &paths {
+        let mut rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        if rel.is_empty() {
+            rel = p
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default();
+        }
+        let src = fs::read_to_string(p)?;
+        let file = analyze_source(&p.display().to_string(), &rel, &src);
+        report.findings.extend(file.findings);
+        report.waivers_used += file.waivers_used;
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+fn collect(path: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if path.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries = Vec::new();
+    for entry in fs::read_dir(path)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for entry in entries {
+        if entry.is_dir() {
+            let name = entry.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if SKIP_DIRS.contains(&name) {
+                continue;
+            }
+            collect(&entry, out)?;
+        } else if entry.extension().is_some_and(|e| e == "rs") {
+            out.push(entry);
+        }
+    }
+    Ok(())
+}
+
+/// Analyze one file's source. `path` is for display; `rel` is the
+/// `/`-separated path relative to the scan root and drives rule scoping
+/// (e.g. `coordinator/engine.rs`).
+pub fn analyze_source(path: &str, rel: &str, src: &str) -> FileReport {
+    let masked = mask(src);
+    let original: Vec<&str> = src.lines().collect();
+    let regions = test_regions(&masked.lines);
+
+    struct Waiver {
+        rule: Rule,
+        file_wide: bool,
+        line: usize,
+        anchor: usize,
+        used: bool,
+    }
+
+    let mut waivers: Vec<Waiver> = Vec::new();
+    let mut findings: Vec<Finding> = Vec::new();
+    for (cline, text) in &masked.comments {
+        match parse_waiver(text) {
+            None => {}
+            Some(Err(msg)) => findings.push(Finding {
+                path: path.to_string(),
+                line: cline + 1,
+                kind: FindingKind::MalformedWaiver,
+                message: msg,
+                excerpt: excerpt(&original, *cline),
+            }),
+            Some(Ok((rule, file_wide))) => waivers.push(Waiver {
+                rule,
+                file_wide,
+                line: *cline,
+                anchor: anchor_line(&masked.lines, *cline),
+                used: false,
+            }),
+        }
+    }
+
+    for (line, rule) in detect(rel, &masked.lines, &regions) {
+        let mut waived = false;
+        for w in waivers.iter_mut() {
+            if w.rule == rule && (w.file_wide || w.anchor == line) {
+                w.used = true;
+                waived = true;
+                break;
+            }
+        }
+        if !waived {
+            findings.push(Finding {
+                path: path.to_string(),
+                line: line + 1,
+                kind: FindingKind::Violation(rule),
+                message: rule.summary().to_string(),
+                excerpt: excerpt(&original, line),
+            });
+        }
+    }
+
+    let waivers_used = waivers.iter().filter(|w| w.used).count();
+    for w in &waivers {
+        if !w.used {
+            findings.push(Finding {
+                path: path.to_string(),
+                line: w.line + 1,
+                kind: FindingKind::UnusedWaiver(w.rule),
+                message: format!("waiver for {} suppresses nothing; delete it", w.rule.id()),
+                excerpt: excerpt(&original, w.line),
+            });
+        }
+    }
+
+    findings.sort_by_key(|f| f.line);
+    FileReport { findings, waivers_used }
+}
+
+/// Masked view of a source file: literal and comment contents replaced
+/// by spaces (line structure preserved), plus the raw text of every
+/// comment keyed by its starting line (for waiver parsing).
+struct Masked {
+    lines: Vec<String>,
+    comments: Vec<(usize, String)>,
+}
+
+/// Lexical masking pass. Handles line comments, nested block comments,
+/// string/char/byte literals, raw strings (`r"…"`, `r#"…"#`, `br#"…"#`),
+/// raw identifiers (`r#match`), and the char-vs-lifetime ambiguity.
+/// Output lines are normalized to ASCII (non-ASCII code points become
+/// `?`) so byte offsets equal char offsets in every later pass.
+fn mask(src: &str) -> Masked {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut line = 0usize;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            let start = line;
+            let mut text = String::new();
+            out.push_str("  ");
+            i += 2;
+            while i < chars.len() && chars[i] != '\n' {
+                text.push(chars[i]);
+                out.push(' ');
+                i += 1;
+            }
+            comments.push((start, text));
+            continue;
+        }
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let start = line;
+            let mut text = String::new();
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    text.push_str("/*");
+                    out.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                    text.push_str("*/");
+                    continue;
+                }
+                let ch = chars[i];
+                text.push(ch);
+                if ch == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            comments.push((start, text));
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < chars.len() && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            let word: String = chars[i..j].iter().collect();
+            if word == "r" || word == "br" {
+                let mut h = 0usize;
+                while chars.get(j + h) == Some(&'#') {
+                    h += 1;
+                }
+                if chars.get(j + h) == Some(&'"') {
+                    out.push_str(&word);
+                    for _ in 0..h {
+                        out.push('#');
+                    }
+                    out.push('"');
+                    i = j + h + 1;
+                    while i < chars.len() {
+                        if chars[i] == '"' {
+                            let mut k = 0usize;
+                            while k < h && chars.get(i + 1 + k) == Some(&'#') {
+                                k += 1;
+                            }
+                            if k == h {
+                                out.push('"');
+                                for _ in 0..h {
+                                    out.push('#');
+                                }
+                                i += 1 + h;
+                                break;
+                            }
+                        }
+                        if chars[i] == '\n' {
+                            out.push('\n');
+                            line += 1;
+                        } else {
+                            out.push(' ');
+                        }
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+            if word == "b" && chars.get(j) == Some(&'"') {
+                out.push('b');
+                i = j;
+                continue;
+            }
+            if word == "b" && chars.get(j) == Some(&'\'') {
+                out.push_str("b'");
+                i = j + 1;
+                mask_until_quote(&chars, &mut i, &mut out, &mut line, '\'');
+                continue;
+            }
+            out.push_str(&word);
+            i = j;
+            continue;
+        }
+        if c == '"' {
+            out.push('"');
+            i += 1;
+            mask_until_quote(&chars, &mut i, &mut out, &mut line, '"');
+            continue;
+        }
+        if c == '\'' {
+            let is_char = match chars.get(i + 1) {
+                Some('\\') => true,
+                Some(_) => chars.get(i + 2) == Some(&'\''),
+                None => false,
+            };
+            if is_char {
+                out.push('\'');
+                i += 1;
+                mask_until_quote(&chars, &mut i, &mut out, &mut line, '\'');
+                continue;
+            }
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        if c == '\n' {
+            line += 1;
+        }
+        i += 1;
+    }
+    let lines = out
+        .lines()
+        .map(|l| l.chars().map(|c| if c.is_ascii() { c } else { '?' }).collect())
+        .collect();
+    Masked { lines, comments }
+}
+
+/// Mask literal contents (escape-aware) up to and including the closing
+/// `quote`; newlines inside multi-line strings are preserved.
+fn mask_until_quote(chars: &[char], i: &mut usize, out: &mut String, line: &mut usize, quote: char) {
+    while *i < chars.len() && chars[*i] != quote {
+        if chars[*i] == '\\' {
+            out.push(' ');
+            *i += 1;
+            if *i < chars.len() {
+                if chars[*i] == '\n' {
+                    out.push('\n');
+                    *line += 1;
+                } else {
+                    out.push(' ');
+                }
+                *i += 1;
+            }
+            continue;
+        }
+        if chars[*i] == '\n' {
+            out.push('\n');
+            *line += 1;
+        } else {
+            out.push(' ');
+        }
+        *i += 1;
+    }
+    if *i < chars.len() {
+        out.push(quote);
+        *i += 1;
+    }
+}
+
+/// Line ranges (inclusive, 0-based) covered by `#[cfg(test)]` items,
+/// found by brace-matching from the attribute in the masked text.
+fn test_regions(lines: &[String]) -> Vec<(usize, usize)> {
+    let mut regions: Vec<(usize, usize)> = Vec::new();
+    for (n, l) in lines.iter().enumerate() {
+        let Some(col) = l.find("#[cfg(test)]") else {
+            continue;
+        };
+        if regions.iter().any(|&(a, b)| n >= a && n <= b) {
+            continue;
+        }
+        let mut row = n;
+        let mut pos = col + "#[cfg(test)]".len();
+        let mut open: Option<(usize, usize)> = None;
+        'findopen: while row < lines.len() {
+            let bytes = lines[row].as_bytes();
+            while pos < bytes.len() {
+                if bytes[pos] == b'{' {
+                    open = Some((row, pos));
+                    break 'findopen;
+                }
+                if bytes[pos] == b';' {
+                    regions.push((n, row));
+                    break 'findopen;
+                }
+                pos += 1;
+            }
+            row += 1;
+            pos = 0;
+        }
+        let Some((mut row, mut pos)) = open else {
+            continue;
+        };
+        let mut depth = 0i64;
+        'matching: while row < lines.len() {
+            let bytes = lines[row].as_bytes();
+            while pos < bytes.len() {
+                if bytes[pos] == b'{' {
+                    depth += 1;
+                } else if bytes[pos] == b'}' {
+                    depth -= 1;
+                    if depth == 0 {
+                        regions.push((n, row));
+                        break 'matching;
+                    }
+                }
+                pos += 1;
+            }
+            row += 1;
+            pos = 0;
+        }
+    }
+    regions
+}
+
+/// Parse a comment's text as a waiver. Returns `None` for ordinary
+/// comments, `Some(Ok(..))` for a valid waiver, and `Some(Err(..))` for
+/// a comment that announces itself as a waiver (`detlint:` prefix) but
+/// does not parse — those become [`FindingKind::MalformedWaiver`].
+fn parse_waiver(text: &str) -> Option<Result<(Rule, bool), String>> {
+    let t = text.trim();
+    if !t.starts_with("detlint:") {
+        return None;
+    }
+    let rest = t["detlint:".len()..].trim_start();
+    let (file_wide, body) = if let Some(b) = rest.strip_prefix("allow-file(") {
+        (true, b)
+    } else if let Some(b) = rest.strip_prefix("allow(") {
+        (false, b)
+    } else {
+        return Some(Err(String::from(
+            "expected `allow(<rule>, <reason>)` or `allow-file(<rule>, <reason>)` after `detlint:`",
+        )));
+    };
+    let Some(close) = body.rfind(')') else {
+        return Some(Err(String::from("unclosed waiver: missing `)`")));
+    };
+    let inner = &body[..close];
+    let Some((rule_s, reason)) = inner.split_once(',') else {
+        return Some(Err(String::from(
+            "waiver must carry a reason: `allow(<rule>, <reason>)`",
+        )));
+    };
+    let Some(rule) = Rule::parse(rule_s.trim()) else {
+        return Some(Err(format!("unknown rule `{}` (expected R1..R5)", rule_s.trim())));
+    };
+    if reason.trim().is_empty() {
+        return Some(Err(String::from("waiver reason must be non-empty")));
+    }
+    Some(Ok((rule, file_wide)))
+}
+
+/// The line a waiver covers: its own line when code shares it, else the
+/// next non-blank line in the masked text (waiver stacks work because
+/// intermediate waiver comments mask to blank lines).
+fn anchor_line(lines: &[String], comment_line: usize) -> usize {
+    if lines.get(comment_line).is_some_and(|l| !l.trim().is_empty()) {
+        return comment_line;
+    }
+    let mut n = comment_line + 1;
+    while n < lines.len() {
+        if !lines[n].trim().is_empty() {
+            return n;
+        }
+        n += 1;
+    }
+    comment_line
+}
+
+fn in_scope(rel: &str, segments: &[&str]) -> bool {
+    rel.split('/').any(|s| segments.contains(&s))
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Token match with identifier boundaries on both sides, so `HashMap`
+/// does not fire on `MyHashMapLike`.
+fn word_hit(line: &str, token: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(token) {
+        let start = from + p;
+        let end = start + token.len();
+        let pre = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let post = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if pre && post {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+/// Run all five rules over the masked lines. Returns deduplicated
+/// (0-based line, rule) pairs in line order.
+fn detect(rel: &str, lines: &[String], regions: &[(usize, usize)]) -> Vec<(usize, Rule)> {
+    let file_name = rel.rsplit('/').next().unwrap_or(rel);
+    let r2_scope = in_scope(rel, &["coordinator", "telemetry", "dqn", "util"]);
+    let r4_scope = in_scope(rel, &["coordinator", "dqn"]);
+    let r3_exempt = R3_EXEMPT_FILES.contains(&file_name);
+    let r5_exempt = rel.ends_with("coordinator/sched.rs");
+    let mut hits: Vec<(usize, Rule)> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let in_test = regions.iter().any(|&(a, b)| i >= a && i <= b);
+        let fwd = lines[i..lines.len().min(i + 4)].join("\n");
+        let back = lines[i.saturating_sub(3)..=i].join("\n");
+
+        if !line.contains("fn partial_cmp") {
+            if let Some(p) = line.find(".partial_cmp(") {
+                if fwd[p..].contains(".unwrap()") {
+                    hits.push((i, Rule::R1));
+                }
+            }
+            let sorts = line.contains(".sort_by(");
+            if sorts && fwd.contains("partial_cmp") && !fwd.contains("total_cmp") {
+                hits.push((i, Rule::R1));
+            }
+        }
+
+        if r2_scope && (word_hit(line, "HashMap") || word_hit(line, "HashSet")) {
+            hits.push((i, Rule::R2));
+        }
+
+        if !in_test && !r3_exempt && R3_TOKENS.iter().any(|t| word_hit(line, t)) {
+            hits.push((i, Rule::R3));
+        }
+
+        if r4_scope && !in_test {
+            let int_hint = INT_HINTS.iter().any(|h| line.contains(h));
+            let float_near = back.contains("f64") || back.contains("f32") || back.contains("0.0");
+            if line.contains(".sum::<f64>()") || line.contains(".sum::<f32>()") {
+                hits.push((i, Rule::R4));
+            } else if line.contains(".sum()") && !int_hint && float_near {
+                hits.push((i, Rule::R4));
+            } else if line.contains(".fold(") && !int_hint && float_near {
+                hits.push((i, Rule::R4));
+            }
+        }
+
+        if !in_test && !r5_exempt && word_hit(line, "BinaryHeap") {
+            hits.push((i, Rule::R5));
+        }
+    }
+    hits.sort();
+    hits.dedup();
+    hits
+}
+
+fn excerpt(original: &[&str], line: usize) -> String {
+    let l = original.get(line).map_or("", |l| l.trim());
+    if l.len() <= 120 {
+        return l.to_string();
+    }
+    let mut end = 120;
+    while !l.is_char_boundary(end) {
+        end -= 1;
+    }
+    format!("{}...", &l[..end])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn violations(rel: &str, src: &str) -> Vec<(usize, Rule)> {
+        analyze_source("mem", rel, src)
+            .findings
+            .into_iter()
+            .filter_map(|f| match f.kind {
+                FindingKind::Violation(r) => Some((f.line, r)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn string_and_comment_contents_are_masked() {
+        let src = "pub fn f() -> &'static str {\n    \
+                   // says Instant::now and BinaryHeap\n    \
+                   \"Instant::now HashMap .sum::<f64>()\"\n}\n";
+        assert!(violations("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn nested_block_comments_are_masked() {
+        let src = "/* outer /* BinaryHeap */ still Instant::now */\npub fn f() {}\n";
+        assert!(violations("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_raw_idents_are_handled() {
+        let src = "pub fn f() -> &'static str {\n    let r#match = 1u32;\n    \
+                   let _ = r#match;\n    r##\"HashSet \"# SystemTime\"##\n}\n";
+        assert!(violations("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn char_literal_with_quote_does_not_open_string() {
+        let src = "pub fn f(s: &str) -> usize {\n    \
+                   s.split('\"').count() + s.find('\\'').unwrap_or(0)\n}\n\
+                   pub fn g() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+        let v = violations("coordinator/x.rs", src);
+        assert_eq!(v, vec![(5, Rule::R3)]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "pub fn f<'a>(s: &'a str) -> &'a str {\n    s\n}\n";
+        assert!(violations("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r1_fires_once_per_line_even_with_both_triggers() {
+        let src = "pub fn f(xs: &mut [f64]) {\n    \
+                   xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        assert_eq!(violations("x.rs", src), vec![(2, Rule::R1)]);
+    }
+
+    #[test]
+    fn r1_applies_inside_test_regions() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(xs: &mut [f64]) {\n        \
+                   xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n    }\n}\n";
+        assert_eq!(violations("x.rs", src), vec![(4, Rule::R1)]);
+    }
+
+    #[test]
+    fn r1_skips_total_cmp_and_definitions() {
+        let src = "pub fn f(xs: &mut [f64]) {\n    xs.sort_by(|a, b| a.total_cmp(b));\n}\n\
+                   fn partial_cmp(a: f64, b: f64) -> bool {\n    a < b\n}\n";
+        assert!(violations("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r1_sees_unwrap_on_following_lines() {
+        let src = "pub fn f(a: f64, b: f64) -> std::cmp::Ordering {\n    \
+                   a.partial_cmp(&b)\n        .unwrap()\n}\n";
+        assert_eq!(violations("x.rs", src), vec![(2, Rule::R1)]);
+    }
+
+    #[test]
+    fn r2_is_scoped_and_word_bounded() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(violations("coordinator/x.rs", src), vec![(1, Rule::R2)]);
+        assert!(violations("perfmodel/x.rs", src).is_empty());
+        let named = "pub struct MyHashMapLike;\n";
+        assert!(violations("coordinator/x.rs", named).is_empty());
+    }
+
+    #[test]
+    fn r3_exempts_harness_files_and_test_regions() {
+        let src = "pub fn t() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+        assert_eq!(violations("coordinator/x.rs", src), vec![(2, Rule::R3)]);
+        assert!(violations("bench_harness.rs", src).is_empty());
+        assert!(violations("main.rs", src).is_empty());
+        assert!(violations("cli.rs", src).is_empty());
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn t() -> u64 {\n        \
+                       let _ = std::time::Instant::now();\n        0\n    }\n}\n";
+        assert!(violations("coordinator/x.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn r4_triggers_and_integer_exemptions() {
+        let a = "pub fn f(xs: &[f64]) -> f64 {\n    xs.iter().sum::<f64>()\n}\n";
+        assert_eq!(violations("dqn/x.rs", a), vec![(2, Rule::R4)]);
+        let b = "pub fn f(xs: &[f64]) -> f64 {\n    let s: f64 = xs.iter().sum();\n    s\n}\n";
+        assert_eq!(violations("dqn/x.rs", b), vec![(2, Rule::R4)]);
+        let c = "pub fn f(xs: &[f64]) -> f64 {\n    \
+                 xs.iter().fold(0.0, |acc, x| acc + x)\n}\n";
+        assert_eq!(violations("dqn/x.rs", c), vec![(2, Rule::R4)]);
+        let int = "pub fn f(xs: &[u64]) -> usize {\n    let n: usize = xs.len();\n    \
+                   let s: usize = xs.iter().map(|&x| x as usize).sum();\n    n + s\n}\n";
+        assert!(violations("dqn/x.rs", int).is_empty());
+        assert!(violations("perfmodel/x.rs", a).is_empty());
+    }
+
+    #[test]
+    fn r5_allows_only_sched() {
+        let src = "use std::collections::BinaryHeap;\n";
+        assert_eq!(violations("coordinator/engine.rs", src), vec![(1, Rule::R5)]);
+        assert!(violations("coordinator/sched.rs", src).is_empty());
+    }
+
+    #[test]
+    fn inline_and_standalone_waivers_anchor_correctly() {
+        let inline = "pub fn f(xs: &[f64]) -> f64 {\n    \
+                      xs.iter().sum::<f64>() // detlint: allow(R4, fixed order)\n}\n";
+        let rep = analyze_source("mem", "dqn/x.rs", inline);
+        assert!(rep.findings.is_empty());
+        assert_eq!(rep.waivers_used, 1);
+        let standalone = "pub fn f(xs: &[f64]) -> f64 {\n    \
+                          // detlint: allow(R4, fixed order)\n    xs.iter().sum::<f64>()\n}\n";
+        let rep = analyze_source("mem", "dqn/x.rs", standalone);
+        assert!(rep.findings.is_empty());
+        assert_eq!(rep.waivers_used, 1);
+    }
+
+    #[test]
+    fn waiver_stacks_cover_the_next_code_line() {
+        let src = "pub fn f(xs: &mut [f64]) -> f64 {\n    \
+                   // detlint: allow(R1, fixture)\n    // detlint: allow(R4, fixture)\n    \
+                   let s: f64 = xs.iter().sum();\n    \
+                   xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n    s\n}\n";
+        let rep = analyze_source("mem", "coordinator/x.rs", src);
+        // the R4 waiver lands on the sum line; the R1 waiver also anchors
+        // there, misses, and is reported unused while the sort still fires
+        assert_eq!(rep.waivers_used, 1);
+        let kinds: Vec<_> = rep.findings.iter().map(|f| f.kind.clone()).collect();
+        assert!(kinds.contains(&FindingKind::UnusedWaiver(Rule::R1)));
+        assert!(kinds.contains(&FindingKind::Violation(Rule::R1)));
+    }
+
+    #[test]
+    fn doc_comments_never_parse_as_waivers() {
+        let src = "/// detlint: allow(R2, this is documentation, not a waiver)\n\
+                   pub fn f() {}\n";
+        let rep = analyze_source("mem", "coordinator/x.rs", src);
+        assert!(rep.findings.is_empty());
+        assert_eq!(rep.waivers_used, 0);
+    }
+
+    #[test]
+    fn cfg_test_mod_declaration_without_braces() {
+        let src = "#[cfg(test)]\nmod tests;\npub fn t() -> std::time::Instant {\n    \
+                   std::time::Instant::now()\n}\n";
+        assert_eq!(violations("coordinator/x.rs", src), vec![(4, Rule::R3)]);
+    }
+}

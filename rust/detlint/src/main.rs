@@ -1,0 +1,57 @@
+//! CLI for the determinism-contract analyzer.
+//!
+//! ```text
+//! detlint [ROOT ...]
+//! ```
+//!
+//! Scans each root (default `rust/src`, i.e. run from the workspace
+//! top), prints every finding, and exits nonzero if any finding
+//! survives — violations, malformed waivers, and unused waivers all
+//! count. Exit code 2 means a root could not be read at all.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "-h" || a == "--help") {
+        println!("usage: detlint [ROOT ...]   (default root: rust/src)");
+        println!("exit 0: every scanned file honors the determinism contract");
+        println!("exit 1: findings (printed one per line, `path:line: [rule] message`)");
+        println!("exit 2: a root could not be scanned");
+        return ExitCode::SUCCESS;
+    }
+    let roots = if args.is_empty() {
+        vec![String::from("rust/src")]
+    } else {
+        args
+    };
+    let mut findings = Vec::new();
+    let mut files = 0usize;
+    let mut waived = 0usize;
+    for root in &roots {
+        match detlint::scan_path(Path::new(root)) {
+            Ok(report) => {
+                files += report.files;
+                waived += report.waivers_used;
+                findings.extend(report.findings);
+            }
+            Err(err) => {
+                eprintln!("detlint: cannot scan {root}: {err}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    for f in &findings {
+        println!("{}", f.render());
+    }
+    eprintln!(
+        "detlint: {files} file(s) scanned, {} finding(s), {waived} waiver(s) honored",
+        findings.len()
+    );
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

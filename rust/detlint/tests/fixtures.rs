@@ -1,0 +1,211 @@
+//! Fixture-based self-tests for the detlint rule engine, plus the
+//! real-tree gates: the production sources must scan clean, and every
+//! waiver in them must be load-bearing (deleting it produces findings).
+
+use detlint::{analyze_source, scan_path, FindingKind, Rule};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn fixture_root(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn kinds(report: &detlint::Report) -> Vec<FindingKind> {
+    report.findings.iter().map(|f| f.kind.clone()).collect()
+}
+
+#[test]
+fn each_bad_fixture_fires_its_rule_exactly_once() {
+    let report = scan_path(&fixture_root("bad")).expect("scan bad fixtures");
+    assert_eq!(report.files, 5, "expected one fixture file per rule");
+    assert_eq!(report.findings.len(), 5, "one finding per fixture: {:?}", report.findings);
+    for rule in [Rule::R1, Rule::R2, Rule::R3, Rule::R4, Rule::R5] {
+        let n = report
+            .findings
+            .iter()
+            .filter(|f| f.kind == FindingKind::Violation(rule))
+            .count();
+        assert_eq!(n, 1, "{} must fire exactly once across bad fixtures", rule.id());
+    }
+    assert_eq!(report.waivers_used, 0);
+}
+
+#[test]
+fn waived_fixture_scans_clean_with_all_waivers_honored() {
+    let report = scan_path(&fixture_root("waived")).expect("scan waived fixture");
+    assert!(report.findings.is_empty(), "unexpected findings: {:?}", report.findings);
+    assert_eq!(report.waivers_used, 5, "all five waivers must be honored");
+}
+
+#[test]
+fn deleting_any_single_waiver_unsuppresses_exactly_its_rule() {
+    let path = fixture_root("waived").join("coordinator/all_waived.rs");
+    let src = fs::read_to_string(&path).expect("read waived fixture");
+    let lines: Vec<&str> = src.lines().collect();
+    let mut checked = 0;
+    for (i, line) in lines.iter().enumerate() {
+        let trimmed = line.trim_start();
+        if !trimmed.starts_with("// detlint: allow(") {
+            continue;
+        }
+        let rule_s = &trimmed["// detlint: allow(".len()..][..2];
+        let rule = Rule::parse(rule_s).expect("fixture waiver names a real rule");
+        let mut stripped: Vec<&str> = lines.clone();
+        stripped.remove(i);
+        let report = analyze_source("mem", "coordinator/all_waived.rs", &stripped.join("\n"));
+        assert_eq!(
+            report.findings.len(),
+            1,
+            "stripping the {} waiver must unsuppress exactly one finding, got {:?}",
+            rule.id(),
+            report.findings
+        );
+        assert_eq!(report.findings[0].kind, FindingKind::Violation(rule));
+        checked += 1;
+    }
+    assert_eq!(checked, 5, "expected to strip-test five waivers");
+}
+
+#[test]
+fn malformed_waivers_are_findings_and_do_not_suppress() {
+    let report = scan_path(&fixture_root("malformed")).expect("scan malformed fixture");
+    let ks = kinds(&report);
+    let malformed = ks.iter().filter(|k| **k == FindingKind::MalformedWaiver).count();
+    assert_eq!(malformed, 2, "missing-reason and unknown-rule must both report: {ks:?}");
+    assert!(
+        ks.contains(&FindingKind::Violation(Rule::R2)),
+        "a malformed waiver must not suppress the violation under it: {ks:?}"
+    );
+    assert_eq!(report.findings.len(), 3);
+    assert_eq!(report.waivers_used, 0);
+}
+
+#[test]
+fn unused_waiver_is_a_finding() {
+    let report = scan_path(&fixture_root("unused")).expect("scan unused fixture");
+    assert_eq!(kinds(&report), vec![FindingKind::UnusedWaiver(Rule::R5)]);
+}
+
+#[test]
+fn masked_patterns_and_test_regions_stay_silent() {
+    let report = scan_path(&fixture_root("tricky")).expect("scan tricky fixture");
+    assert!(report.findings.is_empty(), "unexpected findings: {:?}", report.findings);
+}
+
+#[test]
+fn allow_file_waiver_covers_every_hit_in_the_file() {
+    let report = scan_path(&fixture_root("allowfile")).expect("scan allowfile fixture");
+    assert!(report.findings.is_empty(), "unexpected findings: {:?}", report.findings);
+    assert_eq!(report.waivers_used, 1);
+
+    let path = fixture_root("allowfile").join("coordinator/file_waiver.rs");
+    let src = fs::read_to_string(&path).expect("read allowfile fixture");
+    let stripped: Vec<&str> = src.lines().filter(|l| !l.contains("detlint:")).collect();
+    let report = analyze_source("mem", "coordinator/file_waiver.rs", &stripped.join("\n"));
+    let r3 = report
+        .findings
+        .iter()
+        .filter(|f| f.kind == FindingKind::Violation(Rule::R3))
+        .count();
+    assert_eq!(r3, 2, "without the file waiver both wall-clock reads must fire");
+}
+
+#[test]
+fn clean_fixture_scans_clean() {
+    let report = scan_path(&fixture_root("clean")).expect("scan clean fixture");
+    assert!(report.findings.is_empty(), "unexpected findings: {:?}", report.findings);
+    assert_eq!(report.files, 1);
+}
+
+#[test]
+fn bench_and_example_trees_are_skipped() {
+    let report = scan_path(&fixture_root("exempt")).expect("scan exempt fixture");
+    assert_eq!(report.files, 0, "benches/ must be pruned by the walker");
+    assert!(report.findings.is_empty());
+}
+
+/// The three production roots CI scans. Relative to this crate's
+/// manifest dir so the test is cwd-independent.
+const REAL_ROOTS: [&str; 3] = ["../src", "../xla-stub/src", "src"];
+
+#[test]
+fn real_tree_is_clean() {
+    let base = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut waived = 0;
+    for root in REAL_ROOTS {
+        let report = scan_path(&base.join(root)).expect("scan production root");
+        assert!(report.files > 0, "{root} scanned no files");
+        assert!(
+            report.findings.is_empty(),
+            "{root} must scan clean, got:\n{}",
+            report
+                .findings
+                .iter()
+                .map(|f| f.render())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        waived += report.waivers_used;
+    }
+    assert!(waived >= 6, "expected the documented production waivers, saw {waived}");
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .expect("read production dir")
+        .map(|e| e.expect("dir entry").path())
+        .collect();
+    entries.sort();
+    for entry in entries {
+        if entry.is_dir() {
+            walk(&entry, out);
+        } else if entry.extension().is_some_and(|e| e == "rs") {
+            out.push(entry);
+        }
+    }
+}
+
+#[test]
+fn every_real_waiver_is_load_bearing() {
+    let base = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut stripped_total = 0;
+    // detlint's own sources are excluded: its unit tests embed
+    // waiver-shaped text inside string literals, which a line-level
+    // strip would mangle mid-literal. They still pass through the
+    // full-scan gate above.
+    for root in ["../src", "../xla-stub/src"] {
+        let root = base.join(root);
+        let mut files = Vec::new();
+        walk(&root, &mut files);
+        for file in files {
+            let src = fs::read_to_string(&file).expect("read production file");
+            if !src.contains("// detlint: allow") {
+                continue;
+            }
+            let rel = file
+                .strip_prefix(&root)
+                .expect("walked file under root")
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            let lines: Vec<&str> = src.lines().collect();
+            for (i, line) in lines.iter().enumerate() {
+                if !line.trim_start().starts_with("// detlint: allow") {
+                    continue;
+                }
+                let mut stripped: Vec<&str> = lines.clone();
+                stripped.remove(i);
+                let report = analyze_source("mem", &rel, &stripped.join("\n"));
+                assert!(
+                    !report.findings.is_empty(),
+                    "waiver at {}:{} suppresses nothing; delete it",
+                    file.display(),
+                    i + 1
+                );
+                stripped_total += 1;
+            }
+        }
+    }
+    assert!(stripped_total >= 6, "expected to strip-test the production waivers");
+}

@@ -1,0 +1,10 @@
+// detlint: allow-file(R3, fixture times real wall-clock work end to end)
+
+pub fn t0() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn elapsed(t: std::time::Instant) -> f64 {
+    let d = std::time::Instant::now() - t;
+    d.as_secs_f64()
+}

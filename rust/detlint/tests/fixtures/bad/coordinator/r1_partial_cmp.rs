@@ -1,0 +1,4 @@
+pub fn pick(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[0]
+}

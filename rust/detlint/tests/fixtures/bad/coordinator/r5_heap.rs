@@ -1,0 +1,5 @@
+use std::collections::BinaryHeap;
+
+pub fn fresh() -> usize {
+    0
+}

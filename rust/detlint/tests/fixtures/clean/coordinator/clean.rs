@@ -1,0 +1,8 @@
+use std::collections::BTreeMap;
+
+pub fn ranked(scores: &BTreeMap<u64, f64>) -> Option<u64> {
+    scores
+        .iter()
+        .max_by(|a, b| a.1.total_cmp(b.1).then_with(|| a.0.cmp(b.0)))
+        .map(|(id, _)| *id)
+}

@@ -1,0 +1,3 @@
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,7 @@
+// detlint: allow(R2)
+pub type Map = std::collections::HashMap<u64, u64>;
+
+// detlint: allow(R9, not a real rule)
+pub fn unknown() -> usize {
+    0
+}

@@ -1,0 +1,32 @@
+//! Patterns inside literals, comments, and test regions must not fire.
+
+/// Docs may mention HashMap, BinaryHeap, and Instant::now freely.
+pub fn doc_only() -> &'static str {
+    "HashMap BinaryHeap Instant::now .sum::<f64>() thread_rng"
+}
+
+/* block comment: BinaryHeap, .partial_cmp(x).unwrap()
+   /* nested: HashMap */
+   still inside the outer comment: rand::random */
+pub fn lifetimes<'a>(s: &'a str) -> char {
+    s.chars().next().unwrap_or('x')
+}
+
+pub fn raw() -> &'static str {
+    r#"SystemTime and HashSet live in a raw string"#
+}
+
+pub fn split_quote(s: &str) -> usize {
+    s.split('"').count()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn float_sum_in_tests_is_fine() {
+        let xs = [1.0f64, 2.0];
+        let s: f64 = xs.iter().sum();
+        assert!(s > 0.0);
+        let _ = std::time::Instant::now();
+    }
+}

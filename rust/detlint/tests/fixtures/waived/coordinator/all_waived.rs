@@ -1,0 +1,18 @@
+pub fn all(xs: &mut [f64]) -> f64 {
+    // detlint: allow(R1, fixture exercises waiver suppression)
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // detlint: allow(R4, fixture exercises waiver suppression)
+    let s: f64 = xs.iter().sum();
+    s
+}
+
+// detlint: allow(R2, fixture exercises waiver suppression)
+pub type Map = std::collections::HashMap<u64, u64>;
+
+// detlint: allow(R5, fixture exercises waiver suppression)
+pub type Heap = std::collections::BinaryHeap<u64>;
+
+pub fn stamp() -> std::time::Instant {
+    // detlint: allow(R3, fixture exercises waiver suppression)
+    std::time::Instant::now()
+}

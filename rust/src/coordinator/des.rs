@@ -115,6 +115,7 @@ pub fn serve_multistream(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::configx::Config;
     use crate::workload::Arrivals;

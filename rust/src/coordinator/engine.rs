@@ -709,6 +709,7 @@ impl EngineState {
         let tx_s = if members.len() == 1 {
             self.jobs[members[0]].solo_off_s
         } else {
+            // detlint: allow(R4, summed in batch-member index order; replay/golden gated)
             let payload: f64 = members.iter().map(|&id| self.jobs[id].payload_bytes).sum();
             devices[dev].env.link.tx_time_s(payload)
         };
@@ -833,6 +834,7 @@ impl EngineState {
                 let compute: f64 = members
                     .iter()
                     .map(|&id| (self.jobs[id].cloud_s - CLOUD_DISPATCH_OVERHEAD_S).max(0.0))
+                    // detlint: allow(R4, summed in batch-member index order; replay/golden gated)
                     .sum();
                 self.cloud_dispatch_saved_s += (n - 1) as f64 * CLOUD_DISPATCH_OVERHEAD_S;
                 CLOUD_DISPATCH_OVERHEAD_S + compute
@@ -1263,6 +1265,7 @@ pub fn serve(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::configx::Config;
     use crate::coordinator::des::DesOpts;

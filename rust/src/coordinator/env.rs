@@ -268,6 +268,7 @@ impl EdgeCloudEnv {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::device::spec::find_device;
     use crate::net::Bandwidth;

@@ -582,6 +582,7 @@ pub fn serve_fleet_streaming(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::workload::SloClass;
 

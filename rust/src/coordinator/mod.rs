@@ -3,6 +3,10 @@
 //! offline"), and serves task streams, producing the telemetry every
 //! experiment consumes.
 
+// Decision-path code must not panic on unwrap: surface errors through
+// Result or encode the invariant in types. Tests opt back in locally.
+#![warn(clippy::unwrap_used)]
+
 pub mod config;
 pub mod des;
 pub mod engine;
@@ -312,6 +316,7 @@ impl Coordinator {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     fn cfg(policy: &str) -> Config {

@@ -539,6 +539,7 @@ impl<T> Sched<T> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     fn drain(s: &mut Sched<usize>) -> Vec<(u64, u64)> {

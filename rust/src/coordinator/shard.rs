@@ -38,8 +38,8 @@ use super::engine::{EngineCore, EngineResult};
 use super::fleet::FleetOpts;
 use super::Coordinator;
 use crate::telemetry::sink::ReportSink;
+use crate::util::sync::EpochExchange;
 use crate::workload::TaskGen;
-use std::sync::{Barrier, Mutex};
 
 /// Default epoch length (simulated seconds) for sharded runs: long
 /// enough to amortize the barrier, short enough that cross-shard cloud
@@ -137,11 +137,11 @@ where
         .collect();
     let est_slots_global: usize = local_slots.iter().sum();
 
-    let barrier = Barrier::new(shards);
-    let signals: Vec<Mutex<CloudSignal>> =
-        (0..shards).map(|_| Mutex::new(CloudSignal::default())).collect();
-    let barrier = &barrier;
-    let signals = &signals;
+    // the epoch-boundary protocol (publish → barrier → index-ordered
+    // read → barrier) lives in `util::sync::EpochExchange`, where the
+    // loom models in tests/loom_models.rs check every interleaving of it
+    let exchange = EpochExchange::new(shards, CloudSignal::default());
+    let exchange = &exchange;
     let make_sink = &make_sink;
     let local_slots = &local_slots;
 
@@ -159,20 +159,19 @@ where
                 let mut epoch: u64 = 1;
                 loop {
                     let drained = core.run_until(epoch as f64 * epoch_s, &mut sink);
-                    {
-                        let mut sig = signals[k].lock().unwrap();
-                        sig.in_flight = core.cloud_in_flight();
-                        sig.service = core.cloud_service();
-                        sig.drained = drained;
-                    }
-                    // publish barrier: every shard's boundary snapshot is
-                    // visible before anyone reads
-                    barrier.wait();
+                    let published = CloudSignal {
+                        in_flight: core.cloud_in_flight(),
+                        service: core.cloud_service(),
+                        drained,
+                    };
                     let mut all_drained = true;
                     let mut ext = 0usize;
                     let (mut svc_sum, mut svc_n) = (0.0f64, 0usize);
-                    for (i, slot) in signals.iter().enumerate() {
-                        let sig = slot.lock().unwrap();
+                    // publish barrier / index-ordered read / read barrier:
+                    // every shard's boundary snapshot is visible before
+                    // anyone reads, and nobody re-publishes until everyone
+                    // has consumed this epoch's snapshots
+                    exchange.exchange_with(k, published, |i, sig| {
                         all_drained &= sig.drained;
                         if i != k {
                             ext += sig.in_flight;
@@ -181,10 +180,7 @@ where
                             svc_sum += v;
                             svc_n += 1;
                         }
-                    }
-                    // read barrier: nobody re-publishes until everyone has
-                    // consumed this epoch's snapshots
-                    barrier.wait();
+                    });
                     if all_drained {
                         break;
                     }
@@ -214,6 +210,8 @@ where
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
+
     use super::*;
     use crate::configx::Config;
     use crate::coordinator::engine::CollectSink;
@@ -345,6 +343,44 @@ mod tests {
                 assert_eq!(rx.eti_total_j.to_bits(), ry.eti_total_j.to_bits());
             }
         }
+    }
+
+    /// Loom regression seed (runs on stable, no `--cfg loom` needed):
+    /// the minimized interleaving that breaks a *single*-barrier
+    /// exchange. Participant A races one epoch ahead and tries to
+    /// republish while participant B is still reading; the exchange's
+    /// second barrier makes that impossible, so B only ever observes
+    /// epoch-consistent slot values. Under the buggy single-barrier
+    /// variant, B's read window overlaps A's next publish and the
+    /// assertion below trips. The full interleaving space is explored
+    /// by `tests/loom_models.rs` under `--cfg loom`.
+    #[test]
+    fn epoch_exchange_blocks_early_republish_regression_seed() {
+        use crate::util::sync::EpochExchange;
+        let ex = EpochExchange::new(2, 0u64);
+        std::thread::scope(|s| {
+            let exr = &ex;
+            // A: publish epoch e and move on as fast as possible
+            s.spawn(move || {
+                for e in 1..=64u64 {
+                    exr.exchange_with(0, e, |_, _| {});
+                }
+            });
+            // B: read slowly, yielding mid-read to hand A every chance
+            // to race ahead
+            for e in 1..=64u64 {
+                let mut seen = Vec::new();
+                exr.exchange_with(1, e, |i, &v| {
+                    std::thread::yield_now();
+                    seen.push((i, v));
+                });
+                assert_eq!(
+                    seen,
+                    vec![(0, e), (1, e)],
+                    "epoch {e}: B must never observe A's next-epoch publish"
+                );
+            }
+        });
     }
 
     #[test]

@@ -69,6 +69,7 @@ impl ActionSpace {
         let mut s = 0.0f64;
         for &f in &self.factors {
             let blk = &q[off..off + f];
+            // detlint: allow(R4, max-reduction is order-insensitive up to NaN; q is NaN-free)
             s += blk.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
             off += f;
         }
@@ -306,6 +307,7 @@ impl DqnAgent {
         if self.grad_steps % self.cfg.target_sync_every == 0 {
             self.target.copy_from(&self.online);
         }
+        // detlint: allow(R4, diagnostics only; summed in fixed minibatch order regardless)
         let mean_td = tds.iter().map(|t| t.abs()).sum::<f64>() / batch as f64;
 
         // hand the minibatch buffers back to the arena for the next step

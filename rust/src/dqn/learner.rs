@@ -32,9 +32,10 @@
 use super::agent::{ActionSpace, DqnAgent};
 use super::mlp::{InferScratch, Mlp};
 use super::replay::Transition;
+use crate::util::sync::{adopt_snapshot, take_publish_buf, BoundedQueue};
 use crate::util::Pcg32;
 use anyhow::{bail, Result};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// Where gradient steps run relative to the decide path.
@@ -92,13 +93,36 @@ enum Msg {
     Publish,
 }
 
+/// Worker-side drop guard: closing all three queues on the way out
+/// (normal exit *or* panic) guarantees the actor can never block
+/// forever on a push or a snapshot pop against a dead worker. `close`
+/// is idempotent, so the later `finish()` closes are harmless.
+struct HangUp {
+    msgs: Arc<BoundedQueue<Msg>>,
+    snaps: Arc<BoundedQueue<Mlp>>,
+    rets: Arc<BoundedQueue<Mlp>>,
+}
+
+impl Drop for HangUp {
+    fn drop(&mut self) {
+        self.msgs.close();
+        self.snaps.close();
+        self.rets.close();
+    }
+}
+
 /// Actor-side handle: owns a read-only weight snapshot for greedy
-/// decisions and the channels to the learner thread. `finish()` joins
+/// decisions and the queues to the learner thread. `finish()` joins
 /// and returns the (fully trained) agent for deployment.
+///
+/// The queues are `util::sync` primitives (loom-checkable; see
+/// `tests/loom_models.rs`): `msgs` carries transitions and `Publish`
+/// markers FIFO under backpressure, `snaps`/`rets` cycle the two
+/// snapshot buffers between worker and actor.
 pub struct BgLearner {
-    tx: SyncSender<Msg>,
-    snap_rx: Receiver<Mlp>,
-    ret_tx: Sender<Mlp>,
+    msgs: Arc<BoundedQueue<Msg>>,
+    snaps: Arc<BoundedQueue<Mlp>>,
+    rets: Arc<BoundedQueue<Mlp>>,
     handle: JoinHandle<DqnAgent>,
     space: ActionSpace,
     net: Mlp,
@@ -126,31 +150,35 @@ impl BgLearner {
         let net = agent.online.clone();
         let spare = agent.online.clone();
 
-        let (tx, rx) = sync_channel::<Msg>(opts.queue_cap.max(1));
-        let (snap_tx, snap_rx) = sync_channel::<Mlp>(1);
-        let (ret_tx, ret_rx) = channel::<Mlp>();
+        let msgs = Arc::new(BoundedQueue::new(opts.queue_cap.max(1)));
+        let snaps = Arc::new(BoundedQueue::new(1));
+        let rets = Arc::new(BoundedQueue::new(2));
 
+        let hangup = HangUp {
+            msgs: Arc::clone(&msgs),
+            snaps: Arc::clone(&snaps),
+            rets: Arc::clone(&rets),
+        };
         let handle = std::thread::Builder::new()
             .name("dqn-learner".into())
             .spawn(move || {
+                // `guard` both carries the worker's queue handles and
+                // hangs them all up when this closure exits or panics
+                let guard = hangup;
                 let mut agent = agent;
                 let mut spare = Some(spare);
-                while let Ok(msg) = rx.recv() {
+                while let Some(msg) = guard.msgs.pop() {
                     match msg {
                         Msg::Step(t) => {
                             agent.remember(t);
                             agent.learn();
                         }
                         Msg::Publish => {
-                            let mut buf = match spare.take() {
-                                Some(b) => b,
-                                None => match ret_rx.recv() {
-                                    Ok(b) => b,
-                                    Err(_) => break, // actor gone
-                                },
+                            let Some(mut buf) = take_publish_buf(&mut spare, &guard.rets) else {
+                                break; // actor gone
                             };
                             buf.copy_from(&agent.online);
-                            if snap_tx.send(buf).is_err() {
+                            if guard.snaps.push(buf).is_err() {
                                 break; // actor gone
                             }
                         }
@@ -161,9 +189,9 @@ impl BgLearner {
             .expect("spawn dqn-learner thread");
 
         Self {
-            tx,
-            snap_rx,
-            ret_tx,
+            msgs,
+            snaps,
+            rets,
             handle,
             space,
             net,
@@ -205,19 +233,16 @@ impl BgLearner {
     /// adopted weights are a deterministic function of the pushed
     /// transition prefix.
     pub fn push(&mut self, t: Transition) {
-        if self.tx.send(Msg::Step(t)).is_err() {
+        if self.msgs.push(Msg::Step(t)).is_err() {
             return; // learner thread died; finish() will surface it
         }
         self.since_publish += 1;
         if self.since_publish >= self.publish_every {
             self.since_publish = 0;
-            if self.tx.send(Msg::Publish).is_err() {
+            if self.msgs.push(Msg::Publish).is_err() {
                 return;
             }
-            if let Ok(fresh) = self.snap_rx.recv() {
-                let old = std::mem::replace(&mut self.net, fresh);
-                let _ = self.ret_tx.send(old); // worker may already be gone
-            }
+            adopt_snapshot(&mut self.net, &self.snaps, &self.rets);
         }
     }
 
@@ -227,10 +252,15 @@ impl BgLearner {
     /// the actor-side exploration stream, which lives here, not there).
     pub fn finish(self) -> DqnAgent {
         let BgLearner {
-            tx, ret_tx, handle, ..
+            msgs,
+            snaps,
+            rets,
+            handle,
+            ..
         } = self;
-        drop(tx);
-        drop(ret_tx);
+        msgs.close();
+        snaps.close();
+        rets.close();
         handle.join().expect("dqn-learner thread panicked")
     }
 }
@@ -286,6 +316,58 @@ mod tests {
         assert!(LearnerMode::parse("turbo").is_err());
         assert_eq!(LearnerMode::Inline.as_str(), "inline");
         assert_eq!(LearnerMode::Background.as_str(), "bg");
+    }
+
+    /// Loom regression seed (runs on stable, no `--cfg loom` needed):
+    /// the minimized interleaving where a snapshot could reflect the
+    /// wrong transition prefix. The queue serializes `S1 S2 Publish S3`
+    /// FIFO, so the published weights must be `f(S1, S2)` exactly —
+    /// never including `S3` — and close-then-drain must still process
+    /// `S3`. Driven single-threaded through the same `util::sync`
+    /// protocol ops `BgLearner` uses; `tests/loom_models.rs` explores
+    /// the full two-thread interleaving space under `--cfg loom`.
+    #[test]
+    fn handshake_snapshot_is_exact_prefix_regression_seed() {
+        use crate::util::sync::{adopt_snapshot, take_publish_buf, BoundedQueue};
+        #[derive(Debug, PartialEq)]
+        enum M {
+            Step,
+            Publish,
+        }
+        let msgs = BoundedQueue::new(8);
+        let snaps = BoundedQueue::new(1);
+        let rets = BoundedQueue::new(2);
+        msgs.try_push(M::Step).unwrap();
+        msgs.try_push(M::Step).unwrap();
+        msgs.try_push(M::Publish).unwrap();
+        msgs.try_push(M::Step).unwrap();
+        msgs.close();
+
+        // worker loop, exactly as BgLearner's thread runs it: weights
+        // are modeled as "number of steps applied", buffers as boxes
+        let mut applied = 0u64;
+        let mut spare = Some(Box::new(0u64));
+        let mut published = Vec::new();
+        while let Some(msg) = msgs.pop() {
+            match msg {
+                M::Step => applied += 1,
+                M::Publish => {
+                    let mut buf = take_publish_buf(&mut spare, &rets).unwrap();
+                    *buf = applied;
+                    published.push(applied);
+                    snaps.push(buf).unwrap();
+                }
+            }
+        }
+        assert_eq!(applied, 3, "finish-drain must process the trailing step");
+        assert_eq!(published, vec![2], "snapshot is f(S1, S2), not f(S1, S2, S3)");
+
+        // actor adoption sees exactly the prefix snapshot and cycles
+        // its old buffer back for reuse
+        let mut net = Box::new(u64::MAX);
+        assert!(adopt_snapshot(&mut net, &snaps, &rets));
+        assert_eq!(*net, 2);
+        assert_eq!(*rets.try_pop().unwrap(), u64::MAX);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub mod parallel;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 pub use parallel::sweep;
 pub use rng::{Pcg32, SplitMix64};

@@ -278,6 +278,7 @@ mod tests {
             return f64::NAN;
         }
         let mut s = xs.to_vec();
+        // detlint: allow(R1, frozen pre-cache reference kept verbatim; inputs are NaN-free)
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let rank = (p / 100.0) * (s.len() - 1) as f64;
         let lo = rank.floor() as usize;

@@ -1,0 +1,393 @@
+//! §Determinism — loom-checkable synchronization primitives.
+//!
+//! The two concurrency protocols in this crate that no replay gate can
+//! cover — the shard epoch exchange (`coordinator/shard.rs`: publish →
+//! barrier → index-ordered read → adopt) and the background-learner
+//! handshake (`dqn/learner.rs`: bounded push / `Publish` marker /
+//! double-buffered snapshot / finish-drain) — are built from the
+//! primitives in this module instead of raw `std::sync` machinery.
+//! Under `--cfg loom` the primitives swap `std::sync` for `loom::sync`,
+//! and `rust/tests/loom_models.rs` model-checks both protocols across
+//! every feasible interleaving (see the "Determinism contract" section
+//! of the README). A plain build compiles against `std` and never
+//! resolves the loom crate.
+//!
+//! Design rule: everything here is expressed with `Mutex` + `Condvar`
+//! only — the intersection of `std::sync` and `loom::sync` — so the
+//! checked model and the shipped code are the *same* code.
+
+use std::collections::VecDeque;
+
+#[cfg(loom)]
+use loom::sync::{Condvar, Mutex};
+#[cfg(not(loom))]
+use std::sync::{Condvar, Mutex};
+
+const POISONED: &str = "sync mutex poisoned";
+
+/// A cyclic sense-reversing barrier. `std::sync::Barrier` is absent
+/// from `loom::sync`, so the epoch exchange carries its own; the
+/// generation counter is what makes reuse across epochs safe (a waiter
+/// from epoch `e` can never be released by epoch `e+1`'s arrivals).
+pub struct SenseBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+    parties: usize,
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+}
+
+impl SenseBarrier {
+    pub fn new(parties: usize) -> Self {
+        assert!(parties >= 1, "a barrier needs at least one party");
+        Self {
+            state: Mutex::new(BarrierState {
+                arrived: 0,
+                generation: 0,
+            }),
+            cv: Condvar::new(),
+            parties,
+        }
+    }
+
+    /// Block until all `parties` threads have called `wait` for the
+    /// current generation.
+    pub fn wait(&self) {
+        let mut st = self.state.lock().expect(POISONED);
+        let gen = st.generation;
+        st.arrived += 1;
+        if st.arrived == self.parties {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.cv.notify_all();
+        } else {
+            while st.generation == gen {
+                st = self.cv.wait(st).expect(POISONED);
+            }
+        }
+    }
+}
+
+/// The shard-boundary exchange cell: `N` published slots plus a shared
+/// barrier. One `exchange_with` call is one epoch boundary for one
+/// participant:
+///
+/// 1. publish this participant's value into its own slot,
+/// 2. barrier — every slot holds this epoch's publication before anyone
+///    reads,
+/// 3. read *all* slots in ascending index order (thread scheduling can
+///    never leak into the fold order),
+/// 4. barrier — nobody re-publishes until everyone has consumed this
+///    epoch's snapshots.
+///
+/// Without step 4 a fast participant could overwrite its slot with the
+/// next epoch's value while a slow one is still reading — the exact
+/// interleaving `tests/loom_models.rs` proves impossible and the
+/// regression seed in `coordinator/shard.rs` pins.
+pub struct EpochExchange<T> {
+    slots: Vec<Mutex<T>>,
+    barrier: SenseBarrier,
+}
+
+impl<T: Clone> EpochExchange<T> {
+    pub fn new(parties: usize, init: T) -> Self {
+        assert!(parties >= 1, "an exchange needs at least one party");
+        Self {
+            slots: (0..parties).map(|_| Mutex::new(init.clone())).collect(),
+            barrier: SenseBarrier::new(parties),
+        }
+    }
+
+    pub fn parties(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Publish `value` as participant `k`, then hand every participant's
+    /// published value (own included) to `read` in ascending index
+    /// order. Returns only after *all* participants have both published
+    /// and read, so the next epoch's publications can never race this
+    /// epoch's reads.
+    pub fn exchange_with<F: FnMut(usize, &T)>(&self, k: usize, value: T, mut read: F) {
+        *self.slots[k].lock().expect(POISONED) = value;
+        self.barrier.wait();
+        for (i, slot) in self.slots.iter().enumerate() {
+            read(i, &slot.lock().expect(POISONED));
+        }
+        self.barrier.wait();
+    }
+}
+
+/// A bounded MPSC-style queue with explicit close semantics, replacing
+/// `std::sync::mpsc::sync_channel` (which `loom::sync` does not
+/// provide) in the learner handshake:
+///
+/// * `push` blocks while the queue is full (backpressure, never loss)
+///   and fails only once the queue is closed;
+/// * `pop` blocks while the queue is empty and still open, and keeps
+///   draining queued items *after* close — `None` means closed **and**
+///   empty, which is what makes finish-drain lossless;
+/// * `close` wakes every blocked pusher and popper.
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Blocking push; `Err(value)` once the queue is closed.
+    pub fn push(&self, value: T) -> Result<(), T> {
+        let mut st = self.inner.lock().expect(POISONED);
+        while st.items.len() >= self.cap && !st.closed {
+            st = self.not_full.wait(st).expect(POISONED);
+        }
+        if st.closed {
+            return Err(value);
+        }
+        st.items.push_back(value);
+        self.not_empty.notify_all();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().expect(POISONED);
+        while st.items.is_empty() && !st.closed {
+            st = self.not_empty.wait(st).expect(POISONED);
+        }
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.not_full.notify_all();
+        }
+        item
+    }
+
+    /// Non-blocking push (regression seeds drive the protocol from a
+    /// single thread); `Err(value)` when full or closed.
+    pub fn try_push(&self, value: T) -> Result<(), T> {
+        let mut st = self.inner.lock().expect(POISONED);
+        if st.closed || st.items.len() >= self.cap {
+            return Err(value);
+        }
+        st.items.push_back(value);
+        self.not_empty.notify_all();
+        Ok(())
+    }
+
+    /// Non-blocking pop; `None` when currently empty.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().expect(POISONED);
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.not_full.notify_all();
+        }
+        item
+    }
+
+    /// Close the queue: pending and future `push`es fail, `pop` drains
+    /// what is already queued and then reports `None`. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.inner.lock().expect(POISONED);
+        st.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect(POISONED).closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect(POISONED).items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Worker half of the double-buffered snapshot handshake: prefer the
+/// locally parked spare buffer, otherwise block for the buffer the
+/// actor returned after its last adoption. `None` means the actor hung
+/// up — the worker should stop publishing.
+pub fn take_publish_buf<W>(spare: &mut Option<W>, returns: &BoundedQueue<W>) -> Option<W> {
+    match spare.take() {
+        Some(buf) => Some(buf),
+        None => returns.pop(),
+    }
+}
+
+/// Actor half of the handshake: block for the freshly published
+/// snapshot, adopt it, and hand the previous buffer back to the worker
+/// for reuse. Returns `false` when the worker hung up (no snapshot will
+/// ever arrive).
+pub fn adopt_snapshot<W>(
+    current: &mut W,
+    snaps: &BoundedQueue<W>,
+    returns: &BoundedQueue<W>,
+) -> bool {
+    match snaps.pop() {
+        Some(fresh) => {
+            let old = std::mem::replace(current, fresh);
+            // the worker may already have exited; the buffer is then
+            // simply dropped
+            let _ = returns.push(old);
+            true
+        }
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn bounded_queue_is_fifo_and_drains_after_close() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        assert!(q.push(99).is_err(), "push after close must fail");
+        let drained: Vec<i32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, vec![0, 1, 2, 3, 4]);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_try_ops_respect_capacity() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert!(q.try_push(3).is_err(), "capacity 2 is full");
+        assert_eq!(q.try_pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_backpressures_until_a_pop_frees_a_slot() {
+        let q = BoundedQueue::new(1);
+        q.push(0u32).unwrap();
+        std::thread::scope(|s| {
+            let qr = &q;
+            let pusher = s.spawn(move || qr.push(1).is_ok());
+            // the queue is full, so the pusher must be blocked until
+            // this pop frees the slot
+            assert_eq!(q.pop(), Some(0));
+            assert!(pusher.join().unwrap());
+        });
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn close_releases_a_blocked_pusher() {
+        let q = BoundedQueue::new(1);
+        q.push(7u32).unwrap();
+        std::thread::scope(|s| {
+            let qr = &q;
+            let pusher = s.spawn(move || qr.push(8).is_err());
+            q.close();
+            assert!(pusher.join().unwrap(), "blocked push must fail on close");
+        });
+        // the queued item survives the close
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn sense_barrier_keeps_generations_separate() {
+        let barrier = SenseBarrier::new(2);
+        let turns = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let (b, t) = (&barrier, &turns);
+            for _ in 0..2 {
+                s.spawn(move || {
+                    for round in 0..100 {
+                        b.wait();
+                        // both threads observe every round boundary: the
+                        // counter is exactly 2 * round after each wait
+                        let seen = t.fetch_add(1, Ordering::SeqCst);
+                        assert!(seen / 2 == round, "round {round} saw counter {seen}");
+                        b.wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(turns.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn epoch_exchange_reads_every_slot_in_index_order() {
+        let ex = EpochExchange::new(3, 0u64);
+        std::thread::scope(|s| {
+            let exr = &ex;
+            for k in 0..3usize {
+                s.spawn(move || {
+                    for epoch in 1..=10u64 {
+                        let mut seen = Vec::new();
+                        exr.exchange_with(k, epoch * 10 + k as u64, |i, &v| seen.push((i, v)));
+                        let want: Vec<(usize, u64)> =
+                            (0..3).map(|i| (i, epoch * 10 + i as u64)).collect();
+                        assert_eq!(seen, want, "epoch {epoch} participant {k}");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn snapshot_handshake_helpers_cycle_buffers() {
+        let snaps = BoundedQueue::new(1);
+        let rets = BoundedQueue::new(2);
+        let mut spare = Some(Box::new(0u64));
+        // worker publishes 41 out of its spare buffer
+        let mut buf = take_publish_buf(&mut spare, &rets).unwrap();
+        *buf = 41;
+        snaps.push(buf).unwrap();
+        // actor adopts and returns its old buffer
+        let mut net = Box::new(7u64);
+        assert!(adopt_snapshot(&mut net, &snaps, &rets));
+        assert_eq!(*net, 41);
+        // the spare is gone, so the next publish reuses the returned one
+        assert!(spare.is_none());
+        let mut buf = take_publish_buf(&mut spare, &rets).unwrap();
+        assert_eq!(*buf, 7, "worker got the actor's old buffer back");
+        *buf = 42;
+        snaps.push(buf).unwrap();
+        assert!(adopt_snapshot(&mut net, &snaps, &rets));
+        assert_eq!(*net, 42);
+        // worker hung up: adoption reports failure
+        snaps.close();
+        assert!(!adopt_snapshot(&mut net, &snaps, &rets));
+        assert_eq!(*net, 42, "failed adoption leaves the snapshot alone");
+    }
+}
