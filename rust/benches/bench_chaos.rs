@@ -1,0 +1,6 @@
+//! Chaos — goodput/violations/failed vs deterministic fault intensity
+//! on a skewed fleet, re-route + migration on vs off
+//! (`DVFO_BENCH_FULL=1` for the full-size sweep).
+fn main() {
+    dvfo::bench_harness::run_experiment_bench("chaos");
+}

@@ -117,6 +117,17 @@ pub struct Config {
     /// Background learner snapshot cadence: adopt fresh weights every
     /// this-many transitions (ignored by "inline").
     pub learner_publish_every: usize,
+    /// Deterministic fault schedule: `;`-separated entries
+    /// `down:<dev>@<at_ms>+<dur_ms>` | `bw:<dev>@<at_ms>+<dur_ms>*<scale>`
+    /// | `cloud@<at_ms>+<dur_ms>` | `file:<path>` (JSON fault-trace
+    /// array). Empty = no faults (bit-exact fault-free traces).
+    pub chaos: String,
+    /// Retry budget for fault-killed in-flight work: how many
+    /// re-enqueues before a task terminally fails.
+    pub retry_max: usize,
+    /// Backoff (ms) before a killed task's first retry; doubles per
+    /// attempt (deterministic exponential backoff).
+    pub retry_backoff_ms: f64,
     /// Worker threads for the experiment grid sweeps (1 = serial).
     /// Cells share nothing and seed their own RNGs, so any value
     /// renders byte-identical tables — only the wall clock changes.
@@ -164,6 +175,9 @@ impl Default for Config {
             scheduler: "calendar".into(),
             learner: "inline".into(),
             learner_publish_every: 32,
+            chaos: String::new(),
+            retry_max: 3,
+            retry_backoff_ms: 10.0,
             threads: 1,
             seed: 0,
             artifacts_dir: "artifacts".into(),
@@ -200,7 +214,9 @@ impl Config {
             | "streams" | "seed" | "max_batch" | "cloud_slots" | "cloud_max_batch"
             | "rebalance_window_ms" | "migrate_threshold_ms" | "migrate_penalty_ms"
             | "shards" => Json::Num(value.parse::<f64>()?),
-            "threads" | "learner_publish_every" => Json::Num(value.parse::<f64>()?),
+            "threads" | "learner_publish_every" | "retry_max" | "retry_backoff_ms" => {
+                Json::Num(value.parse::<f64>()?)
+            }
             "concurrent" | "queue_aware" | "reroute" | "stream_telemetry" => {
                 Json::Bool(value.parse::<bool>()?)
             }
@@ -274,6 +290,11 @@ impl Config {
             "learner" => str_field!(learner),
             "learner_publish_every" => {
                 self.learner_publish_every = v.as_usize().context("expected int")?
+            }
+            "chaos" => str_field!(chaos),
+            "retry_max" => self.retry_max = v.as_usize().context("expected int")?,
+            "retry_backoff_ms" => {
+                self.retry_backoff_ms = v.as_f64().context("expected number")?
             }
             "threads" => self.threads = v.as_usize().context("expected int")?,
             "seed" => self.seed = v.as_f64().context("expected number")? as u64,
@@ -369,6 +390,17 @@ impl Config {
             .context("fleet spec")?;
         crate::net::Bandwidth::parse(&self.bandwidth, self.seed)
             .context("bandwidth spec")?;
+        let schedule =
+            crate::coordinator::chaos::FaultSchedule::parse(&self.chaos).context("chaos spec")?;
+        let fleet_size =
+            crate::coordinator::fleet::parse_fleet_spec(&self.fleet, &self.device)?.len();
+        schedule.validate_for(fleet_size).context("chaos spec")?;
+        if !(self.retry_backoff_ms.is_finite() && self.retry_backoff_ms >= 0.0) {
+            bail!(
+                "retry_backoff_ms must be a finite non-negative number, got {}",
+                self.retry_backoff_ms
+            );
+        }
         Ok(())
     }
 }
@@ -569,6 +601,40 @@ mod tests {
         let c2 = Config::from_json(&j).unwrap();
         assert_eq!(c2.learner, "bg");
         assert_eq!(c2.learner_publish_every, 8);
+    }
+
+    #[test]
+    fn chaos_fields_parse_and_validate() {
+        let mut c = Config::default();
+        assert!(c.chaos.is_empty());
+        assert_eq!(c.retry_max, 3);
+        assert_eq!(c.retry_backoff_ms, 10.0);
+        c.set("fleet", "xavier-nx,jetson-nano*2").unwrap();
+        c.set("chaos", "down:1@200+500; cloud@100+50; bw:0@50+100*0.25")
+            .unwrap();
+        c.set("retry_max", "5").unwrap();
+        c.set("retry_backoff_ms", "2.5").unwrap();
+        assert_eq!(c.retry_max, 5);
+        assert_eq!(c.retry_backoff_ms, 2.5);
+        // bad values are rejected
+        let mut c = Config::default();
+        assert!(c.set("chaos", "down:0@200").is_err(), "missing duration");
+        assert!(c.set("chaos", "warp:0@1+1").is_err(), "unknown fault kind");
+        assert!(
+            c.set("chaos", "down:3@200+500").is_err(),
+            "device outside the (1-device default) fleet"
+        );
+        assert!(c.set("retry_backoff_ms", "-1").is_err());
+        assert!(c.set("retry_backoff_ms", "NaN").is_err());
+        let j = Json::parse(
+            r#"{"fleet": "jetson-nano*2", "chaos": "down:1@100+200",
+                "retry_max": 2, "retry_backoff_ms": 5.0}"#,
+        )
+        .unwrap();
+        let c2 = Config::from_json(&j).unwrap();
+        assert_eq!(c2.chaos, "down:1@100+200");
+        assert_eq!(c2.retry_max, 2);
+        assert_eq!(c2.retry_backoff_ms, 5.0);
     }
 
     #[test]

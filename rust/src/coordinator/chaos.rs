@@ -1,0 +1,507 @@
+//! Deterministic fault injection for the unified DES kernel.
+//!
+//! A [`FaultSchedule`] is a sorted list of fault windows, parsed from a
+//! compact CLI grammar or from a JSON fault-trace file, and injected into
+//! the engine as first-class events at exactly the scheduled times. No
+//! RNG is involved anywhere in this module: the schedule *is* the fault
+//! process, so a fixed schedule replays bit-for-bit (detlint R3 holds
+//! trivially), and an empty schedule pushes zero events, leaving every
+//! golden trace untouched.
+//!
+//! Three fault classes:
+//!
+//! - `down:<dev>@<at_ms>+<dur_ms>` — device dropout. The device stops
+//!   accepting work; its queued-but-unstarted tasks drain through the
+//!   re-route path (or shed when no sibling is feasible / re-routing is
+//!   off) and its uplink-stage work is killed into the retry path. The
+//!   device recovers at `at + dur`.
+//! - `bw:<dev>@<at_ms>+<dur_ms>*<scale>` — bandwidth collapse. Uplink
+//!   transfers started during the window take `1/scale` times longer
+//!   (`scale` in `(0, 1]`; `1.0` is a no-op window).
+//! - `cloud@<at_ms>+<dur_ms>` — shared cloud-pool outage. Cloud slots
+//!   are forced to zero and in-service cloud batches are killed into the
+//!   retry path; queued batches wait out the window.
+//!
+//! Entries are separated by `;`, and `file:<path>` splices in a JSON
+//! array of `{"kind", "dev", "at_ms", "dur_ms", "scale"}` objects.
+//!
+//! Killed work retries under a [`RetryPolicy`]: a bounded attempt budget
+//! with deterministic exponential backoff (`base * 2^(attempt-1)`), no
+//! jitter. A task that exhausts its budget becomes the terminal outcome
+//! `failed` — distinct from `shed` — so the fleet-level conservation
+//! invariant stays checkable as `offered == completed + shed + failed`.
+
+use crate::configx::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One fault window. Times are absolute sim seconds; every window is
+/// finite (`until_s > at_s`), which is what guarantees a chaos run still
+/// drains: retries back off geometrically and devices always recover.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Device `dev` drops out at `at_s` and recovers at `until_s`.
+    DeviceDown { dev: usize, at_s: f64, until_s: f64 },
+    /// Device `dev`'s uplink rate is multiplied by `scale` in `(0, 1]`
+    /// for transfers started inside the window.
+    BandwidthCollapse {
+        dev: usize,
+        at_s: f64,
+        until_s: f64,
+        scale: f64,
+    },
+    /// The shared cloud pool is down: slots forced to 0, in-service
+    /// batches killed into the retry path.
+    CloudOutage { at_s: f64, until_s: f64 },
+}
+
+impl Fault {
+    pub fn at_s(&self) -> f64 {
+        match *self {
+            Fault::DeviceDown { at_s, .. }
+            | Fault::BandwidthCollapse { at_s, .. }
+            | Fault::CloudOutage { at_s, .. } => at_s,
+        }
+    }
+
+    pub fn until_s(&self) -> f64 {
+        match *self {
+            Fault::DeviceDown { until_s, .. }
+            | Fault::BandwidthCollapse { until_s, .. }
+            | Fault::CloudOutage { until_s, .. } => until_s,
+        }
+    }
+
+    /// The device a fault targets; `None` for pool-wide faults.
+    pub fn dev(&self) -> Option<usize> {
+        match *self {
+            Fault::DeviceDown { dev, .. } | Fault::BandwidthCollapse { dev, .. } => Some(dev),
+            Fault::CloudOutage { .. } => None,
+        }
+    }
+}
+
+/// Bounded-retry contract for fault-killed work. Purely deterministic:
+/// attempt `k` (1-based) backs off `backoff_base_s * 2^(k-1)` seconds,
+/// and attempt `max_retries + 1` does not happen — the task is `failed`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// How many re-enqueues a killed task gets before it is `failed`.
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub backoff_base_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            backoff_base_s: 0.01,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (1-based): `base * 2^(attempt-1)`.
+    /// The shift saturates so absurd budgets cannot overflow.
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        let pow = attempt.saturating_sub(1).min(30);
+        self.backoff_base_s * f64::from(1u32 << pow)
+    }
+}
+
+/// A validated, time-sorted set of fault windows. `Default` is empty,
+/// and an empty schedule injects nothing — the engine's chaos arm never
+/// arms, so pre-chaos traces replay bit-for-bit.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSchedule {
+    faults: Vec<Fault>,
+}
+
+impl FaultSchedule {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Build a schedule directly from validated windows (used by
+    /// experiments and tests); sorts by onset like `parse` does.
+    pub fn from_faults(mut faults: Vec<Fault>) -> Result<Self> {
+        for f in &faults {
+            validate_window(f.at_s(), f.until_s())?;
+            if let Fault::BandwidthCollapse { scale, .. } = *f {
+                validate_scale(scale)?;
+            }
+        }
+        faults.sort_by(|a, b| a.at_s().total_cmp(&b.at_s()));
+        Ok(FaultSchedule { faults })
+    }
+
+    /// Parse the `;`-separated CLI grammar (see module docs). An empty
+    /// or whitespace-only spec is the empty schedule.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut faults = Vec::new();
+        for entry in spec.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            if let Some(path) = entry.strip_prefix("file:") {
+                let text = std::fs::read_to_string(path.trim())
+                    .map_err(|e| anyhow!("fault trace '{}': {e}", path.trim()))?;
+                parse_trace_json(&text, &mut faults)
+                    .with_context(|| format!("fault trace '{}'", path.trim()))?;
+            } else {
+                faults.push(parse_entry(entry)?);
+            }
+        }
+        Self::from_faults(faults)
+    }
+
+    /// Reject device indices outside a fleet of `n_dev` devices.
+    pub fn validate_for(&self, n_dev: usize) -> Result<()> {
+        for f in &self.faults {
+            if let Some(dev) = f.dev() {
+                if dev >= n_dev {
+                    bail!("fault targets device {dev} but the fleet has {n_dev} devices");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Restrict the schedule to one shard's contiguous device slice
+    /// `[dev_base, dev_base + n_dev)`, translating device indices to
+    /// shard-local ones. Cloud outages hit the *shared* pool, so they
+    /// are replicated into every shard: each shard forces its local
+    /// slot allotment to zero, which sums to a global outage, and the
+    /// killed in-flight work shows up in the shard's published cloud
+    /// signals at the next epoch boundary.
+    pub fn partition(&self, dev_base: usize, n_dev: usize) -> Self {
+        let faults = self
+            .faults
+            .iter()
+            .filter_map(|f| match *f {
+                Fault::DeviceDown { dev, at_s, until_s } => {
+                    (dev >= dev_base && dev < dev_base + n_dev).then_some(Fault::DeviceDown {
+                        dev: dev - dev_base,
+                        at_s,
+                        until_s,
+                    })
+                }
+                Fault::BandwidthCollapse {
+                    dev,
+                    at_s,
+                    until_s,
+                    scale,
+                } => (dev >= dev_base && dev < dev_base + n_dev).then_some(
+                    Fault::BandwidthCollapse {
+                        dev: dev - dev_base,
+                        at_s,
+                        until_s,
+                        scale,
+                    },
+                ),
+                Fault::CloudOutage { .. } => Some(*f),
+            })
+            .collect();
+        FaultSchedule { faults }
+    }
+}
+
+fn validate_window(at_s: f64, until_s: f64) -> Result<()> {
+    if !at_s.is_finite() || at_s < 0.0 {
+        bail!("fault onset must be finite and >= 0, got {at_s}");
+    }
+    if !until_s.is_finite() || until_s <= at_s {
+        bail!("fault window must have finite positive duration (onset {at_s}, end {until_s})");
+    }
+    Ok(())
+}
+
+fn validate_scale(scale: f64) -> Result<()> {
+    if !scale.is_finite() || scale <= 0.0 || scale > 1.0 {
+        bail!("bandwidth collapse scale must be in (0, 1], got {scale}");
+    }
+    Ok(())
+}
+
+/// `<at_ms>+<dur_ms>` → `(at_s, until_s)`.
+fn parse_window(s: &str) -> Result<(f64, f64)> {
+    let (at, dur) = s
+        .split_once('+')
+        .ok_or_else(|| anyhow!("expected <at_ms>+<dur_ms>, got '{s}'"))?;
+    let at_ms: f64 = at
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("bad fault onset '{at}'"))?;
+    let dur_ms: f64 = dur
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("bad fault duration '{dur}'"))?;
+    if !dur_ms.is_finite() || dur_ms <= 0.0 {
+        bail!("fault duration must be finite and > 0 ms, got '{dur}'");
+    }
+    let at_s = at_ms / 1e3;
+    Ok((at_s, at_s + dur_ms / 1e3))
+}
+
+fn parse_dev(s: &str) -> Result<usize> {
+    s.trim()
+        .parse()
+        .map_err(|_| anyhow!("bad fault device index '{s}'"))
+}
+
+fn parse_entry(entry: &str) -> Result<Fault> {
+    if let Some(rest) = entry.strip_prefix("cloud@") {
+        let (at_s, until_s) = parse_window(rest).with_context(|| format!("in '{entry}'"))?;
+        return Ok(Fault::CloudOutage { at_s, until_s });
+    }
+    let (kind, rest) = entry.split_once(':').ok_or_else(|| {
+        anyhow!(
+            "bad fault '{entry}': expected down:<dev>@<at_ms>+<dur_ms>, \
+             bw:<dev>@<at_ms>+<dur_ms>*<scale>, cloud@<at_ms>+<dur_ms>, or file:<path>"
+        )
+    })?;
+    let (dev, window) = rest
+        .split_once('@')
+        .ok_or_else(|| anyhow!("bad fault '{entry}': missing '@<at_ms>+<dur_ms>'"))?;
+    let dev = parse_dev(dev).with_context(|| format!("in '{entry}'"))?;
+    match kind.trim() {
+        "down" => {
+            let (at_s, until_s) = parse_window(window).with_context(|| format!("in '{entry}'"))?;
+            Ok(Fault::DeviceDown { dev, at_s, until_s })
+        }
+        "bw" => {
+            let (window, scale) = window
+                .split_once('*')
+                .ok_or_else(|| anyhow!("bad fault '{entry}': missing '*<scale>' on bw"))?;
+            let (at_s, until_s) = parse_window(window).with_context(|| format!("in '{entry}'"))?;
+            let scale: f64 = scale
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("bad bandwidth scale '{scale}'"))?;
+            validate_scale(scale).with_context(|| format!("in '{entry}'"))?;
+            Ok(Fault::BandwidthCollapse {
+                dev,
+                at_s,
+                until_s,
+                scale,
+            })
+        }
+        other => bail!("unknown fault kind '{other}' (valid: down, bw, cloud, file)"),
+    }
+}
+
+/// JSON fault-trace file: an array of objects, each
+/// `{"kind": "down"|"bw"|"cloud", "dev": n, "at_ms": x, "dur_ms": y, "scale": s}`.
+fn parse_trace_json(text: &str, out: &mut Vec<Fault>) -> Result<()> {
+    let doc = Json::parse(text).map_err(|e| anyhow!("bad JSON: {e}"))?;
+    let arr = doc
+        .as_arr()
+        .ok_or_else(|| anyhow!("fault trace must be a JSON array"))?;
+    for (i, obj) in arr.iter().enumerate() {
+        let field = |key: &str| -> Result<f64> {
+            obj.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("entry {i}: missing numeric '{key}'"))
+        };
+        let kind = obj
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("entry {i}: missing string 'kind'"))?;
+        let at_ms = field("at_ms")?;
+        let dur_ms = field("dur_ms")?;
+        if !dur_ms.is_finite() || dur_ms <= 0.0 {
+            bail!("entry {i}: dur_ms must be finite and > 0, got {dur_ms}");
+        }
+        let at_s = at_ms / 1e3;
+        let until_s = at_s + dur_ms / 1e3;
+        let dev = || -> Result<usize> {
+            obj.get("dev")
+                .and_then(Json::as_f64)
+                .filter(|d| d.is_finite() && *d >= 0.0)
+                .map(|d| d as usize)
+                .ok_or_else(|| anyhow!("entry {i}: missing device index 'dev'"))
+        };
+        out.push(match kind {
+            "down" => Fault::DeviceDown {
+                dev: dev()?,
+                at_s,
+                until_s,
+            },
+            "bw" => Fault::BandwidthCollapse {
+                dev: dev()?,
+                at_s,
+                until_s,
+                scale: field("scale")?,
+            },
+            "cloud" => Fault::CloudOutage { at_s, until_s },
+            other => bail!("entry {i}: unknown kind '{other}' (valid: down, bw, cloud)"),
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+
+    use super::*;
+
+    #[test]
+    fn empty_and_whitespace_specs_are_the_empty_schedule() {
+        assert!(FaultSchedule::parse("").unwrap().is_empty());
+        assert!(FaultSchedule::parse("  ; ;  ").unwrap().is_empty());
+        assert_eq!(FaultSchedule::default(), FaultSchedule::parse("").unwrap());
+    }
+
+    #[test]
+    fn grammar_parses_all_three_fault_kinds_and_sorts_by_onset() {
+        let s = FaultSchedule::parse("cloud@900+100; down:1@200+400; bw:0@50+100*0.25").unwrap();
+        assert_eq!(
+            s.faults(),
+            &[
+                Fault::BandwidthCollapse {
+                    dev: 0,
+                    at_s: 0.05,
+                    until_s: 0.05 + 0.1,
+                    scale: 0.25
+                },
+                Fault::DeviceDown {
+                    dev: 1,
+                    at_s: 0.2,
+                    until_s: 0.2 + 0.4
+                },
+                Fault::CloudOutage {
+                    at_s: 0.9,
+                    until_s: 0.9 + 0.1
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn garbage_specs_are_rejected_with_context() {
+        for bad in [
+            "down:0",            // no window
+            "down:x@1+2",        // bad device
+            "down:0@1",          // no duration
+            "down:0@1+0",        // zero-length window
+            "down:0@1+-5",       // negative duration
+            "down:0@NaN+5",      // NaN onset
+            "bw:0@1+2",          // missing scale
+            "bw:0@1+2*0",        // scale out of range
+            "bw:0@1+2*1.5",      // scale out of range
+            "bw:0@1+2*NaN",      // NaN scale
+            "flood:0@1+2",       // unknown kind
+            "cloud@1",           // no duration
+            "file:/no/such/f.x", // unreadable file
+        ] {
+            assert!(FaultSchedule::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn json_trace_files_splice_into_the_schedule() {
+        let dir = std::env::temp_dir().join("dvfo_chaos_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        std::fs::write(
+            &path,
+            r#"[
+                {"kind": "down", "dev": 2, "at_ms": 300, "dur_ms": 200},
+                {"kind": "bw", "dev": 0, "at_ms": 10, "dur_ms": 20, "scale": 0.5},
+                {"kind": "cloud", "at_ms": 100, "dur_ms": 50}
+            ]"#,
+        )
+        .unwrap();
+        let s = FaultSchedule::parse(&format!("file:{}; down:0@700+100", path.display())).unwrap();
+        assert_eq!(s.faults().len(), 4);
+        assert_eq!(
+            s.faults()[0],
+            Fault::BandwidthCollapse {
+                dev: 0,
+                at_s: 0.01,
+                until_s: 0.01 + 0.02,
+                scale: 0.5
+            }
+        );
+        assert_eq!(
+            s.faults()[3],
+            Fault::DeviceDown {
+                dev: 0,
+                at_s: 0.7,
+                until_s: 0.7 + 0.1
+            }
+        );
+
+        let garbage = dir.join("garbage.json");
+        std::fs::write(&garbage, "not json at all").unwrap();
+        assert!(FaultSchedule::parse(&format!("file:{}", garbage.display())).is_err());
+        let not_arr = dir.join("not_arr.json");
+        std::fs::write(&not_arr, r#"{"kind": "down"}"#).unwrap();
+        assert!(FaultSchedule::parse(&format!("file:{}", not_arr.display())).is_err());
+    }
+
+    #[test]
+    fn validate_for_rejects_out_of_range_devices() {
+        let s = FaultSchedule::parse("down:2@100+100").unwrap();
+        assert!(s.validate_for(3).is_ok());
+        assert!(s.validate_for(2).is_err());
+        // Cloud outages are device-free and always in range.
+        assert!(FaultSchedule::parse("cloud@0+1")
+            .unwrap()
+            .validate_for(0)
+            .is_ok());
+    }
+
+    #[test]
+    fn partition_translates_device_faults_and_replicates_cloud_outages() {
+        let s =
+            FaultSchedule::parse("down:0@100+100; down:2@200+100; bw:3@300+100*0.5; cloud@50+25")
+                .unwrap();
+        let shard = s.partition(2, 2);
+        assert_eq!(
+            shard.faults(),
+            &[
+                Fault::CloudOutage {
+                    at_s: 0.05,
+                    until_s: 0.05 + 0.025
+                },
+                Fault::DeviceDown {
+                    dev: 0,
+                    at_s: 0.2,
+                    until_s: 0.2 + 0.1
+                },
+                Fault::BandwidthCollapse {
+                    dev: 1,
+                    at_s: 0.3,
+                    until_s: 0.3 + 0.1,
+                    scale: 0.5
+                },
+            ]
+        );
+        // Partitions of the empty schedule stay empty.
+        assert!(FaultSchedule::default().partition(0, 4).is_empty());
+    }
+
+    #[test]
+    fn backoff_doubles_deterministically_and_saturates() {
+        let p = RetryPolicy {
+            max_retries: 5,
+            backoff_base_s: 0.01,
+        };
+        assert_eq!(p.backoff_s(1), 0.01);
+        assert_eq!(p.backoff_s(2), 0.02);
+        assert_eq!(p.backoff_s(3), 0.04);
+        assert_eq!(p.backoff_s(4), 0.08);
+        // Saturation: huge attempt counts stay finite.
+        assert!(p.backoff_s(u32::MAX).is_finite());
+        let d = RetryPolicy::default();
+        assert_eq!(d.max_retries, 3);
+        assert_eq!(d.backoff_base_s, 0.01);
+    }
+}

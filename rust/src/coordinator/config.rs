@@ -13,6 +13,7 @@
 //! `rust/tests/engine_config_parity.rs` pins both construction paths to
 //! identical values so downstream callers can migrate incrementally.
 
+use super::chaos::{FaultSchedule, RetryPolicy};
 use super::des::DesOpts;
 use super::fleet::{Admission, FleetOpts, Router};
 use super::sched::SchedKind;
@@ -52,6 +53,10 @@ pub struct EngineConfig {
     pub migrate_threshold_s: f64,
     /// latency penalty per migrated task in transit (s)
     pub migrate_penalty_s: f64,
+    /// deterministic fault schedule; empty schedules no fault events
+    pub chaos: FaultSchedule,
+    /// retry budget + exponential backoff for fault-killed work
+    pub retry: RetryPolicy,
     /// share-nothing engine shards; <= 1 runs the unsharded kernel
     pub shards: usize,
     /// epoch length (simulated s) for cross-shard cloud-signal sync
@@ -85,6 +90,8 @@ impl Default for EngineConfig {
             rebalance_window_s: fleet.rebalance_window_s,
             migrate_threshold_s: fleet.migrate_threshold_s,
             migrate_penalty_s: fleet.migrate_penalty_s,
+            chaos: fleet.chaos,
+            retry: fleet.retry,
             shards: 1,
             shard_epoch_s: SHARD_EPOCH_S,
             stream_telemetry: false,
@@ -116,6 +123,11 @@ impl EngineConfig {
             rebalance_window_s: cfg.rebalance_window_ms / 1e3,
             migrate_threshold_s: cfg.migrate_threshold_ms / 1e3,
             migrate_penalty_s: cfg.migrate_penalty_ms / 1e3,
+            chaos: FaultSchedule::parse(&cfg.chaos)?,
+            retry: RetryPolicy {
+                max_retries: cfg.retry_max as u32,
+                backoff_base_s: cfg.retry_backoff_ms / 1e3,
+            },
             shards: cfg.shards,
             shard_epoch_s: SHARD_EPOCH_S,
             stream_telemetry: cfg.stream_telemetry,
@@ -184,6 +196,16 @@ impl EngineConfig {
         self
     }
 
+    pub fn chaos(mut self, v: FaultSchedule) -> Self {
+        self.chaos = v;
+        self
+    }
+
+    pub fn retry(mut self, v: RetryPolicy) -> Self {
+        self.retry = v;
+        self
+    }
+
     pub fn shards(mut self, v: usize) -> Self {
         self.shards = v;
         self
@@ -231,6 +253,8 @@ impl EngineConfig {
             rebalance_window_s: self.rebalance_window_s,
             migrate_threshold_s: self.migrate_threshold_s,
             migrate_penalty_s: self.migrate_penalty_s,
+            chaos: self.chaos.clone(),
+            retry: self.retry,
         }
     }
 }
@@ -241,6 +265,8 @@ mod tests {
 
     #[test]
     fn builder_chains_and_converts() {
+        #![allow(clippy::unwrap_used)]
+        let schedule = FaultSchedule::parse("down:0@100+50").unwrap();
         let ec = EngineConfig::new()
             .batch_window_s(0.004)
             .cloud_slots(2)
@@ -251,6 +277,11 @@ mod tests {
             .rebalance_window_s(0.01)
             .migrate_threshold_s(0.05)
             .migrate_penalty_s(0.002)
+            .chaos(schedule.clone())
+            .retry(RetryPolicy {
+                max_retries: 5,
+                backoff_base_s: 0.002,
+            })
             .shards(4)
             .stream_telemetry(true)
             .learner(LearnerMode::Background)
@@ -265,6 +296,9 @@ mod tests {
         assert_eq!(fo.rebalance_window_s, 0.01);
         assert_eq!(fo.migrate_threshold_s, 0.05);
         assert_eq!(fo.migrate_penalty_s, 0.002);
+        assert_eq!(fo.chaos, schedule);
+        assert_eq!(fo.retry.max_retries, 5);
+        assert_eq!(fo.retry.backoff_base_s, 0.002);
         assert_eq!(ec.shards, 4);
         assert!(ec.stream_telemetry);
         assert_eq!(ec.learner, LearnerMode::Background);
@@ -288,6 +322,10 @@ mod tests {
         assert_eq!(fo.rebalance_window_s, legacy.rebalance_window_s);
         assert_eq!(fo.migrate_threshold_s, legacy.migrate_threshold_s);
         assert_eq!(fo.migrate_penalty_s, legacy.migrate_penalty_s);
+        assert_eq!(fo.chaos, legacy.chaos);
+        assert!(fo.chaos.is_empty());
+        assert_eq!(fo.retry, legacy.retry);
+        assert_eq!(fo.retry.max_retries, 3);
         assert_eq!(ec.shards, 1);
         assert!(!ec.stream_telemetry);
         assert_eq!(ec.learner, LearnerMode::Inline);

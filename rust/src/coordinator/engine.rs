@@ -70,6 +70,7 @@
 //! fleet runner in `coordinator::shard`, pausing at an epoch boundary
 //! with all queues, windows, and EWMAs intact.
 
+use super::chaos::Fault;
 use super::fleet::{Admission, FleetOpts, Router};
 use super::sched::Sched;
 use super::{Coordinator, LoadSignals};
@@ -87,17 +88,39 @@ enum Ev {
     /// per-device uplink batch window expired (generation guards stale
     /// closes after an early size-capped flush)
     BatchClose { dev: usize, generation: usize },
-    UplinkDone { dev: usize, batch: usize },
+    /// `gen` is the transfer generation of the batch slot at start time:
+    /// a device dropout that kills the in-flight transfer bumps the
+    /// slot's generation, turning this event into a tombstone
+    UplinkDone { dev: usize, batch: usize, gen: u32 },
     /// shared cloud batch window expired (same stale-close guard)
     CloudBatchClose { generation: usize },
-    /// one batched executor invocation completed
-    CloudDone { batch: usize },
+    /// one batched executor invocation completed (`gen` tombstones
+    /// invocations killed by a cloud outage, like `UplinkDone`)
+    CloudDone { batch: usize, gen: u32 },
     /// periodic cross-device rebalance tick (work stealing); scheduled
     /// only when `rebalance_window_s > 0`
     Rebalance,
     /// a migrated task finished its transfer and re-enqueues on the
     /// destination device's edge queue
     Migrate { dev: usize, job: usize },
+    /// a scheduled fault window opens (`idx` into the fault schedule);
+    /// armed at core construction, so an empty schedule pushes nothing
+    Fault { idx: usize },
+    /// the matching fault window closes (device recovery, bandwidth
+    /// restore, cloud pool back up)
+    FaultEnd { idx: usize },
+    /// a killed uplink-stage job's retry backoff expired
+    RetryUplink { job: usize },
+    /// a killed cloud-stage job's retry backoff expired
+    RetryCloud { job: usize },
+}
+
+/// Which stage a fault killed a job out of — decides where its retry
+/// re-enqueues.
+#[derive(Clone, Copy)]
+enum RetryStage {
+    Uplink,
+    Cloud,
 }
 
 /// One open batching window — the uplink windows (one per device) and
@@ -159,6 +182,10 @@ struct Job {
     rerouted: bool,
     /// the rebalancer migrated this task across devices while queued
     migrated: bool,
+    /// times a fault killed this job's uplink/cloud work and it
+    /// re-enqueued; bounded by `RetryPolicy::max_retries`, after which
+    /// the job terminates as `failed`
+    retries: u32,
     /// admission-order index among accepted tasks. Job *slots* are
     /// recycled once a task completes, so the slot id is not a stable
     /// ordering — this is what sinks key report ordering on.
@@ -182,6 +209,18 @@ struct DevState {
     open_batch: BatchWindow,
     uplink_queue: VecDeque<usize>,
     uplink_busy: bool,
+    /// the batch slot currently transmitting on this device's uplink —
+    /// what a dropout kills (its `UplinkDone` goes stale via the slot's
+    /// generation bump)
+    uplink_inflight: Option<usize>,
+    /// nesting depth of open `DeviceDown` windows; the device is down
+    /// while > 0 (depth, not a flag, so overlapping windows compose)
+    down_depth: usize,
+    /// composed bandwidth-collapse factor: uplink transfers started now
+    /// take `1/link_scale` times longer. Exactly 1.0 outside collapse
+    /// windows — and `x / 1.0 == x` bit-for-bit, so the fault-free
+    /// timing path is untouched.
+    link_scale: f64,
     /// tasks migrating TOWARD this device, still in transit — counted
     /// in backlog/occupancy so successive rebalance ticks (and
     /// admission) don't treat the destination as emptier than it is
@@ -210,9 +249,17 @@ impl DevState {
             open_batch: BatchWindow::default(),
             uplink_queue: VecDeque::new(),
             uplink_busy: false,
+            uplink_inflight: None,
+            down_depth: 0,
+            link_scale: 1.0,
             migrating_in: 0,
             backlog_s: 0.0,
         }
+    }
+
+    /// True while at least one `DeviceDown` window is open.
+    fn down(&self) -> bool {
+        self.down_depth > 0
     }
 
     /// Tasks queued, in service, or in transit toward this device.
@@ -250,12 +297,28 @@ pub struct EngineResult {
     pub jobs: Vec<EngineJob>,
     /// tasks generated by the streams (accepted + shed)
     pub offered: usize,
-    /// accepted tasks, all of which completed by drain time (equals
-    /// `jobs.len()` on a collecting run; the only completion count when
-    /// a streaming sink consumed the reports)
+    /// tasks that ran to completion — accepted minus the fault-era
+    /// terminal outcomes (`failed` and accepted-then-shed dropout
+    /// drains); without faults this is exactly the accepted count
     pub completed: usize,
-    /// tasks dropped by admission control
+    /// tasks dropped by admission control, plus accepted tasks shed
+    /// while draining a downed device with no feasible sibling —
+    /// `offered == completed + shed + failed` always holds
     pub shed: usize,
+    /// tasks that exhausted their fault-retry budget (terminal outcome,
+    /// distinct from `shed`)
+    pub failed: usize,
+    /// fault windows injected from the schedule (onsets only)
+    pub faults_injected: usize,
+    /// retry re-enqueues scheduled for fault-killed work
+    pub retries: usize,
+    /// tasks pulled off a downed device's edge queue at dropout
+    /// (re-routed to a sibling or shed)
+    pub drained_on_dropout: usize,
+    /// per-device: fault windows that targeted this device
+    pub per_dev_faults: Vec<usize>,
+    /// per-device: tasks that terminally failed while owned by this device
+    pub per_dev_failed: Vec<usize>,
     /// tasks forced to edge-only by admission control
     pub downgraded: usize,
     /// cloud executor invocations (batched and singleton)
@@ -327,8 +390,21 @@ struct EngineState {
     /// recycled through `free_cloud_batches`, same scheme as `batches`)
     cloud_batches: Vec<Vec<usize>>,
     free_cloud_batches: Vec<usize>,
+    /// transfer generation per `batches` slot: bumped when a dropout
+    /// kills the slot's in-flight transfer, so the pending `UplinkDone`
+    /// tombstones instead of completing dead work
+    batch_gen: Vec<u32>,
+    /// invocation generation per `cloud_batches` slot (same tombstone
+    /// scheme, for cloud outages killing in-service invocations)
+    cloud_batch_gen: Vec<u32>,
     /// frozen batches waiting for a free executor slot
     cloud_ready: VecDeque<usize>,
+    /// batch slots currently occupying executor slots, in start order —
+    /// what a cloud outage kills
+    cloud_running: Vec<usize>,
+    /// nesting depth of open cloud-outage windows; effective executor
+    /// slots are 0 while > 0
+    cloud_outage_depth: usize,
     /// busy executor slots (one per invocation, regardless of occupancy)
     cloud_active: usize,
     /// jobs between uplink completion and cloud completion — the live
@@ -355,6 +431,16 @@ struct EngineState {
     rr_next: usize,
     offered: usize,
     shed: usize,
+    /// the subset of `shed` that had already been accepted (dropout
+    /// drains with no feasible sibling); subtracted from `accepted`
+    /// when deriving `completed`
+    shed_after_accept: usize,
+    failed: usize,
+    faults_injected: usize,
+    retries: usize,
+    drained_on_dropout: usize,
+    per_dev_faults: Vec<usize>,
+    per_dev_failed: Vec<usize>,
     downgraded: usize,
     rerouted: usize,
     migrated: usize,
@@ -387,7 +473,11 @@ impl EngineState {
             cloud_open: BatchWindow::default(),
             cloud_batches: Vec::new(),
             free_cloud_batches: Vec::new(),
+            batch_gen: Vec::new(),
+            cloud_batch_gen: Vec::new(),
             cloud_ready: VecDeque::new(),
+            cloud_running: Vec::new(),
+            cloud_outage_depth: 0,
             cloud_active: 0,
             cloud_in_flight: 0,
             ext_cloud_in_flight: 0,
@@ -402,6 +492,13 @@ impl EngineState {
             rr_next: 0,
             offered: 0,
             shed: 0,
+            shed_after_accept: 0,
+            failed: 0,
+            faults_injected: 0,
+            retries: 0,
+            drained_on_dropout: 0,
+            per_dev_faults: vec![0; devices],
+            per_dev_failed: vec![0; devices],
             downgraded: 0,
             rerouted: 0,
             migrated: 0,
@@ -415,18 +512,26 @@ impl EngineState {
         }
     }
 
-    /// Pick the device for an arriving task.
-    fn route(&mut self, devices: &[Coordinator]) -> usize {
+    /// Pick the device for an arriving task, skipping downed devices;
+    /// `None` (shed at arrival) only when every device is down. With no
+    /// open dropout window every router behaves exactly as it always
+    /// has (round-robin probes once and advances its cursor by one).
+    fn route(&mut self, devices: &[Coordinator]) -> Option<usize> {
         let n = self.devs.len();
         match self.opts.router {
             Router::RoundRobin => {
-                let d = self.rr_next % n;
-                self.rr_next += 1;
-                d
+                for _ in 0..n {
+                    let d = self.rr_next % n;
+                    self.rr_next += 1;
+                    if !self.devs[d].down() {
+                        return Some(d);
+                    }
+                }
+                None
             }
             Router::ShortestQueue => (0..n)
-                .min_by_key(|&d| self.devs[d].in_system())
-                .unwrap_or(0),
+                .filter(|&d| !self.devs[d].down())
+                .min_by_key(|&d| self.devs[d].in_system()),
             Router::LeastBacklog => {
                 let score = |d: usize| {
                     let res = self.devs[d].residency.get().unwrap_or(1.0);
@@ -434,8 +539,8 @@ impl EngineState {
                     self.devs[d].in_system() as f64 * res * power
                 };
                 (0..n)
+                    .filter(|&d| !self.devs[d].down())
                     .min_by(|&a, &b| score(a).total_cmp(&score(b)))
-                    .unwrap_or(0)
             }
         }
     }
@@ -496,7 +601,7 @@ impl EngineState {
     /// lowest device index (deterministic).
     fn cheapest_feasible_sibling(&self, dev: usize, deadline_s: f64) -> Option<usize> {
         (0..self.devs.len())
-            .filter(|&d| d != dev)
+            .filter(|&d| d != dev && !self.devs[d].down())
             .filter_map(|d| {
                 let est = self.est_completion_s(d).unwrap_or(0.0);
                 (est <= deadline_s).then_some((d, est))
@@ -554,10 +659,15 @@ impl EngineState {
             self.devs[d].residency.get().unwrap_or(src_res)
                 * (self.devs[d].edge_queue.len() + self.devs[d].migrating_in) as f64
         };
-        let dst = (0..n)
-            .filter(|&d| d != src)
+        // never steal toward a downed device (its landing would just
+        // re-drain); a downed source has an empty queue, so the loop
+        // below is naturally inert for it
+        let Some(dst) = (0..n)
+            .filter(|&d| d != src && !self.devs[d].down())
             .min_by(|&a, &b| cold_adjusted(a).total_cmp(&cold_adjusted(b)))
-            .unwrap_or(0);
+        else {
+            return;
+        };
         let dst_res = self.devs[dst].residency.get().unwrap_or(src_res);
         let mut src_backlog = self.edge_backlog_s(src);
         let mut dst_backlog = cold_adjusted(dst);
@@ -613,7 +723,7 @@ impl EngineState {
     /// after the edge-side residency (local compute + compression +
     /// decision overhead + DVFS switch).
     fn maybe_start_edge(&mut self, devices: &mut [Coordinator], dev: usize, now: f64) {
-        if self.devs[dev].edge_busy {
+        if self.devs[dev].edge_busy || self.devs[dev].down() {
             return;
         }
         let Some(id) = self.devs[dev].edge_queue.pop_front() else {
@@ -664,6 +774,7 @@ impl EngineState {
             }
             None => {
                 self.batches.push(Vec::new());
+                self.batch_gen.push(0);
                 self.batches.len() - 1
             }
         }
@@ -696,7 +807,7 @@ impl EngineState {
     /// time; real batches ship the summed payload in one transfer — one
     /// wire header amortized, one bandwidth-limited transfer).
     fn maybe_start_uplink(&mut self, devices: &[Coordinator], dev: usize, now: f64) {
-        if self.devs[dev].uplink_busy {
+        if self.devs[dev].uplink_busy || self.devs[dev].down() {
             return;
         }
         let Some(b) = self.devs[dev].uplink_queue.pop_front() else {
@@ -706,12 +817,17 @@ impl EngineState {
         // batch_size needs `jobs` mutable while the members are read —
         // and restore it below: the UplinkDone event still needs it
         let members = std::mem::take(&mut self.batches[b]);
+        // a bandwidth-collapse window stretches transfers started inside
+        // it by 1/scale; outside any window the scale is exactly 1.0 and
+        // IEEE division by 1.0 is the identity, so fault-free timing is
+        // bit-for-bit the historical path
+        let scale = self.devs[dev].link_scale;
         let tx_s = if members.len() == 1 {
-            self.jobs[members[0]].solo_off_s
+            self.jobs[members[0]].solo_off_s / scale
         } else {
             // detlint: allow(R4, summed in batch-member index order; replay/golden gated)
             let payload: f64 = members.iter().map(|&id| self.jobs[id].payload_bytes).sum();
-            devices[dev].env.link.tx_time_s(payload)
+            devices[dev].env.link.tx_time_s(payload) / scale
         };
         let n = members.len();
         for &id in &members {
@@ -721,7 +837,15 @@ impl EngineState {
         }
         self.batches[b] = members;
         self.devs[dev].uplink_busy = true;
-        self.q.push(now + tx_s, Ev::UplinkDone { dev, batch: b });
+        self.devs[dev].uplink_inflight = Some(b);
+        self.q.push(
+            now + tx_s,
+            Ev::UplinkDone {
+                dev,
+                batch: b,
+                gen: self.batch_gen[b],
+            },
+        );
     }
 
     /// Hand an offloading job to its device's uplink stage. With a
@@ -762,6 +886,7 @@ impl EngineState {
             }
             None => {
                 self.cloud_batches.push(Vec::new());
+                self.cloud_batch_gen.push(0);
                 self.cloud_batches.len() - 1
             }
         }
@@ -819,8 +944,18 @@ impl EngineState {
     /// service-runtime dispatch overhead once and runs its members'
     /// compute back-to-back in one slot — the server-side analogue of
     /// the uplink's amortized wire header.
+    /// Executor slots currently usable: 0 for the duration of a cloud
+    /// outage, the configured pool otherwise.
+    fn effective_cloud_slots(&self) -> usize {
+        if self.cloud_outage_depth > 0 {
+            0
+        } else {
+            self.opts.des.cloud_slots
+        }
+    }
+
     fn maybe_start_cloud(&mut self, now: f64) {
-        while self.cloud_active < self.opts.des.cloud_slots {
+        while self.cloud_active < self.effective_cloud_slots() {
             let Some(b) = self.cloud_ready.pop_front() else {
                 return;
             };
@@ -853,7 +988,14 @@ impl EngineState {
             }
             self.cloud_occupancy_run.push(n as f64);
             self.cloud_active += 1;
-            self.q.push(now + svc, Ev::CloudDone { batch: b });
+            self.cloud_running.push(b);
+            self.q.push(
+                now + svc,
+                Ev::CloudDone {
+                    batch: b,
+                    gen: self.cloud_batch_gen[b],
+                },
+            );
         }
     }
 
@@ -878,6 +1020,207 @@ impl EngineState {
         }
         self.free_jobs.push(id);
     }
+
+    /// Retire a job without a completion report (terminal `failed` or
+    /// accepted-then-shed): the sink still learns the job's identity so
+    /// collecting sinks fill the admission-order slot, and the slot is
+    /// recycled exactly like a completion.
+    fn terminate<S: ReportSink>(&mut self, id: usize, sink: &mut S) {
+        let job = &mut self.jobs[id];
+        job.report = None;
+        let meta = JobMeta {
+            dev: job.dev,
+            deadline_s: job.task.deadline_s,
+            priority: job.task.priority,
+            arrival_idx: job.arrival_idx,
+        };
+        sink.fail(&meta);
+        self.free_jobs.push(id);
+    }
+
+    /// A fault killed this job's uplink/cloud work: charge one retry
+    /// attempt and either schedule the backed-off re-enqueue or, with
+    /// the budget exhausted, terminate the job as `failed`. Termination
+    /// is guaranteed: fault windows are finite and the budget is
+    /// bounded, so every accepted job eventually completes, sheds, or
+    /// fails.
+    fn retry_or_fail<S: ReportSink>(
+        &mut self,
+        id: usize,
+        stage: RetryStage,
+        now: f64,
+        sink: &mut S,
+    ) {
+        self.jobs[id].retries += 1;
+        let attempt = self.jobs[id].retries;
+        if attempt > self.opts.retry.max_retries {
+            self.failed += 1;
+            self.per_dev_failed[self.jobs[id].dev] += 1;
+            self.terminate(id, sink);
+            return;
+        }
+        self.retries += 1;
+        let ev = match stage {
+            RetryStage::Uplink => Ev::RetryUplink { job: id },
+            RetryStage::Cloud => Ev::RetryCloud { job: id },
+        };
+        self.q.push(now + self.opts.retry.backoff_s(attempt), ev);
+    }
+
+    /// Drain a queued-but-unstarted task off a downed device: re-route
+    /// it through the same sibling scan admission uses (when re-routing
+    /// is enabled and a sibling is feasible), otherwise shed it
+    /// post-acceptance.
+    fn reroute_or_shed<S: ReportSink>(
+        &mut self,
+        devices: &mut [Coordinator],
+        id: usize,
+        now: f64,
+        sink: &mut S,
+    ) {
+        let deadline_s = self.jobs[id].task.deadline_s;
+        let from = self.jobs[id].dev;
+        let alt = if self.opts.reroute {
+            self.cheapest_feasible_sibling(from, deadline_s)
+        } else {
+            None
+        };
+        match alt {
+            Some(alt) => {
+                self.jobs[id].dev = alt;
+                self.jobs[id].rerouted = true;
+                self.rerouted += 1;
+                self.per_dev_rerouted[alt] += 1;
+                self.enqueue_edge(id);
+                self.maybe_start_edge(devices, alt, now);
+            }
+            None => {
+                self.shed += 1;
+                self.shed_after_accept += 1;
+                self.terminate(id, sink);
+            }
+        }
+    }
+
+    /// Apply a `DeviceDown` onset: drain the edge queue through
+    /// re-route-or-shed and kill every uplink-stage holding — the open
+    /// window, queued frozen batches, and the in-flight transfer — into
+    /// the bounded retry path. In-service *edge* compute is left to
+    /// finish (the dropout models the device's radio dying, not its
+    /// local accelerator); its offload is killed at `EdgeDone` instead.
+    fn drain_downed_device<S: ReportSink>(
+        &mut self,
+        devices: &mut [Coordinator],
+        dev: usize,
+        now: f64,
+        sink: &mut S,
+    ) {
+        while let Some(id) = self.devs[dev].edge_queue.pop_front() {
+            self.drained_on_dropout += 1;
+            self.devs[dev].sync_backlog();
+            self.reroute_or_shed(devices, id, now, sink);
+        }
+        // the open uplink window: count the forced freeze as a flush so
+        // the pending BatchClose tombstones within the usual
+        // `stale_closes <= window_flushes` budget
+        if !self.devs[dev].open_batch.is_empty() {
+            self.window_flushes += 1;
+            let mut members = Vec::new();
+            self.devs[dev].open_batch.freeze_into(&mut members);
+            for id in members {
+                self.retry_or_fail(id, RetryStage::Uplink, now, sink);
+            }
+        }
+        while let Some(b) = self.devs[dev].uplink_queue.pop_front() {
+            let members = std::mem::take(&mut self.batches[b]);
+            for &id in &members {
+                self.retry_or_fail(id, RetryStage::Uplink, now, sink);
+            }
+            self.release_batch_slot(b, members);
+        }
+        if let Some(b) = self.devs[dev].uplink_inflight.take() {
+            // the pending UplinkDone goes stale via the generation bump
+            self.batch_gen[b] += 1;
+            self.devs[dev].uplink_busy = false;
+            let members = std::mem::take(&mut self.batches[b]);
+            for &id in &members {
+                self.retry_or_fail(id, RetryStage::Uplink, now, sink);
+            }
+            self.release_batch_slot(b, members);
+        }
+    }
+
+    /// Apply a cloud-outage onset: every in-service invocation is
+    /// killed (its `CloudDone` tombstones via the generation bump) and
+    /// its members enter the retry path; frozen batches already queued
+    /// simply wait — `effective_cloud_slots` is 0 until the window
+    /// closes.
+    fn kill_running_cloud<S: ReportSink>(&mut self, now: f64, sink: &mut S) {
+        let running = std::mem::take(&mut self.cloud_running);
+        for b in running {
+            self.cloud_batch_gen[b] += 1;
+            self.cloud_active -= 1;
+            let members = std::mem::take(&mut self.cloud_batches[b]);
+            for &id in &members {
+                self.cloud_in_flight -= 1;
+                self.retry_or_fail(id, RetryStage::Cloud, now, sink);
+            }
+            self.release_cloud_slot(b, members);
+        }
+    }
+
+    /// A scheduled fault window opens.
+    fn apply_fault<S: ReportSink>(
+        &mut self,
+        devices: &mut [Coordinator],
+        idx: usize,
+        now: f64,
+        sink: &mut S,
+    ) {
+        self.faults_injected += 1;
+        let fault = self.opts.chaos.faults()[idx];
+        match fault {
+            Fault::DeviceDown { dev, .. } => {
+                self.per_dev_faults[dev] += 1;
+                self.devs[dev].down_depth += 1;
+                if self.devs[dev].down_depth == 1 {
+                    self.drain_downed_device(devices, dev, now, sink);
+                }
+            }
+            Fault::BandwidthCollapse { dev, scale, .. } => {
+                self.per_dev_faults[dev] += 1;
+                self.devs[dev].link_scale *= scale;
+            }
+            Fault::CloudOutage { .. } => {
+                self.cloud_outage_depth += 1;
+                if self.cloud_outage_depth == 1 {
+                    self.kill_running_cloud(now, sink);
+                }
+            }
+        }
+    }
+
+    /// The matching fault window closes. A recovered device has an
+    /// empty queue by construction (drained at dropout, skipped by
+    /// routing while down), so recovery just reopens it to traffic and
+    /// pending retries; a closed cloud outage restarts the pool.
+    fn clear_fault(&mut self, idx: usize, now: f64) {
+        let fault = self.opts.chaos.faults()[idx];
+        match fault {
+            Fault::DeviceDown { dev, .. } => {
+                self.devs[dev].down_depth -= 1;
+            }
+            Fault::BandwidthCollapse { dev, scale, .. } => {
+                self.devs[dev].link_scale /= scale;
+            }
+            Fault::CloudOutage { .. } => {
+                self.cloud_outage_depth -= 1;
+                if self.cloud_outage_depth == 0 {
+                    self.maybe_start_cloud(now);
+                }
+            }
+        }
+    }
 }
 
 /// The collecting sink: every report retained, reassembled in
@@ -892,12 +1235,14 @@ impl CollectSink {
         Self { jobs: Vec::new() }
     }
 
-    /// The completed jobs in admission order. Every accepted job
-    /// completes before the engine drains, so every slot is filled.
+    /// The accepted jobs in admission order. Every accepted job reaches
+    /// a terminal state (completed, failed, or drain-shed) before the
+    /// engine drains, so every slot is filled — terminal non-completions
+    /// carry `report: None`.
     pub fn into_jobs(self) -> Vec<EngineJob> {
         self.jobs
             .into_iter()
-            .map(|j| j.expect("every accepted job completes before the engine drains"))
+            .map(|j| j.expect("every accepted job terminates before the engine drains"))
             .collect()
     }
 }
@@ -913,6 +1258,21 @@ impl ReportSink for CollectSink {
         );
         self.jobs[meta.arrival_idx] = Some(EngineJob {
             report: Some(report),
+            dev: meta.dev,
+            deadline_s: meta.deadline_s,
+        });
+    }
+
+    fn fail(&mut self, meta: &JobMeta) {
+        if self.jobs.len() <= meta.arrival_idx {
+            self.jobs.resize_with(meta.arrival_idx + 1, || None);
+        }
+        debug_assert!(
+            self.jobs[meta.arrival_idx].is_none(),
+            "a job terminated twice"
+        );
+        self.jobs[meta.arrival_idx] = Some(EngineJob {
+            report: None,
             dev: meta.dev,
             deadline_s: meta.deadline_s,
         });
@@ -976,6 +1336,20 @@ impl<'a> EngineCore<'a> {
         // non-rebalancing kernel
         if opts.rebalance_window_s > 0.0 && !state.q.is_empty() {
             state.q.push(opts.rebalance_window_s, Ev::Rebalance);
+        }
+
+        // arm the fault schedule; an empty schedule pushes nothing and
+        // keeps the event trace bit-identical to the fault-free kernel.
+        // Faults aimed past the fleet (a global schedule partitioned
+        // onto a smaller shard) are skipped here, not at parse time.
+        if !state.q.is_empty() {
+            for (idx, f) in opts.chaos.faults().iter().enumerate() {
+                if f.dev().is_some_and(|d| d >= devices.len()) {
+                    continue;
+                }
+                state.q.push(f.at_s(), Ev::Fault { idx });
+                state.q.push(f.until_s(), Ev::FaultEnd { idx });
+            }
         }
 
         Self {
@@ -1065,7 +1439,11 @@ impl<'a> EngineCore<'a> {
                         next_task[stream] = Some(t);
                     }
                     state.offered += 1;
-                    let mut dev = state.route(devices);
+                    // None only when every device is down: shed at arrival
+                    let Some(mut dev) = state.route(devices) else {
+                        state.shed += 1;
+                        continue;
+                    };
                     let mut verdict = state.admit(dev, &task);
                     let mut rerouted = false;
                     // re-route-before-shed: when the routed device would
@@ -1108,6 +1486,7 @@ impl<'a> EngineCore<'a> {
                         downgraded,
                         rerouted,
                         migrated: false,
+                        retries: 0,
                         arrival_idx,
                         report: None,
                     };
@@ -1135,7 +1514,15 @@ impl<'a> EngineCore<'a> {
                         .map(|r| r.xi > 0.0)
                         .unwrap_or(false);
                     if offloads {
-                        state.enqueue_uplink(devices, dev, id, now);
+                        if state.devs[dev].down() {
+                            // the device dropped while this task was in
+                            // edge service: the compute finished but the
+                            // radio is dead — kill the offload into the
+                            // retry path
+                            state.retry_or_fail(id, RetryStage::Uplink, now, sink);
+                        } else {
+                            state.enqueue_uplink(devices, dev, id, now);
+                        }
                     } else {
                         state.finish(id, now, sink);
                     }
@@ -1150,8 +1537,14 @@ impl<'a> EngineCore<'a> {
                         state.stale_closes += 1;
                     }
                 }
-                Ev::UplinkDone { dev, batch } => {
+                Ev::UplinkDone { dev, batch, gen } => {
+                    if gen != state.batch_gen[batch] {
+                        // tombstone: a dropout killed this transfer and
+                        // already recycled the slot
+                        continue;
+                    }
                     state.devs[dev].uplink_busy = false;
+                    state.devs[dev].uplink_inflight = None;
                     // final use of this batch slot: drain it, then hand
                     // the emptied member list back to the free list
                     let members = std::mem::take(&mut state.batches[batch]);
@@ -1168,8 +1561,16 @@ impl<'a> EngineCore<'a> {
                         state.stale_closes += 1;
                     }
                 }
-                Ev::CloudDone { batch } => {
+                Ev::CloudDone { batch, gen } => {
+                    if gen != state.cloud_batch_gen[batch] {
+                        // tombstone: a cloud outage killed this
+                        // invocation and already recycled the slot
+                        continue;
+                    }
                     state.cloud_active -= 1;
+                    if let Some(p) = state.cloud_running.iter().position(|&b| b == batch) {
+                        state.cloud_running.remove(p);
+                    }
                     // final use of this invocation's slot — recycle it
                     let members = std::mem::take(&mut state.cloud_batches[batch]);
                     for &id in &members {
@@ -1194,12 +1595,55 @@ impl<'a> EngineCore<'a> {
                 Ev::Migrate { dev, job } => {
                     debug_assert_eq!(state.jobs[job].dev, dev);
                     state.devs[dev].migrating_in -= 1;
+                    if state.devs[dev].down() {
+                        // the destination dropped while the task was in
+                        // transit: drain it like any other queued task
+                        state.reroute_or_shed(devices, job, now, sink);
+                        continue;
+                    }
                     // the job kept its original arrival_s across the
                     // transfer: queue wait and deadline math never reset
                     // (enqueue_edge re-syncs the backlog accumulator
                     // after the in-transit decrement above)
                     state.enqueue_edge(job);
                     state.maybe_start_edge(devices, dev, now);
+                }
+                Ev::Fault { idx } => {
+                    state.apply_fault(devices, idx, now, sink);
+                }
+                Ev::FaultEnd { idx } => {
+                    state.clear_fault(idx, now);
+                }
+                Ev::RetryUplink { job } => {
+                    let dev = state.jobs[job].dev;
+                    if !state.devs[dev].down() {
+                        state.enqueue_uplink(devices, dev, job, now);
+                        continue;
+                    }
+                    let alt = if state.opts.reroute {
+                        state.cheapest_feasible_sibling(dev, state.jobs[job].task.deadline_s)
+                    } else {
+                        None
+                    };
+                    match alt {
+                        Some(alt) => {
+                            // the home device is still dark: ship the
+                            // transfer through a feasible sibling's
+                            // uplink (compute already happened on `dev`,
+                            // so the job keeps its device attribution)
+                            state.rerouted += 1;
+                            state.per_dev_rerouted[alt] += 1;
+                            state.jobs[job].rerouted = true;
+                            state.enqueue_uplink(devices, alt, job, now);
+                        }
+                        None => state.retry_or_fail(job, RetryStage::Uplink, now, sink),
+                    }
+                }
+                Ev::RetryCloud { job } => {
+                    // re-enters the shared pool queue; during an outage
+                    // effective_cloud_slots() is 0 so the batch simply
+                    // waits for recovery
+                    state.enqueue_cloud(job, now);
                 }
             }
         }
@@ -1218,7 +1662,7 @@ impl<'a> EngineCore<'a> {
         EngineResult {
             jobs: Vec::new(),
             offered: state.offered,
-            completed: state.accepted,
+            completed: state.accepted - state.failed - state.shed_after_accept,
             shed: state.shed,
             downgraded: state.downgraded,
             cloud_invocations: state.cloud_invocations,
@@ -1234,6 +1678,12 @@ impl<'a> EngineCore<'a> {
             events: state.events,
             stale_closes: state.stale_closes,
             window_flushes: state.window_flushes,
+            failed: state.failed,
+            faults_injected: state.faults_injected,
+            retries: state.retries,
+            drained_on_dropout: state.drained_on_dropout,
+            per_dev_faults: state.per_dev_faults,
+            per_dev_failed: state.per_dev_failed,
         }
     }
 }
@@ -1317,8 +1767,9 @@ mod tests {
                             2 => Ev::UplinkDone {
                                 dev: i % 3,
                                 batch: i,
+                                gen: 0,
                             },
-                            _ => Ev::CloudDone { batch: i },
+                            _ => Ev::CloudDone { batch: i, gen: 0 },
                         };
                         q.push(t, ev);
                     }
@@ -1429,10 +1880,10 @@ mod tests {
                     ..FleetOpts::default()
                 };
                 let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
-                if s.offered != s.completed + s.shed {
+                if s.offered != s.completed + s.shed + s.failed {
                     return Err(format!(
-                        "task conservation: offered {} vs completed {} + shed {}",
-                        s.offered, s.completed, s.shed
+                        "task conservation: offered {} vs completed {} + shed {} + failed {}",
+                        s.offered, s.completed, s.shed, s.failed
                     ));
                 }
                 if s.completed != streams * per_stream {
@@ -1548,6 +1999,7 @@ mod tests {
                 downgraded: false,
                 rerouted: false,
                 migrated: false,
+                retries: 0,
                 arrival_idx: i,
                 report: None,
             });
@@ -1845,6 +2297,7 @@ mod tests {
                                 downgraded: false,
                                 rerouted: false,
                                 migrated: false,
+                                retries: 0,
                                 arrival_idx: id,
                                 report: None,
                             });
@@ -1874,6 +2327,258 @@ mod tests {
                 }
                 Ok(())
             },
+        );
+    }
+
+    /// Chaos test helper: a small cloud-only run (every task rides
+    /// edge-extract → uplink → shared pool, so all three fault classes
+    /// have work to bite) under the given options. The offered load
+    /// saturates a single device, so at any mid-run fault onset the
+    /// pipeline is guaranteed (by work conservation, not timing luck)
+    /// to hold queued and in-flight work for the fault to bite.
+    fn chaos_run(fleet_spec: &str, seed: u64, opts: &FleetOpts) -> EngineResult {
+        let mut cfg = Config::default();
+        cfg.policy = "cloud_only".into();
+        cfg.fleet = fleet_spec.into();
+        cfg.seed = seed;
+        let mut fleet = Fleet::from_config(&cfg).unwrap();
+        let mut gens: Vec<TaskGen> = (0..4)
+            .map(|s| {
+                TaskGen::new(
+                    &cfg.model,
+                    fleet.devices[0].env.dataset,
+                    Arrivals::Poisson { rate: 60.0 },
+                    seed ^ (600 + s),
+                )
+                .unwrap()
+            })
+            .collect();
+        serve(&mut fleet.devices, &mut gens, 8, opts)
+    }
+
+    #[test]
+    fn empty_fault_schedule_and_retry_knobs_are_bit_inert() {
+        // The compatibility gate at engine level: an empty schedule arms
+        // nothing, so the event trace — and every report — is
+        // bit-identical to the fault-free kernel, no matter how the
+        // retry knobs are tuned (they only matter once a fault kills
+        // something).
+        use crate::coordinator::{FaultSchedule, RetryPolicy};
+        let plain = chaos_run("xavier-nx,jetson-nano", 31, &FleetOpts::default());
+        let armed = chaos_run(
+            "xavier-nx,jetson-nano",
+            31,
+            &FleetOpts {
+                chaos: FaultSchedule::parse(" ; ").unwrap(),
+                retry: RetryPolicy {
+                    max_retries: 9,
+                    backoff_base_s: 0.5,
+                },
+                ..FleetOpts::default()
+            },
+        );
+        assert_eq!(plain.events, armed.events, "empty schedule must add no events");
+        assert_eq!(armed.faults_injected, 0);
+        assert_eq!(armed.retries, 0);
+        assert_eq!(armed.failed, 0);
+        assert_eq!(plain.completed, armed.completed);
+        assert_eq!(plain.jobs.len(), armed.jobs.len());
+        for (a, b) in plain.jobs.iter().zip(&armed.jobs) {
+            let (ra, rb) = (a.report.as_ref().unwrap(), b.report.as_ref().unwrap());
+            assert_eq!(ra.e2e_s.to_bits(), rb.e2e_s.to_bits());
+            assert_eq!(ra.eti_total_j.to_bits(), rb.eti_total_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn permanent_dropout_of_the_lone_device_fails_or_sheds_everything_mid_pipeline() {
+        // One device, no siblings, radio dead from 100 ms to the end of
+        // time: work caught mid-pipeline burns its 1-retry budget into
+        // the terminal `failed` state (re-route has nowhere to go),
+        // queued work drains into shed, and arrivals while everything is
+        // down shed at the door. The engine still drains, conservation
+        // still balances, and only completed jobs carry reports.
+        use crate::coordinator::{FaultSchedule, RetryPolicy};
+        let r = chaos_run(
+            "xavier-nx",
+            47,
+            &FleetOpts {
+                reroute: true, // inert: no sibling exists
+                chaos: FaultSchedule::parse("down:0@100+60000000").unwrap(),
+                retry: RetryPolicy {
+                    max_retries: 1,
+                    backoff_base_s: 0.005,
+                },
+                ..FleetOpts::default()
+            },
+        );
+        assert_eq!(r.faults_injected, 1);
+        assert_eq!(r.per_dev_faults[0], 1);
+        assert!(r.completed > 0, "pre-fault work must finish");
+        assert!(
+            r.failed > 0,
+            "work caught mid-pipeline must exhaust its retry budget"
+        );
+        assert_eq!(r.per_dev_failed[0], r.failed);
+        assert!(
+            r.retries >= r.failed,
+            "every failure burned at least one retry: {} vs {}",
+            r.retries,
+            r.failed
+        );
+        assert!(r.shed > 0, "post-dropout arrivals must shed at the door");
+        assert_eq!(
+            r.offered,
+            r.completed + r.shed + r.failed,
+            "conservation: {} vs {} + {} + {}",
+            r.offered,
+            r.completed,
+            r.shed,
+            r.failed
+        );
+        // CollectSink invariant: every ACCEPTED job reached a terminal
+        // state (the drain would hang otherwise), and exactly the
+        // completed ones carry a report
+        assert_eq!(
+            r.jobs.iter().filter(|j| j.report.is_some()).count(),
+            r.completed
+        );
+    }
+
+    #[test]
+    fn cloud_outage_kills_the_running_invocation_and_retry_budget_is_terminal() {
+        // State-level walk through the cloud fault machinery: the onset
+        // kills the running invocation (its pending `CloudDone`
+        // tombstones via the generation bump), the member enters the
+        // backed-off retry path with exponential spacing, the pool
+        // reports zero slots while the outage holds, and burning the
+        // whole budget lands in the terminal `failed` ledger.
+        use crate::coordinator::{FaultSchedule, RetryPolicy};
+        let opts = FleetOpts {
+            chaos: FaultSchedule::parse("cloud@100+50").unwrap(),
+            retry: RetryPolicy {
+                max_retries: 2,
+                backoff_base_s: 0.01,
+            },
+            ..FleetOpts::default()
+        };
+        let mut st = EngineState::new(1, 4, 8, &opts);
+        st.jobs.push(Job {
+            task: crate::workload::TaskGen::new(
+                "efficientnet-b0",
+                crate::perfmodel::Dataset::Cifar100,
+                Arrivals::Sequential,
+                5,
+            )
+            .unwrap()
+            .next_task(),
+            stream: 0,
+            dev: 0,
+            arrival_s: 0.0,
+            queue_wait_s: 0.0,
+            solo_off_s: 0.0,
+            cloud_s: 0.0,
+            payload_bytes: 0.0,
+            downgraded: false,
+            rerouted: false,
+            migrated: false,
+            retries: 0,
+            arrival_idx: 0,
+            report: None,
+        });
+        // one singleton invocation mid-service on the shared pool
+        let b = st.acquire_cloud_slot();
+        st.cloud_batches[b].push(0);
+        st.cloud_running.push(b);
+        st.cloud_active = 1;
+        st.cloud_in_flight = 1;
+        let gen = st.cloud_batch_gen[b];
+        let mut sink = CollectSink::new();
+        st.apply_fault(&mut [], 0, 0.1, &mut sink);
+        assert_eq!(st.faults_injected, 1);
+        assert_eq!(st.cloud_batch_gen[b], gen + 1, "pending CloudDone tombstoned");
+        assert_eq!(st.cloud_active, 0);
+        assert_eq!(st.cloud_in_flight, 0);
+        assert_eq!(st.retries, 1);
+        assert_eq!(st.jobs[0].retries, 1);
+        assert_eq!(
+            st.effective_cloud_slots(),
+            0,
+            "the pool is dark while the outage holds"
+        );
+        let ev = st.q.pop().unwrap();
+        assert!(matches!(ev.ev, Ev::RetryCloud { job: 0 }));
+        assert!(
+            (ev.time - 0.11).abs() < 1e-12,
+            "first retry at now + base backoff, got {}",
+            ev.time
+        );
+        assert!(st.q.is_empty());
+        // recovery reopens the pool
+        st.clear_fault(0, 0.15);
+        assert_eq!(st.cloud_outage_depth, 0);
+        assert!(st.effective_cloud_slots() > 0);
+        // second kill: attempt 2 still fits the budget, with doubled
+        // backoff; the third is terminal
+        st.retry_or_fail(0, RetryStage::Cloud, 0.2, &mut sink);
+        let ev = st.q.pop().unwrap();
+        assert!(matches!(ev.ev, Ev::RetryCloud { job: 0 }));
+        assert!(
+            (ev.time - 0.22).abs() < 1e-12,
+            "second retry doubles the backoff, got {}",
+            ev.time
+        );
+        st.retry_or_fail(0, RetryStage::Cloud, 0.3, &mut sink);
+        assert_eq!(st.failed, 1);
+        assert_eq!(st.per_dev_failed[0], 1);
+        assert_eq!(st.retries, 2, "the terminal attempt schedules nothing");
+        assert!(st.q.is_empty());
+        assert_eq!(st.free_jobs, vec![0], "the failed job's slot recycles");
+        let jobs = sink.into_jobs();
+        assert_eq!(jobs.len(), 1);
+        assert!(jobs[0].report.is_none(), "failed jobs carry no report");
+    }
+
+    #[test]
+    fn dropout_with_recovery_completes_everything_via_sibling_reroute() {
+        // A bounded dropout on one device of a pair, with re-route on:
+        // drained queue work and killed transfers ship through the
+        // sibling (or retry after recovery), so the run conserves tasks
+        // with zero terminal failures, and the reroute/drain ledgers
+        // record the detour.
+        use crate::coordinator::{FaultSchedule, RetryPolicy};
+        let r = chaos_run(
+            "xavier-nx,jetson-nano",
+            59,
+            &FleetOpts {
+                reroute: true,
+                chaos: FaultSchedule::parse("down:1@120+300").unwrap(),
+                retry: RetryPolicy {
+                    max_retries: 3,
+                    backoff_base_s: 0.005,
+                },
+                ..FleetOpts::default()
+            },
+        );
+        assert_eq!(r.faults_injected, 1);
+        assert_eq!(r.per_dev_faults[1], 1);
+        assert_eq!(
+            r.offered,
+            r.completed + r.shed + r.failed,
+            "conservation: {} vs {} + {} + {}",
+            r.offered,
+            r.completed,
+            r.shed,
+            r.failed
+        );
+        assert_eq!(r.failed, 0, "a sibling always exists for killed work");
+        assert!(
+            r.retries + r.rerouted + r.drained_on_dropout > 0,
+            "the dropout must actually touch in-flight or queued work"
+        );
+        assert_eq!(
+            r.jobs.iter().filter(|j| j.report.is_some()).count(),
+            r.completed
         );
     }
 }

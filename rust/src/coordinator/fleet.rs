@@ -31,6 +31,7 @@
 //! reproduces it task-for-task (the parity gate in
 //! `rust/tests/fleet_serving.rs`).
 
+use super::chaos::{FaultSchedule, RetryPolicy};
 use super::engine::{self, CollectSink, EngineJob};
 use super::shard::{serve_sharded, SHARD_EPOCH_S};
 use super::{Coordinator, ServeSummary};
@@ -133,6 +134,14 @@ pub struct FleetOpts {
     /// latency penalty a migrated task pays in transit (it re-enqueues
     /// on the destination only after the transfer completes)
     pub migrate_penalty_s: f64,
+    /// deterministic fault schedule (device dropouts, bandwidth
+    /// collapses, cloud outages); empty (the default) schedules no
+    /// fault events at all and reproduces the fault-free engine trace
+    /// bit-for-bit
+    pub chaos: FaultSchedule,
+    /// retry budget + deterministic exponential backoff for work a
+    /// fault kills mid-flight
+    pub retry: RetryPolicy,
 }
 
 impl Default for FleetOpts {
@@ -145,6 +154,8 @@ impl Default for FleetOpts {
             rebalance_window_s: 0.0,
             migrate_threshold_s: f64::INFINITY,
             migrate_penalty_s: 0.005,
+            chaos: FaultSchedule::default(),
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -161,6 +172,11 @@ impl FleetOpts {
             rebalance_window_s: cfg.rebalance_window_ms / 1e3,
             migrate_threshold_s: cfg.migrate_threshold_ms / 1e3,
             migrate_penalty_s: cfg.migrate_penalty_ms / 1e3,
+            chaos: FaultSchedule::parse(&cfg.chaos)?,
+            retry: RetryPolicy {
+                max_retries: cfg.retry_max as u32,
+                backoff_base_s: cfg.retry_backoff_ms / 1e3,
+            },
         })
     }
 }
@@ -259,6 +275,11 @@ pub struct DeviceTelemetry {
     pub migrated_in: usize,
     /// queued tasks the rebalancer migrated away from this device
     pub migrated_out: usize,
+    /// fault windows from the chaos schedule that targeted this device
+    pub faults: usize,
+    /// tasks that terminally failed (retry budget exhausted) while
+    /// owned by this device
+    pub failed: usize,
 }
 
 /// Aggregated outcome of a fleet serving run: the usual latency/energy
@@ -270,8 +291,19 @@ pub struct FleetSummary {
     pub offered: usize,
     /// tasks that ran to completion
     pub completed: usize,
-    /// tasks dropped by admission control
+    /// tasks dropped by admission control, plus accepted tasks shed
+    /// while draining a downed device with no feasible sibling
     pub shed: usize,
+    /// tasks that exhausted their fault-retry budget (terminal,
+    /// distinct from `shed`; `offered == completed + shed + failed`)
+    pub failed: usize,
+    /// fault windows injected from the chaos schedule (onsets)
+    pub faults_injected: usize,
+    /// retry re-enqueues scheduled for fault-killed work
+    pub retries: usize,
+    /// tasks pulled off a downed device's edge queue at dropout
+    /// (re-routed to a sibling or shed)
+    pub drained_on_dropout: usize,
     /// tasks forced to edge-only by admission control
     pub downgraded: usize,
     /// completed tasks whose end-to-end latency missed their deadline
@@ -316,6 +348,8 @@ fn device_rows(fleet: &Fleet) -> Vec<DeviceTelemetry> {
             rerouted_in: 0,
             migrated_in: 0,
             migrated_out: 0,
+            faults: 0,
+            failed: 0,
         })
         .collect()
 }
@@ -367,6 +401,10 @@ pub fn serve_fleet(
     let result = engine::serve(&mut fleet.devices, gens, per_stream, opts);
     summary.offered = result.offered;
     summary.shed = result.shed;
+    summary.failed = result.failed;
+    summary.faults_injected = result.faults_injected;
+    summary.retries = result.retries;
+    summary.drained_on_dropout = result.drained_on_dropout;
     summary.downgraded = result.downgraded;
     summary.cloud_invocations = result.cloud_invocations;
     summary.cloud_occupancy = result.cloud_occupancy;
@@ -382,6 +420,8 @@ pub fn serve_fleet(
         d.rerouted_in = result.per_dev_rerouted.get(i).copied().unwrap_or(0);
         d.migrated_in = result.per_dev_migrated_in.get(i).copied().unwrap_or(0);
         d.migrated_out = result.per_dev_migrated_out.get(i).copied().unwrap_or(0);
+        d.faults = result.per_dev_faults.get(i).copied().unwrap_or(0);
+        d.failed = result.per_dev_failed.get(i).copied().unwrap_or(0);
     }
     fold_jobs(&mut summary, result.jobs);
     summary
@@ -420,6 +460,10 @@ pub fn serve_fleet_sharded(
         let result = o.result;
         summary.offered += result.offered;
         summary.shed += result.shed;
+        summary.failed += result.failed;
+        summary.faults_injected += result.faults_injected;
+        summary.retries += result.retries;
+        summary.drained_on_dropout += result.drained_on_dropout;
         summary.downgraded += result.downgraded;
         summary.cloud_invocations += result.cloud_invocations;
         for &occ in result.cloud_occupancy.values() {
@@ -437,6 +481,8 @@ pub fn serve_fleet_sharded(
             d.rerouted_in += result.per_dev_rerouted.get(i).copied().unwrap_or(0);
             d.migrated_in += result.per_dev_migrated_in.get(i).copied().unwrap_or(0);
             d.migrated_out += result.per_dev_migrated_out.get(i).copied().unwrap_or(0);
+            d.faults += result.per_dev_faults.get(i).copied().unwrap_or(0);
+            d.failed += result.per_dev_failed.get(i).copied().unwrap_or(0);
         }
         let mut jobs = o.sink.into_jobs();
         for job in jobs.iter_mut() {
@@ -462,8 +508,18 @@ pub struct StreamSummary {
     pub offered: usize,
     /// tasks that ran to completion
     pub completed: usize,
-    /// tasks dropped by admission control
+    /// tasks dropped by admission control, plus accepted tasks shed
+    /// while draining a downed device with no feasible sibling
     pub shed: usize,
+    /// tasks that exhausted their fault-retry budget (terminal,
+    /// distinct from `shed`; `offered == completed + shed + failed`)
+    pub failed: usize,
+    /// fault windows injected from the chaos schedule (onsets)
+    pub faults_injected: usize,
+    /// retry re-enqueues scheduled for fault-killed work
+    pub retries: usize,
+    /// tasks pulled off a downed device's edge queue at dropout
+    pub drained_on_dropout: usize,
     /// tasks forced to edge-only by admission control
     pub downgraded: usize,
     /// completed tasks whose end-to-end latency missed their deadline
@@ -522,6 +578,7 @@ pub fn serve_fleet_streaming(
     let mut per_device = device_rows(fleet);
     let shards_used = outcomes.len();
     let (mut offered, mut completed, mut shed, mut downgraded) = (0, 0, 0, 0);
+    let (mut failed, mut faults_injected, mut retries, mut drained_on_dropout) = (0, 0, 0, 0);
     let mut cloud_invocations = 0;
     let mut cloud_occupancy = Running::new();
     let mut cloud_dispatch_saved_s = 0.0;
@@ -535,6 +592,10 @@ pub fn serve_fleet_streaming(
         offered += result.offered;
         completed += result.completed;
         shed += result.shed;
+        failed += result.failed;
+        faults_injected += result.faults_injected;
+        retries += result.retries;
+        drained_on_dropout += result.drained_on_dropout;
         downgraded += result.downgraded;
         cloud_invocations += result.cloud_invocations;
         cloud_occupancy.merge(&result.cloud_occupancy_run);
@@ -550,6 +611,8 @@ pub fn serve_fleet_streaming(
             d.rerouted_in += result.per_dev_rerouted.get(i).copied().unwrap_or(0);
             d.migrated_in += result.per_dev_migrated_in.get(i).copied().unwrap_or(0);
             d.migrated_out += result.per_dev_migrated_out.get(i).copied().unwrap_or(0);
+            d.faults += result.per_dev_faults.get(i).copied().unwrap_or(0);
+            d.failed += result.per_dev_failed.get(i).copied().unwrap_or(0);
         }
     }
     for (i, d) in per_device.iter_mut().enumerate() {
@@ -563,6 +626,10 @@ pub fn serve_fleet_streaming(
         offered,
         completed,
         shed,
+        failed,
+        faults_injected,
+        retries,
+        drained_on_dropout,
         downgraded,
         slo_violations,
         goodput,
@@ -606,7 +673,7 @@ mod tests {
                 TaskGen::new(
                     fleet.devices[0].env.profile.name,
                     fleet.devices[0].env.dataset,
-                    arrivals,
+                    arrivals.clone(),
                     base_seed + s as u64,
                 )
                 .unwrap()

@@ -7,6 +7,7 @@
 // Result or encode the invariant in types. Tests opt back in locally.
 #![warn(clippy::unwrap_used)]
 
+pub mod chaos;
 pub mod config;
 pub mod des;
 pub mod engine;
@@ -16,6 +17,7 @@ pub mod pipeline;
 pub mod sched;
 pub mod shard;
 
+pub use chaos::{Fault, FaultSchedule, RetryPolicy};
 pub use config::EngineConfig;
 pub use des::{serve_multistream, DesOpts};
 pub use sched::{Sched, SchedKind};

@@ -151,6 +151,10 @@ where
         for (k, (dev_base, devs, stream_base, gs)) in parts.into_iter().enumerate() {
             let mut shard_opts = opts.clone();
             shard_opts.des.cloud_slots = local_slots[k];
+            // device faults move with their shard (indices rebased to the
+            // local range); cloud outages replicate to every shard so each
+            // local pool drops to zero — summing back to a global outage
+            shard_opts.chaos = opts.chaos.partition(dev_base, devs.len());
             handles.push(scope.spawn(move || {
                 let mut sink = make_sink(k);
                 let n_local_dev = devs.len();
@@ -402,8 +406,13 @@ mod tests {
         let offered: usize = a.iter().map(|o| o.result.offered).sum();
         let shed: usize = a.iter().map(|o| o.result.shed).sum();
         let completed: usize = a.iter().map(|o| o.result.completed).sum();
+        let failed: usize = a.iter().map(|o| o.result.failed).sum();
         assert_eq!(offered, 48);
-        assert_eq!(offered, completed + shed, "conservation across shards");
+        assert_eq!(
+            offered,
+            completed + shed + failed,
+            "conservation across shards"
+        );
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.result.offered, y.result.offered);
             assert_eq!(x.result.shed, y.result.shed);

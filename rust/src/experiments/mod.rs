@@ -962,6 +962,114 @@ pub fn rebalance_sweep(quick: bool, threads: usize) -> Result<Table> {
     Ok(t)
 }
 
+// ======================================================================
+// Chaos sweep — goodput/violations/failed vs fault intensity on a
+// skewed fleet, with and without re-route + migration. Every task
+// offloads (cloud_only), so a device dropout kills uplink-stage work
+// mid-flight: the rr-alone column can only retry into the same downed
+// device until the budget runs out, while the reroute+migrate column
+// drains queues and ships retries through siblings. The fault schedule
+// is deterministic, so the two modes see the *identical* outage.
+// ======================================================================
+pub fn chaos_sweep(quick: bool, threads: usize) -> Result<Table> {
+    use crate::coordinator::chaos::FaultSchedule;
+    use crate::coordinator::fleet::{serve_fleet, Admission, Fleet};
+    use crate::coordinator::EngineConfig;
+    use crate::workload::SloClass;
+    let mut t = Table::new(vec![
+        "chaos",
+        "mode",
+        "offered",
+        "completed",
+        "shed",
+        "failed",
+        "goodput",
+        "violations",
+        "rerouted",
+        "retries",
+        "faults",
+        "e2e p50 ms",
+        "e2e p99 ms",
+    ]);
+    let schedules: &[(&str, &str)] = if quick {
+        &[
+            ("none", ""),
+            ("dropout", "down:1@200+900"),
+            (
+                "storm",
+                "down:1@150+900; down:2@500+900; cloud@400+120; bw:0@250+500*0.25",
+            ),
+        ]
+    } else {
+        &[
+            ("none", ""),
+            ("bw-collapse", "bw:1@200+800*0.1; bw:2@400+800*0.1"),
+            ("dropout", "down:1@200+900"),
+            ("double-dropout", "down:1@150+900; down:2@500+900"),
+            (
+                "storm",
+                "down:1@150+900; down:2@500+900; cloud@400+120; bw:0@250+500*0.25",
+            ),
+        ]
+    };
+    let streams = if quick { 9 } else { 24 };
+    let per_stream = if quick { 8 } else { 24 };
+    let mut cells = Vec::new();
+    for (label, spec) in schedules {
+        for mode in ["rr", "rr+reroute+migrate"] {
+            cells.push((*label, *spec, mode));
+        }
+    }
+    let rows = sweep_rows(threads, &cells, |&(label, spec, mode)| {
+        let mut cfg = Config::default();
+        cfg.policy = "cloud_only".into();
+        cfg.fleet = "xavier-nx,jetson-nano*2".into();
+        cfg.slo = "400".into();
+        cfg.seed = 173;
+        let mut fleet = Fleet::from_config(&cfg)?;
+        let slo = SloClass::parse(&cfg.slo)?;
+        let mut gens = (0..streams)
+            .map(|s| {
+                Ok(TaskGen::new(
+                    &cfg.model,
+                    fleet.devices[0].env.dataset,
+                    Arrivals::Poisson { rate: 10.0 },
+                    17_000 + s as u64,
+                )?
+                .with_slo(slo))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let opts = EngineConfig::new()
+            .admission(Admission::Shed)
+            .reroute(mode != "rr")
+            .rebalance_window_s(if mode == "rr" { 0.0 } else { 0.01 })
+            .migrate_threshold_s(0.05)
+            .migrate_penalty_s(0.002)
+            .chaos(FaultSchedule::parse(spec)?)
+            .fleet_opts();
+        let s = serve_fleet(&mut fleet, &mut gens, per_stream, &opts);
+        let mut row = vec![
+            label.to_string(),
+            mode.to_string(),
+            s.offered.to_string(),
+            s.completed.to_string(),
+            s.shed.to_string(),
+            s.failed.to_string(),
+            s.goodput.to_string(),
+            s.slo_violations.to_string(),
+            s.rerouted.to_string(),
+            s.retries.to_string(),
+            s.faults_injected.to_string(),
+        ];
+        row.extend(render::quantile_cells(&s.serve.e2e_ms, &[50.0, 99.0]));
+        Ok(vec![row])
+    })?;
+    for r in rows {
+        t.row(r);
+    }
+    Ok(t)
+}
+
 /// Ablation (DESIGN.md §7): factored vs exact-joint argmax and oracle gap.
 pub fn ablation_action_space(requests: usize) -> Result<Table> {
     let mut t = Table::new(vec!["policy", "cost mean", "tti ms", "eti mJ"]);
@@ -1015,6 +1123,7 @@ pub fn run_by_name(name: &str, quick: bool, threads: usize) -> Result<Table> {
         "fleet" => fleet_sweep(quick, threads),
         "cloudbatch" => cloudbatch_sweep(quick, threads),
         "rebalance" => rebalance_sweep(quick, threads),
+        "chaos" => chaos_sweep(quick, threads),
         other => anyhow::bail!("unknown experiment `{other}`"),
     }
 }
@@ -1022,7 +1131,7 @@ pub fn run_by_name(name: &str, quick: bool, threads: usize) -> Result<Table> {
 pub const ALL: &[&str] = &[
     "fig01", "fig02", "fig07", "fig08", "fig09", "fig10", "fig11", "fig12", "fig13",
     "tab04", "fig14", "fig15", "fig16", "tab05", "tab06", "ablation", "load", "fleet",
-    "cloudbatch", "rebalance",
+    "cloudbatch", "rebalance", "chaos",
 ];
 
 #[cfg(test)]
@@ -1107,6 +1216,31 @@ mod tests {
             csv.contains(",rr+reroute+migrate,"),
             "migration cell present:\n{csv}"
         );
+    }
+
+    #[test]
+    fn chaos_sweep_emits_fault_columns_and_conserves() {
+        let t = chaos_sweep(true, 1).unwrap();
+        let csv = t.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.contains("failed") && header.contains("faults"));
+        // one row per (schedule, mode) cell
+        assert_eq!(csv.lines().count(), 1 + 3 * 2);
+        for line in csv.lines().skip(1) {
+            let cells: Vec<&str> = line.split(',').collect();
+            let (offered, completed, shed, failed): (usize, usize, usize, usize) = (
+                cells[2].parse().unwrap(),
+                cells[3].parse().unwrap(),
+                cells[4].parse().unwrap(),
+                cells[5].parse().unwrap(),
+            );
+            assert_eq!(offered, completed + shed + failed, "conservation: {line}");
+            // the fault-free row injects nothing and fails nothing
+            if cells[0] == "none" {
+                assert_eq!(cells[10], "0", "no faults without a schedule: {line}");
+                assert_eq!(failed, 0, "no failures without faults: {line}");
+            }
+        }
     }
 
     #[test]

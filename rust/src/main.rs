@@ -41,7 +41,9 @@ SUBCOMMANDS:
                ablation, load (multi-stream load sweep), fleet (multi-edge
                goodput/energy/violation curves), cloudbatch (goodput/energy
                vs cloud batch window), rebalance (goodput/shed vs backlog
-               skew with re-route + migration), or `all`
+               skew with re-route + migration), chaos (goodput/failed vs
+               fault intensity with and without re-route + migration), or
+               `all`
   train        offline DQN training, prints the learning curve
   devices      list the edge/cloud device zoo (paper Table 3)
   models       list the DNN model zoo
@@ -148,6 +150,25 @@ fn real_main() -> anyhow::Result<()> {
                      (fleet path; 1 = the unsharded bit-exact kernel)",
                     None,
                 )
+                .opt(
+                    "chaos",
+                    "deterministic fault schedule: `;`-separated \
+                     down:<dev>@<at_ms>+<dur_ms> | \
+                     bw:<dev>@<at_ms>+<dur_ms>*<scale> | cloud@<at_ms>+<dur_ms> \
+                     | file:<trace.json> (empty = no faults)",
+                    None,
+                )
+                .opt(
+                    "retry-max",
+                    "retry budget for fault-killed work before a task is \
+                     marked failed",
+                    None,
+                )
+                .opt(
+                    "retry-backoff",
+                    "base retry backoff (ms); attempt k waits base*2^(k-1)",
+                    None,
+                )
                 .flag(
                     "stream-telemetry",
                     "constant-memory telemetry: online quantile sketches + counters \
@@ -196,6 +217,8 @@ fn real_main() -> anyhow::Result<()> {
                 a.parse_or("migrate-threshold", cfg.migrate_threshold_ms)?;
             cfg.migrate_penalty_ms = a.parse_or("migrate-penalty", cfg.migrate_penalty_ms)?;
             cfg.shards = a.parse_or("shards", cfg.shards)?;
+            cfg.retry_max = a.parse_or("retry-max", cfg.retry_max)?;
+            cfg.retry_backoff_ms = a.parse_or("retry-backoff", cfg.retry_backoff_ms)?;
             cfg.learner_publish_every =
                 a.parse_or("learner-publish", cfg.learner_publish_every)?;
             if a.flag("reroute") {
@@ -204,6 +227,8 @@ fn real_main() -> anyhow::Result<()> {
             if a.flag("stream-telemetry") {
                 cfg.stream_telemetry = true;
             }
+            // `fleet` before `chaos`: the chaos validator checks fault
+            // device indices against the (possibly just-overridden) fleet
             for (key, flag) in [
                 ("arrivals", "arrivals"),
                 ("fleet", "fleet"),
@@ -212,6 +237,7 @@ fn real_main() -> anyhow::Result<()> {
                 ("admission", "admission"),
                 ("scheduler", "scheduler"),
                 ("learner", "learner"),
+                ("chaos", "chaos"),
             ] {
                 if let Some(spec) = a.get(flag) {
                     cfg.set(key, spec)?;
@@ -233,7 +259,8 @@ fn real_main() -> anyhow::Result<()> {
                 || cfg.reroute
                 || cfg.rebalance_window_ms > 0.0
                 || cfg.shards > 1
-                || cfg.stream_telemetry;
+                || cfg.stream_telemetry
+                || !cfg.chaos.trim().is_empty();
             let per_stream = (cfg.requests / cfg.streams).max(1);
             if per_stream * cfg.streams != cfg.requests {
                 eprintln!(
@@ -250,7 +277,7 @@ fn real_main() -> anyhow::Result<()> {
                         Ok(TaskGen::new(
                             &cfg.model,
                             dataset,
-                            arrivals,
+                            arrivals.clone(),
                             cfg.seed ^ 0x5E ^ ((stream as u64) << 8),
                         )?
                         .with_slo(slo))
@@ -331,6 +358,17 @@ fn real_main() -> anyhow::Result<()> {
                             )
                         );
                     }
+                    if !opts.chaos.is_empty() {
+                        println!(
+                            "{}",
+                            render::chaos_line(
+                                s.faults_injected,
+                                s.retries,
+                                s.failed,
+                                s.drained_on_dropout
+                            )
+                        );
+                    }
                     if cfg.cloud_batch_window_ms > 0.0 && s.cloud_invocations > 0 {
                         println!(
                             "{}",
@@ -348,8 +386,13 @@ fn real_main() -> anyhow::Result<()> {
                     for d in &s.per_device {
                         let rb = rebalancing
                             .then_some((d.rerouted_in, d.migrated_in, d.migrated_out));
+                        let chaos_cols = if opts.chaos.is_empty() {
+                            String::new()
+                        } else {
+                            render::device_chaos_suffix(d.faults, d.failed)
+                        };
                         println!(
-                            "{}",
+                            "{}{chaos_cols}",
                             render::device_line(&d.name, d.served, d.energy_j, d.violations, rb)
                         );
                     }
@@ -384,6 +427,17 @@ fn real_main() -> anyhow::Result<()> {
                             )
                         );
                     }
+                    if !opts.chaos.is_empty() {
+                        println!(
+                            "{}",
+                            render::chaos_line(
+                                s.faults_injected,
+                                s.retries,
+                                s.failed,
+                                s.drained_on_dropout
+                            )
+                        );
+                    }
                     if cfg.cloud_batch_window_ms > 0.0 && s.cloud_invocations > 0 {
                         println!(
                             "{}",
@@ -401,8 +455,13 @@ fn real_main() -> anyhow::Result<()> {
                     for d in &s.per_device {
                         let rb = rebalancing
                             .then_some((d.rerouted_in, d.migrated_in, d.migrated_out));
+                        let chaos_cols = if opts.chaos.is_empty() {
+                            String::new()
+                        } else {
+                            render::device_chaos_suffix(d.faults, d.failed)
+                        };
                         println!(
-                            "{}",
+                            "{}{chaos_cols}",
                             render::device_line(&d.name, d.served, d.energy_j, d.violations, rb)
                         );
                     }

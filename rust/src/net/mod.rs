@@ -41,8 +41,10 @@ impl Bandwidth {
         match kind {
             "static" => {
                 let mbps: f64 = rest.parse().context("static:<mbps>")?;
-                if mbps <= 0.0 {
-                    bail!("bandwidth must be positive");
+                // `!(x > 0)` so NaN is rejected too; infinite rates would
+                // make every transmission free and hide payload bugs
+                if !(mbps > 0.0 && mbps.is_finite()) {
+                    bail!("bandwidth must be positive and finite");
                 }
                 Ok(Bandwidth::Static { mbps })
             }
@@ -52,8 +54,8 @@ impl Bandwidth {
                     .context("markov:<lo>,<hi>")?;
                 let lo: f64 = lo.parse()?;
                 let hi: f64 = hi.parse()?;
-                if !(lo > 0.0 && hi > lo) {
-                    bail!("markov wants 0 < lo < hi");
+                if !(lo > 0.0 && hi > lo && hi.is_finite()) {
+                    bail!("markov wants 0 < lo < hi, both finite");
                 }
                 Ok(Bandwidth::Markov {
                     lo,
@@ -75,6 +77,16 @@ impl Bandwidth {
                     .context("trace lines must be Mbps floats")?;
                 if samples.is_empty() {
                     bail!("empty bandwidth trace");
+                }
+                // a NaN, zero, or infinite sample would surface later as
+                // a NaN/∞/negative remaining-transfer time mid-run —
+                // reject at parse, where the bad line is identifiable
+                for (i, &s) in samples.iter().enumerate() {
+                    if !(s > 0.0 && s.is_finite()) {
+                        bail!(
+                            "trace sample #{i} must be positive and finite, got {s}"
+                        );
+                    }
                 }
                 Ok(Bandwidth::Trace {
                     samples,
@@ -262,6 +274,60 @@ mod tests {
         }
         let obs = link.observed_mbps();
         assert!((2.0..=8.0).contains(&obs));
+    }
+
+    #[test]
+    fn parse_rejects_nonfinite_rates() {
+        for bad in [
+            "static:NaN",
+            "static:inf",
+            "static:0",
+            "markov:NaN,8",
+            "markov:2,NaN",
+            "markov:2,inf",
+        ] {
+            assert!(Bandwidth::parse(bad, 0).is_err(), "`{bad}` should not parse");
+        }
+        let dir = std::env::temp_dir();
+        for (name, body) in [
+            ("dvfo_bw_trace_nan.txt", "1.0\nNaN\n"),
+            ("dvfo_bw_trace_zero.txt", "1.0\n0.0\n"),
+            ("dvfo_bw_trace_neg.txt", "1.0\n-2.0\n"),
+            ("dvfo_bw_trace_inf.txt", "1.0\ninf\n"),
+        ] {
+            let p = dir.join(name);
+            std::fs::write(&p, body).unwrap();
+            let spec = format!("trace:{}", p.display());
+            assert!(Bandwidth::parse(&spec, 0).is_err(), "{name}");
+        }
+    }
+
+    #[test]
+    fn mid_transfer_bandwidth_swings_keep_remaining_time_sane() {
+        // regression: a trace swinging over four orders of magnitude
+        // mid-transfer must never produce a negative, NaN, or infinite
+        // remaining-transfer time estimate
+        let p = std::env::temp_dir().join("dvfo_bw_trace_swing.txt");
+        std::fs::write(&p, "0.1\n1000.0\n0.5\n800.0\n").unwrap();
+        let mut link =
+            Link::new(Bandwidth::parse(&format!("trace:{}", p.display()), 0).unwrap());
+        let total_bytes = 2_000_000.0;
+        let mut sent = 0.0;
+        let mut steps = 0;
+        while sent < total_bytes {
+            let t = link.tx_time_s(total_bytes - sent);
+            assert!(
+                t.is_finite() && t >= 0.0,
+                "remaining-transfer time {t} after {sent} bytes"
+            );
+            // drain one 0.25 s window at the current rate, then let the
+            // trace move on to the next (wildly different) sample
+            sent += link.mbps() * 1e6 / 8.0 * 0.25;
+            link.advance(0.25);
+            steps += 1;
+            assert!(steps < 10_000, "transfer must make progress");
+        }
+        assert_eq!(link.tx_time_s(0.0), 0.0);
     }
 
     #[test]

@@ -89,6 +89,28 @@ pub fn rebalance_line(rerouted: usize, migrated: usize, migration_latency_s: f64
     )
 }
 
+/// The fault-injection accounting line (callers gate it on a non-empty
+/// fault schedule, like the rebalance line).
+pub fn chaos_line(
+    faults_injected: usize,
+    retries: usize,
+    failed: usize,
+    drained_on_dropout: usize,
+) -> String {
+    format!(
+        "chaos: faults={faults_injected} retries={retries} failed={failed} \
+         drained={drained_on_dropout}"
+    )
+}
+
+/// Per-device fault columns, appended to [`device_line`] output by
+/// callers when a fault schedule is active. A separate suffix (rather
+/// than another `Option` column on `device_line`) keeps the pinned
+/// no-chaos device format byte-identical.
+pub fn device_chaos_suffix(faults: usize, failed: usize) -> String {
+    format!(" faults={faults} failed={failed}")
+}
+
 /// The cloud-batching accounting line (callers gate it on the window
 /// being open and at least one invocation happening).
 pub fn cloud_line(
@@ -182,6 +204,11 @@ mod tests {
             stale_line(9, 4),
             "batching: window-flushes=9 stale-closes=4"
         );
+        assert_eq!(
+            chaos_line(3, 7, 2, 5),
+            "chaos: faults=3 retries=7 failed=2 drained=5"
+        );
+        assert_eq!(device_chaos_suffix(2, 1), " faults=2 failed=1");
         assert_eq!(
             device_line("xavier-nx", 12, 3.14159, 2, None),
             "  device xavier-nx    served=12    energy=3.1 J violations=2"

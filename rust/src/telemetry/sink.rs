@@ -232,6 +232,13 @@ pub trait ReportSink {
     /// Consume one completed task's report.
     fn push(&mut self, meta: &JobMeta, report: TaskReport);
 
+    /// A job reached a terminal non-completion (retry budget exhausted
+    /// or shed while draining a downed device): the sink learns its
+    /// identity but there is no report. Default no-op — the engine's
+    /// own `failed`/`shed` counters carry the aggregate; `CollectSink`
+    /// overrides this to keep its admission-order table dense.
+    fn fail(&mut self, _meta: &JobMeta) {}
+
     /// Whether the engine should also retain unbounded per-event traces
     /// (e.g. the exact cloud-occupancy sample buffer). Collecting sinks
     /// keep them for bit-exact replay; streaming sinks drop them and

@@ -5,6 +5,7 @@ use crate::perfmodel::{find_model, Dataset, ModelProfile};
 use crate::scam::ImportanceDist;
 use crate::util::Pcg32;
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 
 /// One inference request.
 #[derive(Clone, Debug)]
@@ -79,7 +80,7 @@ impl SloClass {
 }
 
 /// Arrival process shapes.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub enum Arrivals {
     /// Poisson with given rate (req/s)
     Poisson { rate: f64 },
@@ -104,13 +105,20 @@ pub enum Arrivals {
         amplitude: f64,
         period_s: f64,
     },
+    /// Recorded-trace replay (`trace:<path>`): inter-arrival gaps
+    /// derived from a file of non-decreasing, finite, non-negative
+    /// timestamps (seconds). The gap sequence loops when a stream
+    /// outlives the recording, so replay is fully deterministic and
+    /// RNG-free. Shared behind an `Arc` so per-stream generators clone
+    /// the handle, not the trace.
+    Trace { gaps: Arc<Vec<f64>> },
 }
 
 impl Arrivals {
     /// Parse a spec string:
     /// `sequential` | `poisson:<rate>` | `bursty:<rate>,<every_s>,<len>` |
     /// `mmpp:<rate_lo>,<rate_hi>,<dwell_lo_s>,<dwell_hi_s>` |
-    /// `diurnal:<base_rate>,<amplitude>,<period_s>`.
+    /// `diurnal:<base_rate>,<amplitude>,<period_s>` | `trace:<path>`.
     pub fn parse(spec: &str) -> Result<Arrivals> {
         if spec == "sequential" {
             return Ok(Arrivals::Sequential);
@@ -118,6 +126,13 @@ impl Arrivals {
         let (kind, rest) = spec
             .split_once(':')
             .context("arrivals spec wants `kind:args` (or `sequential`)")?;
+        if kind == "trace" {
+            let path = rest.trim();
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("arrivals trace `{path}`"))?;
+            return Self::from_trace_text(&text)
+                .with_context(|| format!("arrivals trace `{path}`"));
+        }
         let nums: Vec<f64> = rest
             .split(',')
             .map(|x| x.trim().parse::<f64>())
@@ -165,9 +180,63 @@ impl Arrivals {
             (other, _) => bail!(
                 "unknown or malformed arrivals `{other}:{rest}` (want sequential | \
                  poisson:<r> | bursty:<r>,<every>,<len> | mmpp:<lo>,<hi>,<dlo>,<dhi> | \
-                 diurnal:<base>,<amp>,<period>)"
+                 diurnal:<base>,<amp>,<period> | trace:<path>)"
             ),
         }
+    }
+
+    /// Build a [`Arrivals::Trace`] from recorded timestamp text: either
+    /// a JSON array of numbers (`[0.0, 0.5, 1.2]`) or CSV/whitespace
+    /// separated floats, one timestamp (seconds) per entry. Timestamps
+    /// must be finite, non-negative, and non-decreasing; an empty trace
+    /// is rejected.
+    pub fn from_trace_text(text: &str) -> Result<Arrivals> {
+        let trimmed = text.trim();
+        let times: Vec<f64> = if trimmed.starts_with('[') {
+            let doc = crate::configx::Json::parse(trimmed)
+                .map_err(|e| anyhow::anyhow!("bad JSON: {e}"))?;
+            doc.as_arr()
+                .context("JSON trace must be an array of timestamps")?
+                .iter()
+                .map(|v| v.as_f64().context("JSON trace entries must be numbers"))
+                .collect::<Result<_>>()?
+        } else {
+            trimmed
+                .split(|c: char| c.is_whitespace() || c == ',')
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.parse::<f64>()
+                        .with_context(|| format!("trace timestamp `{t}`"))
+                })
+                .collect::<Result<_>>()?
+        };
+        Self::from_timestamps(&times)
+    }
+
+    /// Build a [`Arrivals::Trace`] from already-parsed arrival
+    /// timestamps (seconds), validating them and converting to
+    /// inter-arrival gaps.
+    pub fn from_timestamps(times: &[f64]) -> Result<Arrivals> {
+        if times.is_empty() {
+            bail!("trace must contain at least one arrival timestamp");
+        }
+        let mut gaps = Vec::with_capacity(times.len());
+        let mut prev = 0.0f64;
+        for (i, &t) in times.iter().enumerate() {
+            if !(t.is_finite() && t >= 0.0) {
+                bail!("trace timestamp #{i} must be finite and non-negative, got {t}");
+            }
+            if t < prev {
+                bail!(
+                    "trace timestamps must be non-decreasing, got {t} after {prev} at #{i}"
+                );
+            }
+            gaps.push(t - prev);
+            prev = t;
+        }
+        Ok(Arrivals::Trace {
+            gaps: Arc::new(gaps),
+        })
     }
 
     /// Long-run mean arrival rate (req/s); `None` for the closed-loop
@@ -185,6 +254,10 @@ impl Arrivals {
                 dwell_hi_s,
             } => Some((rate_lo * dwell_lo_s + rate_hi * dwell_hi_s) / (dwell_lo_s + dwell_hi_s)),
             Arrivals::Diurnal { base_rate, .. } => Some(base_rate),
+            Arrivals::Trace { ref gaps } => {
+                let span: f64 = gaps.iter().sum();
+                (span > 0.0).then(|| gaps.len() as f64 / span)
+            }
         }
     }
 }
@@ -203,6 +276,8 @@ pub struct TaskGen {
     mmpp_high: bool,
     /// remaining dwell in the current MMPP regime (<0 = uninitialized)
     mmpp_left_s: f64,
+    /// replay cursor into a `Trace` gap sequence (wraps at the end)
+    trace_idx: usize,
     testset_count: usize,
     /// SLO class stamped on every generated task
     slo: SloClass,
@@ -226,6 +301,7 @@ impl TaskGen {
             burst_left: 0,
             mmpp_high: false,
             mmpp_left_s: -1.0,
+            trace_idx: 0,
             testset_count: 256,
             slo: SloClass::default(),
         })
@@ -316,6 +392,11 @@ impl TaskGen {
                         break dt;
                     }
                 }
+            }
+            Arrivals::Trace { ref gaps } => {
+                let dt = gaps[self.trace_idx % gaps.len()];
+                self.trace_idx += 1;
+                dt
             }
         };
         self.clock_s += dt;
@@ -519,7 +600,7 @@ mod tests {
     #[test]
     fn mmpp_interarrivals_hit_configured_mean() {
         let a = Arrivals::parse("mmpp:10,100,2,0.5").unwrap();
-        let mut g = TaskGen::new("resnet-18", Dataset::Cifar100, a, 11).unwrap();
+        let mut g = TaskGen::new("resnet-18", Dataset::Cifar100, a.clone(), 11).unwrap();
         let ts = g.take(4000);
         let rate = 4000.0 / ts.last().unwrap().arrival_s;
         let want = a.mean_rate().unwrap();
@@ -546,11 +627,71 @@ mod tests {
     }
 
     #[test]
+    fn trace_arrivals_replay_timestamps_and_cycle() {
+        let p = std::env::temp_dir().join("dvfo_arrivals_trace_ok.json");
+        std::fs::write(&p, "[0.0, 0.5, 1.25]").unwrap();
+        let a = Arrivals::parse(&format!("trace:{}", p.display())).unwrap();
+        // 3 arrivals over 1.25 s of recording
+        assert!((a.mean_rate().unwrap() - 3.0 / 1.25).abs() < 1e-12);
+        let mut g = TaskGen::new("resnet-18", Dataset::Cifar100, a, 5).unwrap();
+        let got: Vec<f64> = g.take(5).iter().map(|t| t.arrival_s).collect();
+        // exact replay of the recorded timestamps, then the gap sequence
+        // loops: gaps (0.0, 0.5, 0.75) resume from t = 1.25
+        assert_eq!(got, vec![0.0, 0.5, 1.25, 1.25, 1.75]);
+    }
+
+    #[test]
+    fn trace_arrivals_parse_csv_and_share_one_buffer() {
+        let p = std::env::temp_dir().join("dvfo_arrivals_trace_ok.csv");
+        std::fs::write(&p, "0.0, 0.25\n0.75\n").unwrap();
+        let a = Arrivals::parse(&format!("trace:{}", p.display())).unwrap();
+        let Arrivals::Trace { ref gaps } = a else {
+            panic!("csv trace should parse to Trace");
+        };
+        assert_eq!(gaps.as_slice(), &[0.0, 0.25, 0.5]);
+        // per-stream generators clone the handle, not the recording, and
+        // each keeps an independent replay cursor
+        let mut g0 = TaskGen::new("resnet-18", Dataset::Cifar100, a.clone(), 1).unwrap();
+        let mut g1 = TaskGen::new("resnet-18", Dataset::Cifar100, a, 2).unwrap();
+        let _ = g0.next_task();
+        let x = g0.next_task();
+        let y = g1.next_task();
+        assert_eq!(x.arrival_s, 0.25);
+        assert_eq!(y.arrival_s, 0.0);
+    }
+
+    #[test]
+    fn trace_arrivals_reject_garbage_files() {
+        let dir = std::env::temp_dir();
+        let write = |name: &str, body: &str| {
+            let p = dir.join(name);
+            std::fs::write(&p, body).unwrap();
+            format!("trace:{}", p.display())
+        };
+        for (name, body) in [
+            ("dvfo_trace_bad_tokens.csv", "not,a,number"),
+            ("dvfo_trace_bad_empty.csv", ""),
+            ("dvfo_trace_bad_order.csv", "0.5,0.25"),
+            ("dvfo_trace_bad_negative.csv", "-1.0,2.0"),
+            ("dvfo_trace_bad_nan.csv", "0.0,NaN"),
+            ("dvfo_trace_bad_inf.csv", "0.0,inf"),
+            ("dvfo_trace_bad_entry.json", "[0.0, \"x\"]"),
+            ("dvfo_trace_bad_syntax.json", "[0.0,"),
+            ("dvfo_trace_bad_shape.json", "{\"t\": 1}"),
+            ("dvfo_trace_bad_json_empty.json", "[]"),
+        ] {
+            assert!(Arrivals::parse(&write(name, body)).is_err(), "{name}");
+        }
+        // a missing file is a parse error, not a panic
+        assert!(Arrivals::parse("trace:/no/such/dvfo_trace.csv").is_err());
+    }
+
+    #[test]
     fn new_processes_are_seed_deterministic() {
         for spec in ["mmpp:5,50,1,0.2", "diurnal:40,0.8,10"] {
             let a = Arrivals::parse(spec).unwrap();
             let mk = || {
-                TaskGen::new("resnet-18", Dataset::Cifar100, a, 77)
+                TaskGen::new("resnet-18", Dataset::Cifar100, a.clone(), 77)
                     .unwrap()
                     .take(200)
             };

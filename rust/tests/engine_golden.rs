@@ -558,7 +558,7 @@ fn run_scenario(s: &Scenario) {
                 TaskGen::new(
                     fleet.devices[0].env.profile.name,
                     fleet.devices[0].env.dataset,
-                    arrivals,
+                    arrivals.clone(),
                     7 + i as u64,
                 )
                 .unwrap()

@@ -17,11 +17,18 @@
 //!   tasks keep their original arrival time (no clock reset on
 //!   requeue), and a property check that no migration schedule ever
 //!   loses or duplicates a task
+//! * chaos: the skewed-fleet fault gate (re-route + migration strictly
+//!   beats round-robin alone under an identical dropout schedule), a
+//!   property check that no fault schedule breaks task conservation
+//!   (`offered == completed + shed + failed`), and run-to-run bit
+//!   determinism of a faulted run at 1 and 3 shards
 
 use dvfo::configx::Config;
 use dvfo::coordinator::des::{serve_multistream, DesOpts};
-use dvfo::coordinator::fleet::{serve_fleet, Admission, Fleet, FleetOpts, Router};
-use dvfo::coordinator::Coordinator;
+use dvfo::coordinator::fleet::{
+    serve_fleet, serve_fleet_sharded, Admission, Fleet, FleetOpts, Router,
+};
+use dvfo::coordinator::{Coordinator, FaultSchedule, RetryPolicy};
 use dvfo::perfmodel::CLOUD_DISPATCH_OVERHEAD_S;
 use dvfo::workload::{Arrivals, SloClass, TaskGen};
 
@@ -40,7 +47,7 @@ fn gens(
     base: u64,
 ) -> Vec<TaskGen> {
     (0..n)
-        .map(|s| TaskGen::new(&c.model, dataset, arrivals, base + s as u64).unwrap())
+        .map(|s| TaskGen::new(&c.model, dataset, arrivals.clone(), base + s as u64).unwrap())
         .collect()
 }
 
@@ -578,4 +585,262 @@ fn cloud_window_zero_is_invariant_to_the_cloud_batch_cap() {
     assert_eq!(a.serve.e2e_ms.mean().to_bits(), b.serve.e2e_ms.mean().to_bits());
     assert_eq!(a.serve.cost.mean().to_bits(), b.serve.cost.mean().to_bits());
     assert_eq!(a.cloud_invocations, b.cloud_invocations);
+}
+
+/// Chaos-gate helper: a skewed fleet under cloud-only offloading with a
+/// long mid-run dropout of device 1. The offered load saturates the
+/// jetson-nano devices, so at the onset device 1 is guaranteed (by work
+/// conservation, not timing luck) to hold queued and in-pipeline work
+/// for the dropout to bite; with a 2-retry budget and 5–10 ms backoffs
+/// the whole retry horizon fits inside the 2 s outage. Round-robin
+/// alone can only re-offer killed work to the same dark radio until the
+/// budget runs out and must shed the drained queue; re-route ships both
+/// through the surviving siblings instead.
+fn chaos_gate_run(reroute: bool) -> dvfo::coordinator::FleetSummary {
+    let mut c = cfg("cloud_only", 61);
+    c.fleet = "xavier-nx,jetson-nano*2".into();
+    let mut fleet = Fleet::from_config(&c).unwrap();
+    let slo = SloClass::parse("1000").unwrap();
+    let mut g: Vec<TaskGen> = (0..9)
+        .map(|s| {
+            TaskGen::new(
+                &c.model,
+                fleet.devices[0].env.dataset,
+                Arrivals::Poisson { rate: 25.0 },
+                4400 + s as u64,
+            )
+            .unwrap()
+            .with_slo(slo)
+        })
+        .collect();
+    let opts = FleetOpts {
+        admission: Admission::Shed,
+        reroute,
+        rebalance_window_s: if reroute { 0.01 } else { 0.0 },
+        migrate_threshold_s: 0.05,
+        migrate_penalty_s: 0.002,
+        chaos: FaultSchedule::parse("down:1@150+2000").unwrap(),
+        retry: RetryPolicy {
+            max_retries: 2,
+            backoff_base_s: 0.005,
+        },
+        ..FleetOpts::default()
+    };
+    serve_fleet(&mut fleet, &mut g, 8, &opts)
+}
+
+#[test]
+fn reroute_and_migration_strictly_beat_rr_under_the_same_dropout() {
+    let rr = chaos_gate_run(false);
+    let rm = chaos_gate_run(true);
+    for (tag, s) in [("rr", &rr), ("rr+reroute+migrate", &rm)] {
+        assert_eq!(
+            s.offered,
+            s.completed + s.shed + s.failed,
+            "{tag}: conservation (offered {} vs {} + {} + {})",
+            s.offered,
+            s.completed,
+            s.shed,
+            s.failed
+        );
+        assert_eq!(s.faults_injected, 1, "{tag}: one dropout window");
+        assert_eq!(s.per_device[1].faults, 1, "{tag}: fault lands on device 1");
+    }
+    // the dropout must actually hurt the rr-alone run: retries fire and
+    // some work exhausts its budget into terminal failures
+    assert!(rr.retries > 0, "rr run must retry fault-killed work");
+    assert!(
+        rr.failed > 0,
+        "the 2 s dropout must outlast the rr retry horizon (failed={})",
+        rr.failed
+    );
+    // the acceptance gate: under the SAME schedule, re-route + migration
+    // fails strictly fewer tasks AND completes strictly more in-deadline
+    assert!(
+        rm.failed < rr.failed,
+        "re-route must fail strictly fewer: {} vs rr {}",
+        rm.failed,
+        rr.failed
+    );
+    assert!(
+        rm.goodput > rr.goodput,
+        "re-route goodput {} must strictly beat rr {}",
+        rm.goodput,
+        rr.goodput
+    );
+    // the win comes from real re-routing, not accounting slack
+    assert!(rm.rerouted > 0, "the gate win must come from re-routes");
+}
+
+#[test]
+fn no_fault_schedule_breaks_task_conservation() {
+    // Property: across random fleets, loads, re-route settings, and
+    // random fault schedules (dropouts, bandwidth collapses, cloud
+    // outages at random onsets/durations), every offered task reaches
+    // exactly one terminal state: offered == completed + shed + failed,
+    // one report per completed task, and the per-device failure ledger
+    // sums to the fleet total.
+    use dvfo::proptest_mini::{check, usize_in, Gen};
+    let fleets = [
+        "xavier-nx,jetson-nano",
+        "xavier-nx,jetson-nano*2",
+        "jetson-tx2*2,jetson-nano",
+    ];
+    let fleet_sizes = [2usize, 3, 3];
+    check(
+        "chaos task conservation",
+        0xC4A05,
+        10,
+        |r: &mut dvfo::util::Pcg32| {
+            let fi = usize_in(0, 2).sample(r);
+            let n_faults = usize_in(0, 3).sample(r);
+            let mut spec = String::new();
+            for k in 0..n_faults {
+                if k > 0 {
+                    spec.push_str("; ");
+                }
+                let dev = usize_in(0, fleet_sizes[fi] - 1).sample(r);
+                let at = 50 + 37 * usize_in(0, 12).sample(r);
+                let dur = 50 + 61 * usize_in(0, 10).sample(r);
+                match usize_in(0, 2).sample(r) {
+                    0 => spec.push_str(&format!("down:{dev}@{at}+{dur}")),
+                    1 => spec.push_str(&format!("bw:{dev}@{at}+{dur}*0.25")),
+                    _ => spec.push_str(&format!("cloud@{at}+{dur}")),
+                }
+            }
+            (
+                fi,
+                usize_in(1, 6).sample(r),
+                usize_in(1, 5).sample(r),
+                usize_in(0, 1).sample(r),
+                spec,
+                r.next_u64(),
+            )
+        },
+        |&(fi, streams, per_stream, rr, ref spec, seed)| {
+            let mut c = cfg("cloud_only", seed);
+            c.fleet = fleets[fi].into();
+            let mut fleet = Fleet::from_config(&c).map_err(|e| e.to_string())?;
+            let slo = SloClass::parse("200").map_err(|e| e.to_string())?;
+            let mut g: Vec<TaskGen> = (0..streams)
+                .map(|s| {
+                    TaskGen::new(
+                        &c.model,
+                        fleet.devices[0].env.dataset,
+                        Arrivals::Poisson { rate: 25.0 },
+                        seed ^ (s as u64) << 5,
+                    )
+                    .map(|g| g.with_slo(slo))
+                    .map_err(|e| e.to_string())
+                })
+                .collect::<Result<_, _>>()?;
+            let opts = FleetOpts {
+                admission: Admission::Shed,
+                reroute: rr == 1,
+                chaos: FaultSchedule::parse(spec).map_err(|e| e.to_string())?,
+                retry: RetryPolicy {
+                    max_retries: 2,
+                    backoff_base_s: 0.004,
+                },
+                ..FleetOpts::default()
+            };
+            let s = serve_fleet(&mut fleet, &mut g, per_stream, &opts);
+            if s.offered != streams * per_stream {
+                return Err(format!("offered {} != {}", s.offered, streams * per_stream));
+            }
+            if s.offered != s.completed + s.shed + s.failed {
+                return Err(format!(
+                    "conservation: offered {} vs completed {} + shed {} + failed {}",
+                    s.offered, s.completed, s.shed, s.failed
+                ));
+            }
+            if s.serve.reports.len() != s.completed {
+                return Err(format!(
+                    "duplicate/missing reports: {} vs {} completed",
+                    s.serve.reports.len(),
+                    s.completed
+                ));
+            }
+            let served: usize = s.per_device.iter().map(|d| d.served).sum();
+            if served != s.completed {
+                return Err(format!("per-device served {served} != {}", s.completed));
+            }
+            let dev_failed: usize = s.per_device.iter().map(|d| d.failed).sum();
+            if dev_failed != s.failed {
+                return Err(format!(
+                    "per-device failure ledger {dev_failed} != {} failed",
+                    s.failed
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn faulted_runs_are_bit_deterministic_at_one_and_three_shards() {
+    // Run-to-run determinism with a fixed composite fault schedule
+    // (dropout + cloud outage + bandwidth collapse): at 1 shard and at
+    // 3 shards, repeating the run reproduces every chaos counter and a
+    // bit-identical latency mean — retries, drains, and partitioned
+    // fault replay introduce no nondeterminism, threaded or not.
+    let run = |shards: usize| {
+        let mut c = cfg("cloud_only", 87);
+        c.fleet = "xavier-nx,jetson-tx2,jetson-nano".into();
+        let mut fleet = Fleet::from_config(&c).unwrap();
+        let slo = SloClass::parse("300").unwrap();
+        let mut g: Vec<TaskGen> = (0..6)
+            .map(|s| {
+                TaskGen::new(
+                    &c.model,
+                    fleet.devices[0].env.dataset,
+                    Arrivals::Poisson { rate: 20.0 },
+                    5200 + s as u64,
+                )
+                .unwrap()
+                .with_slo(slo)
+            })
+            .collect();
+        let opts = FleetOpts {
+            admission: Admission::Shed,
+            reroute: true,
+            chaos: FaultSchedule::parse("down:1@100+400; cloud@200+80; bw:2@150+300*0.5")
+                .unwrap(),
+            retry: RetryPolicy {
+                max_retries: 3,
+                backoff_base_s: 0.005,
+            },
+            ..FleetOpts::default()
+        };
+        serve_fleet_sharded(&mut fleet, &mut g, 5, &opts, shards)
+    };
+    for shards in [1usize, 3] {
+        let a = run(shards);
+        let b = run(shards);
+        assert_eq!(a.offered, b.offered, "{shards} shards: offered");
+        assert_eq!(a.completed, b.completed, "{shards} shards: completed");
+        assert_eq!(a.shed, b.shed, "{shards} shards: shed");
+        assert_eq!(a.failed, b.failed, "{shards} shards: failed");
+        assert_eq!(a.retries, b.retries, "{shards} shards: retries");
+        assert_eq!(
+            a.faults_injected, b.faults_injected,
+            "{shards} shards: faults"
+        );
+        assert_eq!(
+            a.drained_on_dropout, b.drained_on_dropout,
+            "{shards} shards: drains"
+        );
+        assert_eq!(a.rerouted, b.rerouted, "{shards} shards: rerouted");
+        assert_eq!(
+            a.offered,
+            a.completed + a.shed + a.failed,
+            "{shards} shards: conservation"
+        );
+        assert_eq!(
+            a.serve.e2e_ms.mean().to_bits(),
+            b.serve.e2e_ms.mean().to_bits(),
+            "{shards} shards: bit-identical latency mean"
+        );
+        assert!(a.faults_injected >= 3, "{shards} shards: schedule armed");
+    }
 }
